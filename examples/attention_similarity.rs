@@ -1,0 +1,67 @@
+//! Scenario: reproduce the paper's motivating observation (Fig. 1) — the
+//! intra- and inter-layer similarity of attention patterns that justifies
+//! coalescing — through the public API's attention-map probe artifact.
+//!
+//!     cargo run --release --example attention_similarity -- [--steps N]
+
+use anyhow::Result;
+use multilevel::coordinator::{LrSchedule, Trainer};
+use multilevel::data::{Batcher, Corpus};
+use multilevel::runtime::{init_state, Arg, Runtime};
+use multilevel::util::cli::Args;
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut ab, mut aa, mut bb) = (0f64, 0f64, 0f64);
+    for (x, y) in a.iter().zip(b) {
+        ab += (*x as f64) * (*y as f64);
+        aa += (*x as f64) * (*x as f64);
+        bb += (*y as f64) * (*y as f64);
+    }
+    ab / (aa.sqrt() * bb.sqrt()).max(1e-12)
+}
+
+fn main() -> Result<()> {
+    multilevel::util::logger::init();
+    let args = Args::parse();
+    let steps = args.usize_or("steps", 120);
+    let rt = Runtime::load_default()?;
+    let base = "bert_base_sim";
+    let cfg = rt.cfg(base)?.clone();
+
+    // train briefly so attention is structured, not random
+    let mut state = init_state(&rt, &cfg, 3)?;
+    let mut trainer = Trainer::new(&rt, base, 0, 4, 2)?;
+    let sched = LrSchedule::new(steps / 10, 1e-3, steps);
+    for step in 1..=steps {
+        let (s, _) = trainer.step(&rt, &state, sched.lr(step), step)?;
+        state = s;
+    }
+
+    // probe: attention maps [L, H, S, S] for one validation sentence
+    let exe = rt.exe(&format!("attn_maps__{base}"))?;
+    let batch = Batcher::validation_set(&cfg, Corpus::new(cfg.vocab, 0), 1).remove(0);
+    let out = rt.call(
+        &exe,
+        &[Arg::Buf(&state.buf), Arg::I32(&batch.tokens, batch.dims().to_vec())],
+    )?;
+    let maps = rt.read_f32(&out)?;
+    let (l, h, s) = (cfg.n_layer, cfg.n_head, cfg.seq_len);
+    let at = |li: usize, hi: usize| &maps[(li * h + hi) * s * s..][..s * s];
+
+    println!("intra-layer head-pair cosine (layer 4 of {l}):");
+    let li = l / 2;
+    for a in 0..h.min(4) {
+        for b in a + 1..h.min(4) {
+            println!("  L{li} H{a} vs H{b}: {:.3}", cosine(at(li, a), at(li, b)));
+        }
+    }
+    println!("inter-layer same-head cosine:");
+    for li in 0..l - 1 {
+        let mean: f64 =
+            (0..h).map(|hi| cosine(at(li, hi), at(li + 1, hi))).sum::<f64>() / h as f64;
+        println!("  L{} vs L{}: {mean:.3}", li + 1, li + 2);
+    }
+    println!("distant-pair baseline (L1H1 vs L{l}H{h}): {:.3}",
+             cosine(at(0, 0), at(l - 1, h - 1)));
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end): pre-train the
+//! largest config (`gpt_e2e`, ~6.4M params — the largest a single CPU core
+//! trains in reasonable time; a hardware-gated substitution for the system
+//! target of ~100M, see DESIGN.md) for a few hundred steps with the V-cycle
+//! and compare against training from scratch, logging both loss curves.
+//!
+//!     cargo run --release --example e2e_train -- [--steps N] [--out results/e2e]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use multilevel::coordinator::{savings_vs_scratch, Harness, Method, RunOpts};
+use multilevel::util::cli::Args;
+
+fn main() -> Result<()> {
+    multilevel::util::logger::init();
+    let args = Args::parse();
+    let steps = args.usize_or("steps", 240);
+    let rt = multilevel::runtime::Runtime::load_default()?;
+
+    let base = "gpt_e2e";
+    let cfg = rt.cfg(base)?;
+    println!(
+        "e2e: {base} — {} params ({:.1}M), {:.2} GFLOP/step, {} steps budget",
+        cfg.n_params,
+        cfg.n_params as f64 / 1e6,
+        cfg.flops_train_step / 1e9,
+        steps
+    );
+
+    let mut opts = RunOpts::quick(base, steps);
+    opts.alpha = 0.25;
+    opts.seed = args.u64_or("seed", 7);
+    opts.eval_every = (steps / 12).max(5);
+    opts.budget_mult = 1.0;
+    let h = Harness::new(&rt, opts.clone());
+
+    let t0 = std::time::Instant::now();
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    println!(
+        "scratch: final eval {:.4}, {:.1} GFLOPs, {:.0}s",
+        scratch.final_eval(base, 3).unwrap_or(f32::NAN),
+        scratch.total_flops / 1e9,
+        scratch.total_wall
+    );
+    let vcycle = h.run_method(&Method::VCycle { levels: 2, fit: false }, None)?;
+    println!(
+        "v-cycle: final eval {:.4}, {:.1} GFLOPs, {:.0}s",
+        vcycle.final_eval(base, 3).unwrap_or(f32::NAN),
+        vcycle.total_flops / 1e9,
+        vcycle.total_wall
+    );
+    let s = savings_vs_scratch(&scratch, &vcycle, base);
+    println!(
+        "savings at scratch target ({:.4}): FLOPs {:+.1}%  walltime {:+.1}%  (reached={})",
+        s.target,
+        s.flops * 100.0,
+        s.wall * 100.0,
+        s.reached
+    );
+
+    let out = std::path::PathBuf::from(args.get_or("out", "results/e2e"));
+    std::fs::create_dir_all(&out)?;
+    scratch.write_csv(&out.join("scratch.csv"))?;
+    vcycle.write_csv(&out.join("vcycle.csv"))?;
+    println!("curves -> {out:?} (total {:.0}s)", t0.elapsed().as_secs_f64());
+    Ok(())
+}

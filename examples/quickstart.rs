@@ -1,0 +1,62 @@
+//! Quickstart: load the runtime, train a nano GPT a few steps, run one
+//! V-cycle (coalesce → train small → de-coalesce + interpolate), and print
+//! losses. Mirrors README §Quickstart.
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use multilevel::coordinator::{operators, LrSchedule, Trainer};
+use multilevel::runtime::{init_state, Runtime};
+
+fn main() -> Result<()> {
+    // 1. runtime over the AOT artifacts (`make artifacts` builds them)
+    let rt = Runtime::load_default()?;
+    println!("platform = {}", rt.client.platform_name());
+
+    // 2. fresh level-1 model
+    let base = "gpt_nano";
+    let cfg = rt.cfg(base)?.clone();
+    println!("{base}: {} params, {:.1} MFLOP/step", cfg.n_params, cfg.flops_train_step / 1e6);
+    let mut state = init_state(&rt, &cfg, 42)?;
+
+    // 3. warm up the large model (E_a), then coalesce to level 2
+    let mut trainer = Trainer::new(&rt, base, 0, 1, 2)?;
+    let sched = LrSchedule::new(5, 1e-3, 200);
+    for step in 1..=20 {
+        let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step)?;
+        state = s;
+        if step % 10 == 0 {
+            println!("  [L1 warmup] step {step:3}  loss {loss:.4}");
+        }
+    }
+    let saved_big = operators::interp_states(&rt, base, &state, &state, 0.0)?;
+    let small_cfg = "gpt_nano_lv2";
+    let mut small = operators::coalesce(&rt, base, small_cfg, &state)?;
+    println!("coalesced {} -> {} params", cfg.n_params, small.n_params);
+
+    // 4. train the cheap small model (fast convergence phase)
+    let mut small_trainer = Trainer::new(&rt, small_cfg, 0, 2, 2)?;
+    for step in 1..=60 {
+        let (s, loss) = small_trainer.step(&rt, &small, sched.lr(step), step)?;
+        small = s;
+        if step % 20 == 0 {
+            println!("  [L2] step {step:3}  loss {loss:.4}");
+        }
+    }
+
+    // 5. de-coalesce + interpolate back into the large model (α = 0.25)
+    state = operators::refine(&rt, base, small_cfg, &saved_big, &small, 0.25, false)?;
+    let eval = trainer.eval(&rt, &state)?;
+    println!("after refine: large-model eval loss = {eval:.4}");
+
+    // 6. continue training the interpolated large model
+    for step in 1..=20 {
+        let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step)?;
+        state = s;
+        if step % 10 == 0 {
+            println!("  [L1 resume] step {step:3}  loss {loss:.4}");
+        }
+    }
+    println!("final eval = {:.4}", trainer.eval(&rt, &state)?);
+    Ok(())
+}

@@ -1,0 +1,409 @@
+"""AOT compiler: lower every model / operator to HLO **text** artifacts plus
+a manifest.json the Rust coordinator consumes.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a pure function with a **single array output** so the
+PJRT executable's result buffer feeds the next ``execute_b`` call directly
+(multi-output executables return one tuple buffer on this PJRT version,
+which would force a host round-trip per step — measured in §Perf).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--plan]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import operators as O
+from .configs import (BASE_CONFIGS, LORA_RANK, TAB5_COALESCED_SIZES,
+                      ModelConfig, coalesce_config, custom_coalesced)
+
+# number of classes for the GLUE-substitute fine-tuning probes
+FT_CLASSES = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Input-spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def state_spec(cfg: ModelConfig):
+    return _spec((3 * M.n_params(cfg) + 1,))
+
+
+def batch_specs(cfg: ModelConfig) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    b = cfg.batch
+    if cfg.family == "gpt":
+        return [("tokens", _spec((b, cfg.seq_len), jnp.int32))]
+    if cfg.family == "bert":
+        return [("tokens", _spec((b, cfg.seq_len), jnp.int32)),
+                ("labels", _spec((b, cfg.seq_len), jnp.int32))]
+    return [("images", _spec((b, cfg.image_size, cfg.image_size, 3))),
+            ("labels", _spec((b,), jnp.int32))]
+
+
+def scalar(name):
+    return (name, _spec((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Artifact plan
+# ---------------------------------------------------------------------------
+
+
+class Artifact:
+    def __init__(self, name: str, kind: str, fn: Callable,
+                 inputs: List[Tuple[str, jax.ShapeDtypeStruct]],
+                 configs: Dict[str, str], meta: Optional[dict] = None):
+        self.name, self.kind, self.fn = name, kind, fn
+        self.inputs, self.configs, self.meta = inputs, configs, meta or {}
+
+
+def model_artifacts(cfg: ModelConfig, with_pallas_variant=False,
+                    with_attn=False) -> List[Artifact]:
+    arts = [
+        Artifact(f"train_step__{cfg.name}", "train_step", M.make_train_step(cfg),
+                 [("state", state_spec(cfg))] + batch_specs(cfg)
+                 + [scalar("lr"), scalar("step")], {"config": cfg.name}),
+        Artifact(f"eval_loss__{cfg.name}", "eval_loss", M.make_eval_loss(cfg),
+                 [("state", state_spec(cfg))] + batch_specs(cfg),
+                 {"config": cfg.name}),
+    ]
+    if with_pallas_variant:
+        arts.append(Artifact(
+            f"train_step_pallas__{cfg.name}", "train_step",
+            M.make_train_step(cfg, use_pallas=True),
+            [("state", state_spec(cfg))] + batch_specs(cfg)
+            + [scalar("lr"), scalar("step")],
+            {"config": cfg.name}, meta={"pallas": True}))
+    if with_attn:
+        arts.append(Artifact(
+            f"attn_maps__{cfg.name}", "attn_maps", M.make_attn_maps(cfg),
+            [("state", state_spec(cfg)),
+             ("tokens", _spec((cfg.batch, cfg.seq_len), jnp.int32))],
+            {"config": cfg.name}))
+    if cfg.family == "vit":
+        arts.append(Artifact(
+            f"eval_acc__{cfg.name}", "eval_acc", M.make_eval_acc(cfg),
+            [("state", state_spec(cfg))] + batch_specs(cfg),
+            {"config": cfg.name}))
+    return arts
+
+
+def op_artifacts(big: ModelConfig, small: ModelConfig, *, width=True,
+                 depth=True, tag="", with_fit=False) -> List[Artifact]:
+    pair = {"config": big.name, "config_small": small.name}
+    arts = [
+        Artifact(f"coalesce__{big.name}__{small.name}{tag}", "coalesce",
+                 O.make_coalesce(big, small, width=width, depth=depth),
+                 [("state", state_spec(big))], pair,
+                 meta={"width": width, "depth": depth}),
+        Artifact(f"refine__{big.name}__{small.name}{tag}", "refine",
+                 O.make_refine(big, small, width=width, depth=depth),
+                 [("state_big", state_spec(big)),
+                  ("state_small", state_spec(small)), scalar("alpha")],
+                 pair, meta={"width": width, "depth": depth}),
+    ]
+    if with_fit:
+        arts.append(Artifact(
+            f"refine_fit__{big.name}__{small.name}", "refine",
+            O.make_refine(big, small, width=width, depth=depth, fit_depth=True),
+            [("state_big", state_spec(big)),
+             ("state_small", state_spec(small)), scalar("alpha")],
+            pair, meta={"width": width, "depth": depth, "fit": True}))
+    return arts
+
+
+def interp_artifact(cfg: ModelConfig) -> Artifact:
+    n = 3 * M.n_params(cfg) + 1
+    return Artifact(f"interp__{cfg.name}", "interp", O.make_interp_state(n),
+                    [("a", _spec((n,))), ("b", _spec((n,))), scalar("alpha")],
+                    {"config": cfg.name})
+
+
+def ft_artifacts(cfg: ModelConfig) -> List[Artifact]:
+    step, acc = M.make_ft_step(cfg, FT_CLASSES)
+    nf = M.n_params(cfg) + M.ft_head_size(cfg, FT_CLASSES)
+    st = _spec((3 * nf + 1,))
+    toks = _spec((cfg.batch, cfg.seq_len), jnp.int32)
+    labels = _spec((cfg.batch,), jnp.int32)
+    return [
+        Artifact(f"ft_step__{cfg.name}", "ft_step", step,
+                 [("state", st), ("tokens", toks), ("labels", labels),
+                  scalar("lr"), scalar("step")],
+                 {"config": cfg.name}, meta={"n_ft": nf, "n_classes": FT_CLASSES}),
+        Artifact(f"ft_acc__{cfg.name}", "ft_acc", acc,
+                 [("state", st), ("tokens", toks), ("labels", labels)],
+                 {"config": cfg.name}, meta={"n_ft": nf, "n_classes": FT_CLASSES}),
+    ]
+
+
+def distill_artifact(student: ModelConfig, teacher: ModelConfig) -> Artifact:
+    fn = M.make_distill_step(student, teacher)
+    return Artifact(
+        f"distill_step__{student.name}__{teacher.name}", "distill_step", fn,
+        [("state", state_spec(student)),
+         ("theta_teacher", _spec((M.n_params(teacher),)))]
+        + batch_specs(student) + [scalar("kd_w"), scalar("lr"), scalar("step")],
+        {"config": student.name, "config_small": teacher.name})
+
+
+def lora_artifacts(cfg: ModelConfig) -> List[Artifact]:
+    step, ev = M.make_lora_step(cfg)
+    rn = M.lora_n_params(cfg)
+    st = _spec((3 * rn + 1,))
+    theta = _spec((M.n_params(cfg),))
+    return [
+        Artifact(f"lora_step__{cfg.name}", "lora_step", step,
+                 [("state", st), ("theta_base", theta)] + batch_specs(cfg)
+                 + [scalar("lr"), scalar("step")],
+                 {"config": cfg.name}, meta={"rank": LORA_RANK, "n_lora": rn}),
+        Artifact(f"lora_eval__{cfg.name}", "lora_eval", ev,
+                 [("state", st), ("theta_base", theta)] + batch_specs(cfg),
+                 {"config": cfg.name}, meta={"rank": LORA_RANK, "n_lora": rn}),
+    ]
+
+
+def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
+    """The full artifact inventory (see DESIGN.md §6 experiment index)."""
+    arts: List[Artifact] = []
+    cfgs: Dict[str, ModelConfig] = {}
+
+    def reg(cfg: ModelConfig) -> ModelConfig:
+        cfgs[cfg.name] = cfg
+        return cfg
+
+    # --- nano configs: tests + Pallas-integration proof -------------------
+    for name in ("gpt_nano", "bert_nano", "vit_nano"):
+        c1 = reg(BASE_CONFIGS[name])
+        c2 = reg(coalesce_config(c1, 2))
+        arts += model_artifacts(c1, with_pallas_variant=(name == "gpt_nano"))
+        arts += model_artifacts(c2)
+        arts += op_artifacts(c1, c2)
+    # gpt_nano also carries the full baseline set (CI-scale bench_tables)
+    n1 = cfgs["gpt_nano"]
+    n2 = cfgs["gpt_nano_lv2"]
+    ns = reg(n1.with_size(n1.n_layer // 2, n1.n_head, "_stk"))
+    nw = reg(n1.with_size(n1.n_layer, n1.n_head // 2, "_wid"))
+    arts += model_artifacts(ns) + model_artifacts(nw)
+    arts += op_artifacts(n1, ns, width=False, depth=True)
+    arts += op_artifacts(n1, nw, width=True, depth=False)
+    arts.append(distill_artifact(n1, n2))
+
+    # --- bert_base_sim: Fig. 3a, Table 1, Table 5, Fig. 1 -----------------
+    b1 = reg(BASE_CONFIGS["bert_base_sim"])
+    b2 = reg(coalesce_config(b1, 2))
+    b3 = reg(coalesce_config(b1, 3))
+    arts += model_artifacts(b1, with_attn=True)
+    arts += model_artifacts(b2) + model_artifacts(b3)
+    arts += op_artifacts(b1, b2) + op_artifacts(b2, b3)
+    # Table 5 (D): alternative coalesced sizes
+    for (l, h) in TAB5_COALESCED_SIZES:
+        if (l, h) == (b2.n_layer, b2.n_head):
+            continue  # default size already covered
+        cc = reg(custom_coalesced(b1, l, h))
+        arts += model_artifacts(cc)
+        arts += op_artifacts(b1, cc)
+    # baselines: StackBERT (depth-only small), bert2BERT (width-only small)
+    bs = reg(b1.with_size(b1.n_layer // 2, b1.n_head, "_stk"))
+    bw = reg(b1.with_size(b1.n_layer, b1.n_head // 2, "_wid"))
+    arts += model_artifacts(bs) + model_artifacts(bw)
+    arts += op_artifacts(b1, bs, width=False, depth=True)
+    arts += op_artifacts(b1, bw, width=True, depth=False)
+    arts.append(distill_artifact(b1, b2))
+    arts += ft_artifacts(b1)
+    arts += lora_artifacts(b1)  # Fig. 8 (coalesced BERT vs BERT+LoRA)
+
+    # --- gpt_base_sim: Fig. 3b, Table 2, Fig. 4/6/7 -----------------------
+    g1 = reg(BASE_CONFIGS["gpt_base_sim"])
+    g2 = reg(coalesce_config(g1, 2))
+    arts += model_artifacts(g1) + model_artifacts(g2)
+    arts += op_artifacts(g1, g2, with_fit=True)
+    gs = reg(g1.with_size(g1.n_layer // 2, g1.n_head, "_stk"))
+    gw = reg(g1.with_size(g1.n_layer, g1.n_head // 2, "_wid"))
+    arts += model_artifacts(gs) + model_artifacts(gw)
+    arts += op_artifacts(g1, gs, width=False, depth=True)
+    arts += op_artifacts(g1, gw, width=True, depth=False)
+    arts.append(distill_artifact(g1, g2))
+    # Fig. 4 monotonic growth: small -> mid -> big needs the (g2 -> mid) pair
+    gmid = reg(coalesce_config(g1, 2).with_size(g2.n_layer, g2.n_head, "_m"))
+    # (gmid is g2-sized; the twice-mapped chain reuses existing pairs)
+
+    # --- bert_large_sim: Fig. 3c, Table 4 ---------------------------------
+    l1 = reg(BASE_CONFIGS["bert_large_sim"])
+    l2 = reg(coalesce_config(l1, 2))
+    l3 = reg(coalesce_config(l1, 3))
+    arts += model_artifacts(l1) + model_artifacts(l2) + model_artifacts(l3)
+    arts += op_artifacts(l1, l2) + op_artifacts(l2, l3)
+    arts += ft_artifacts(l1)
+
+    # --- vision: Table 3 (vit_b_sim), Table 6 (vit_s_sim) -----------------
+    for vname in ("vit_b_sim", "vit_s_sim"):
+        v1 = reg(BASE_CONFIGS[vname])
+        v2 = reg(coalesce_config(v1, 2))
+        arts += model_artifacts(v1) + model_artifacts(v2)
+        arts += op_artifacts(v1, v2)
+        if vname == "vit_b_sim":
+            vs = reg(v1.with_size(v1.n_layer // 2, v1.n_head, "_stk"))
+            vw = reg(v1.with_size(v1.n_layer, v1.n_head // 2, "_wid"))
+            arts += model_artifacts(vs) + model_artifacts(vw)
+            arts += op_artifacts(v1, vs, width=False, depth=True)
+            arts += op_artifacts(v1, vw, width=True, depth=False)
+
+    # --- end-to-end example ------------------------------------------------
+    e1 = reg(BASE_CONFIGS["gpt_e2e"])
+    e2 = reg(coalesce_config(e1, 2))
+    arts += model_artifacts(e1) + model_artifacts(e2)
+    arts += op_artifacts(e1, e2)
+
+    # elementwise state interpolation for every config (EMA folds, loss-path
+    # probes, state cloning)
+    for c in list(cfgs.values()):
+        arts.append(interp_artifact(c))
+
+    # de-dup by name (configs shared across experiments)
+    seen, uniq = set(), []
+    for a in arts:
+        if a.name not in seen:
+            seen.add(a.name)
+            uniq.append(a)
+    return uniq, cfgs
+
+
+# ---------------------------------------------------------------------------
+# Lowering + manifest
+# ---------------------------------------------------------------------------
+
+
+def config_entry(cfg: ModelConfig) -> dict:
+    lay = [{"name": n, "offset": off, "shape": list(shape), "init": kind}
+           for (n, off, shape, kind) in M.layout(cfg)]
+    return {
+        "family": cfg.family, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+        "head_dim": cfg.head_dim, "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab, "seq_len": cfg.seq_len, "batch": cfg.batch,
+        "image_size": cfg.image_size, "patch_size": cfg.patch_size,
+        "n_classes": cfg.n_classes, "n_params": M.n_params(cfg),
+        "tokens_per_step": cfg.tokens_per_step,
+        "flops_train_step": M.flops_train_step(cfg),
+        "flops_fwd_token": M.flops_per_fwd_token(cfg),
+        "layout": lay,
+    }
+
+
+def lower_artifact(art: Artifact, out_dir: str) -> dict:
+    specs = [s for (_, s) in art.inputs]
+    lowered = jax.jit(art.fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{art.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_aval = lowered.out_info
+    out_shape = list(jax.tree_util.tree_leaves(out_aval)[0].shape)
+    return {
+        "name": art.name, "kind": art.kind, "file": fname,
+        **art.configs,
+        "inputs": [{"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                   for (n, s) in art.inputs],
+        "output_shape": out_shape,
+        "meta": art.meta,
+    }
+
+
+def source_fingerprint() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--plan", action="store_true", help="print the plan and exit")
+    ap.add_argument("--force", action="store_true", help="re-lower even if fresh")
+    args = ap.parse_args()
+
+    arts, cfgs = build_plan()
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+    if args.plan:
+        for a in arts:
+            print(f"{a.kind:14s} {a.name}")
+        print(f"total: {len(arts)} artifacts, {len(cfgs)} configs")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fp = source_fingerprint()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    stale = True
+    if os.path.exists(manifest_path) and not args.force:
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            stale = old.get("fingerprint") != fp
+        except Exception:
+            stale = True
+    if not stale and not args.only:
+        print(f"artifacts up to date (fingerprint {fp})")
+        return
+
+    entries = []
+    t0 = time.time()
+    for i, a in enumerate(arts):
+        t1 = time.time()
+        entries.append(lower_artifact(a, args.out_dir))
+        print(f"[{i + 1}/{len(arts)}] {a.name}  ({time.time() - t1:.1f}s)",
+              flush=True)
+    if args.only:
+        print(f"lowered {len(entries)} filtered artifacts; manifest NOT "
+              "rewritten (run without --only to refresh it)")
+        return
+    manifest = {
+        "fingerprint": fp,
+        "ft_classes": FT_CLASSES,
+        "lora_rank": LORA_RANK,
+        "configs": {name: config_entry(c) for name, c in cfgs.items()},
+        "artifacts": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Model configurations and level derivation for the multi-level framework.
+
+A :class:`ModelConfig` fully describes one transformer variant (family,
+depth, heads, width, vocab/seq or image geometry).  Levels are derived by
+:func:`coalesce_config`, which halves depth and heads (head_dim is constant
+across levels, mirroring the paper: BERT-Base L12-H12-d768 -> L6-H6-d384).
+
+The registry at the bottom defines every CPU-scale configuration used by the
+experiment harness.  The paper's A100-scale models are substituted by
+structurally identical models, small enough to train hundreds of steps on a
+single CPU core (see DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One transformer variant (a single level of the V-cycle)."""
+
+    name: str
+    family: str  # "gpt" | "bert" | "vit"
+    n_layer: int
+    n_head: int
+    head_dim: int
+    vocab: int = 0  # language families only
+    seq_len: int = 0  # language families; for vit: n_patches + 1
+    batch: int = 8
+    ffn_mult: int = 4
+    # vision-only geometry
+    image_size: int = 0
+    patch_size: int = 0
+    n_classes: int = 0
+
+    @property
+    def d_model(self) -> int:
+        return self.n_head * self.head_dim
+
+    @property
+    def d_ff(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    @property
+    def n_patches(self) -> int:
+        assert self.family == "vit"
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.family == "vit":
+            return self.batch * (self.n_patches + 1)
+        return self.batch * self.seq_len
+
+    def with_size(self, n_layer: int, n_head: int, suffix: str) -> "ModelConfig":
+        return dataclasses.replace(
+            self, name=f"{self.name}{suffix}", n_layer=n_layer, n_head=n_head
+        )
+
+
+def coalesce_config(cfg: ModelConfig, level: int) -> ModelConfig:
+    """Config of the level-``level`` model coalesced from ``cfg`` (level 1).
+
+    Depth and heads halve per level; head_dim, vocab, seq, batch are
+    unchanged. ``level=1`` returns ``cfg`` itself.
+    """
+    assert level >= 1
+    f = 2 ** (level - 1)
+    n_layer, n_head = cfg.n_layer // f, cfg.n_head // f
+    assert n_layer >= 1 and n_head >= 1, f"{cfg.name} cannot coalesce to level {level}"
+    if level == 1:
+        return cfg
+    return cfg.with_size(n_layer, n_head, f"_lv{level}")
+
+
+def custom_coalesced(cfg: ModelConfig, n_layer: int, n_head: int) -> ModelConfig:
+    """Arbitrary coalesced size (Table 5 row D: L4-H4 / L8-H8 / L10-H10)."""
+    assert 1 <= n_layer <= cfg.n_layer and 1 <= n_head <= cfg.n_head
+    return cfg.with_size(n_layer, n_head, f"_c{n_layer}x{n_head}")
+
+
+# --------------------------------------------------------------------------
+# Registry: every config the experiment harness uses.
+# --------------------------------------------------------------------------
+
+def _gpt(name, L, H, hd=16, vocab=512, seq=32, batch=8):
+    return ModelConfig(name=name, family="gpt", n_layer=L, n_head=H,
+                       head_dim=hd, vocab=vocab, seq_len=seq, batch=batch)
+
+
+def _bert(name, L, H, hd=16, vocab=512, seq=32, batch=8):
+    return ModelConfig(name=name, family="bert", n_layer=L, n_head=H,
+                       head_dim=hd, vocab=vocab, seq_len=seq, batch=batch)
+
+
+def _vit(name, L, H, hd=16, img=16, patch=4, classes=8, batch=8):
+    return ModelConfig(name=name, family="vit", n_layer=L, n_head=H,
+                       head_dim=hd, image_size=img, patch_size=patch,
+                       n_classes=classes, batch=batch)
+
+
+#: Level-1 (original) model per experiment; levels derived on demand.
+BASE_CONFIGS = {
+    # tiny configs for tests / CI
+    "gpt_nano": _gpt("gpt_nano", L=2, H=2, vocab=64, seq=16, batch=4),
+    "bert_nano": _bert("bert_nano", L=2, H=2, vocab=64, seq=16, batch=4),
+    "vit_nano": _vit("vit_nano", L=2, H=2, img=8, patch=4, classes=4, batch=4),
+    # paper-model analogues (CPU scale)
+    "bert_base_sim": _bert("bert_base_sim", L=8, H=8),
+    "gpt_base_sim": _gpt("gpt_base_sim", L=6, H=6),
+    "bert_large_sim": _bert("bert_large_sim", L=12, H=12),
+    "vit_b_sim": _vit("vit_b_sim", L=6, H=6),
+    "vit_s_sim": _vit("vit_s_sim", L=4, H=4),
+    # end-to-end example (the largest model; only vcycle artifacts emitted)
+    "gpt_e2e": _gpt("gpt_e2e", L=6, H=8, hd=32, vocab=2048, seq=64, batch=8),
+}
+
+#: Table 5 row (D): alternative coalesced sizes for bert_base_sim (L8-H8).
+TAB5_COALESCED_SIZES = [(2, 2), (4, 4), (6, 6)]
+
+#: LoRA rank for the Fig. 8 baseline.
+LORA_RANK = 4
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (must match ravel_pytree size; tested)."""
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layer
+    per_layer = (
+        4 * d * d + 4 * d  # q,k,v,o + biases
+        + d * dff + dff + dff * d + d  # ffn
+        + 4 * d  # 2 layernorms (scale+bias)
+    )
+    n = L * per_layer + 2 * d  # final layernorm
+    if cfg.family in ("gpt", "bert"):
+        n += cfg.vocab * d  # token embedding
+        n += cfg.seq_len * d  # learned positions
+        n += d * cfg.vocab + cfg.vocab  # untied LM head
+    else:
+        n += (cfg.patch_size ** 2 * 3) * d + d  # patch embed
+        n += d  # cls token
+        n += (cfg.n_patches + 1) * d  # positions
+        n += d * cfg.n_classes + cfg.n_classes  # classifier head
+    return n

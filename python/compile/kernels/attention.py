@@ -1,0 +1,61 @@
+"""Pallas kernel: fused multi-head attention forward.
+
+The training hot spot of every model in the paper. One grid program per
+(batch, head): Q/K/V slabs for that head live in VMEM, the kernel computes
+QKᵀ on the MXU, applies the (optionally causal) numerically-stable softmax
+on the VPU, then drives the second MXU matmul against V — no S×S score
+matrix ever round-trips to HBM, which is the paper-era FlashAttention
+insight re-expressed for the TPU memory hierarchy (threadblock/shared-mem →
+BlockSpec/VMEM; see DESIGN.md §Hardware-Adaptation).
+
+Sequence lengths here (≤64) fit a single VMEM tile, so no inner K-loop is
+needed; the BlockSpec already expresses the HBM↔VMEM schedule that a longer
+sequence would tile further.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0]  # [S, D]
+    k = k_ref[0]
+    v = v_ref[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        s = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(col <= row, scores, jnp.finfo(jnp.float32).min)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Fused attention; q/k/v: [B, H, S, D] -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    kern = functools.partial(_kernel, causal=causal, scale=1.0 / float(d) ** 0.5)
+    flat = lambda x: x.reshape(b * h, s, d).astype(jnp.float32)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h,),
+        in_specs=[pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+        interpret=interpret,
+    )(flat(q), flat(k), flat(v))
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes(s: int, d: int) -> int:
+    """Per-program VMEM footprint (f32): q,k,v,o slabs + S×S scores."""
+    return 4 * (4 * s * d + s * s)

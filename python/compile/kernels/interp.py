@@ -1,0 +1,59 @@
+"""Pallas kernel: the Interpolation operator  (1-α)·a + α·b  (paper Eq. 13).
+
+Fused elementwise axpy over the flat parameter vector. α arrives as a
+traced scalar (shape [1]) so a single compiled artifact serves every
+interpolation ratio in Table 5 row (C) and the Fig. 5b interpolation-path
+sweep.
+
+TPU mapping: 1-D grid over VMEM-sized chunks of the flat vector; each
+program streams one chunk of a and b through the VPU. The chunk size is
+picked so (a, b, out) triples stay well under a 16 MiB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: elements per grid step: 3 × 2 MiB f32 buffers ≈ 6 MiB of VMEM — still
+#: inside a 16 MiB budget. §Perf iteration: the first cut used 64 Ki chunks
+#: (0.75 MiB VMEM), but interpret-mode grid dispatch dominates on CPU and a
+#: 16.6M-element state took 10.8 s; 8× larger chunks cut it ~8× while the
+#: TPU-side VMEM story stays valid (measured in EXPERIMENTS.md §Perf).
+CHUNK = 524288
+
+
+def _kernel(alpha_ref, a_ref, b_ref, o_ref):
+    alpha = alpha_ref[0]
+    o_ref[...] = (1.0 - alpha) * a_ref[...] + alpha * b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def interp(a: jnp.ndarray, b: jnp.ndarray, alpha: jnp.ndarray,
+           interpret: bool = True) -> jnp.ndarray:
+    """(1-alpha)*a + alpha*b for flat f32 vectors a, b; alpha: scalar or [1]."""
+    assert a.shape == b.shape and a.ndim == 1
+    n = a.shape[0]
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    # Pad to a CHUNK multiple so every block is full (no masking needed).
+    chunk = min(CHUNK, n)
+    pad = (-n) % chunk
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        b = jnp.pad(b, (0, pad))
+    out = pl.pallas_call(
+        _kernel,
+        grid=((n + pad) // chunk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+        interpret=interpret,
+    )(alpha, a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:n]

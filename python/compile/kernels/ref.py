@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here defines the mathematical ground truth the corresponding
+Pallas kernel must reproduce to within float32 tolerance; pytest sweeps
+shapes/dtypes via hypothesis and asserts allclose (see python/tests/).
+The L2 model can be built against either path (``use_pallas`` flag) — the
+equivalence proven here is what makes the ref path a faithful stand-in on
+hot loops where interpret-mode Pallas would distort walltime (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def width_project(f_in: jnp.ndarray, w: jnp.ndarray, f_out: jnp.ndarray) -> jnp.ndarray:
+    """Sandwich projection  F_in · W · F_out  (paper Eq. 1), batched over
+    a leading layer axis when ``w`` is rank-3.
+
+    f_in: [p, m],  w: [m, n] or [L, m, n],  f_out: [n, q]  ->  [p, q] / [L, p, q]
+    """
+    if w.ndim == 2:
+        return f_in @ w @ f_out
+    return jnp.einsum("pm,lmn,nq->lpq", f_in, w, f_out)
+
+
+def interp(a: jnp.ndarray, b: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Interpolation operator (paper Eq. 13):  (1 - alpha) * a + alpha * b."""
+    return (1.0 - alpha) * a + alpha * b
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool) -> jnp.ndarray:
+    """Scaled dot-product attention, [B, H, S, D] -> [B, H, S, D]."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm over the trailing axis; x: [..., d], w/b: [d]."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * w + b

@@ -1,0 +1,79 @@
+"""Pallas kernel: the paper's sandwich projection  F_in · W · F_out  (Eq. 1).
+
+This is the compute core of both Coalescing (Eq. 5) and De-coalescing
+(Eq. 12): every weight matrix of every layer is projected through a pair of
+width matrices. For a transformer with L layers the projection is batched
+over the stacked layer axis, so the kernel computes
+
+    out[l] = F_in @ W[l] @ F_out        W: [L, m, n]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(layer, out-row-tile, out-col-tile); each program keeps one (bp × m) slab of
+F_in, one (m × n) weight slab and one (n × bq) slab of F_out in VMEM and
+drives two MXU matmuls. Block sizes are clamped to the MXU-native 128 so the
+systolic array sees full tiles whenever the model is large enough. On CPU the
+kernel runs under ``interpret=True`` (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin); numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: MXU-native tile edge; blocks are min(dim, this).
+MXU_TILE = 128
+
+
+def _kernel(fin_ref, w_ref, fout_ref, o_ref):
+    # fin: [bp, m], w: [1, m, n], fout: [n, bq]  ->  o: [1, bp, bq]
+    fin = fin_ref[...]
+    w = w_ref[0]
+    fout = fout_ref[...]
+    # Two MXU matmuls; contracting the smaller side first minimizes the
+    # intermediate ((bp × n) vs (m × bq)).
+    if fin.shape[0] * w.shape[1] <= w.shape[0] * fout.shape[1]:
+        acc = jnp.dot(fin, w, preferred_element_type=jnp.float32)
+        o_ref[0] = jnp.dot(acc, fout, preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.dot(w, fout, preferred_element_type=jnp.float32)
+        o_ref[0] = jnp.dot(fin, acc, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def width_project(f_in: jnp.ndarray, w: jnp.ndarray, f_out: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Batched sandwich projection via Pallas.
+
+    f_in: [p, m], w: [L, m, n] (or [m, n]), f_out: [n, q] -> [L, p, q].
+    """
+    squeeze = w.ndim == 2
+    if squeeze:
+        w = w[None]
+    num_l, m, n = w.shape
+    p, q = f_in.shape[0], f_out.shape[1]
+    bp, bq = min(p, MXU_TILE), min(q, MXU_TILE)
+    grid = (num_l, pl.cdiv(p, bp), pl.cdiv(q, bq))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, m), lambda l, i, j: (i, 0)),
+            pl.BlockSpec((1, m, n), lambda l, i, j: (l, 0, 0)),
+            pl.BlockSpec((n, bq), lambda l, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, bq), lambda l, i, j: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_l, p, q), jnp.float32),
+        interpret=interpret,
+    )(f_in.astype(jnp.float32), w.astype(jnp.float32), f_out.astype(jnp.float32))
+    return out[0] if squeeze else out
+
+
+def vmem_bytes(p: int, m: int, n: int, q: int) -> int:
+    """Per-program VMEM footprint estimate (f32), for EXPERIMENTS.md §Perf."""
+    bp, bq = min(p, MXU_TILE), min(q, MXU_TILE)
+    inter = min(bp * n, m * bq)  # intermediate of the cheaper contraction
+    return 4 * (bp * m + m * n + n * bq + bp * bq + inter)

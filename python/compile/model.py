@@ -1,0 +1,542 @@
+"""L2: transformer model families (GPT / BERT / ViT) over a flat parameter
+vector, with AdamW training steps — the compute graphs that `aot.py` lowers
+to HLO artifacts for the Rust coordinator.
+
+Every public entry point is a pure function of a flat **state vector**
+
+    state = concat([loss], theta, adam_m, adam_v)  : f32[3N + 1]
+
+(the scalar loss lives at index 0 so the Rust hot loop can read it back with
+a 4-byte partial device→host copy while the rest of the state never leaves
+the device)
+
+so the Rust side holds exactly one device buffer per model level and never
+needs to know the parameter tree. The layout (name → offset/shape) is
+exported to `manifest.json` by `aot.py` for checkpointing, fine-tune
+grafting and the Fig. 1 attention-map probe.
+
+The model can be built against the Pallas kernels (``use_pallas=True``) or
+the pure-jnp reference path; pytest proves both paths produce identical
+numerics (python/tests/test_model.py), so the hot-loop artifacts use the
+ref path where interpret-mode Pallas would distort CPU walltime — see
+DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .configs import ModelConfig, LORA_RANK
+from .kernels import ref
+from .kernels.attention import attention as pallas_attention
+from .kernels.layernorm import layernorm as pallas_layernorm
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+INIT_STD = 0.02
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """Ordered spec {name: (shape, init_kind)}.
+
+    init_kind ∈ {"normal", "zeros", "ones"}; the Rust side synthesizes the
+    initial theta from this table with its own seeded RNG.
+    """
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layer
+    spec: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+    if cfg.family in ("gpt", "bert"):
+        spec["emb"] = ((cfg.vocab, d), "normal")
+        spec["pos"] = ((cfg.seq_len, d), "normal")
+    else:
+        spec["patch_w"] = ((cfg.patch_size ** 2 * 3, d), "normal")
+        spec["patch_b"] = ((d,), "zeros")
+        spec["cls"] = ((d,), "normal")
+        spec["pos"] = ((cfg.n_patches + 1, d), "normal")
+    blocks: List[Tuple[str, Tuple[int, ...], str]] = [
+        ("ln1_w", (L, d), "ones"), ("ln1_b", (L, d), "zeros"),
+        ("wq", (L, d, d), "normal"), ("bq", (L, d), "zeros"),
+        ("wk", (L, d, d), "normal"), ("bk", (L, d), "zeros"),
+        ("wv", (L, d, d), "normal"), ("bv", (L, d), "zeros"),
+        ("wo", (L, d, d), "normal"), ("bo", (L, d), "zeros"),
+        ("ln2_w", (L, d), "ones"), ("ln2_b", (L, d), "zeros"),
+        ("fc1_w", (L, d, dff), "normal"), ("fc1_b", (L, dff), "zeros"),
+        ("fc2_w", (L, dff, d), "normal"), ("fc2_b", (L, d), "zeros"),
+    ]
+    for name, shape, kind in blocks:
+        spec[f"blk.{name}"] = (shape, kind)
+    spec["lnf_w"] = ((d,), "ones")
+    spec["lnf_b"] = ((d,), "zeros")
+    if cfg.family in ("gpt", "bert"):
+        spec["head_w"] = ((d, cfg.vocab), "normal")
+        spec["head_b"] = ((cfg.vocab,), "zeros")
+    else:
+        spec["head_w"] = ((d, cfg.n_classes), "normal")
+        spec["head_b"] = ((cfg.n_classes,), "zeros")
+    return spec
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name, (shape, kind) in param_spec(cfg).items():
+        if kind == "normal":
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * INIT_STD
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def n_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, (shape, _) in param_spec(cfg).items():
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def layout(cfg: ModelConfig) -> List[Tuple[str, int, Tuple[int, ...], str]]:
+    """[(name, offset, shape, init_kind)] in ravel order.
+
+    ravel_pytree flattens dicts in sorted-key order, so offsets are computed
+    over sorted names (verified against ravel_pytree in tests).
+    """
+    spec = param_spec(cfg)
+    out, off = [], 0
+    for name in sorted(spec):
+        shape, kind = spec[name]
+        size = 1
+        for s in shape:
+            size *= s
+        out.append((name, off, shape, kind))
+        off += size
+    return out
+
+
+def unravel_fn(cfg: ModelConfig):
+    """theta f32[N] -> params pytree (closure over the config's shapes)."""
+    shaped = {n: jnp.zeros(s, jnp.float32) for n, (s, _) in param_spec(cfg).items()}
+    _, unravel = ravel_pytree(shaped)
+    return unravel
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+# Pallas kernels run in interpret mode, which does not support reverse-mode
+# autodiff; wrap them in custom_vjp with the forward on the Pallas path and
+# the backward derived from the (numerically identical) ref oracle. pytest
+# proves fwd equality, so the VJP pairing is exact.
+
+
+@jax.custom_vjp
+def _pallas_ln(x, w, b):
+    return pallas_layernorm(x, w, b)
+
+
+def _pallas_ln_fwd(x, w, b):
+    return pallas_layernorm(x, w, b), (x, w, b)
+
+
+def _pallas_ln_bwd(res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(ref.layernorm, x, w, b)
+    return vjp(g)
+
+
+_pallas_ln.defvjp(_pallas_ln_fwd, _pallas_ln_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _pallas_attn(q, k, v, causal):
+    return pallas_attention(q, k, v, causal=causal)
+
+
+def _pallas_attn_fwd(q, k, v, causal):
+    return pallas_attention(q, k, v, causal=causal), (q, k, v)
+
+
+def _pallas_attn_bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b2, c: ref.attention(a, b2, c, causal), q, k, v)
+    return vjp(g)
+
+
+_pallas_attn.defvjp(_pallas_attn_fwd, _pallas_attn_bwd)
+
+
+def _layernorm(x, w, b, use_pallas):
+    if use_pallas:
+        return _pallas_ln(x, w, b)
+    return ref.layernorm(x, w, b)
+
+
+def _attention(q, k, v, causal, use_pallas):
+    if use_pallas:
+        return _pallas_attn(q, k, v, causal)
+    return ref.attention(q, k, v, causal)
+
+
+def _block(h, blk, cfg: ModelConfig, use_pallas: bool, collect_attn: bool):
+    """One pre-LN transformer block. h: [B, S, d]."""
+    bsz, s, d = h.shape
+    nh, hd = cfg.n_head, cfg.head_dim
+    causal = cfg.family == "gpt"
+
+    x = _layernorm(h, blk["ln1_w"], blk["ln1_b"], use_pallas)
+    q = (x @ blk["wq"] + blk["bq"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (x @ blk["wk"] + blk["bk"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (x @ blk["wv"] + blk["bv"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    attn_probs = None
+    if collect_attn:
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(hd))
+        if causal:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+        attn_probs = jax.nn.softmax(scores, axis=-1)
+    o = _attention(q, k, v, causal, use_pallas)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+    h = h + o @ blk["wo"] + blk["bo"]
+
+    x = _layernorm(h, blk["ln2_w"], blk["ln2_b"], use_pallas)
+    x = jax.nn.gelu(x @ blk["fc1_w"] + blk["fc1_b"])
+    h = h + x @ blk["fc2_w"] + blk["fc2_b"]
+    return h, attn_probs
+
+
+def _backbone(params, x_emb, cfg: ModelConfig, use_pallas: bool,
+              collect_attn: bool = False):
+    """Stack of blocks via scan over the stacked layer axis."""
+    blks = {k[len("blk."):]: v for k, v in params.items() if k.startswith("blk.")}
+
+    if collect_attn:
+        # Unrolled (attention maps are a probe artifact; compile cost is fine).
+        h, maps = x_emb, []
+        for l in range(cfg.n_layer):
+            blk = {k: v[l] for k, v in blks.items()}
+            h, p = _block(h, blk, cfg, use_pallas, True)
+            maps.append(p)
+        h = _layernorm(h, params["lnf_w"], params["lnf_b"], use_pallas)
+        return h, jnp.stack(maps)  # [L, B, H, S, S]
+
+    def step(h, blk):
+        h, _ = _block(h, blk, cfg, use_pallas, False)
+        return h, None
+
+    h, _ = jax.lax.scan(step, x_emb, blks)
+    return _layernorm(h, params["lnf_w"], params["lnf_b"], use_pallas), None
+
+
+def _embed_lang(params, tokens):
+    return params["emb"][tokens] + params["pos"][None, :, :]
+
+
+def _embed_vit(params, images, cfg: ModelConfig):
+    b = images.shape[0]
+    p = cfg.patch_size
+    g = cfg.image_size // p
+    x = images.reshape(b, g, p, g, p, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, g * g, p * p * 3)
+    x = x @ params["patch_w"] + params["patch_b"]
+    cls = jnp.broadcast_to(params["cls"][None, None, :], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    return x + params["pos"][None, :, :]
+
+
+def logits_fn(params, batch, cfg: ModelConfig, use_pallas: bool):
+    """Forward to logits. batch: tokens [B,S] (lang) or images (vit)."""
+    if cfg.family == "vit":
+        h, _ = _backbone(params, _embed_vit(params, batch, cfg), cfg, use_pallas)
+        pooled = h[:, 0, :]  # class token
+        return pooled @ params["head_w"] + params["head_b"]
+    h, _ = _backbone(params, _embed_lang(params, batch), cfg, use_pallas)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def _xent(logits, labels, ignore_lt0=False):
+    """Mean cross-entropy; labels < 0 are masked out when ignore_lt0."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    if ignore_lt0:
+        mask = (labels >= 0).astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool):
+    """Scalar training loss for one batch.
+
+    gpt:  batch = tokens [B,S]            (next-token CE)
+    bert: batch = (masked_tokens, labels) (MLM CE, labels<0 ignored)
+    vit:  batch = (images, labels)        (classification CE)
+    """
+    if cfg.family == "gpt":
+        tokens = batch
+        logits = logits_fn(params, tokens, cfg, use_pallas)
+        return _xent(logits[:, :-1, :], tokens[:, 1:], ignore_lt0=False)
+    if cfg.family == "bert":
+        tokens, labels = batch
+        logits = logits_fn(params, tokens, cfg, use_pallas)
+        return _xent(logits, labels, ignore_lt0=True)
+    images, labels = batch
+    logits = logits_fn(params, images, cfg, use_pallas)
+    return _xent(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# AdamW over the flat state vector
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.01
+
+
+def split_state(state, n):
+    """state[3n+1] -> (theta, m, v); loss occupies index 0."""
+    return state[1:1 + n], state[1 + n:1 + 2 * n], state[1 + 2 * n:1 + 3 * n]
+
+
+def theta_of(state, n):
+    return state[1:1 + n]
+
+
+def pack_state(theta, m, v, loss):
+    return jnp.concatenate([loss.reshape(1), theta, m, v])
+
+
+def adamw(theta, g, m, v, lr, step):
+    """One AdamW update on flat vectors. step is 1-based."""
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** step)
+    vhat = v / (1 - ADAM_B2 ** step)
+    theta = theta - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * theta)
+    return theta, m, v
+
+
+def make_train_step(cfg: ModelConfig, use_pallas: bool = False):
+    """(state[3N+1], *batch, lr, step) -> state'[3N+1] with loss at the end."""
+    n = n_params(cfg)
+    unravel = unravel_fn(cfg)
+
+    def train_step(state, *args):
+        *batch, lr, step = args
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        theta, m, v = split_state(state, n)
+        loss, g = jax.value_and_grad(
+            lambda th: loss_fn(unravel(th), batch, cfg, use_pallas))(theta)
+        theta, m, v = adamw(theta, g, m, v, lr, step)
+        return pack_state(theta, m, v, loss)
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig, use_pallas: bool = False):
+    """(state, *batch) -> scalar mean loss."""
+    n = n_params(cfg)
+    unravel = unravel_fn(cfg)
+
+    def eval_loss(state, *batch):
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        return loss_fn(unravel(theta_of(state, n)), batch, cfg, use_pallas)
+
+    return eval_loss
+
+
+def make_eval_acc(cfg: ModelConfig):
+    """(state, images, labels) -> top-1 accuracy fraction (ViT families).
+
+    The Table 3 / Table 6 metric ("ImageNet Top-1" substitute) and the
+    transfer-learning probe after fine-tuning on a held-out domain.
+    """
+    assert cfg.family == "vit"
+    n = n_params(cfg)
+    unravel = unravel_fn(cfg)
+
+    def eval_acc(state, images, labels):
+        logits = logits_fn(unravel(theta_of(state, n)), images, cfg, False)
+        return (logits.argmax(-1) == labels).astype(jnp.float32).mean()
+
+    return eval_acc
+
+
+def make_attn_maps(cfg: ModelConfig):
+    """(state, tokens) -> attention probabilities [L, H, S, S] (batch item 0).
+
+    The Fig. 1 probe: intra-/inter-layer attention-pattern similarity.
+    """
+    n = n_params(cfg)
+    unravel = unravel_fn(cfg)
+
+    def attn_maps(state, tokens):
+        params = unravel(theta_of(state, n))
+        x = _embed_lang(params, tokens)
+        _, maps = _backbone(params, x, cfg, use_pallas=False, collect_attn=True)
+        return maps[:, 0]  # [L, H, S, S]
+
+    return attn_maps
+
+
+# ---------------------------------------------------------------------------
+# Fine-tuning probe (GLUE substitute): backbone + classification head
+# ---------------------------------------------------------------------------
+
+
+def ft_head_size(cfg: ModelConfig, n_cls: int) -> int:
+    return cfg.d_model * n_cls + n_cls
+
+
+def make_ft_step(cfg: ModelConfig, n_cls: int):
+    """Fine-tune train step over state_ft = concat(theta, head, m, v, [loss]).
+
+    N_ft = N + d*n_cls + n_cls; the whole stack (backbone + head) trains.
+    batch = (tokens [B,S], labels [B]).
+    """
+    n = n_params(cfg)
+    nf = n + ft_head_size(cfg, n_cls)
+    unravel = unravel_fn(cfg)
+    d = cfg.d_model
+
+    def ft_loss(th, tokens, labels):
+        params = unravel(th[:n])
+        hw = th[n:n + d * n_cls].reshape(d, n_cls)
+        hb = th[n + d * n_cls:nf]
+        h, _ = _backbone(params, _embed_lang(params, tokens), cfg, False)
+        pooled = h.mean(axis=1)
+        return _xent(pooled @ hw + hb, labels)
+
+    def ft_step(state, tokens, labels, lr, step):
+        theta, m, v = split_state(state, nf)
+        loss, g = jax.value_and_grad(ft_loss)(theta, tokens, labels)
+        theta, m, v = adamw(theta, g, m, v, lr, step)
+        return pack_state(theta, m, v, loss)
+
+    def ft_acc(state, tokens, labels):
+        th = state[1:1 + nf]
+        params = unravel(th[:n])
+        hw = th[n:n + d * n_cls].reshape(d, n_cls)
+        hb = th[n + d * n_cls:nf]
+        h, _ = _backbone(params, _embed_lang(params, tokens), cfg, False)
+        logits = h.mean(axis=1) @ hw + hb
+        return (logits.argmax(-1) == labels).astype(jnp.float32).mean()
+
+    return ft_step, ft_acc
+
+
+# ---------------------------------------------------------------------------
+# KI baseline: distillation train step (small teacher -> large student)
+# ---------------------------------------------------------------------------
+
+
+def make_distill_step(cfg_s: ModelConfig, cfg_t: ModelConfig):
+    """(state_student, theta_teacher, *batch, kd_w, lr, step) -> state'.
+
+    loss = (1-kd_w)·CE + kd_w·KL(teacher ‖ student); the teacher forward is
+    stop-gradient (its theta is a plain input).
+    """
+    n_s, n_t = n_params(cfg_s), n_params(cfg_t)
+    unr_s, unr_t = unravel_fn(cfg_s), unravel_fn(cfg_t)
+
+    def kd_loss(th_s, th_t, batch, kd_w):
+        tokens = batch if cfg_s.family == "gpt" else batch[0]
+        s_logits = logits_fn(unr_s(th_s), tokens, cfg_s, False)
+        t_logits = logits_fn(unr_t(th_t), tokens, cfg_t, False)
+        ce = loss_fn(unr_s(th_s), batch, cfg_s, False)
+        t_p = jax.nn.softmax(t_logits, axis=-1)
+        kl = (t_p * (jax.nn.log_softmax(t_logits, -1)
+                     - jax.nn.log_softmax(s_logits, -1))).sum(-1).mean()
+        return (1.0 - kd_w) * ce + kd_w * kl
+
+    def step_fn(state, th_t, *args):
+        *batch, kd_w, lr, step = args
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        theta, m, v = split_state(state, n_s)
+        loss, g = jax.value_and_grad(
+            lambda th: kd_loss(th, th_t, batch, kd_w))(theta)
+        theta, m, v = adamw(theta, g, m, v, lr, step)
+        return pack_state(theta, m, v, loss)
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# LoRA baseline (Fig. 8): rank-r adapters on W_q / W_v, base frozen
+# ---------------------------------------------------------------------------
+
+
+def lora_spec(cfg: ModelConfig, rank: int = LORA_RANK):
+    L, d = cfg.n_layer, cfg.d_model
+    return {
+        "aq": ((L, d, rank), "normal"), "bq2": ((L, rank, d), "zeros"),
+        "av": ((L, d, rank), "normal"), "bv2": ((L, rank, d), "zeros"),
+    }
+
+
+def lora_n_params(cfg: ModelConfig, rank: int = LORA_RANK) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s, _ in lora_spec(cfg, rank).values())
+
+
+def make_lora_step(cfg: ModelConfig, rank: int = LORA_RANK):
+    """(state_lora[3R+1], theta_base[N], *batch, lr, step) -> state_lora'."""
+    n = n_params(cfg)
+    r_n = lora_n_params(cfg, rank)
+    unravel = unravel_fn(cfg)
+    shaped = {k: jnp.zeros(s, jnp.float32) for k, (s, _) in lora_spec(cfg, rank).items()}
+    _, unravel_lora = ravel_pytree(shaped)
+
+    def merged(th_base, lora_flat):
+        params = dict(unravel(th_base))
+        lo = unravel_lora(lora_flat)
+        params["blk.wq"] = params["blk.wq"] + jnp.einsum("ldr,lre->lde", lo["aq"], lo["bq2"])
+        params["blk.wv"] = params["blk.wv"] + jnp.einsum("ldr,lre->lde", lo["av"], lo["bv2"])
+        return params
+
+    def lora_loss(lora_flat, th_base, batch):
+        return loss_fn(merged(th_base, lora_flat), batch, cfg, False)
+
+    def step_fn(state, th_base, *args):
+        *batch, lr, step = args
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        lo, m, v = split_state(state, r_n)
+        loss, g = jax.value_and_grad(
+            lambda x: lora_loss(x, th_base, batch))(lo)
+        lo, m, v = adamw(lo, g, m, v, lr, step)
+        return pack_state(lo, m, v, loss)
+
+    def eval_fn(state, th_base, *batch):
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        return loss_fn(merged(th_base, state[1:1 + r_n]), batch, cfg, False)
+
+    return step_fn, eval_fn
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (exported through the manifest; Rust reads, never computes)
+# ---------------------------------------------------------------------------
+
+
+def flops_per_fwd_token(cfg: ModelConfig) -> float:
+    """Matmul FLOPs per token, forward only (2·MACs)."""
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layer
+    s = cfg.seq_len if cfg.family != "vit" else cfg.n_patches + 1
+    per_layer = 2 * (4 * d * d + 2 * d * dff)  # qkvo + ffn
+    attn = 2 * 2 * s * d  # QK^T + PV per token
+    head = 2 * d * (cfg.vocab if cfg.family != "vit" else cfg.n_classes)
+    return L * (per_layer + attn) + head
+
+
+def flops_train_step(cfg: ModelConfig) -> float:
+    """fwd + bwd ≈ 3× forward matmul cost, × tokens per step."""
+    return 3.0 * flops_per_fwd_token(cfg) * cfg.tokens_per_step

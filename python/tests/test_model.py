@@ -1,0 +1,163 @@
+"""L2 model tests: layouts, train steps, loss semantics, Pallas/ref
+equivalence, fine-tune / distill / LoRA variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from compile import model as M
+from compile.configs import BASE_CONFIGS, coalesce_config, param_count
+
+
+def flat_state(cfg, seed=0):
+    p = M.init_params(cfg, jax.random.PRNGKey(seed))
+    theta, _ = ravel_pytree(p)
+    n = M.n_params(cfg)
+    return jnp.concatenate([jnp.zeros(1), theta, jnp.zeros(2 * n)])
+
+
+def batch_for(cfg, seed=1):
+    key = jax.random.PRNGKey(seed)
+    if cfg.family == "gpt":
+        return (jax.random.randint(key, (cfg.batch, cfg.seq_len), 2, cfg.vocab),)
+    if cfg.family == "bert":
+        toks = jax.random.randint(key, (cfg.batch, cfg.seq_len), 2, cfg.vocab)
+        labels = jnp.where(
+            jax.random.uniform(key, toks.shape) < 0.15, toks, -jnp.ones_like(toks))
+        return (toks, labels)
+    imgs = jax.random.uniform(key, (cfg.batch, cfg.image_size, cfg.image_size, 3))
+    labels = jax.random.randint(key, (cfg.batch,), 0, cfg.n_classes)
+    return (imgs, labels)
+
+
+@pytest.mark.parametrize("name", ["gpt_nano", "bert_nano", "vit_nano"])
+def test_param_count_matches_ravel(name):
+    cfg = BASE_CONFIGS[name]
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    flat, _ = ravel_pytree(p)
+    assert flat.shape[0] == M.n_params(cfg) == param_count(cfg)
+
+
+@pytest.mark.parametrize("name", ["gpt_nano", "bert_nano", "vit_nano"])
+def test_layout_offsets_match_ravel_order(name):
+    cfg = BASE_CONFIGS[name]
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    flat, _ = ravel_pytree(p)
+    for (nm, off, shape, _kind) in M.layout(cfg):
+        size = int(np.prod(shape))
+        got = np.asarray(flat[off:off + size].reshape(shape))
+        np.testing.assert_array_equal(got, np.asarray(p[nm]), err_msg=nm)
+
+
+@pytest.mark.parametrize("name", ["gpt_nano", "bert_nano", "vit_nano"])
+def test_train_step_reduces_loss(name):
+    cfg = BASE_CONFIGS[name]
+    state = flat_state(cfg)
+    ts = jax.jit(M.make_train_step(cfg))
+    batch = batch_for(cfg)
+    losses = []
+    for step in range(1, 21):
+        state = ts(state, *batch, jnp.float32(3e-3), jnp.float32(step))
+        losses.append(float(state[0]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_initial_gpt_loss_near_uniform():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    ev = jax.jit(M.make_eval_loss(cfg))
+    loss = float(ev(flat_state(cfg), *batch_for(cfg)))
+    assert abs(loss - np.log(cfg.vocab)) < 0.5
+
+
+def test_bert_ignores_unmasked_positions():
+    cfg = BASE_CONFIGS["bert_nano"]
+    ev = jax.jit(M.make_eval_loss(cfg))
+    toks = jnp.full((cfg.batch, cfg.seq_len), 5, jnp.int32)
+    labels_none = -jnp.ones_like(toks).at[:, 1].set(7)
+    # perturbing an ignored position's label must not change the loss
+    labels_alt = labels_none.at[:, 2].set(-1)
+    l1 = float(ev(flat_state(cfg), toks, labels_none))
+    l2 = float(ev(flat_state(cfg), toks, labels_alt))
+    assert l1 == l2
+
+
+def test_pallas_and_ref_train_steps_agree():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    state = flat_state(cfg, seed=3)
+    batch = batch_for(cfg, seed=4)
+    s_ref = jax.jit(M.make_train_step(cfg, use_pallas=False))(
+        state, *batch, jnp.float32(1e-3), jnp.float32(1))
+    s_pal = jax.jit(M.make_train_step(cfg, use_pallas=True))(
+        state, *batch, jnp.float32(1e-3), jnp.float32(1))
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_moves_toward_gradient():
+    theta = jnp.ones(4)
+    g = jnp.array([1.0, -1.0, 0.0, 2.0])
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    t2, _, _ = M.adamw(theta, g, m, v, 0.1, 1.0)
+    # wd pulls all down slightly; gradient sign dominates
+    assert t2[0] < theta[0] and t2[1] > theta[1] - 0.01
+
+
+def test_attn_maps_shape_and_rows_sum_to_one():
+    cfg = BASE_CONFIGS["bert_nano"]
+    fn = jax.jit(M.make_attn_maps(cfg))
+    maps = fn(flat_state(cfg), batch_for(cfg)[0])
+    assert maps.shape == (cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.seq_len)
+    np.testing.assert_allclose(np.asarray(maps).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_ft_step_and_acc():
+    cfg = BASE_CONFIGS["bert_nano"]
+    n_cls = 4
+    step_fn, acc_fn = M.make_ft_step(cfg, n_cls)
+    nf = M.n_params(cfg) + M.ft_head_size(cfg, n_cls)
+    state = jnp.zeros(3 * nf + 1).at[1:1 + M.n_params(cfg)].set(
+        flat_state(cfg)[1:1 + M.n_params(cfg)])
+    toks = jnp.ones((cfg.batch, cfg.seq_len), jnp.int32) * 3
+    labels = jnp.zeros((cfg.batch,), jnp.int32)
+    s2 = jax.jit(step_fn)(state, toks, labels, jnp.float32(1e-3), jnp.float32(1))
+    assert s2.shape == state.shape and np.isfinite(float(s2[0]))
+    acc = float(jax.jit(acc_fn)(s2, toks, labels))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_distill_step_mixes_losses():
+    s_cfg = BASE_CONFIGS["gpt_nano"]
+    t_cfg = coalesce_config(s_cfg, 2)
+    fn = jax.jit(M.make_distill_step(s_cfg, t_cfg))
+    state = flat_state(s_cfg)
+    t_theta = flat_state(t_cfg)[1:1 + M.n_params(t_cfg)]
+    batch = batch_for(s_cfg)
+    out = fn(state, t_theta, *batch, jnp.float32(0.5), jnp.float32(1e-3), jnp.float32(1))
+    assert out.shape == state.shape and np.isfinite(float(out[0]))
+    # kd_w=0 must equal the plain CE loss
+    plain = jax.jit(M.make_train_step(s_cfg))(
+        state, *batch, jnp.float32(1e-3), jnp.float32(1))
+    kd0 = fn(state, t_theta, *batch, jnp.float32(0.0), jnp.float32(1e-3), jnp.float32(1))
+    np.testing.assert_allclose(float(kd0[0]), float(plain[0]), rtol=1e-5)
+
+
+def test_lora_only_updates_adapters():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    step_fn, eval_fn = M.make_lora_step(cfg)
+    rn = M.lora_n_params(cfg)
+    lora_state = jnp.zeros(3 * rn + 1).at[1:1 + rn // 2].set(0.01)
+    theta = flat_state(cfg)[1:1 + M.n_params(cfg)]
+    batch = batch_for(cfg)
+    out = jax.jit(step_fn)(lora_state, theta, *batch, jnp.float32(1e-3), jnp.float32(1))
+    assert out.shape == lora_state.shape
+    loss = float(jax.jit(eval_fn)(out, theta, *batch))
+    assert np.isfinite(loss)
+
+
+def test_flops_scale_with_model_size():
+    small = BASE_CONFIGS["gpt_nano"]
+    big = BASE_CONFIGS["gpt_base_sim"]
+    assert M.flops_train_step(big) > 10 * M.flops_train_step(small)

@@ -1,0 +1,184 @@
+"""Operator algebra tests: the paper's normalization identities (Eq. 2, 9,
+11), function preservation through C → D, symmetry of de-coalesced neurons
+(App. G), and the width/depth-only variants the baselines use."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.flatten_util import ravel_pytree
+
+from compile import model as M, operators as O
+from compile.configs import BASE_CONFIGS, coalesce_config
+
+
+def state_of(cfg, seed=0):
+    p = M.init_params(cfg, jax.random.PRNGKey(seed))
+    theta, _ = ravel_pytree(p)
+    n = M.n_params(cfg)
+    return jnp.concatenate([jnp.zeros(1), theta, jnp.zeros(2 * n)])
+
+
+# ---------------------------------------------------------------------------
+# matrix identities
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n1=st.integers(1, 24), frac=st.floats(0.1, 1.0), mode=st.sampled_from(["adj", "stack"]))
+def test_group_matrix_columns_average(n1, frac, mode):
+    n2 = max(1, int(n1 * frac))
+    f = np.asarray(O.group_matrix(n1, n2, mode))
+    # columns sum to 1 (averaging), every row belongs to exactly one group
+    np.testing.assert_allclose(f.sum(0), 1.0, rtol=1e-6)
+    assert ((f > 0).sum(1) == 1).all()
+    # full column rank
+    assert np.linalg.matrix_rank(f) == n2
+
+
+def test_paper_stack_matrix_shape():
+    # Eq. 15: H ∈ R^{12×6} merges head i with i+6 at weight 0.5
+    f = np.asarray(O.group_matrix(12, 6, "stack"))
+    for j in range(6):
+        assert f[j, j] == pytest.approx(0.5)
+        assert f[j + 6, j] == pytest.approx(0.5)
+
+
+def test_depth_matrices_rg_column_sum_identity():
+    # Eq. 9: column sums of R·G equal 1 -> parameter magnitude is stable
+    for l1, l2 in [(4, 2), (8, 4), (12, 3), (6, 6)]:
+        r, g = O.depth_matrices(l1, l2)
+        rg = np.asarray(r @ g)
+        np.testing.assert_allclose(rg.sum(0), 1.0, rtol=1e-5)
+
+
+def test_width_roundtrip_reconstructs_group_means():
+    # F_out then T_out must reproduce the group-averaged matrix exactly
+    f_out = O.group_matrix(8, 4, "stack")
+    t_in, t_out = O.t_matrices(f_out)
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)), jnp.float32)
+    f_in = O.f_in_from_f_out(f_out)
+    w_small = f_in @ w @ f_out
+    w_back = np.asarray(t_in @ w_small @ t_out)
+    w_back2 = np.asarray(t_in @ (f_in @ jnp.asarray(w_back) @ f_out) @ t_out)
+    # idempotence: projecting the reconstructed matrix again is a fixpoint
+    np.testing.assert_allclose(w_back, w_back2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end operator semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["gpt_nano", "bert_nano", "vit_nano"])
+def test_function_preservation_roundtrip(name):
+    """C then D (α=1) approximately preserves the loss (Eq. 8–11)."""
+    cfg = BASE_CONFIGS[name]
+    small = coalesce_config(cfg, 2)
+    state = state_of(cfg)
+    co = jax.jit(O.make_coalesce(cfg, small, use_pallas=False))
+    re = jax.jit(O.make_refine(cfg, small, use_pallas=False))
+    back = re(state, co(state), jnp.float32(1.0))
+
+    ev = jax.jit(M.make_eval_loss(cfg))
+    key = jax.random.PRNGKey(9)
+    if cfg.family == "gpt":
+        batch = (jax.random.randint(key, (cfg.batch, cfg.seq_len), 2, cfg.vocab),)
+    elif cfg.family == "bert":
+        toks = jax.random.randint(key, (cfg.batch, cfg.seq_len), 2, cfg.vocab)
+        batch = (toks, toks)  # all positions labeled
+    else:
+        batch = (jax.random.uniform(key, (cfg.batch, cfg.image_size, cfg.image_size, 3)),
+                 jax.random.randint(key, (cfg.batch,), 0, cfg.n_classes))
+    l0, l1 = float(ev(state, *batch)), float(ev(back, *batch))
+    assert abs(l1 - l0) < 0.3, (l0, l1)
+
+
+def test_alpha_zero_is_identity():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    small = coalesce_config(cfg, 2)
+    state = state_of(cfg)
+    co = jax.jit(O.make_coalesce(cfg, small, use_pallas=False))
+    re = jax.jit(O.make_refine(cfg, small, use_pallas=False))
+    out = re(state, co(state), jnp.float32(0.0))
+    n = M.n_params(cfg)
+    np.testing.assert_allclose(
+        np.asarray(out[1:1 + n]), np.asarray(state[1:1 + n]), atol=1e-6)
+
+
+def test_refine_zeroes_adam_moments():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    small = coalesce_config(cfg, 2)
+    n = M.n_params(cfg)
+    state = state_of(cfg).at[1 + n:].set(0.5)  # fake nonzero moments
+    co = jax.jit(O.make_coalesce(cfg, small, use_pallas=False))
+    re = jax.jit(O.make_refine(cfg, small, use_pallas=False))
+    out = re(state, co(state), jnp.float32(0.5))
+    assert float(jnp.abs(out[1 + n:]).max()) == 0.0
+
+
+def test_decoalesced_width_neurons_are_symmetric():
+    """App. G: pure width de-coalescing duplicates neuron groups."""
+    cfg = BASE_CONFIGS["gpt_nano"]
+    wide = cfg.with_size(cfg.n_layer, cfg.n_head // 2, "_w")
+    state = state_of(cfg, seed=2)
+    co = jax.jit(O.make_coalesce(cfg, wide, depth=False, use_pallas=False))
+    re = jax.jit(O.make_refine(cfg, wide, depth=False, use_pallas=False))
+    back = re(state, co(state), jnp.float32(1.0))
+    unr = M.unravel_fn(cfg)
+    params = unr(back[1:1 + M.n_params(cfg)])
+    wq = np.asarray(params["blk.wq"][0])
+    d2 = cfg.d_model // 2
+    # stack grouping merges head block i with i + H/2 -> duplicated halves
+    np.testing.assert_allclose(wq[:, :d2], wq[:, d2:], rtol=1e-4, atol=1e-5)
+
+
+def test_coalesce_width_only_and_depth_only_shapes():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    wide = cfg.with_size(cfg.n_layer, 1, "_w")
+    shallow = cfg.with_size(1, cfg.n_head, "_d")
+    st_full = state_of(cfg)
+    w = jax.jit(O.make_coalesce(cfg, wide, depth=False, use_pallas=False))(st_full)
+    d = jax.jit(O.make_coalesce(cfg, shallow, width=False, use_pallas=False))(st_full)
+    assert w.shape[0] == 3 * M.n_params(wide) + 1
+    assert d.shape[0] == 3 * M.n_params(shallow) + 1
+
+
+def test_pallas_operator_path_matches_ref_path():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    small = coalesce_config(cfg, 2)
+    state = state_of(cfg, seed=5)
+    co_r = jax.jit(O.make_coalesce(cfg, small, use_pallas=False))(state)
+    co_p = jax.jit(O.make_coalesce(cfg, small, use_pallas=True))(state)
+    np.testing.assert_allclose(np.asarray(co_r), np.asarray(co_p), rtol=1e-5, atol=1e-6)
+    re_r = jax.jit(O.make_refine(cfg, small, use_pallas=False))(state, co_r, jnp.float32(0.3))
+    re_p = jax.jit(O.make_refine(cfg, small, use_pallas=True))(state, co_r, jnp.float32(0.3))
+    np.testing.assert_allclose(np.asarray(re_r), np.asarray(re_p), rtol=1e-5, atol=1e-6)
+
+
+def test_fit_depth_refine_reconstructs_better():
+    """App. J: the least-squares G should reconstruct the original layers at
+    least as well as the analytic G."""
+    cfg = BASE_CONFIGS["gpt_nano"].with_size(4, 2, "_deep")
+    small = coalesce_config(cfg, 2)
+    state = state_of(cfg, seed=7)
+    co = jax.jit(O.make_coalesce(cfg, small, use_pallas=False))
+    small_state = co(state)
+    re = jax.jit(O.make_refine(cfg, small, use_pallas=False))
+    re_fit = jax.jit(O.make_refine(cfg, small, use_pallas=False, fit_depth=True))
+    n = M.n_params(cfg)
+    t0 = np.asarray(state[1:1 + n])
+    err_plain = np.linalg.norm(np.asarray(re(state, small_state, jnp.float32(1.0))[1:1 + n]) - t0)
+    err_fit = np.linalg.norm(np.asarray(re_fit(state, small_state, jnp.float32(1.0))[1:1 + n]) - t0)
+    assert err_fit <= err_plain * 1.05, (err_fit, err_plain)
+
+
+def test_interp_state_is_affine():
+    n = 3 * M.n_params(BASE_CONFIGS["gpt_nano"]) + 1
+    f = jax.jit(O.make_interp_state(n))
+    a = jnp.arange(n, dtype=jnp.float32)
+    b = -a
+    out = np.asarray(f(a, b, jnp.float32(0.25)))
+    np.testing.assert_allclose(out, 0.75 * np.asarray(a) + 0.25 * np.asarray(b),
+                               rtol=1e-5, atol=1e-4)

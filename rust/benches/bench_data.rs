@@ -1,0 +1,40 @@
+//! Data-pipeline benchmarks: batch synthesis must be far cheaper than the
+//! XLA step it feeds (L3 must never starve the device).
+
+use std::time::Duration;
+
+use multilevel::data::{Batcher, Corpus, VisionGen};
+use multilevel::runtime::Runtime;
+use multilevel::util::bench::{black_box, run};
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    println!("== bench_data ==");
+
+    for name in ["gpt_base_sim", "bert_base_sim", "gpt_e2e"] {
+        let cfg = rt.cfg(name).unwrap().clone();
+        let corpus = Corpus::new(cfg.vocab, 0);
+        let mut b = Batcher::new(&cfg, corpus, 1);
+        let stats = run(&format!("batch gen {name}"), Duration::from_millis(600), || {
+            black_box(b.next_batch());
+        });
+        let step_est = cfg.flops_train_step / 23e9;
+        println!(
+            "  -> {:.3}% of a train step",
+            100.0 * stats.mean.as_secs_f64() / step_est
+        );
+    }
+
+    let cfg = rt.cfg("vit_b_sim").unwrap().clone();
+    let mut g = VisionGen::new(&cfg, 0, 1);
+    run("image batch gen vit_b_sim", Duration::from_millis(600), || {
+        black_box(g.next_batch(cfg.batch));
+    });
+
+    // corpus primitives
+    let corpus = Corpus::new(512, 0);
+    let mut rng = multilevel::util::rng::Rng::new(5);
+    run("corpus sequence(32)", Duration::from_millis(300), || {
+        black_box(corpus.sequence(32, &mut rng));
+    });
+}

@@ -1,0 +1,45 @@
+//! Operator benchmarks: coalesce / refine / interp latency per level pair —
+//! the paper's claim that level-transition overhead is negligible (App. C)
+//! quantified on this substrate.
+
+use std::time::Duration;
+
+use multilevel::coordinator::operators;
+use multilevel::runtime::{init_state, Runtime};
+use multilevel::util::bench::{black_box, run};
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    println!("== bench_operators ==");
+
+    let pairs = [
+        ("gpt_nano", "gpt_nano_lv2"),
+        ("bert_base_sim", "bert_base_sim_lv2"),
+        ("bert_large_sim", "bert_large_sim_lv2"),
+        ("gpt_e2e", "gpt_e2e_lv2"),
+    ];
+    for (big, small) in pairs {
+        let cfg = rt.cfg(big).unwrap().clone();
+        let state = init_state(&rt, &cfg, 1).unwrap();
+        let small_state = operators::coalesce(&rt, big, small, &state).unwrap();
+
+        let c = run(&format!("coalesce {big}"), Duration::from_secs(1), || {
+            black_box(operators::coalesce(&rt, big, small, &state).unwrap());
+        });
+        let r = run(&format!("refine   {big}"), Duration::from_secs(1), || {
+            black_box(
+                operators::refine(&rt, big, small, &state, &small_state, 0.25, false)
+                    .unwrap(),
+            );
+        });
+        run(&format!("interp   {big}"), Duration::from_secs(1), || {
+            black_box(operators::interp_states(&rt, big, &state, &state, 0.5).unwrap());
+        });
+        // transition cost in units of train steps (App. C argument)
+        let steps_equiv = (c.mean + r.mean).as_secs_f64()
+            / (cfg.flops_train_step / 23e9).max(1e-9);
+        println!(
+            "  -> one full transition ≈ {steps_equiv:.2} train-step equivalents (at 23 GFLOP/s)"
+        );
+    }
+}

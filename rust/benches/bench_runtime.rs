@@ -1,0 +1,60 @@
+//! Runtime micro-benchmarks: the L3 hot-path pieces in isolation —
+//! artifact compile, host→device upload, train-step dispatch, loss read,
+//! eval. These are the §Perf numbers of EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use multilevel::coordinator::Trainer;
+use multilevel::runtime::{init_state, Runtime};
+use multilevel::util::bench::{black_box, run};
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    println!("== bench_runtime ==");
+
+    // one explicit cold compile (the cache makes repeats meaningless)
+    let t0 = std::time::Instant::now();
+    rt.exe("train_step__gpt_nano").unwrap();
+    println!("cold compile train_step__gpt_nano: {:?}", t0.elapsed());
+
+    run("exe cache hit", Duration::from_millis(300), || {
+        black_box(rt.exe("train_step__gpt_nano").unwrap());
+    });
+
+    let tokens = vec![1i32; 4 * 16];
+    run("upload i32[4,16]", Duration::from_millis(500), || {
+        black_box(rt.upload_i32(&tokens, &[4, 16]).unwrap());
+    });
+    let state_host = vec![0f32; 3 * 30144 + 1];
+    run("upload f32[90433] (nano state)", Duration::from_millis(500), || {
+        black_box(rt.upload_f32(&state_host, &[3 * 30144 + 1]).unwrap());
+    });
+
+    for cfg_name in ["gpt_nano", "gpt_base_sim", "bert_base_sim"] {
+        let cfg = rt.cfg(cfg_name).unwrap().clone();
+        let mut state = init_state(&rt, &cfg, 1).unwrap();
+        let mut trainer = Trainer::new(&rt, cfg_name, 0, 2, 2).unwrap();
+        let (s, _) = trainer.step(&rt, &state, 1e-3, 1).unwrap(); // warm
+        state = s;
+        let mut step = 1usize;
+        let stats = run(
+            &format!("train_step {cfg_name}"),
+            Duration::from_secs(2),
+            || {
+                step += 1;
+                let (s, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+                state = s;
+            },
+        );
+        println!(
+            "  -> {:.2} GFLOP/s analytic",
+            cfg.flops_train_step / stats.mean.as_secs_f64() / 1e9
+        );
+        run(&format!("loss read {cfg_name}"), Duration::from_millis(500), || {
+            black_box(state.loss(&rt).unwrap());
+        });
+        run(&format!("eval(2 batches) {cfg_name}"), Duration::from_secs(1), || {
+            black_box(trainer.eval(&rt, &state).unwrap());
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! End-to-end table benchmarks: one reduced-size run per paper table /
+//! figure family, on the nano configs, timing the full method programs the
+//! experiment drivers execute at full size. `cargo bench` therefore
+//! exercises every paper artifact's code path in minutes.
+
+use std::time::Instant;
+
+use multilevel::coordinator::{savings_vs_scratch, Harness, Method, RunOpts};
+use multilevel::runtime::Runtime;
+
+fn time_method(h: &Harness<'_>, m: &Method) -> (f64, multilevel::coordinator::Curve) {
+    let t0 = Instant::now();
+    let curve = h.run_method(m, None).unwrap();
+    (t0.elapsed().as_secs_f64(), curve)
+}
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    println!("== bench_tables (nano-scale versions of every table) ==");
+
+    // Table 1/2 family: all methods on a language model
+    let mut opts = RunOpts::quick("gpt_nano", 120);
+    opts.eval_every = 20;
+    opts.budget_mult = 1.0;
+    let h = Harness::new(&rt, opts);
+    let (t_scratch, scratch) = time_method(&h, &Method::Scratch);
+    println!("tab1/2  Scratch            {t_scratch:7.2}s");
+    for m in [
+        Method::StackBert,
+        Method::Bert2Bert,
+        Method::LiGO { fit: false },
+        Method::NetExpansion,
+        Method::VCycle { levels: 2, fit: false },
+    ] {
+        let (dt, curve) = time_method(&h, &m);
+        let s = savings_vs_scratch(&scratch, &curve, "gpt_nano");
+        println!(
+            "tab1/2  {:18} {dt:7.2}s  flops-saving {:+6.1}%",
+            m.label(),
+            s.flops * 100.0
+        );
+    }
+
+    // Table 3 family: ViT
+    let mut vopts = RunOpts::quick("vit_nano", 100);
+    vopts.eval_every = 20;
+    vopts.budget_mult = 1.0;
+    let hv = Harness::new(&rt, vopts);
+    let (dt, _) = time_method(&hv, &Method::VCycle { levels: 2, fit: false });
+    println!("tab3    V-cycle (ViT)      {dt:7.2}s");
+
+    // Table 4 family: KI + distillation path
+    let (dt, _) = time_method(&h, &Method::KI);
+    println!("tab1ki  KI                 {dt:7.2}s");
+
+    // Table 5 family: custom-size V-cycle
+    let t0 = Instant::now();
+    h.run_vcycle_esmall(40, None).unwrap();
+    println!("tab5    custom E_small     {:7.2}s", t0.elapsed().as_secs_f64());
+
+    // Fig. 6 family: de-coalesced-only program
+    let (dt, _) = time_method(&h, &Method::DecoalescedOnly);
+    println!("fig6    De-coalesced only  {dt:7.2}s");
+}

@@ -1,0 +1,93 @@
+//! Distillation trainer for the KI baseline (Qin et al., 2022): the student
+//! trains against `(1-w)·CE + w·KL(teacher ‖ student)` with the frozen small
+//! teacher's theta as an extra device buffer.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::data::{Batcher, Corpus};
+use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime, State};
+
+/// Student trainer holding the frozen teacher theta on device.
+pub struct DistillTrainer {
+    pub cfg: ModelCfg,
+    exe: Rc<Exe>,
+    exe_eval: Rc<Exe>,
+    teacher_theta: xla::PjRtBuffer,
+    batcher: Batcher,
+    val: Vec<crate::data::LangBatch>,
+}
+
+impl DistillTrainer {
+    pub fn new(
+        rt: &Runtime,
+        student_cfg: &str,
+        exe: Rc<Exe>,
+        teacher_theta: xla::PjRtBuffer,
+        domain: u64,
+        seed: u64,
+        val_batches: usize,
+    ) -> Result<DistillTrainer> {
+        let cfg = rt.cfg(student_cfg)?.clone();
+        if !matches!(cfg.family, Family::Gpt | Family::Bert) {
+            bail!("distillation implemented for language families only");
+        }
+        let exe_eval = rt.exe(&format!("eval_loss__{student_cfg}"))?;
+        let corpus = Corpus::new(cfg.vocab, domain);
+        let val = Batcher::validation_set(&cfg, corpus.clone(), val_batches);
+        Ok(DistillTrainer {
+            batcher: Batcher::new(&cfg, corpus, seed),
+            cfg,
+            exe,
+            exe_eval,
+            teacher_theta,
+            val,
+        })
+    }
+
+    /// One distillation step with knowledge-distillation weight `kd_w`.
+    pub fn step(
+        &mut self,
+        rt: &Runtime,
+        state: &State,
+        kd_w: f32,
+        lr: f32,
+        step: usize,
+    ) -> Result<(State, f32)> {
+        let batch = self.batcher.next_batch();
+        let mut args = vec![
+            Arg::Buf(&state.buf),
+            Arg::Buf(&self.teacher_theta),
+            Arg::I32(&batch.tokens, batch.dims().to_vec()),
+        ];
+        if let Some(labels) = &batch.labels {
+            args.push(Arg::I32(labels, batch.dims().to_vec()));
+        }
+        args.push(Arg::Scalar(kd_w));
+        args.push(Arg::Scalar(lr));
+        args.push(Arg::Scalar(step as f32));
+        let buf = rt.call(&self.exe, &args)?;
+        let new_state = State {
+            buf,
+            n_params: state.n_params,
+            flops: state.flops + self.cfg.flops_train_step,
+        };
+        let loss = new_state.loss(rt)?;
+        Ok((new_state, loss))
+    }
+
+    /// Plain validation loss of the student.
+    pub fn eval(&self, rt: &Runtime, state: &State) -> Result<f32> {
+        let mut total = 0.0f64;
+        for batch in &self.val {
+            let mut args = vec![Arg::Buf(&state.buf), Arg::I32(&batch.tokens, batch.dims().to_vec())];
+            if let Some(labels) = &batch.labels {
+                args.push(Arg::I32(labels, batch.dims().to_vec()));
+            }
+            let out = rt.call(&self.exe_eval, &args)?;
+            total += rt.read_scalar(&out)? as f64;
+        }
+        Ok((total / self.val.len().max(1) as f64) as f32)
+    }
+}

@@ -1,0 +1,645 @@
+//! Experiment harness: runs one *method* (V-cycle or a baseline growth
+//! schedule) under a fixed budget and produces a [`Curve`] the table drivers
+//! compare. This is the shared machinery behind every paper table/figure
+//! (DESIGN.md §6).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::{Curve, Point};
+use crate::coordinator::operators;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::Trainer;
+use crate::info;
+use crate::runtime::{init_state, Runtime, State};
+
+/// Options shared by every run of one experiment.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    /// level-1 (original) config name, e.g. "bert_base_sim"
+    pub base: String,
+    /// scratch training budget T (steps on the level-1 model)
+    pub total_steps: usize,
+    /// warmup steps; the paper sets E_a = warmup
+    pub warmup: usize,
+    pub peak_lr: f32,
+    /// interpolation ratio α (paper: 0.5 BERT, 0.25 GPT/DeiT)
+    pub alpha: f32,
+    pub eval_every: usize,
+    pub val_batches: usize,
+    pub seed: u64,
+    /// non-scratch methods may train up to `budget_mult · T` large-model
+    /// steps so that slower-than-scratch methods still cross the target
+    /// (that is how the paper's negative savings arise)
+    pub budget_mult: f64,
+    /// corpus / vision domain of the pre-training distribution
+    pub domain: u64,
+}
+
+impl RunOpts {
+    pub fn quick(base: &str, total_steps: usize) -> RunOpts {
+        RunOpts {
+            base: base.to_string(),
+            total_steps,
+            warmup: (total_steps / 20).max(5),
+            peak_lr: 1e-3,
+            alpha: 0.25,
+            eval_every: (total_steps / 20).max(5),
+            val_batches: 4,
+            seed: 17,
+            budget_mult: 1.5,
+            domain: 0,
+        }
+    }
+
+    /// E_small: the paper stops small-model training halfway through the
+    /// large budget.
+    pub fn e_small(&self) -> usize {
+        self.total_steps / 2
+    }
+}
+
+/// The training methods compared in Tables 1–3 (plus figure-only programs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// train the level-1 model from scratch (the baseline of every table)
+    Scratch,
+    /// the paper's V-cycle (Algorithm 1) with `levels` ≥ 2
+    VCycle { levels: usize, fit: bool },
+    /// W-cycle (the paper's §3.4 future work): like the V-cycle but each
+    /// coarse level is revisited twice before the final ascent
+    WCycle { levels: usize },
+    /// StackBERT: train a depth-halved model, grow depth, continue
+    StackBert,
+    /// bert2BERT: train a width-halved model, grow width, continue
+    Bert2Bert,
+    /// LiGO-like: train the both-halved model, grow both (α = 1), continue;
+    /// `fit` uses the closed-form learned transformation (App. J)
+    LiGO { fit: bool },
+    /// Network Expansion: like LiGO but expanding the EMA of the small model
+    NetExpansion,
+    /// KI: distill the trained small model into a fresh large model
+    KI,
+    /// Fig. 6 probe: de-coalesce (α=1) from a *trained* small model and keep
+    /// training the symmetric large model without interpolation
+    DecoalescedOnly,
+    /// Fig. 5a ablation: V-cycle whose small model is randomly re-initialized
+    /// (coalescing removed)
+    VCycleRandomSmall,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Scratch => "Scratch".into(),
+            Method::VCycle { levels, fit: false } => format!("Ours (K={levels})"),
+            Method::VCycle { levels, fit: true } => format!("Ours+fit (K={levels})"),
+            Method::WCycle { levels } => format!("Ours-W (K={levels})"),
+            Method::StackBert => "StackBERT".into(),
+            Method::Bert2Bert => "bert2BERT".into(),
+            Method::LiGO { fit: false } => "LiGO".into(),
+            Method::LiGO { fit: true } => "LiGO (learned)".into(),
+            Method::NetExpansion => "Network Expansion".into(),
+            Method::KI => "KI".into(),
+            Method::DecoalescedOnly => "De-coalesced only".into(),
+            Method::VCycleRandomSmall => "Ours w/o coalescing".into(),
+        }
+    }
+}
+
+/// Derived config names for a base config (fixed by `aot.py`'s plan).
+pub fn level_cfg(base: &str, level: usize) -> String {
+    if level <= 1 {
+        base.to_string()
+    } else {
+        format!("{base}_lv{level}")
+    }
+}
+pub fn stack_cfg(base: &str) -> String {
+    format!("{base}_stk")
+}
+pub fn width_cfg(base: &str) -> String {
+    format!("{base}_wid")
+}
+
+/// A live run: device state + bookkeeping.
+pub struct Run {
+    pub state: State,
+    pub cfg_name: String,
+    pub curve: Curve,
+    pub flops: f64,
+    pub wall: f64,
+    pub phase: usize,
+    pub reached_target: bool,
+}
+
+/// The experiment harness bound to a runtime + options.
+pub struct Harness<'a> {
+    pub rt: &'a Runtime,
+    pub opts: RunOpts,
+}
+
+impl<'a> Harness<'a> {
+    pub fn new(rt: &'a Runtime, opts: RunOpts) -> Harness<'a> {
+        Harness { rt, opts }
+    }
+
+    fn new_run(&self, method: &str, cfg_name: &str, seed_tag: u64) -> Result<Run> {
+        let cfg = self.rt.cfg(cfg_name)?;
+        let state = init_state(self.rt, cfg, self.opts.seed ^ seed_tag)?;
+        Ok(Run {
+            state,
+            cfg_name: cfg_name.to_string(),
+            curve: Curve::new(method),
+            flops: 0.0,
+            wall: 0.0,
+            phase: 0,
+            reached_target: false,
+        })
+    }
+
+    /// Train the run's current config for up to `steps`; logs points and
+    /// early-stops if `stop_target` is crossed on eval.
+    pub fn train_phase(
+        &self,
+        run: &mut Run,
+        steps: usize,
+        sched: &LrSchedule,
+        stop_target: Option<f32>,
+        extra_flops_per_step: f64,
+    ) -> Result<()> {
+        let mut trainer =
+            Trainer::new(self.rt, &run.cfg_name, self.opts.domain,
+                         self.opts.seed ^ (run.phase as u64) << 8, self.opts.val_batches)?;
+        self.drive(run, &mut trainer, steps, sched, stop_target, extra_flops_per_step)
+    }
+
+    /// Phase driver over an explicit trainer (used by the Pallas-variant
+    /// integration test and the distillation phase).
+    pub fn drive(
+        &self,
+        run: &mut Run,
+        trainer: &mut Trainer,
+        steps: usize,
+        sched: &LrSchedule,
+        stop_target: Option<f32>,
+        extra_flops_per_step: f64,
+    ) -> Result<()> {
+        run.phase += 1;
+        let flops_per_step = trainer.cfg.flops_train_step + extra_flops_per_step;
+        for step in 1..=steps {
+            let lr = sched.lr(step);
+            let t0 = Instant::now();
+            let (state, loss) = trainer.step(self.rt, &run.state, lr, step)?;
+            run.state = state;
+            run.wall += t0.elapsed().as_secs_f64();
+            run.flops += flops_per_step;
+            let want_eval = step % self.opts.eval_every == 0 || step == steps;
+            let eval_loss = if want_eval {
+                let t1 = Instant::now();
+                let e = trainer.eval(self.rt, &run.state)?;
+                run.wall += t1.elapsed().as_secs_f64();
+                Some(e)
+            } else {
+                None
+            };
+            run.curve.points.push(Point {
+                phase: run.phase,
+                config: run.cfg_name.clone(),
+                step,
+                flops: run.flops,
+                wall: run.wall,
+                train_loss: loss,
+                eval_loss,
+            });
+            if let (Some(target), Some(e)) = (stop_target, eval_loss) {
+                if e <= target {
+                    run.reached_target = true;
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn transition<F: FnOnce() -> Result<State>>(&self, run: &mut Run, new_cfg: &str, f: F) -> Result<()> {
+        let t0 = Instant::now();
+        run.state = f()?;
+        run.wall += t0.elapsed().as_secs_f64();
+        run.cfg_name = new_cfg.to_string();
+        Ok(())
+    }
+
+    /// K=2 V-cycle with an explicit E_small (Table 5 row B).
+    pub fn run_vcycle_esmall(&self, e_small: usize, stop_target: Option<f32>) -> Result<Curve> {
+        self.vcycle2_with(&level_cfg(&self.opts.base, 2), e_small, stop_target)
+            .map(Self::close)
+    }
+
+    /// K=2 V-cycle through an arbitrary coalesced config (Table 5 row D).
+    pub fn run_vcycle_custom(
+        &self,
+        small_cfg: &str,
+        e_small: usize,
+        stop_target: Option<f32>,
+    ) -> Result<Curve> {
+        self.vcycle2_with(small_cfg, e_small, stop_target).map(Self::close)
+    }
+
+    fn vcycle2_with(
+        &self,
+        small_cfg: &str,
+        e_small: usize,
+        stop_target: Option<f32>,
+    ) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let mut run = self.new_run("Ours (K=2)", &base, 1)?;
+        let e_a = self.opts.warmup;
+        let sched = self.sched(self.opts.total_steps);
+        self.train_phase(&mut run, e_a, &sched, None, 0.0)?;
+        let st = operators::coalesce(self.rt, &base, small_cfg, &run.state)?;
+        let big_state = std::mem::replace(&mut run.state, st);
+        run.cfg_name = small_cfg.to_string();
+        let sched_s = self.sched(e_small);
+        self.train_phase(&mut run, e_small, &sched_s, None, 0.0)?;
+        let st = operators::refine(
+            self.rt, &base, small_cfg, &big_state, &run.state, self.opts.alpha, false,
+        )?;
+        self.transition(&mut run, &base, || Ok(st))?;
+        let budget = self.final_budget(e_a);
+        let sched_f = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched_f, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// Public wrappers for figure drivers that compose custom programs.
+    pub fn new_run_pub(&self, method: &str, cfg_name: &str, seed_tag: u64) -> Result<Run> {
+        self.new_run(method, cfg_name, seed_tag)
+    }
+    pub fn sched_pub(&self, steps: usize) -> LrSchedule {
+        self.sched(steps)
+    }
+    pub fn transition_pub(&self, run: &mut Run, new_cfg: &str, st: State) -> Result<()> {
+        self.transition(run, new_cfg, || Ok(st))
+    }
+    pub fn close_pub(run: Run) -> Curve {
+        Self::close(run)
+    }
+
+    fn sched(&self, steps: usize) -> LrSchedule {
+        LrSchedule::new(self.opts.warmup.min(steps / 2), self.opts.peak_lr, steps)
+    }
+
+    /// Budget (steps) of the final large-model phase for non-scratch methods.
+    fn final_budget(&self, spent_large_steps: usize) -> usize {
+        let max = (self.opts.total_steps as f64 * self.opts.budget_mult) as usize;
+        max.saturating_sub(spent_large_steps).max(1)
+    }
+
+    // -------------------------------------------------------------------
+    // Method programs
+    // -------------------------------------------------------------------
+
+    /// Run a method to completion. `stop_target`, when given, early-stops
+    /// the *final large phase* once validation crosses it (used for the
+    /// savings tables; pass None for full loss curves).
+    pub fn run_method(&self, method: &Method, stop_target: Option<f32>) -> Result<Curve> {
+        self.execute(method, stop_target).map(|run| Self::close(run))
+    }
+
+    /// Run a method fully (no early stop) and return its final state —
+    /// used by the downstream-probe tables, which fine-tune the final theta.
+    pub fn run_method_state(&self, method: &Method) -> Result<crate::runtime::State> {
+        self.execute(method, None).map(|run| run.state)
+    }
+
+    /// Run a method fully (no early stop); returns both the curve and the
+    /// final state so the tables need only one run per method.
+    pub fn run_method_full(&self, method: &Method) -> Result<(Curve, crate::runtime::State)> {
+        let run = self.execute(method, None)?;
+        let mut curve = run.curve;
+        curve.total_flops = run.flops;
+        curve.total_wall = run.wall;
+        Ok((curve, run.state))
+    }
+
+    fn execute(&self, method: &Method, stop_target: Option<f32>) -> Result<Run> {
+        let label = method.label();
+        info!("run {} on {} (T={})", label, self.opts.base, self.opts.total_steps);
+        let base = self.opts.base.clone();
+        match method {
+            Method::Scratch => {
+                let mut run = self.new_run(&label, &base, 1)?;
+                let sched = self.sched(self.opts.total_steps);
+                self.train_phase(&mut run, self.opts.total_steps, &sched, stop_target, 0.0)?;
+                Ok(run)
+            }
+            Method::VCycle { levels, fit } => self.run_vcycle(*levels, *fit, false, stop_target),
+            Method::WCycle { levels } => self.run_wcycle(*levels, stop_target),
+            Method::VCycleRandomSmall => self.run_vcycle(2, false, true, stop_target),
+            Method::StackBert => {
+                self.run_grow(&label, &stack_cfg(&base), stop_target)
+            }
+            Method::Bert2Bert => {
+                self.run_grow(&label, &width_cfg(&base), stop_target)
+            }
+            Method::LiGO { fit } => {
+                self.run_grow_fit(&label, &level_cfg(&base, 2), *fit, stop_target)
+            }
+            Method::NetExpansion => self.run_netexpansion(stop_target),
+            Method::KI => self.run_ki(stop_target),
+            Method::DecoalescedOnly => self.run_decoalesced_only(stop_target),
+        }
+    }
+
+    fn close(run: Run) -> Curve {
+        let mut curve = run.curve;
+        curve.total_flops = run.flops;
+        curve.total_wall = run.wall;
+        curve
+    }
+
+    /// Algorithm 1. K = `levels`.
+    fn run_vcycle(
+        &self,
+        levels: usize,
+        fit: bool,
+        random_small: bool,
+        stop_target: Option<f32>,
+    ) -> Result<Run> {
+        if levels < 2 {
+            bail!("V-cycle needs >= 2 levels");
+        }
+        let base = &self.opts.base;
+        let method = if random_small {
+            "Ours w/o coalescing".to_string()
+        } else {
+            Method::VCycle { levels, fit }.label()
+        };
+        let mut run = self.new_run(&method, base, 1)?;
+        let e_a = self.opts.warmup;
+        let e_small = self.opts.e_small();
+
+        // downward sweep: train E_a then coalesce, per level
+        let mut saved: Vec<State> = Vec::new(); // pre-coalescing states, by level
+        for l in 1..levels {
+            let cfg_l = level_cfg(base, l);
+            let sched = self.sched(self.opts.total_steps);
+            self.train_phase(&mut run, e_a, &sched, None, 0.0)?;
+            let small = level_cfg(base, l + 1);
+            let st = if random_small {
+                // Fig. 5a ablation: drop the coalescing link entirely
+                init_state(self.rt, self.rt.cfg(&small)?, self.opts.seed ^ 0xBAD)?
+            } else {
+                operators::coalesce(self.rt, &cfg_l, &small, &run.state)?
+            };
+            // keep M_l itself for the interpolation on the way up — buffers
+            // are immutable, so no copy is needed
+            let snapshot = std::mem::replace(&mut run.state, st);
+            saved.push(snapshot);
+            run.cfg_name = small;
+            let _ = cfg_l;
+        }
+
+        // upward sweep: train E_small, de-coalesce + interpolate
+        for l in (2..=levels).rev() {
+            let small = level_cfg(base, l);
+            let big = level_cfg(base, l - 1);
+            let sched = self.sched(e_small);
+            self.train_phase(&mut run, e_small, &sched, None, 0.0)?;
+            let big_state = saved.pop().expect("saved state per level");
+            let st = operators::refine(
+                self.rt, &big, &small, &big_state, &run.state, self.opts.alpha, fit,
+            )?;
+            self.transition(&mut run, &big, || Ok(st))?;
+        }
+
+        // final large phase
+        let budget = self.final_budget(e_a * (levels - 1));
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// W-cycle (paper §3.4 future work): descend to the coarsest level,
+    /// then on the way up revisit each coarse level with a second
+    /// coalesce → train → refine sub-cycle before ascending. Each coarse
+    /// visit gets E_small/2 so the total coarse budget matches the V-cycle.
+    fn run_wcycle(&self, levels: usize, stop_target: Option<f32>) -> Result<Run> {
+        if levels < 2 {
+            bail!("W-cycle needs >= 2 levels");
+        }
+        let base = self.opts.base.clone();
+        let method = Method::WCycle { levels }.label();
+        let mut run = self.new_run(&method, &base, 1)?;
+        let e_a = self.opts.warmup;
+        let e_half = (self.opts.e_small() / 2).max(1);
+
+        // descent: warm + coalesce at every level
+        let mut saved: Vec<State> = Vec::new();
+        for l in 1..levels {
+            let sched = self.sched(self.opts.total_steps);
+            self.train_phase(&mut run, e_a, &sched, None, 0.0)?;
+            let small = level_cfg(&base, l + 1);
+            let st = operators::coalesce(self.rt, &level_cfg(&base, l), &small, &run.state)?;
+            saved.push(std::mem::replace(&mut run.state, st));
+            run.cfg_name = small;
+        }
+
+        // ascent with a second coarse visit per level (the W shape)
+        for l in (2..=levels).rev() {
+            let small = level_cfg(&base, l);
+            let big = level_cfg(&base, l - 1);
+            let sched_s = self.sched(e_half);
+            // first coarse visit
+            self.train_phase(&mut run, e_half, &sched_s, None, 0.0)?;
+            let big_state = saved.pop().expect("saved level state");
+            let refined = operators::refine(
+                self.rt, &big, &small, &big_state, &run.state, self.opts.alpha, false,
+            )?;
+            // second descent into the same coarse level
+            let st = operators::coalesce(self.rt, &big, &small, &refined)?;
+            run.state = st;
+            self.train_phase(&mut run, e_half, &sched_s, None, 0.0)?;
+            // final refine for this level pair
+            let st = operators::refine(
+                self.rt, &big, &small, &refined, &run.state, self.opts.alpha, false,
+            )?;
+            run.state = st;
+            run.cfg_name = big;
+        }
+
+        let budget = self.final_budget(e_a * (levels - 1));
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// Shared program of StackBERT / bert2BERT: train the partial model for
+    /// E_small, grow with the matching refine artifact at α = 1, continue.
+    fn run_grow(&self, label: &str, small_cfg: &str, stop_target: Option<f32>) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let mut run = self.new_run(label, small_cfg, 2)?;
+        let e_small = self.opts.e_small();
+        let sched = self.sched(e_small);
+        self.train_phase(&mut run, e_small, &sched, None, 0.0)?;
+        // "grow" = refine with α = 1 against a fresh large model
+        let fresh = init_state(self.rt, self.rt.cfg(&base)?, self.opts.seed ^ 3)?;
+        let st = operators::refine(self.rt, &base, small_cfg, &fresh, &run.state, 1.0, false)?;
+        self.transition(&mut run, &base, || Ok(st))?;
+        let budget = self.final_budget(0);
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    fn run_grow_fit(
+        &self,
+        label: &str,
+        small_cfg: &str,
+        fit: bool,
+        stop_target: Option<f32>,
+    ) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let mut run = self.new_run(label, small_cfg, 2)?;
+        let e_small = self.opts.e_small();
+        let sched = self.sched(e_small);
+        self.train_phase(&mut run, e_small, &sched, None, 0.0)?;
+        let fresh = init_state(self.rt, self.rt.cfg(&base)?, self.opts.seed ^ 3)?;
+        let st = operators::refine(self.rt, &base, small_cfg, &fresh, &run.state, 1.0, fit)?;
+        self.transition(&mut run, &base, || Ok(st))?;
+        let budget = self.final_budget(0);
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// Network Expansion: maintain an EMA of the small model and expand the
+    /// EMA instead of the raw parameters.
+    fn run_netexpansion(&self, stop_target: Option<f32>) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let small = level_cfg(&base, 2);
+        let mut run = self.new_run("Network Expansion", &small, 2)?;
+        let e_small = self.opts.e_small();
+        let sched = self.sched(e_small);
+
+        // EMA-tracked small phase: chunked training with EMA folds between
+        let mut ema = operators::interp_states(self.rt, &small, &run.state, &run.state, 0.0)?;
+        let chunk = 4usize;
+        let mut done = 0usize;
+        let mut trainer = Trainer::new(self.rt, &small, self.opts.domain,
+                                       self.opts.seed ^ 0xE4A, self.opts.val_batches)?;
+        run.phase += 1;
+        while done < e_small {
+            let n = chunk.min(e_small - done);
+            for i in 0..n {
+                let step = done + i + 1;
+                let lr = sched.lr(step);
+                let t0 = Instant::now();
+                let (st, loss) = trainer.step(self.rt, &run.state, lr, step)?;
+                run.state = st;
+                run.wall += t0.elapsed().as_secs_f64();
+                run.flops += trainer.cfg.flops_train_step;
+                let eval_loss = if step % self.opts.eval_every == 0 {
+                    Some(trainer.eval(self.rt, &run.state)?)
+                } else {
+                    None
+                };
+                run.curve.points.push(Point {
+                    phase: run.phase, config: small.clone(), step,
+                    flops: run.flops, wall: run.wall, train_loss: loss, eval_loss,
+                });
+            }
+            done += n;
+            // EMA fold: ema ← 0.9·ema + 0.1·theta
+            ema = operators::interp_states(self.rt, &small, &ema, &run.state, 0.1)?;
+        }
+
+        let fresh = init_state(self.rt, self.rt.cfg(&base)?, self.opts.seed ^ 3)?;
+        let st = operators::refine(self.rt, &base, &small, &fresh, &ema, 1.0, false)?;
+        self.transition(&mut run, &base, || Ok(st))?;
+        let budget = self.final_budget(0);
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// KI: train a small teacher, then distill into a fresh large student,
+    /// then continue with plain training. Teacher forward FLOPs are charged
+    /// to the run (the paper does the same when comparing).
+    fn run_ki(&self, stop_target: Option<f32>) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let small = level_cfg(&base, 2);
+        let mut run = self.new_run("KI", &small, 2)?;
+        let e_small = self.opts.e_small();
+        let sched = self.sched(e_small);
+        self.train_phase(&mut run, e_small, &sched, None, 0.0)?;
+        let teacher_theta = theta_buffer(self.rt, &run.state)?;
+        let teacher_cfg = self.rt.cfg(&small)?.clone();
+
+        // fresh large student
+        let fresh = init_state(self.rt, self.rt.cfg(&base)?, self.opts.seed ^ 3)?;
+        self.transition(&mut run, &base, || Ok(fresh))?;
+
+        // distillation phase (kd weight 0.5, first quarter of the budget)
+        let kd_steps = self.opts.total_steps / 4;
+        let kd_sched = self.sched(self.opts.total_steps);
+        let exe = self.rt.exe(&format!("distill_step__{base}__{small}"))?;
+        let mut dist_trainer = crate::coordinator::distill::DistillTrainer::new(
+            self.rt, &base, exe, teacher_theta, self.opts.domain,
+            self.opts.seed ^ 0x1D, self.opts.val_batches,
+        )?;
+        let teacher_fwd = teacher_cfg.flops_fwd_token * teacher_cfg.tokens_per_step as f64;
+        run.phase += 1;
+        for step in 1..=kd_steps {
+            let lr = kd_sched.lr(step);
+            let t0 = Instant::now();
+            let (st, loss) = dist_trainer.step(self.rt, &run.state, 0.5, lr, step)?;
+            run.state = st;
+            run.wall += t0.elapsed().as_secs_f64();
+            run.flops += self.rt.cfg(&base)?.flops_train_step + teacher_fwd;
+            let eval_loss = if step % self.opts.eval_every == 0 {
+                Some(dist_trainer.eval(self.rt, &run.state)?)
+            } else {
+                None
+            };
+            run.curve.points.push(Point {
+                phase: run.phase, config: base.clone(), step,
+                flops: run.flops, wall: run.wall, train_loss: loss, eval_loss,
+            });
+        }
+
+        let budget = self.final_budget(kd_steps);
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+
+    /// Fig. 6: train small, de-coalesce with α = 1 (pure de-coalescing, no
+    /// interpolation with a trained large model), continue training the
+    /// symmetric large model.
+    fn run_decoalesced_only(&self, stop_target: Option<f32>) -> Result<Run> {
+        let base = self.opts.base.clone();
+        let small = level_cfg(&base, 2);
+        let mut run = self.new_run("De-coalesced only", &small, 2)?;
+        let e_small = self.opts.e_small();
+        let sched = self.sched(e_small);
+        self.train_phase(&mut run, e_small, &sched, None, 0.0)?;
+        let fresh = init_state(self.rt, self.rt.cfg(&base)?, self.opts.seed ^ 3)?;
+        let st = operators::refine(self.rt, &base, &small, &fresh, &run.state, 1.0, false)?;
+        self.transition(&mut run, &base, || Ok(st))?;
+        let budget = self.final_budget(0);
+        let sched = self.sched(budget);
+        self.train_phase(&mut run, budget, &sched, stop_target, 0.0)?;
+        Ok(run)
+    }
+}
+
+/// Extract theta (device → host → device) as a standalone `f32[N]` buffer —
+/// the teacher input of the distillation artifact.
+fn theta_buffer(rt: &Runtime, state: &State) -> Result<xla::PjRtBuffer> {
+    let host = state.to_host(rt)?;
+    let theta = &host[1..1 + state.n_params];
+    rt.upload_f32(theta, &[state.n_params])
+}

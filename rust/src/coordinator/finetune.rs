@@ -1,0 +1,113 @@
+//! Downstream fine-tuning probes — the GLUE-substitute evaluation used by
+//! Table 1 / Table 4 (mean(std) accuracy over 3 seeds per task).
+//!
+//! The pretrained backbone theta is grafted into a fine-tune state
+//! `[loss, theta‖head, m, v]` (head fresh-initialized per seed); the whole
+//! stack then trains on the probe task via the `ft_step__{cfg}` artifact and
+//! is scored with `ft_acc__{cfg}`.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::glue_sim::ProbeGen;
+use crate::runtime::{Arg, Runtime, State};
+use crate::util::rng::Rng;
+
+/// Result of one task fine-tune: accuracy per seed.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: usize,
+    pub accs: Vec<f64>,
+}
+
+/// Fine-tune a pretrained backbone on one probe task with one seed.
+pub fn finetune_once(
+    rt: &Runtime,
+    cfg_name: &str,
+    theta: &[f32],
+    task: usize,
+    seed: u64,
+    steps: usize,
+    lr: f32,
+) -> Result<f64> {
+    let cfg = rt.cfg(cfg_name)?.clone();
+    let exe_step = rt.exe(&format!("ft_step__{cfg_name}"))?;
+    let exe_acc = rt.exe(&format!("ft_acc__{cfg_name}"))?;
+    let n_ft = exe_step
+        .spec
+        .meta
+        .get("n_ft")
+        .as_usize()
+        .context("ft artifact missing n_ft")?;
+    let n_classes = exe_step.spec.meta.get("n_classes").as_usize().unwrap_or(4);
+    let n = cfg.n_params;
+    assert_eq!(theta.len(), n);
+
+    // graft: [loss=0, theta, head(normal 0.02 / zero bias), m=0, v=0]
+    let mut host = vec![0f32; 3 * n_ft + 1];
+    host[1..1 + n].copy_from_slice(theta);
+    let mut rng = Rng::new(seed ^ 0xF7);
+    let d = cfg.d_model;
+    for i in 0..d * n_classes {
+        host[1 + n + i] = rng.normal() as f32 * 0.02;
+    }
+    let buf = rt.upload_f32(&host, &[3 * n_ft + 1])?;
+    let mut state = State { buf, n_params: n_ft, flops: 0.0 };
+
+    let mut gen = ProbeGen::new(&cfg, n_classes, task, seed);
+    let sched = LrSchedule::new((steps / 10).max(1), lr, steps);
+    for step in 1..=steps {
+        let batch = gen.next_batch();
+        let out = rt.call(
+            &exe_step,
+            &[
+                Arg::Buf(&state.buf),
+                Arg::I32(&batch.tokens, vec![batch.batch, batch.seq]),
+                Arg::I32(&batch.labels, vec![batch.batch]),
+                Arg::Scalar(sched.lr(step)),
+                Arg::Scalar(step as f32),
+            ],
+        )?;
+        state = State { buf: out, n_params: n_ft, flops: 0.0 };
+    }
+
+    // held-out probe accuracy (fresh generator, disjoint seed)
+    let mut eval_gen = ProbeGen::new(&cfg, n_classes, task, seed ^ 0xE0E0E0);
+    let mut correct = 0.0f64;
+    let eval_batches = 8;
+    for _ in 0..eval_batches {
+        let batch = eval_gen.next_batch();
+        let out = rt.call(
+            &exe_acc,
+            &[
+                Arg::Buf(&state.buf),
+                Arg::I32(&batch.tokens, vec![batch.batch, batch.seq]),
+                Arg::I32(&batch.labels, vec![batch.batch]),
+            ],
+        )?;
+        correct += rt.read_scalar(&out)? as f64;
+    }
+    Ok(100.0 * correct / eval_batches as f64)
+}
+
+/// Fine-tune on every probe task with `seeds` seeds each (the paper runs
+/// GLUE three times with random seeds).
+pub fn finetune_all_tasks(
+    rt: &Runtime,
+    cfg_name: &str,
+    theta: &[f32],
+    n_tasks: usize,
+    seeds: usize,
+    steps: usize,
+    lr: f32,
+) -> Result<Vec<TaskResult>> {
+    let mut out = Vec::new();
+    for task in 0..n_tasks {
+        let mut accs = Vec::new();
+        for s in 0..seeds {
+            accs.push(finetune_once(rt, cfg_name, theta, task, 100 + s as u64, steps, lr)?);
+        }
+        out.push(TaskResult { task, accs });
+    }
+    Ok(out)
+}

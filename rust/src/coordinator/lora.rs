@@ -1,0 +1,120 @@
+//! LoRA baseline (Fig. 8 / App. K): rank-r adapters on W_q/W_v over a frozen
+//! base model, compared against training the coalesced model directly.
+//!
+//! FLOPs accounting follows App. K: LoRA still pays the full forward and
+//! the full backward chain through the frozen weights; only the weight-
+//! gradient GEMMs for the frozen matrices are skipped. We charge
+//! fwd + grad-chain ≈ 2/3 of a normal train step plus the (tiny) adapter
+//! cost, which is the paper's argument for why LoRA saves so little.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::{Curve, Point};
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::{Batcher, Corpus};
+use crate::runtime::{Arg, Exe, Runtime, State};
+use crate::util::rng::Rng;
+
+pub struct LoraRun {
+    pub curve: Curve,
+}
+
+/// Relative FLOPs of a LoRA step vs a full train step (App. K analysis).
+pub const LORA_FLOPS_FRACTION: f64 = 2.0 / 3.0;
+
+/// Train LoRA adapters on a frozen base theta; returns the eval-loss curve.
+pub fn run_lora(
+    rt: &Runtime,
+    cfg_name: &str,
+    base_theta: &[f32],
+    steps: usize,
+    peak_lr: f32,
+    eval_every: usize,
+    val_batches: usize,
+    seed: u64,
+) -> Result<LoraRun> {
+    let cfg = rt.cfg(cfg_name)?.clone();
+    let exe_step: Rc<Exe> = rt.exe(&format!("lora_step__{cfg_name}"))?;
+    let exe_eval = rt.exe(&format!("lora_eval__{cfg_name}"))?;
+    let n_lora = exe_step
+        .spec
+        .meta
+        .get("n_lora")
+        .as_usize()
+        .context("lora artifact missing n_lora")?;
+
+    let theta_buf = rt.upload_f32(base_theta, &[cfg.n_params])?;
+
+    // init adapters: A ~ N(0, 0.02), B = 0 (standard LoRA init), matching
+    // the lora_spec init kinds exported by model.py (normal for a*, zeros b*)
+    let mut host = vec![0f32; 3 * n_lora + 1];
+    let mut rng = Rng::new(seed);
+    // a-matrices come first in sorted key order ("aq" < "av" < "bq2" < "bv2")
+    let half = n_lora / 2;
+    for i in 0..half {
+        host[1 + i] = rng.normal() as f32 * 0.02;
+    }
+    let mut state = State {
+        buf: rt.upload_f32(&host, &[3 * n_lora + 1])?,
+        n_params: n_lora,
+        flops: 0.0,
+    };
+
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let mut batcher = Batcher::new(&cfg, corpus.clone(), seed ^ 0x10);
+    let val = Batcher::validation_set(&cfg, corpus, val_batches);
+    let sched = LrSchedule::new((steps / 10).max(1), peak_lr, steps);
+    let flops_per_step = cfg.flops_train_step * LORA_FLOPS_FRACTION;
+
+    let mut curve = Curve::new("LoRA");
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let batch = batcher.next_batch();
+        let mut args = vec![
+            Arg::Buf(&state.buf),
+            Arg::Buf(&theta_buf),
+            Arg::I32(&batch.tokens, batch.dims().to_vec()),
+        ];
+        if let Some(labels) = &batch.labels {
+            args.push(Arg::I32(labels, batch.dims().to_vec()));
+        }
+        args.push(Arg::Scalar(sched.lr(step)));
+        args.push(Arg::Scalar(step as f32));
+        let buf = rt.call(&exe_step, &args)?;
+        state = State { buf, n_params: n_lora, flops: 0.0 };
+        let train_loss = state.loss(rt)?;
+
+        let eval_loss = if step % eval_every == 0 || step == steps {
+            let mut total = 0.0f64;
+            for b in &val {
+                let mut args = vec![
+                    Arg::Buf(&state.buf),
+                    Arg::Buf(&theta_buf),
+                    Arg::I32(&b.tokens, b.dims().to_vec()),
+                ];
+                if let Some(labels) = &b.labels {
+                    args.push(Arg::I32(labels, b.dims().to_vec()));
+                }
+                let out = rt.call(&exe_eval, &args)?;
+                total += rt.read_scalar(&out)? as f64;
+            }
+            Some((total / val.len().max(1) as f64) as f32)
+        } else {
+            None
+        };
+        curve.points.push(Point {
+            phase: 0,
+            config: cfg_name.to_string(),
+            step,
+            flops: flops_per_step * step as f64,
+            wall: t0.elapsed().as_secs_f64(),
+            train_loss,
+            eval_loss,
+        });
+    }
+    curve.total_flops = flops_per_step * steps as f64;
+    curve.total_wall = t0.elapsed().as_secs_f64();
+    Ok(LoraRun { curve })
+}

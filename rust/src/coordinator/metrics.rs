@@ -1,0 +1,225 @@
+//! Run curves, savings-at-target computation (the paper's headline
+//! "Saving (FLOPs) / Saving (Walltime)" columns), and CSV output.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One logged point along a training run.
+#[derive(Debug, Clone)]
+pub struct Point {
+    /// index of the phase this point belongs to (V-cycle leg, etc.)
+    pub phase: usize,
+    /// active model config at this point
+    pub config: String,
+    /// 1-based step within the phase
+    pub step: usize,
+    /// cumulative analytic FLOPs across the whole run
+    pub flops: f64,
+    /// cumulative walltime (seconds) across the whole run
+    pub wall: f64,
+    pub train_loss: f32,
+    /// validation loss, present on eval cadence only
+    pub eval_loss: Option<f32>,
+}
+
+/// A full training-run record.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub method: String,
+    pub points: Vec<Point>,
+    pub total_flops: f64,
+    pub total_wall: f64,
+}
+
+impl Curve {
+    pub fn new(method: &str) -> Curve {
+        Curve { method: method.to_string(), ..Default::default() }
+    }
+
+    /// Final eval loss on the given config (min over the last `k` evals —
+    /// robust to batch noise).
+    pub fn final_eval(&self, config: &str, k: usize) -> Option<f32> {
+        let evals: Vec<f32> = self
+            .points
+            .iter()
+            .filter(|p| p.config == config)
+            .filter_map(|p| p.eval_loss)
+            .collect();
+        if evals.is_empty() {
+            return None;
+        }
+        let tail = &evals[evals.len().saturating_sub(k)..];
+        tail.iter().cloned().reduce(f32::min)
+    }
+
+    /// Earliest (flops, wall) at which eval loss on `config` reaches
+    /// `target`. None if never reached.
+    pub fn time_to_target(&self, config: &str, target: f32) -> Option<(f64, f64)> {
+        self.points
+            .iter()
+            .filter(|p| p.config == config)
+            .find(|p| p.eval_loss.map_or(false, |e| e <= target))
+            .map(|p| (p.flops, p.wall))
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "phase,config,step,flops,wall_s,train_loss,eval_loss")?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{},{},{:.6e},{:.4},{:.5},{}",
+                p.phase,
+                p.config,
+                p.step,
+                p.flops,
+                p.wall,
+                p.train_loss,
+                p.eval_loss.map_or(String::new(), |e| format!("{e:.5}")),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The paper's savings metric: how much less compute/walltime the method
+/// needed to reach the from-scratch model's final loss.
+///
+/// target = scratch's final eval loss; t(run) = earliest cumulative cost at
+/// which the run's eval (on the large config) crosses it;
+/// saving = 1 − t(method) / t(scratch).
+#[derive(Debug, Clone, Copy)]
+pub struct Savings {
+    pub flops: f64,
+    pub wall: f64,
+    pub reached: bool,
+    pub target: f32,
+}
+
+pub fn savings_vs_scratch(scratch: &Curve, method: &Curve, config: &str) -> Savings {
+    let target = scratch.final_eval(config, 3).unwrap_or(f32::INFINITY);
+    let (sf, sw) = scratch
+        .time_to_target(config, target)
+        .unwrap_or((scratch.total_flops, scratch.total_wall));
+    match method.time_to_target(config, target) {
+        Some((mf, mw)) => Savings {
+            flops: 1.0 - mf / sf,
+            wall: 1.0 - mw / sw,
+            reached: true,
+            target,
+        },
+        None => Savings {
+            // ran the whole (extended) budget without reaching the target:
+            // report the (negative) saving implied by the spent budget.
+            flops: 1.0 - method.total_flops / sf,
+            wall: 1.0 - method.total_wall / sw,
+            reached: false,
+            target,
+        },
+    }
+}
+
+/// Exponential moving average smoothing (loss-curve plots).
+pub fn ema(xs: &[f32], alpha: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let next = match acc {
+            None => x,
+            Some(a) => alpha * x + (1.0 - alpha) * a,
+        };
+        acc = Some(next);
+        out.push(next);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_curve(method: &str, evals: &[(f64, f32)], config: &str) -> Curve {
+        let mut c = Curve::new(method);
+        for (i, (flops, loss)) in evals.iter().enumerate() {
+            c.points.push(Point {
+                phase: 0,
+                config: config.into(),
+                step: i + 1,
+                flops: *flops,
+                wall: *flops / 1e9,
+                train_loss: *loss,
+                eval_loss: Some(*loss),
+            });
+        }
+        c.total_flops = evals.last().map(|e| e.0).unwrap_or(0.0);
+        c.total_wall = c.total_flops / 1e9;
+        c
+    }
+
+    #[test]
+    fn savings_positive_when_faster() {
+        let scratch = mk_curve("scratch", &[(1e9, 5.0), (2e9, 4.0), (3e9, 3.0)], "m");
+        let fast = mk_curve("fast", &[(1e9, 4.0), (2e9, 3.0), (3e9, 2.9)], "m");
+        let s = savings_vs_scratch(&scratch, &fast, "m");
+        assert!(s.reached);
+        assert!((s.flops - (1.0 - 2.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn savings_negative_when_never_reached() {
+        let scratch = mk_curve("scratch", &[(1e9, 5.0), (2e9, 3.0)], "m");
+        let slow = mk_curve("slow", &[(1e9, 5.0), (2e9, 4.0), (4e9, 3.5)], "m");
+        let s = savings_vs_scratch(&scratch, &slow, "m");
+        assert!(!s.reached);
+        assert!(s.flops < 0.0);
+    }
+
+    #[test]
+    fn final_eval_uses_tail_min() {
+        let c = mk_curve("x", &[(1.0, 5.0), (2.0, 3.0), (3.0, 3.2), (4.0, 3.1)], "m");
+        assert_eq!(c.final_eval("m", 3), Some(3.0));
+        assert_eq!(c.final_eval("m", 1), Some(3.1));
+        assert_eq!(c.final_eval("other", 3), None);
+    }
+
+    #[test]
+    fn time_to_target_respects_config() {
+        let mut c = mk_curve("x", &[(1.0, 2.0)], "small");
+        c.points.push(Point {
+            phase: 1,
+            config: "big".into(),
+            step: 1,
+            flops: 5.0,
+            wall: 1.0,
+            train_loss: 2.0,
+            eval_loss: Some(2.0),
+        });
+        // the small-config crossing must not count
+        assert_eq!(c.time_to_target("big", 2.0).unwrap().0, 5.0);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[1.0, 0.0, 0.0, 0.0], 0.5);
+        assert_eq!(out[0], 1.0);
+        assert!((out[1] - 0.5).abs() < 1e-6);
+        assert!((out[3] - 0.125).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_writes(){
+        let c = mk_curve("x", &[(1.0, 2.0)], "m");
+        let dir = std::env::temp_dir().join(format!("mlcsv_{}", std::process::id()));
+        let p = dir.join("c.csv");
+        c.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("phase,config"));
+        assert!(text.lines().count() == 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

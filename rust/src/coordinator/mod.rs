@@ -1,0 +1,18 @@
+//! The paper's L3 coordination contribution: the V-cycle training scheduler
+//! (Algorithm 1), the baseline growth schedulers it is compared against, the
+//! experiment harness, and supporting machinery (LR schedules, metrics,
+//! fine-tuning probes, distillation, LoRA).
+
+pub mod distill;
+pub mod experiment;
+pub mod finetune;
+pub mod lora;
+pub mod metrics;
+pub mod operators;
+pub mod schedule;
+pub mod trainer;
+
+pub use experiment::{Harness, Method, Run, RunOpts};
+pub use metrics::{savings_vs_scratch, Curve, Point, Savings};
+pub use schedule::LrSchedule;
+pub use trainer::Trainer;

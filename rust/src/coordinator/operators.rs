@@ -1,0 +1,61 @@
+//! Level-transition operators as seen from the coordinator: Coalesce,
+//! Refine (= De-coalesce + Interpolate, fused in one artifact), and the
+//! elementwise state interpolation used for EMA / loss-path probes.
+//!
+//! All of these execute the corresponding AOT artifact buffer-to-buffer on
+//! the device; the coordinator only tracks names and bookkeeping.
+
+use anyhow::Result;
+
+use crate::runtime::{Arg, Runtime, State};
+
+/// `state_big -> state_small` via `coalesce__{big}__{small}` (Algorithm 2).
+pub fn coalesce(rt: &Runtime, big_cfg: &str, small_cfg: &str, state: &State) -> Result<State> {
+    let exe = rt.exe(&format!("coalesce__{big_cfg}__{small_cfg}"))?;
+    let buf = rt.call(&exe, &[Arg::Buf(&state.buf)])?;
+    let n = rt.cfg(small_cfg)?.n_params;
+    Ok(State { buf, n_params: n, flops: state.flops })
+}
+
+/// `(state_big, state_small, α) -> state_big'` via `refine__…` (Algorithms
+/// 3+4). `fit = true` selects the closed-form learned-transformation variant
+/// (`refine_fit__…`, App. J).
+pub fn refine(
+    rt: &Runtime,
+    big_cfg: &str,
+    small_cfg: &str,
+    state_big: &State,
+    state_small: &State,
+    alpha: f32,
+    fit: bool,
+) -> Result<State> {
+    let name = if fit {
+        format!("refine_fit__{big_cfg}__{small_cfg}")
+    } else {
+        format!("refine__{big_cfg}__{small_cfg}")
+    };
+    let exe = rt.exe(&name)?;
+    let buf = rt.call(
+        &exe,
+        &[Arg::Buf(&state_big.buf), Arg::Buf(&state_small.buf), Arg::Scalar(alpha)],
+    )?;
+    Ok(State {
+        buf,
+        n_params: rt.cfg(big_cfg)?.n_params,
+        flops: state_big.flops.max(state_small.flops),
+    })
+}
+
+/// Elementwise `(1-α)·a + α·b` over whole state vectors via `interp__{cfg}`
+/// (Network Expansion's EMA update; the Fig. 5b interpolation-path probe).
+pub fn interp_states(
+    rt: &Runtime,
+    cfg: &str,
+    a: &State,
+    b: &State,
+    alpha: f32,
+) -> Result<State> {
+    let exe = rt.exe(&format!("interp__{cfg}"))?;
+    let buf = rt.call(&exe, &[Arg::Buf(&a.buf), Arg::Buf(&b.buf), Arg::Scalar(alpha)])?;
+    Ok(State { buf, n_params: a.n_params, flops: a.flops.max(b.flops) })
+}

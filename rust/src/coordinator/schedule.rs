@@ -1,0 +1,68 @@
+//! Learning-rate schedule: linear warmup + cosine decay (the standard BERT
+//! pre-training shape; the paper uses 10K warmup steps and a peak LR).
+
+/// Warmup + cosine-decay schedule over one training phase.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub warmup: usize,
+    pub peak: f32,
+    pub total: usize,
+    /// final LR as a fraction of peak
+    pub floor_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn new(warmup: usize, peak: f32, total: usize) -> LrSchedule {
+        LrSchedule { warmup, peak, total: total.max(1), floor_frac: 0.1 }
+    }
+
+    /// LR at 1-based step `step`.
+    pub fn lr(&self, step: usize) -> f32 {
+        let s = step.max(1) as f32;
+        if self.warmup > 0 && step <= self.warmup {
+            return self.peak * s / self.warmup as f32;
+        }
+        let decay_len = (self.total.saturating_sub(self.warmup)).max(1) as f32;
+        let t = ((s - self.warmup as f32) / decay_len).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        let floor = self.peak * self.floor_frac;
+        floor + (self.peak - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(10, 1.0, 100);
+        assert!((s.lr(1) - 0.1).abs() < 1e-6);
+        assert!((s.lr(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = LrSchedule::new(10, 1.0, 100);
+        assert!((s.lr(100) - 0.1).abs() < 1e-3);
+        assert!(s.lr(50) < s.lr(20));
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::new(5, 2e-3, 200);
+        let mut prev = s.lr(5);
+        for step in 6..=200 {
+            let cur = s.lr(step);
+            assert!(cur <= prev + 1e-9, "lr rose at {step}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn no_warmup_is_valid() {
+        let s = LrSchedule::new(0, 1.0, 10);
+        assert!(s.lr(1) > 0.9);
+    }
+}

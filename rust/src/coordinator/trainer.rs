@@ -1,0 +1,193 @@
+//! Single-level training loop: drives one model config's `train_step`
+//! artifact with device-resident state, streaming synthetic batches.
+//!
+//! This is the L3 hot path: per step it (1) synthesizes a batch, (2) uploads
+//! tokens/images, (3) dispatches `execute_b` with the state buffer, and
+//! (4) reads back the 4-byte loss. The state itself never leaves the device.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::data::{Batcher, Corpus, ImageBatch, LangBatch, VisionGen};
+use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime, State};
+
+/// Training batch stream for one config.
+pub enum Stream {
+    Lang(Batcher),
+    Vis(VisionGen),
+}
+
+/// Fixed validation set.
+pub enum ValSet {
+    Lang(Vec<LangBatch>),
+    Vis(Vec<ImageBatch>),
+}
+
+/// Per-level trainer bound to compiled train/eval artifacts.
+pub struct Trainer {
+    pub cfg: ModelCfg,
+    exe_train: Rc<Exe>,
+    exe_eval: Rc<Exe>,
+    stream: Stream,
+    val: ValSet,
+}
+
+impl Trainer {
+    /// `domain` selects the synthetic-corpus variant (0 = pre-training
+    /// distribution); `seed` the training stream.
+    pub fn new(
+        rt: &Runtime,
+        cfg_name: &str,
+        domain: u64,
+        seed: u64,
+        val_batches: usize,
+    ) -> Result<Trainer> {
+        Self::with_artifact(rt, cfg_name, &format!("train_step__{cfg_name}"), domain, seed, val_batches)
+    }
+
+    /// Variant selecting an explicit train-step artifact (e.g. the
+    /// Pallas-kernel build `train_step_pallas__*`).
+    pub fn with_artifact(
+        rt: &Runtime,
+        cfg_name: &str,
+        train_artifact: &str,
+        domain: u64,
+        seed: u64,
+        val_batches: usize,
+    ) -> Result<Trainer> {
+        let cfg = rt.cfg(cfg_name)?.clone();
+        let exe_train = rt.exe(train_artifact)?;
+        let exe_eval = rt.exe(&format!("eval_loss__{cfg_name}"))?;
+        let (stream, val) = match cfg.family {
+            Family::Gpt | Family::Bert => {
+                let corpus = Corpus::new(cfg.vocab, domain);
+                (
+                    Stream::Lang(Batcher::new(&cfg, corpus.clone(), seed)),
+                    ValSet::Lang(Batcher::validation_set(&cfg, corpus, val_batches)),
+                )
+            }
+            Family::Vit => {
+                let mut vgen = VisionGen::new(&cfg, domain, 0x76616c); // val stream
+                let val = (0..val_batches).map(|_| vgen.next_batch(cfg.batch)).collect();
+                (Stream::Vis(VisionGen::new(&cfg, domain, seed)), ValSet::Vis(val))
+            }
+        };
+        Ok(Trainer { cfg, exe_train, exe_eval, stream, val })
+    }
+
+    /// One optimizer step; returns the new state and the training loss.
+    /// `step` is 1-based within the phase (Adam bias correction).
+    pub fn step(&mut self, rt: &Runtime, state: &State, lr: f32, step: usize) -> Result<(State, f32)> {
+        if state.n_params != self.cfg.n_params {
+            bail!(
+                "state has {} params but config {} needs {}",
+                state.n_params,
+                self.cfg.name,
+                self.cfg.n_params
+            );
+        }
+        let flops = state.flops + self.cfg.flops_train_step;
+        let buf = match (&mut self.stream, self.cfg.family) {
+            (Stream::Lang(b), Family::Gpt) => {
+                let batch = b.next_batch();
+                rt.call(
+                    &self.exe_train,
+                    &[
+                        Arg::Buf(&state.buf),
+                        Arg::I32(&batch.tokens, batch.dims().to_vec()),
+                        Arg::Scalar(lr),
+                        Arg::Scalar(step as f32),
+                    ],
+                )?
+            }
+            (Stream::Lang(b), Family::Bert) => {
+                let batch = b.next_batch();
+                let labels = batch.labels.as_ref().expect("bert batch has labels");
+                rt.call(
+                    &self.exe_train,
+                    &[
+                        Arg::Buf(&state.buf),
+                        Arg::I32(&batch.tokens, batch.dims().to_vec()),
+                        Arg::I32(labels, batch.dims().to_vec()),
+                        Arg::Scalar(lr),
+                        Arg::Scalar(step as f32),
+                    ],
+                )?
+            }
+            (Stream::Vis(g), Family::Vit) => {
+                let batch = g.next_batch(self.cfg.batch);
+                rt.call(
+                    &self.exe_train,
+                    &[
+                        Arg::Buf(&state.buf),
+                        Arg::F32(&batch.images, batch.dims().to_vec()),
+                        Arg::I32(&batch.labels, vec![batch.batch]),
+                        Arg::Scalar(lr),
+                        Arg::Scalar(step as f32),
+                    ],
+                )?
+            }
+            _ => bail!("stream/family mismatch for {}", self.cfg.name),
+        };
+        let new_state = State { buf, n_params: state.n_params, flops };
+        let loss = new_state.loss(rt)?;
+        Ok((new_state, loss))
+    }
+
+    /// Mean validation loss over the fixed val set (no state mutation).
+    pub fn eval(&self, rt: &Runtime, state: &State) -> Result<f32> {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        match &self.val {
+            ValSet::Lang(batches) => {
+                for batch in batches {
+                    let mut args = vec![Arg::Buf(&state.buf), Arg::I32(&batch.tokens, batch.dims().to_vec())];
+                    if let Some(labels) = &batch.labels {
+                        args.push(Arg::I32(labels, batch.dims().to_vec()));
+                    }
+                    let out = rt.call(&self.exe_eval, &args)?;
+                    total += rt.read_scalar(&out)? as f64;
+                    n += 1;
+                }
+            }
+            ValSet::Vis(batches) => {
+                for batch in batches {
+                    let out = rt.call(
+                        &self.exe_eval,
+                        &[
+                            Arg::Buf(&state.buf),
+                            Arg::F32(&batch.images, batch.dims().to_vec()),
+                            Arg::I32(&batch.labels, vec![batch.batch]),
+                        ],
+                    )?;
+                    total += rt.read_scalar(&out)? as f64;
+                    n += 1;
+                }
+            }
+        }
+        Ok((total / n.max(1) as f64) as f32)
+    }
+
+    /// Evaluate on a *different* domain's held-out data (Table 2 zero-shot).
+    pub fn eval_domain(
+        &self,
+        rt: &Runtime,
+        state: &State,
+        domain: u64,
+        batches: usize,
+    ) -> Result<f32> {
+        let corpus = Corpus::new(self.cfg.vocab, domain);
+        let val = Batcher::validation_set(&self.cfg, corpus, batches);
+        let mut total = 0.0f64;
+        for batch in &val {
+            let mut args = vec![Arg::Buf(&state.buf), Arg::I32(&batch.tokens, batch.dims().to_vec())];
+            if let Some(labels) = &batch.labels {
+                args.push(Arg::I32(labels, batch.dims().to_vec()));
+            }
+            let out = rt.call(&self.exe_eval, &args)?;
+            total += rt.read_scalar(&out)? as f64;
+        }
+        Ok((total / batches.max(1) as f64) as f32)
+    }
+}

@@ -1,0 +1,217 @@
+//! Batch assembly for the three model families: causal-LM token batches,
+//! MLM-masked batches, and deterministic validation sets.
+
+use crate::runtime::{Family, ModelCfg};
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, FIRST_WORD, MASK};
+
+/// MLM masking ratio (BERT's 15% with the 80/10/10 split).
+pub const MASK_PROB: f64 = 0.15;
+
+/// One language batch: tokens (and labels for MLM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LangBatch {
+    pub tokens: Vec<i32>, // [B * S]
+    pub labels: Option<Vec<i32>>, // MLM only; -1 = ignore
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl LangBatch {
+    pub fn dims(&self) -> [usize; 2] {
+        [self.batch, self.seq]
+    }
+}
+
+/// Streaming batcher over a corpus for one model config.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    corpus: Corpus,
+    family: Family,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(cfg: &ModelCfg, corpus: Corpus, seed: u64) -> Batcher {
+        assert!(matches!(cfg.family, Family::Gpt | Family::Bert));
+        Batcher {
+            corpus,
+            family: cfg.family,
+            batch: cfg.batch,
+            seq: cfg.seq_len,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn next_batch(&mut self) -> LangBatch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            tokens.extend(self.corpus.sequence(self.seq, &mut self.rng));
+        }
+        match self.family {
+            Family::Gpt => LangBatch {
+                tokens,
+                labels: None,
+                batch: self.batch,
+                seq: self.seq,
+            },
+            Family::Bert => {
+                let (masked, labels) = mask_mlm(
+                    &tokens,
+                    self.corpus.vocab(),
+                    self.seq,
+                    &mut self.rng,
+                );
+                LangBatch {
+                    tokens: masked,
+                    labels: Some(labels),
+                    batch: self.batch,
+                    seq: self.seq,
+                }
+            }
+            Family::Vit => unreachable!(),
+        }
+    }
+
+    /// A fixed validation set of `n` batches (fresh deterministic stream).
+    pub fn validation_set(cfg: &ModelCfg, corpus: Corpus, n: usize) -> Vec<LangBatch> {
+        let mut b = Batcher::new(cfg, corpus, VAL_SEED);
+        (0..n).map(|_| b.next_batch()).collect()
+    }
+}
+
+/// Seed reserved for validation streams ("val_seed" in ASCII) — never used
+/// for training streams, so train/val never overlap.
+pub const VAL_SEED: u64 = 0x76616c5f73656564;
+
+/// BERT MLM masking: 15% of (non-BOS) positions; of those 80% → [MASK],
+/// 10% → random word, 10% kept. Labels hold the original token at masked
+/// positions, -1 elsewhere. At least one position per row is always masked.
+pub fn mask_mlm(
+    tokens: &[i32],
+    vocab: usize,
+    seq: usize,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut masked = tokens.to_vec();
+    let mut labels = vec![-1i32; tokens.len()];
+    let rows = tokens.len() / seq;
+    for r in 0..rows {
+        let mut any = false;
+        for c in 1..seq {
+            let i = r * seq + c;
+            if rng.f64() < MASK_PROB {
+                labels[i] = tokens[i];
+                any = true;
+                let roll = rng.f64();
+                if roll < 0.8 {
+                    masked[i] = MASK;
+                } else if roll < 0.9 {
+                    masked[i] =
+                        FIRST_WORD + rng.below(vocab - FIRST_WORD as usize) as i32;
+                } // else: keep original
+            }
+        }
+        if !any {
+            // force one mask so the loss denominator is never zero
+            let c = 1 + rng.below(seq - 1);
+            let i = r * seq + c;
+            labels[i] = tokens[i];
+            masked[i] = MASK;
+        }
+    }
+    (masked, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Family, InitKind, ParamEntry};
+
+    fn cfg(family: Family) -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            family,
+            n_layer: 2,
+            n_head: 2,
+            head_dim: 8,
+            d_model: 16,
+            d_ff: 64,
+            vocab: 64,
+            seq_len: 16,
+            batch: 4,
+            image_size: 0,
+            patch_size: 0,
+            n_classes: 0,
+            n_params: 1,
+            tokens_per_step: 64,
+            flops_train_step: 1.0,
+            flops_fwd_token: 1.0,
+            layout: vec![ParamEntry {
+                name: "x".into(),
+                offset: 0,
+                shape: vec![1],
+                init: InitKind::Zeros,
+            }],
+        }
+    }
+
+    #[test]
+    fn gpt_batch_shape() {
+        let c = cfg(Family::Gpt);
+        let mut b = Batcher::new(&c, Corpus::new(64, 0), 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 64);
+        assert!(batch.labels.is_none());
+        assert!(batch.tokens.iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn bert_batch_masks() {
+        let c = cfg(Family::Bert);
+        let mut b = Batcher::new(&c, Corpus::new(64, 0), 1);
+        let batch = b.next_batch();
+        let labels = batch.labels.unwrap();
+        let n_masked = labels.iter().filter(|&&l| l >= 0).count();
+        assert!(n_masked > 0, "no masked positions");
+        // each row has at least one label
+        for r in 0..4 {
+            assert!(
+                labels[r * 16..(r + 1) * 16].iter().any(|&l| l >= 0),
+                "row {r} has no label"
+            );
+        }
+        // masked positions where tokens show MASK must carry the original
+        for (i, &l) in labels.iter().enumerate() {
+            if l >= 0 && batch.tokens[i] == MASK {
+                assert!(l >= FIRST_WORD);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let c = cfg(Family::Gpt);
+        let a: Vec<_> = {
+            let mut b = Batcher::new(&c, Corpus::new(64, 0), 42);
+            (0..3).map(|_| b.next_batch()).collect()
+        };
+        let b2: Vec<_> = {
+            let mut b = Batcher::new(&c, Corpus::new(64, 0), 42);
+            (0..3).map(|_| b.next_batch()).collect()
+        };
+        assert_eq!(a, b2);
+    }
+
+    #[test]
+    fn validation_set_fixed() {
+        let c = cfg(Family::Gpt);
+        let v1 = Batcher::validation_set(&c, Corpus::new(64, 0), 2);
+        let v2 = Batcher::validation_set(&c, Corpus::new(64, 0), 2);
+        assert_eq!(v1, v2);
+        assert_eq!(v1.len(), 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Synthetic downstream classification probes — the GLUE substitute
+//! (Table 1 / Table 4 downstream columns; DESIGN.md §Substitutions).
+//!
+//! Each task plants class-specific marker tokens into otherwise ordinary
+//! corpus text; the label is recoverable only by attending to the markers,
+//! so probe accuracy measures whether pre-training produced usable
+//! contextual features (the actual question GLUE answers in the paper).
+//! Tasks differ in marker count (difficulty), mirroring how GLUE tasks span
+//! easy (SST-2) to hard (CoLA).
+
+use crate::runtime::ModelCfg;
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, FIRST_WORD};
+
+/// One fine-tuning batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProbeBatch {
+    pub tokens: Vec<i32>, // [B * S]
+    pub labels: Vec<i32>, // [B]
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Names mirroring the paper's GLUE columns (one synthetic task each).
+pub const TASKS: [&str; 7] = ["SST-2", "MNLI", "MRPC", "CoLA", "QNLI", "QQP", "STS-B"];
+
+/// markers injected per sequence, per task (difficulty knob)
+const TASK_INJECTIONS: [usize; 7] = [4, 3, 2, 1, 3, 4, 2];
+
+/// Probe-task generator for one (config, task) pair.
+#[derive(Debug, Clone)]
+pub struct ProbeGen {
+    corpus: Corpus,
+    task: usize,
+    n_classes: usize,
+    seq: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+impl ProbeGen {
+    pub fn new(cfg: &ModelCfg, n_classes: usize, task: usize, seed: u64) -> ProbeGen {
+        assert!(task < TASKS.len());
+        ProbeGen {
+            corpus: Corpus::new(cfg.vocab, 0),
+            task,
+            n_classes,
+            seq: cfg.seq_len,
+            batch: cfg.batch,
+            rng: Rng::new(seed ^ (task as u64) << 32),
+        }
+    }
+
+    /// The marker token identifying class `c` of this task.
+    pub fn marker(&self, c: usize) -> i32 {
+        let words = self.corpus.vocab() as u64 - FIRST_WORD as u64;
+        FIRST_WORD + (mix(PROBE_SALT, (self.task as u64) << 8 | c as u64) % words) as i32
+    }
+
+    pub fn next_batch(&mut self) -> ProbeBatch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch);
+        let inject = TASK_INJECTIONS[self.task];
+        for _ in 0..self.batch {
+            let label = self.rng.below(self.n_classes);
+            labels.push(label as i32);
+            let mut seqv = self.corpus.sequence(self.seq, &mut self.rng);
+            let marker = self.marker(label);
+            for _ in 0..inject {
+                let pos = 1 + self.rng.below(self.seq - 1);
+                seqv[pos] = marker;
+            }
+            tokens.extend(seqv);
+        }
+        ProbeBatch { tokens, labels, batch: self.batch, seq: self.seq }
+    }
+}
+
+/// Hash salt separating probe-marker ids from corpus successor ids
+/// ("downstre" in ASCII).
+const PROBE_SALT: u64 = 0x646f776e73747265;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Family, InitKind, ParamEntry};
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "b".into(),
+            family: Family::Bert,
+            n_layer: 2,
+            n_head: 2,
+            head_dim: 8,
+            d_model: 16,
+            d_ff: 64,
+            vocab: 128,
+            seq_len: 16,
+            batch: 8,
+            image_size: 0,
+            patch_size: 0,
+            n_classes: 0,
+            n_params: 1,
+            tokens_per_step: 128,
+            flops_train_step: 1.0,
+            flops_fwd_token: 1.0,
+            layout: vec![ParamEntry {
+                name: "x".into(),
+                offset: 0,
+                shape: vec![1],
+                init: InitKind::Zeros,
+            }],
+        }
+    }
+
+    #[test]
+    fn markers_injected() {
+        let c = cfg();
+        let mut g = ProbeGen::new(&c, 4, 0, 1);
+        let b = g.next_batch();
+        for (r, &label) in b.labels.iter().enumerate() {
+            let marker = g.marker(label as usize);
+            let row = &b.tokens[r * 16..(r + 1) * 16];
+            assert!(row.contains(&marker), "row {r} missing marker");
+        }
+    }
+
+    #[test]
+    fn markers_distinct_per_class() {
+        let c = cfg();
+        let g = ProbeGen::new(&c, 4, 0, 1);
+        let ms: Vec<i32> = (0..4).map(|cl| g.marker(cl)).collect();
+        for i in 0..4 {
+            for j in i + 1..4 {
+                assert_ne!(ms[i], ms[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_use_different_markers() {
+        let c = cfg();
+        let g0 = ProbeGen::new(&c, 4, 0, 1);
+        let g1 = ProbeGen::new(&c, 4, 1, 1);
+        assert_ne!(g0.marker(0), g1.marker(0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = cfg();
+        let a = ProbeGen::new(&c, 4, 2, 9).next_batch();
+        let b = ProbeGen::new(&c, 4, 2, 9).next_batch();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrates: synthetic corpora, batchers, vision generator, and the
+//! downstream-probe (GLUE substitute) tasks.
+
+pub mod batcher;
+pub mod corpus;
+pub mod glue_sim;
+pub mod vision;
+
+pub use batcher::{Batcher, LangBatch};
+pub use corpus::Corpus;
+pub use glue_sim::{ProbeBatch, ProbeGen};
+pub use vision::{ImageBatch, VisionGen};

@@ -1,0 +1,179 @@
+//! Procedural shape-classification images — the ImageNet substitute for the
+//! DeiT experiments (Table 3 / Table 6; DESIGN.md §Substitutions).
+//!
+//! Each class is a (shape, color-channel) pair rendered at a random position
+//! over a noisy background. The "transfer" datasets (CIFAR/Flowers/Cars
+//! substitutes) are held-out label mappings over different shape/channel
+//! combinations generated from disjoint domain seeds.
+
+use crate::runtime::ModelCfg;
+use crate::util::rng::Rng;
+
+/// One image batch, NHWC f32 in [0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageBatch {
+    pub images: Vec<f32>, // [B * H * W * 3]
+    pub labels: Vec<i32>, // [B]
+    pub batch: usize,
+    pub size: usize,
+}
+
+impl ImageBatch {
+    pub fn dims(&self) -> [usize; 4] {
+        [self.batch, self.size, self.size, 3]
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shape {
+    Square,
+    Disc,
+    Cross,
+    HStripes,
+}
+
+const SHAPES: [Shape; 4] = [Shape::Square, Shape::Disc, Shape::Cross, Shape::HStripes];
+
+/// Image generator for one (config, domain) pair.
+#[derive(Debug, Clone)]
+pub struct VisionGen {
+    size: usize,
+    n_classes: usize,
+    domain: u64,
+    rng: Rng,
+}
+
+impl VisionGen {
+    pub fn new(cfg: &ModelCfg, domain: u64, seed: u64) -> VisionGen {
+        assert!(cfg.n_classes >= 2 && cfg.n_classes <= 12);
+        VisionGen {
+            size: cfg.image_size,
+            n_classes: cfg.n_classes,
+            domain,
+            rng: Rng::new(seed ^ domain.rotate_left(17)),
+        }
+    }
+
+    /// Class → (shape, channel): the domain permutes the assignment so
+    /// "transfer" tasks need re-learned heads but reusable features.
+    fn class_spec(&self, label: usize) -> (Shape, usize) {
+        let idx = (label as u64 + self.domain * 5) as usize;
+        (SHAPES[idx % 4], (idx / 4) % 3)
+    }
+
+    fn render(&mut self, label: usize) -> Vec<f32> {
+        let s = self.size;
+        let (shape, chan) = self.class_spec(label);
+        let mut img = vec![0f32; s * s * 3];
+        // noisy background
+        for v in img.iter_mut() {
+            *v = 0.15 * self.rng.f32();
+        }
+        let half = s / 4; // shape radius
+        let cx = half + self.rng.below(s - 2 * half);
+        let cy = half + self.rng.below(s - 2 * half);
+        let intensity = 0.7 + 0.3 * self.rng.f32();
+        for y in 0..s {
+            for x in 0..s {
+                let dx = x as i64 - cx as i64;
+                let dy = y as i64 - cy as i64;
+                let inside = match shape {
+                    Shape::Square => dx.abs() <= half as i64 && dy.abs() <= half as i64,
+                    Shape::Disc => dx * dx + dy * dy <= (half * half) as i64,
+                    Shape::Cross => {
+                        (dx.abs() <= 1 && dy.abs() <= half as i64)
+                            || (dy.abs() <= 1 && dx.abs() <= half as i64)
+                    }
+                    Shape::HStripes => dy.abs() <= half as i64 && dy.rem_euclid(2) == 0
+                        && dx.abs() <= half as i64,
+                };
+                if inside {
+                    img[(y * s + x) * 3 + chan] = intensity;
+                }
+            }
+        }
+        img
+    }
+
+    pub fn next_batch(&mut self, batch: usize) -> ImageBatch {
+        let mut images = Vec::with_capacity(batch * self.size * self.size * 3);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let label = self.rng.below(self.n_classes);
+            labels.push(label as i32);
+            images.extend(self.render(label));
+        }
+        ImageBatch { images, labels, batch, size: self.size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Family, InitKind, ParamEntry};
+
+    fn vit_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "v".into(),
+            family: Family::Vit,
+            n_layer: 2,
+            n_head: 2,
+            head_dim: 8,
+            d_model: 16,
+            d_ff: 64,
+            vocab: 0,
+            seq_len: 0,
+            batch: 4,
+            image_size: 16,
+            patch_size: 4,
+            n_classes: 4,
+            n_params: 1,
+            tokens_per_step: 68,
+            flops_train_step: 1.0,
+            flops_fwd_token: 1.0,
+            layout: vec![ParamEntry {
+                name: "x".into(),
+                offset: 0,
+                shape: vec![1],
+                init: InitKind::Zeros,
+            }],
+        }
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let cfg = vit_cfg();
+        let mut g = VisionGen::new(&cfg, 0, 1);
+        let b = g.next_batch(4);
+        assert_eq!(b.images.len(), 4 * 16 * 16 * 3);
+        assert_eq!(b.labels.len(), 4);
+        assert!(b.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(b.labels.iter().all(|&l| (0..4).contains(&l)));
+    }
+
+    #[test]
+    fn classes_visibly_differ() {
+        let cfg = vit_cfg();
+        let mut g = VisionGen::new(&cfg, 0, 2);
+        // mean intensity of the target channel should exceed background
+        let img = g.render(0);
+        let bright = img.iter().filter(|&&v| v > 0.5).count();
+        assert!(bright > 4, "shape not rendered ({bright} bright px)");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = vit_cfg();
+        let a = VisionGen::new(&cfg, 1, 3).next_batch(2);
+        let b = VisionGen::new(&cfg, 1, 3).next_batch(2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn domains_remap_classes() {
+        let cfg = vit_cfg();
+        let g0 = VisionGen::new(&cfg, 0, 1);
+        let g1 = VisionGen::new(&cfg, 1, 1);
+        assert_ne!(g0.clone().class_spec(0), g1.clone().class_spec(0));
+    }
+}

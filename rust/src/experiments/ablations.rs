@@ -1,0 +1,79 @@
+//! tab5 — the paper's Table 5 hyper-parameter ablations on BERT-Base(sim):
+//!   (A) E_a (steps before coalescing)
+//!   (B) E_small (small-model training steps)
+//!   (C) α (interpolation ratio)
+//!   (D) coalesced model size
+
+use anyhow::Result;
+
+use crate::coordinator::{savings_vs_scratch, Harness, Method};
+use crate::info;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::table::{pct, Table};
+
+use super::common::{emit, opts_from_args, save_curve};
+
+pub fn tab5(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "bert_base_sim";
+    let mut opts = opts_from_args(base, 400, args);
+    opts.alpha = 0.5;
+    // shared scratch baseline
+    let h = Harness::new(rt, opts.clone());
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    save_curve("tab5", &scratch)?;
+    let target = scratch.final_eval(base, 3);
+    info!("tab5 target = {target:?}");
+
+    let mut t = Table::new(
+        "Table 5 — hyper-parameter ablations (BERT-Base(sim), V-cycle K=2)",
+        &["Row", "E_a", "E_small", "alpha", "Coalesced", "Saving(FLOPs)", "Saving(Wall)"],
+    );
+    let default_ea = opts.warmup;
+    let default_es = opts.e_small();
+
+    let mut run_variant = |row: &str, ea: usize, es: usize, alpha: f32,
+                           coalesced: Option<&str>| -> Result<()> {
+        let mut o = opts.clone();
+        o.warmup = ea;
+        o.alpha = alpha;
+        let h = Harness::new(rt, o);
+        let curve = if let Some(cc) = coalesced {
+            h.run_vcycle_custom(cc, es, target)?
+        } else {
+            h.run_vcycle_esmall(es, target)?
+        };
+        save_curve("tab5", &curve)?;
+        let s = savings_vs_scratch(&scratch, &curve, base);
+        t.row(vec![
+            row.to_string(),
+            ea.to_string(),
+            es.to_string(),
+            format!("{alpha}"),
+            coalesced.unwrap_or("L4-H4 (default)").to_string(),
+            pct(s.flops),
+            pct(s.wall),
+        ]);
+        Ok(())
+    };
+
+    // default row
+    run_variant("default", default_ea, default_es, 0.5, None)?;
+    // (A) E_a sweep — the paper shows large E_a erases the benefit
+    for ea in [default_ea * 4, default_ea * 10] {
+        run_variant("(A)", ea.min(opts.total_steps / 2), default_es, 0.5, None)?;
+    }
+    // (B) E_small sweep
+    for es in [default_es / 2, default_es * 3 / 2, default_es * 2] {
+        run_variant("(B)", default_ea, es, 0.5, None)?;
+    }
+    // (C) alpha sweep — α=1 removes interpolation, small α transfers nothing
+    for a in [0.05f32, 0.25, 0.75, 1.0] {
+        run_variant("(C)", default_ea, default_es, a, None)?;
+    }
+    // (D) coalesced model size
+    for cc in ["bert_base_sim_c2x2", "bert_base_sim_c6x6"] {
+        run_variant("(D)", default_ea, default_es, 0.5, Some(cc))?;
+    }
+    emit("tab5", &[t])
+}

@@ -1,0 +1,66 @@
+//! appc — App. C deployment overhead: resuming training after a level
+//! transition only costs a parameter load; measure it against the cost of
+//! training steps and extrapolate the LLaMA-65B estimate the paper gives.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{LrSchedule, Trainer};
+use crate::runtime::{init_state, load_checkpoint, save_checkpoint, state_from_theta, Runtime};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+use super::common::{emit, results_dir};
+
+pub fn appc(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = args.get("config").unwrap_or("bert_large_sim");
+    let cfg = rt.cfg(base)?.clone();
+    let steps = args.usize_or("steps", 30);
+
+    // train a few steps so the measurement includes a warm pipeline
+    let mut state = init_state(rt, &cfg, 5)?;
+    let mut trainer = Trainer::new(rt, base, 0, 6, 1)?;
+    let sched = LrSchedule::new(5, 1e-3, steps);
+    let t_train = Instant::now();
+    for step in 1..=steps {
+        let (s, _) = trainer.step(rt, &state, sched.lr(step), step)?;
+        state = s;
+    }
+    let per_step = t_train.elapsed().as_secs_f64() / steps as f64;
+
+    // checkpoint save + load + re-upload = the full resume path
+    let dir = results_dir().join("ckpt");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{base}.ckpt"));
+    let theta = state.theta(rt)?;
+    let t_save = Instant::now();
+    save_checkpoint(&path, &cfg, &theta)?;
+    let save_s = t_save.elapsed().as_secs_f64();
+    let t_load = Instant::now();
+    let theta2 = load_checkpoint(&path, &cfg)?;
+    let _resumed = state_from_theta(rt, &cfg, &theta2)?;
+    let load_s = t_load.elapsed().as_secs_f64();
+    let bytes = (cfg.n_params * 4) as f64;
+
+    let mut t = Table::new(
+        "App. C — deployment overhead: resume = parameter I/O only",
+        &["Quantity", "Value"],
+    );
+    t.row(vec!["model".into(), format!("{base} ({} params)", cfg.n_params)]);
+    t.row(vec!["train step (measured)".into(), format!("{:.1} ms", per_step * 1e3)]);
+    t.row(vec!["checkpoint save".into(), format!("{:.1} ms ({:.0} MB/s)", save_s * 1e3, bytes / save_s / 1e6)]);
+    t.row(vec!["checkpoint load + upload".into(), format!("{:.1} ms ({:.0} MB/s)", load_s * 1e3, bytes / load_s / 1e6)]);
+    t.row(vec![
+        "resume overhead / 100 steps".into(),
+        format!("{:.2}%", 100.0 * load_s / (per_step * 100.0)),
+    ]);
+    // the paper's LLaMA-65B estimate: 130 GB over measured load bandwidth
+    let bw = bytes / load_s;
+    t.row(vec![
+        "LLaMA-65B (130 GB) at this bandwidth".into(),
+        format!("{:.1} min (paper: <5 min on SSD)", 130e9 / bw / 60.0),
+    ]);
+    std::fs::remove_file(&path).ok();
+    emit("appc", &[t])
+}

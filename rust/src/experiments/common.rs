@@ -1,0 +1,109 @@
+//! Shared helpers for the experiment drivers: output locations, method
+//! rosters, and result recording.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Curve;
+use crate::coordinator::{savings_vs_scratch, Harness, Method, RunOpts, Savings};
+use crate::info;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+/// Results directory ($ML_RESULTS or ./results).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(std::env::var("ML_RESULTS").unwrap_or_else(|_| "results".into()))
+}
+
+/// Write a rendered table (and echo it to stdout).
+pub fn emit(id: &str, tables: &[Table]) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut out = String::new();
+    for t in tables {
+        let r = t.render();
+        println!("{r}");
+        out.push_str(&r);
+        out.push('\n');
+    }
+    std::fs::write(dir.join(format!("{id}.md")), out)?;
+    Ok(())
+}
+
+/// Write a curve CSV under results/curves/.
+pub fn save_curve(id: &str, curve: &Curve) -> Result<()> {
+    let name = curve
+        .method
+        .to_lowercase()
+        .replace(|c: char| !c.is_ascii_alphanumeric(), "_");
+    curve.write_csv(&results_dir().join("curves").join(format!("{id}__{name}.csv")))
+}
+
+/// The method roster of the main comparison tables (Tables 1–3).
+pub fn table_methods() -> Vec<Method> {
+    vec![
+        Method::Scratch,
+        Method::StackBert,
+        Method::Bert2Bert,
+        Method::LiGO { fit: false },
+        Method::NetExpansion,
+        Method::KI,
+        Method::VCycle { levels: 2, fit: false },
+    ]
+}
+
+/// One (method → curve + savings + final state) sweep against a shared
+/// scratch run. Every method runs exactly once, without early stop, so its
+/// final state is usable for downstream probes; savings come from the
+/// crossing point on the recorded curve (methods that never reach the
+/// scratch target get the negative saving implied by their full budget).
+pub struct Comparison {
+    pub scratch: Curve,
+    pub scratch_state: crate::runtime::State,
+    pub rows: Vec<(Method, Curve, Savings, crate::runtime::State)>,
+}
+
+/// Run every method of `methods` (Scratch first) and compute savings.
+pub fn run_comparison(
+    rt: &Runtime,
+    opts: &RunOpts,
+    methods: &[Method],
+    id: &str,
+) -> Result<Comparison> {
+    let h = Harness::new(rt, opts.clone());
+    let (scratch, scratch_state) = h.run_method_full(&Method::Scratch)?;
+    save_curve(id, &scratch)?;
+    let target = scratch.final_eval(&opts.base, 3);
+    info!("{id}: scratch target = {target:?}");
+    let mut rows = Vec::new();
+    for m in methods {
+        if *m == Method::Scratch {
+            continue;
+        }
+        let (curve, state) = h.run_method_full(m)?;
+        save_curve(id, &curve)?;
+        let s = savings_vs_scratch(&scratch, &curve, &opts.base);
+        info!(
+            "{id}: {:24} flops {:+.1}% wall {:+.1}% (reached={})",
+            m.label(),
+            s.flops * 100.0,
+            s.wall * 100.0,
+            s.reached
+        );
+        rows.push((m.clone(), curve, s, state));
+    }
+    Ok(Comparison { scratch, scratch_state, rows })
+}
+
+/// Standard options for one base config, honoring CLI overrides.
+pub fn opts_from_args(base: &str, default_steps: usize, args: &Args) -> RunOpts {
+    let steps = args.usize_or("steps", default_steps);
+    let mut o = RunOpts::quick(base, steps);
+    o.seed = args.u64_or("seed", 17);
+    if let Some(a) = args.get("alpha") {
+        o.alpha = a.parse().unwrap_or(o.alpha);
+    }
+    o
+}

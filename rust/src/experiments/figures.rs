@@ -1,0 +1,398 @@
+//! Drivers for the paper's figures:
+//!   fig1 — attention-pattern similarity (intra-/inter-layer)
+//!   fig3 — loss curves: BERT-Base (a), GPT-Base (b), BERT-Large 2/3-level (c)
+//!   fig4 — App. B: monotonic growth mapped once vs twice
+//!   fig5 — App. F: effect of coalescing (random small init; interp path)
+//!   fig6 — App. G: continue training the de-coalesced model
+//!   fig7 — App. J: learned (fitted) vs analytic de-coalescing
+//!   fig8 — App. K: coalesced model vs LoRA
+
+use anyhow::Result;
+
+use crate::coordinator::experiment::level_cfg;
+use crate::coordinator::lora::run_lora;
+use crate::coordinator::trainer::Trainer;
+use crate::coordinator::{operators, savings_vs_scratch, Harness, LrSchedule, Method};
+use crate::info;
+use crate::runtime::{init_state, init_theta, Arg, Runtime};
+use crate::util::cli::Args;
+use crate::util::table::{pct, Table};
+
+use super::common::{emit, opts_from_args, save_curve};
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — attention similarity
+// ---------------------------------------------------------------------------
+
+pub fn fig1(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "bert_base_sim";
+    let steps = args.usize_or("steps", 150);
+    let cfg = rt.cfg(base)?.clone();
+
+    // briefly pre-train so attention patterns are non-random
+    let mut state = init_state(rt, &cfg, 11)?;
+    let mut trainer = Trainer::new(rt, base, 0, 5, 2)?;
+    let sched = LrSchedule::new(steps / 10, 1e-3, steps);
+    for step in 1..=steps {
+        let (s, _) = trainer.step(rt, &state, sched.lr(step), step)?;
+        state = s;
+    }
+
+    // one probe batch through attn_maps -> [L, H, S, S]
+    let exe = rt.exe(&format!("attn_maps__{base}"))?;
+    let corpus = crate::data::Corpus::new(cfg.vocab, 0);
+    let batch = crate::data::Batcher::validation_set(&cfg, corpus, 1).remove(0);
+    let out = rt.call(
+        &exe,
+        &[Arg::Buf(&state.buf), Arg::I32(&batch.tokens, batch.dims().to_vec())],
+    )?;
+    let maps = rt.read_f32(&out)?;
+    let (l, h, s) = (cfg.n_layer, cfg.n_head, cfg.seq_len);
+    let at = |li: usize, hi: usize| -> &[f32] {
+        let base_idx = (li * h + hi) * s * s;
+        &maps[base_idx..base_idx + s * s]
+    };
+    let cos = |a: &[f32], b: &[f32]| -> f64 {
+        let (mut ab, mut aa, mut bb) = (0f64, 0f64, 0f64);
+        for (x, y) in a.iter().zip(b) {
+            ab += (*x as f64) * (*y as f64);
+            aa += (*x as f64) * (*x as f64);
+            bb += (*y as f64) * (*y as f64);
+        }
+        ab / (aa.sqrt() * bb.sqrt()).max(1e-12)
+    };
+
+    // intra-layer: mean pairwise head similarity per layer
+    let mut t1 = Table::new(
+        "Fig. 1 — intra-layer attention similarity (mean pairwise head cosine)",
+        &["Layer", "MeanCos", "MaxPair"],
+    );
+    for li in 0..l {
+        let mut vals = Vec::new();
+        for a in 0..h {
+            for b in a + 1..h {
+                vals.push(cos(at(li, a), at(li, b)));
+            }
+        }
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let max = vals.iter().cloned().fold(0.0, f64::max);
+        t1.row(vec![format!("{}", li + 1), format!("{mean:.3}"), format!("{max:.3}")]);
+    }
+
+    // inter-layer: same head, adjacent layers
+    let mut t2 = Table::new(
+        "Fig. 1 — inter-layer attention similarity (same head, adjacent layers)",
+        &["LayerPair", "MeanCos"],
+    );
+    let mut rand_base = 0.0f64;
+    for li in 0..l - 1 {
+        let mut vals = Vec::new();
+        for hi in 0..h {
+            vals.push(cos(at(li, hi), at(li + 1, hi)));
+        }
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        t2.row(vec![format!("{}-{}", li + 1, li + 2), format!("{mean:.3}")]);
+        // distant-pair baseline: layer 1 vs last layer
+        rand_base = cos(at(0, 0), at(l - 1, h - 1));
+    }
+    info!("fig1: distant-pair baseline cosine = {rand_base:.3}");
+    emit("fig1", &[t1, t2])
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — loss curves + savings summary
+// ---------------------------------------------------------------------------
+
+fn fig3_one(rt: &Runtime, args: &Args, id: &str, base: &str, alpha: f32,
+            levels: &[usize], default_steps: usize) -> Result<()> {
+    let mut opts = opts_from_args(base, default_steps, args);
+    opts.alpha = alpha;
+    let h = Harness::new(rt, opts.clone());
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    save_curve(id, &scratch)?;
+    let mut t = Table::new(
+        &format!("Fig. 3 ({id}) — {base}: V-cycle vs scratch"),
+        &["Method", "FinalEval", "Saving(FLOPs)", "Saving(Wall)", "ReachedTarget"],
+    );
+    let fe = scratch.final_eval(base, 3).unwrap_or(f32::NAN);
+    t.row(vec!["Scratch".into(), format!("{fe:.4}"), "0%".into(), "0%".into(), "-".into()]);
+    for &k in levels {
+        let m = Method::VCycle { levels: k, fit: false };
+        let curve = h.run_method(&m, scratch.final_eval(base, 3))?;
+        save_curve(id, &curve)?;
+        let s = savings_vs_scratch(&scratch, &curve, base);
+        let fe = curve.final_eval(base, 3).unwrap_or(f32::NAN);
+        t.row(vec![
+            m.label(),
+            format!("{fe:.4}"),
+            pct(s.flops),
+            pct(s.wall),
+            s.reached.to_string(),
+        ]);
+    }
+    emit(id, &[t])
+}
+
+pub fn fig3a(rt: &Runtime, args: &Args) -> Result<()> {
+    fig3_one(rt, args, "fig3a", "bert_base_sim", 0.5, &[2], 400)
+}
+pub fn fig3b(rt: &Runtime, args: &Args) -> Result<()> {
+    fig3_one(rt, args, "fig3b", "gpt_base_sim", 0.25, &[2], 400)
+}
+pub fn fig3c(rt: &Runtime, args: &Args) -> Result<()> {
+    fig3_one(rt, args, "fig3c", "bert_large_sim", 0.5, &[2, 3], 300)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — App. B: map once vs map twice (monotonic growth)
+// ---------------------------------------------------------------------------
+
+pub fn fig4(rt: &Runtime, args: &Args) -> Result<()> {
+    // NOTE: the paper uses GPT-Small→Base→Large; we substitute the
+    // bert_large_sim 3-level chain, which has the same structure.
+    let base = "bert_large_sim";
+    let opts = opts_from_args(base, 300, args);
+    let h = Harness::new(rt, opts.clone());
+    let lv2 = level_cfg(base, 2);
+    let lv3 = level_cfg(base, 3);
+    let e_small = opts.e_small();
+
+    // mapped once: train lv2, grow (α=1), train base
+    let once = h.run_method(&Method::LiGO { fit: false }, None)?;
+    save_curve("fig4", &once)?;
+
+    // mapped twice: train lv3, grow to lv2, train lv2, grow to base, train
+    let mut run = h.new_run_pub("Mapped twice", &lv3, 7)?;
+    let sched = h.sched_pub(e_small);
+    h.train_phase(&mut run, e_small / 2, &sched, None, 0.0)?;
+    let fresh2 = init_state(rt, rt.cfg(&lv2)?, opts.seed ^ 21)?;
+    let st = operators::refine(rt, &lv2, &lv3, &fresh2, &run.state, 1.0, false)?;
+    h.transition_pub(&mut run, &lv2, st)?;
+    h.train_phase(&mut run, e_small / 2, &sched, None, 0.0)?;
+    let fresh1 = init_state(rt, rt.cfg(base)?, opts.seed ^ 22)?;
+    let st = operators::refine(rt, base, &lv2, &fresh1, &run.state, 1.0, false)?;
+    h.transition_pub(&mut run, base, st)?;
+    let budget = (opts.total_steps as f64 * opts.budget_mult) as usize;
+    let sched = h.sched_pub(budget);
+    h.train_phase(&mut run, budget, &sched, None, 0.0)?;
+    let twice = Harness::close_pub(run);
+    save_curve("fig4", &twice)?;
+
+    let mut t = Table::new(
+        "Fig. 4 (App. B) — monotonic growth: mapped once vs mapped twice",
+        &["Chain", "FinalEval", "EvalAt50%Budget"],
+    );
+    let halfway = |c: &crate::coordinator::Curve| -> f32 {
+        let half = c.total_flops * 0.5;
+        c.points
+            .iter()
+            .filter(|p| p.config == base && p.flops >= half)
+            .find_map(|p| p.eval_loss)
+            .unwrap_or(f32::NAN)
+    };
+    t.row(vec![
+        "small → base (once)".into(),
+        format!("{:.4}", once.final_eval(base, 3).unwrap_or(f32::NAN)),
+        format!("{:.4}", halfway(&once)),
+    ]);
+    t.row(vec![
+        "tiny → small → base (twice)".into(),
+        format!("{:.4}", twice.final_eval(base, 3).unwrap_or(f32::NAN)),
+        format!("{:.4}", halfway(&twice)),
+    ]);
+    emit("fig4", &[t])
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — App. F: effect of the coalescing operation
+// ---------------------------------------------------------------------------
+
+pub fn fig5(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "gpt_base_sim";
+    let mut opts = opts_from_args(base, 300, args);
+    opts.alpha = 0.25;
+    let h = Harness::new(rt, opts.clone());
+
+    // (a) V-cycle with vs without the coalescing link
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    let with = h.run_method(&Method::VCycle { levels: 2, fit: false },
+                            scratch.final_eval(base, 3))?;
+    let without = h.run_method(&Method::VCycleRandomSmall, scratch.final_eval(base, 3))?;
+    for c in [&scratch, &with, &without] {
+        save_curve("fig5", c)?;
+    }
+    let s_with = savings_vs_scratch(&scratch, &with, base);
+    let s_without = savings_vs_scratch(&scratch, &without, base);
+    let mut t1 = Table::new(
+        "Fig. 5a (App. F) — V-cycle with vs without coalescing",
+        &["Variant", "Saving(FLOPs)", "Saving(Wall)", "Drop"],
+    );
+    t1.row(vec!["with coalescing".into(), pct(s_with.flops), pct(s_with.wall), "-".into()]);
+    t1.row(vec![
+        "random small init".into(),
+        pct(s_without.flops),
+        pct(s_without.wall),
+        pct(s_with.flops - s_without.flops),
+    ]);
+
+    // (b) interpolation loss path between M1 (pre-coalesce) and the
+    // de-coalesced model, with vs without coalescing
+    let small_cfg = level_cfg(base, 2);
+    let e_a = opts.warmup;
+    let e_small = opts.e_small();
+    let mut run = h.new_run_pub("probe", base, 31)?;
+    let sched = h.sched_pub(opts.total_steps);
+    h.train_phase(&mut run, e_a, &sched, None, 0.0)?;
+    let big_state = operators::interp_states(rt, base, &run.state, &run.state, 0.0)?;
+
+    // trained small model, coalesced init
+    let co = operators::coalesce(rt, base, &small_cfg, &run.state)?;
+    h.transition_pub(&mut run, &small_cfg, co)?;
+    let sched_s = h.sched_pub(e_small);
+    h.train_phase(&mut run, e_small / 2, &sched_s, None, 0.0)?;
+    let dec_co = operators::refine(rt, base, &small_cfg, &big_state, &run.state, 1.0, false)?;
+
+    // trained small model, random init
+    let mut run2 = h.new_run_pub("probe2", &small_cfg, 33)?;
+    h.train_phase(&mut run2, e_small / 2, &sched_s, None, 0.0)?;
+    let dec_rand = operators::refine(rt, base, &small_cfg, &big_state, &run2.state, 1.0, false)?;
+
+    let trainer = Trainer::new(rt, base, 0, 1, 4)?;
+    let mut t2 = Table::new(
+        "Fig. 5b (App. F) — interpolation loss path (alpha: M1 -> de-coalesced)",
+        &["alpha", "loss (with coalescing)", "loss (random small)"],
+    );
+    for i in 0..=10 {
+        let a = i as f32 / 10.0;
+        let p1 = operators::interp_states(rt, base, &big_state, &dec_co, a)?;
+        let p2 = operators::interp_states(rt, base, &big_state, &dec_rand, a)?;
+        let l1 = trainer.eval(rt, &p1)?;
+        let l2 = trainer.eval(rt, &p2)?;
+        t2.row(vec![format!("{a:.1}"), format!("{l1:.4}"), format!("{l2:.4}")]);
+    }
+    emit("fig5", &[t1, t2])
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — App. G: symmetric neurons of the de-coalesced model
+// ---------------------------------------------------------------------------
+
+pub fn fig6(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "gpt_base_sim";
+    let opts = opts_from_args(base, 300, args);
+    let h = Harness::new(rt, opts.clone());
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    let dec = h.run_method(&Method::DecoalescedOnly, None)?;
+    save_curve("fig6", &scratch)?;
+    save_curve("fig6", &dec)?;
+    let mut t = Table::new(
+        "Fig. 6 (App. G) — continuing the de-coalesced model (α=1, symmetric neurons)",
+        &["Run", "FinalEval", "Note"],
+    );
+    t.row(vec![
+        "scratch".into(),
+        format!("{:.4}", scratch.final_eval(base, 3).unwrap_or(f32::NAN)),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "de-coalesced only".into(),
+        format!("{:.4}", dec.final_eval(base, 3).unwrap_or(f32::NAN)),
+        "symmetric neurons limit capacity".into(),
+    ]);
+    emit("fig6", &[t])
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — App. J: learned transformation
+// ---------------------------------------------------------------------------
+
+pub fn fig7(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "gpt_base_sim";
+    let mut opts = opts_from_args(base, 300, args);
+    opts.alpha = 0.25;
+    let h = Harness::new(rt, opts.clone());
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    let target = scratch.final_eval(base, 3);
+    let plain = h.run_method(&Method::VCycle { levels: 2, fit: false }, target)?;
+    let fitted = h.run_method(&Method::VCycle { levels: 2, fit: true }, target)?;
+    for c in [&scratch, &plain, &fitted] {
+        save_curve("fig7", c)?;
+    }
+    let sp = savings_vs_scratch(&scratch, &plain, base);
+    let sf = savings_vs_scratch(&scratch, &fitted, base);
+    // initial loss right after the refine transition (first eval of the
+    // final phase)
+    let first_eval_final = |c: &crate::coordinator::Curve| -> f32 {
+        let last_phase = c.points.last().map(|p| p.phase).unwrap_or(0);
+        c.points
+            .iter()
+            .filter(|p| p.phase == last_phase)
+            .find_map(|p| p.eval_loss)
+            .unwrap_or(f32::NAN)
+    };
+    let mut t = Table::new(
+        "Fig. 7 (App. J) — analytic vs learned (least-squares) de-coalescing",
+        &["Variant", "LossAfterRefine", "FinalEval", "Saving(FLOPs)"],
+    );
+    t.row(vec![
+        "analytic G".into(),
+        format!("{:.4}", first_eval_final(&plain)),
+        format!("{:.4}", plain.final_eval(base, 3).unwrap_or(f32::NAN)),
+        pct(sp.flops),
+    ]);
+    t.row(vec![
+        "learned G (lstsq)".into(),
+        format!("{:.4}", first_eval_final(&fitted)),
+        format!("{:.4}", fitted.final_eval(base, 3).unwrap_or(f32::NAN)),
+        pct(sf.flops),
+    ]);
+    emit("fig7", &[t])
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — App. K: coalesced model vs LoRA
+// ---------------------------------------------------------------------------
+
+pub fn fig8(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = "bert_base_sim";
+    let small_cfg = level_cfg(base, 2);
+    let steps = args.usize_or("steps", 200);
+    let opts = opts_from_args(base, steps, args);
+    let h = Harness::new(rt, opts.clone());
+
+    // coalesced model: coalesce a fresh base model, train the small model
+    let mut run = h.new_run_pub("Coalesced BERT", base, 41)?;
+    let co = operators::coalesce(rt, base, &small_cfg, &run.state)?;
+    h.transition_pub(&mut run, &small_cfg, co)?;
+    let sched = h.sched_pub(steps);
+    h.train_phase(&mut run, steps, &sched, None, 0.0)?;
+    let coalesced = Harness::close_pub(run);
+    save_curve("fig8", &coalesced)?;
+
+    // LoRA on the frozen fresh base model
+    let theta = init_theta(rt.cfg(base)?, opts.seed ^ 1);
+    let lora = run_lora(rt, base, &theta, steps, opts.peak_lr, opts.eval_every, 4,
+                        opts.seed ^ 0x10A)?;
+    save_curve("fig8", &lora.curve)?;
+
+    let last_eval = |c: &crate::coordinator::Curve| {
+        c.points.iter().rev().find_map(|p| p.eval_loss).unwrap_or(f32::NAN)
+    };
+    let mut t = Table::new(
+        "Fig. 8 (App. K) — coalesced BERT vs BERT + LoRA (same step budget)",
+        &["Run", "FinalEval", "TotalGFLOPs", "GFLOPs/step"],
+    );
+    t.row(vec![
+        "Coalesced BERT".into(),
+        format!("{:.4}", last_eval(&coalesced)),
+        format!("{:.2}", coalesced.total_flops / 1e9),
+        format!("{:.3}", coalesced.total_flops / steps as f64 / 1e9),
+    ]);
+    t.row(vec![
+        "BERT-Base + LoRA".into(),
+        format!("{:.4}", last_eval(&lora.curve)),
+        format!("{:.2}", lora.curve.total_flops / 1e9),
+        format!("{:.3}", lora.curve.total_flops / steps as f64 / 1e9),
+    ]);
+    emit("fig8", &[t])
+}

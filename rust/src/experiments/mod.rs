@@ -1,0 +1,65 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §6).
+//!
+//! Every driver prints its table(s), writes them under `results/<id>.md`,
+//! and records the underlying loss curves as CSV under `results/curves/`.
+
+pub mod ablations;
+pub mod appc;
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+
+/// (id, description) of every reproducible artifact.
+pub const REGISTRY: &[(&str, &str)] = &[
+    ("fig1", "attention-pattern similarity (intra-/inter-layer)"),
+    ("fig3a", "BERT-Base loss curves: V-cycle vs scratch"),
+    ("fig3b", "GPT-Base loss curves: V-cycle vs scratch"),
+    ("fig3c", "BERT-Large loss curves: 2- and 3-level V-cycle"),
+    ("tab1", "BERT-Base: savings + downstream probes, all baselines"),
+    ("tab2", "GPT-Base: savings + zero-shot perplexity"),
+    ("tab3", "DeiT-B: savings + transfer accuracy"),
+    ("tab4", "BERT-Large with 1/2/3 levels"),
+    ("tab5", "hyper-parameter ablations (E_a, E_small, alpha, size)"),
+    ("tab6", "DeiT-S (App. H)"),
+    ("fig4", "App. B: monotonic growth mapped once vs twice"),
+    ("fig5", "App. F: effect of coalescing + interpolation path"),
+    ("fig6", "App. G: continuing the de-coalesced model"),
+    ("fig7", "App. J: learned vs analytic transformation"),
+    ("fig8", "App. K: coalesced model vs LoRA"),
+    ("appc", "App. C: deployment (resume) overhead"),
+];
+
+/// Dispatch an experiment id (or `all`).
+pub fn run(rt: &Runtime, id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => figures::fig1(rt, args),
+        "fig3a" => figures::fig3a(rt, args),
+        "fig3b" => figures::fig3b(rt, args),
+        "fig3c" => figures::fig3c(rt, args),
+        "fig4" => figures::fig4(rt, args),
+        "fig5" => figures::fig5(rt, args),
+        "fig6" => figures::fig6(rt, args),
+        "fig7" => figures::fig7(rt, args),
+        "fig8" => figures::fig8(rt, args),
+        "tab1" => tables::tab1(rt, args),
+        "tab2" => tables::tab2(rt, args),
+        "tab3" => tables::tab3(rt, args),
+        "tab4" => tables::tab4(rt, args),
+        "tab5" => ablations::tab5(rt, args),
+        "tab6" => tables::tab6(rt, args),
+        "appc" => appc::appc(rt, args),
+        "all" => {
+            for (id, _) in REGISTRY {
+                crate::info!("=== exp {id} ===");
+                run(rt, id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'; see `multilevel list`"),
+    }
+}

@@ -1,0 +1,19 @@
+//! # Multi-Level Training Framework for Transformers
+//!
+//! Rust coordinator (Layer 3) of the three-layer Rust + JAX + Pallas stack
+//! reproducing *"A Multi-Level Framework for Accelerating Training
+//! Transformer Models"* (Zou, Zhang & Deng, ICLR 2024).
+//!
+//! Layer 1 (Pallas kernels) and Layer 2 (JAX models + the Coalescing /
+//! De-coalescing / Interpolation operators) live in `python/compile/` and
+//! are AOT-lowered to HLO-text artifacts; this crate loads them through the
+//! PJRT C API (`xla` crate) and owns everything on the training path:
+//! scheduling (the V-cycle of Algorithm 1), data, metrics, checkpoints,
+//! the experiment harness that regenerates every paper table and figure,
+//! and the CLI.
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod util;

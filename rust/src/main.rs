@@ -1,0 +1,150 @@
+//! `multilevel` — the framework CLI / launcher.
+//!
+//! Subcommands:
+//!   info                         manifest + runtime summary
+//!   train  --config C --steps N  plain single-level training
+//!   vcycle --base C --steps N    the paper's V-cycle (Algorithm 1)
+//!   exp <id|all> [--steps N]     regenerate a paper table/figure (DESIGN §6)
+//!   bench-step --config C        per-step latency of the train hot loop
+//!   list                         available experiment ids
+
+use anyhow::{bail, Result};
+
+use multilevel::coordinator::{Harness, LrSchedule, Method, RunOpts, Trainer};
+use multilevel::experiments;
+use multilevel::info;
+use multilevel::runtime::{init_state, Runtime};
+use multilevel::util::bench;
+use multilevel::util::cli::Args;
+use multilevel::util::logger;
+
+const USAGE: &str = "usage: multilevel <info|train|vcycle|exp|bench-step|list> [options]
+  info                          show manifest summary
+  list                          list experiment ids
+  train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
+  vcycle --base <name> --steps <n> [--levels <k>] [--alpha <f>]
+  exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
+  bench-step --config <name> [--steps <n>]";
+
+fn main() -> Result<()> {
+    logger::init();
+    let args = Args::parse();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "info" => cmd_info(),
+        "list" => {
+            for (id, desc) in experiments::REGISTRY {
+                println!("{id:8} {desc}");
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "vcycle" => cmd_vcycle(&args),
+        "exp" => cmd_exp(&args),
+        "bench-step" => cmd_bench_step(&args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("platform: {}", rt.client.platform_name());
+    println!("fingerprint: {}", rt.manifest.fingerprint);
+    println!("configs: {}", rt.manifest.configs.len());
+    for (name, c) in &rt.manifest.configs {
+        println!(
+            "  {name:24} {:4?} L{:<2} H{:<2} d{:<4} {:>9} params  {:>8.2} MFLOP/step",
+            c.family, c.n_layer, c.n_head, c.d_model, c.n_params,
+            c.flops_train_step / 1e6
+        );
+    }
+    println!("artifacts: {}", rt.manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let config = args.get("config").unwrap_or("gpt_nano").to_string();
+    let steps = args.usize_or("steps", 100);
+    let lr = args.f64_or("lr", 1e-3) as f32;
+    let seed = args.u64_or("seed", 42);
+    let cfg = rt.cfg(&config)?.clone();
+    let mut state = init_state(&rt, &cfg, seed)?;
+    let mut trainer = Trainer::new(&rt, &config, 0, seed ^ 1, 4)?;
+    let sched = LrSchedule::new((steps / 10).max(1), lr, steps);
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step)?;
+        state = s;
+        if step % (steps / 10).max(1) == 0 {
+            let ev = trainer.eval(&rt, &state)?;
+            info!("step {step:>6}  train {loss:.4}  eval {ev:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "trained {config} for {steps} steps in {dt:.1}s ({:.1} steps/s, {:.2} GFLOP/s)",
+        steps as f64 / dt,
+        cfg.flops_train_step * steps as f64 / dt / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_vcycle(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let base = args.get("base").unwrap_or("gpt_nano").to_string();
+    let steps = args.usize_or("steps", 200);
+    let levels = args.usize_or("levels", 2);
+    let mut opts = RunOpts::quick(&base, steps);
+    opts.alpha = args.f64_or("alpha", 0.25) as f32;
+    opts.seed = args.u64_or("seed", 17);
+    let h = Harness::new(&rt, opts);
+    let scratch = h.run_method(&Method::Scratch, None)?;
+    let curve = h.run_method(&Method::VCycle { levels, fit: false }, None)?;
+    let s = multilevel::coordinator::savings_vs_scratch(&scratch, &curve, &base);
+    println!(
+        "vcycle K={levels} on {base}: target loss {:.4}, FLOPs saving {:.1}%, walltime saving {:.1}%",
+        s.target,
+        s.flops * 100.0,
+        s.wall * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.get(1) else {
+        bail!("exp needs an id (or 'all'); see `multilevel list`");
+    };
+    let rt = Runtime::load_default()?;
+    experiments::run(&rt, id, args)
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let config = args.get("config").unwrap_or("gpt_nano").to_string();
+    let cfg = rt.cfg(&config)?.clone();
+    let mut state = init_state(&rt, &cfg, 1)?;
+    let mut trainer = Trainer::new(&rt, &config, 0, 2, 2)?;
+    // warm the executable cache before timing
+    let (s, _) = trainer.step(&rt, &state, 1e-3, 1)?;
+    state = s;
+    let mut step = 1usize;
+    let stats = bench::run(
+        &format!("train_step {config}"),
+        std::time::Duration::from_secs(3),
+        || {
+            step += 1;
+            let (s, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            state = s;
+        },
+    );
+    println!(
+        "analytic {:.2} GFLOP/step -> {:.2} GFLOP/s",
+        cfg.flops_train_step / 1e9,
+        cfg.flops_train_step / stats.mean.as_secs_f64() / 1e9
+    );
+    Ok(())
+}

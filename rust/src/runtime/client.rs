@@ -1,0 +1,210 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, and executes
+//! them with device-resident buffers.
+//!
+//! Everything stays on the device between calls: the training state is a
+//! single `f32[3N+1]` buffer that flows `execute_b → output buffer → next
+//! execute_b`; only the 4-byte loss scalar (index 0) is copied back per
+//! step. This is the §Perf-critical path — see EXPERIMENTS.md.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelCfg};
+use crate::debugln;
+
+/// An argument to an artifact call.
+pub enum Arg<'a> {
+    /// A device-resident buffer (e.g. the state vector from the last step).
+    Buf(&'a xla::PjRtBuffer),
+    /// Host f32 tensor, uploaded on call (owned dims avoid temp-lifetime
+    /// issues at call sites).
+    F32(&'a [f32], Vec<usize>),
+    /// Host i32 tensor, uploaded on call.
+    I32(&'a [i32], Vec<usize>),
+    /// f32 scalar (lr, step, alpha, …).
+    Scalar(f32),
+}
+
+/// A compiled artifact plus its manifest signature.
+pub struct Exe {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: client + artifact registry + executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Exe>>>,
+    probe_cache: RefCell<HashMap<usize, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative compile time, for the App. C–style overhead accounting
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    /// CPU-client runtime over an artifact directory (with manifest.json).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            probe_cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    /// Default artifact dir: $ML_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("ML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn cfg(&self, name: &str) -> Result<&ModelCfg> {
+        self.manifest.cfg(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn exe(&self, name: &str) -> Result<Rc<Exe>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_seconds.borrow_mut() += dt;
+        debugln!("compiled {name} in {dt:.2}s");
+        let e = Rc::new(Exe { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Upload a host f32 tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute `exe` with mixed host/device args; returns the single output
+    /// buffer (every artifact is lowered with a single array output).
+    pub fn call(&self, exe: &Exe, args: &[Arg<'_>]) -> Result<xla::PjRtBuffer> {
+        if args.len() != exe.spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                exe.spec.name,
+                exe.spec.inputs.len(),
+                args.len()
+            );
+        }
+        // Upload host args (owned buffers live until the call returns).
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // arg i -> owned idx or usize::MAX
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Buf(_) => order.push(usize::MAX),
+                Arg::F32(data, dims) => {
+                    debug_assert_eq!(
+                        dims.iter().product::<usize>(),
+                        exe.spec.inputs[i].shape.iter().product::<usize>(),
+                        "arg {i} of {}",
+                        exe.spec.name
+                    );
+                    owned.push(self.upload_f32(data, dims)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::I32(data, dims) => {
+                    owned.push(self.upload_i32(data, dims)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::Scalar(v) => {
+                    owned.push(self.upload_f32(&[*v], &[])?);
+                    order.push(owned.len() - 1);
+                }
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Buf(b) => refs.push(b),
+                _ => refs.push(&owned[order[i]]),
+            }
+        }
+        let mut out = self.exe_raw(exe, &refs)?;
+        let mut replica = out.pop().context("no output replica")?;
+        let buf = replica.pop().context("no output buffer")?;
+        Ok(buf)
+    }
+
+    fn exe_raw(
+        &self,
+        exe: &Exe,
+        refs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(exe.exe.execute_b(refs)?)
+    }
+
+    /// Read a scalar f32 (element 0) out of a device buffer.
+    ///
+    /// The CPU PJRT plugin does not implement `CopyRawToHost` (partial
+    /// reads), so for buffers longer than a few elements this dispatches a
+    /// tiny cached slice executable built with `XlaBuilder` and copies only
+    /// its 4-byte output — the state vector itself never reaches the host.
+    pub fn read_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
+        let shape = xla::ArrayShape::try_from(&buf.on_device_shape()?)?;
+        let len: usize = shape.dims().iter().product::<i64>() as usize;
+        if len <= 16 {
+            let lit = buf.to_literal_sync()?;
+            let v = lit.to_vec::<f32>()?;
+            return Ok(*v.first().context("empty buffer")?);
+        }
+        let probe = self.probe_exe(len)?;
+        let out = probe.execute_b::<&xla::PjRtBuffer>(&[buf])?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?[0])
+    }
+
+    /// Cached `f32[len] -> f32[1]` head-slice executable.
+    fn probe_exe(&self, len: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.probe_cache.borrow().get(&len) {
+            return Ok(e.clone());
+        }
+        let builder = xla::XlaBuilder::new(&format!("probe_{len}"));
+        let p = builder.parameter(0, xla::ElementType::F32, &[len as i64], "state")?;
+        let comp = p.slice_in_dim1(0, 1, 0)?.build()?;
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.probe_cache.borrow_mut().insert(len, exe.clone());
+        Ok(exe)
+    }
+
+    /// Copy a whole f32 buffer to the host.
+    pub fn read_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,276 @@
+//! `artifacts/manifest.json` loader: model configurations (geometry, flat
+//! parameter layout, analytic FLOPs) and artifact signatures (inputs /
+//! output shapes) emitted by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model family — mirrors `configs.ModelConfig.family`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Gpt,
+    Bert,
+    Vit,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        Ok(match s {
+            "gpt" => Family::Gpt,
+            "bert" => Family::Bert,
+            "vit" => Family::Vit,
+            other => bail!("unknown family '{other}'"),
+        })
+    }
+}
+
+/// How a parameter tensor is initialized (mirrors `model.param_spec`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// One leaf in the flat parameter layout.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model configuration (a level of the V-cycle or a baseline variant).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub family: Family,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub n_classes: usize,
+    pub n_params: usize,
+    pub tokens_per_step: usize,
+    pub flops_train_step: f64,
+    pub flops_fwd_token: f64,
+    pub layout: Vec<ParamEntry>,
+}
+
+impl ModelCfg {
+    /// Elements in the state vector: loss + theta + m + v.
+    pub fn state_len(&self) -> usize {
+        3 * self.n_params + 1
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamEntry> {
+        self.layout.iter().find(|p| p.name == name)
+    }
+}
+
+/// One input of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String, // "float32" | "int32"
+    pub shape: Vec<usize>,
+}
+
+/// One compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub config: String,
+    pub config_small: Option<String>,
+    pub inputs: Vec<InputSpec>,
+    pub output_shape: Vec<usize>,
+    pub meta: Json,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub ft_classes: usize,
+    pub lora_rank: usize,
+    pub configs: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_cfg(name: &str, j: &Json) -> Result<ModelCfg> {
+    let u = |k: &str| -> Result<usize> {
+        j.get(k).as_usize().ok_or_else(|| anyhow!("config {name}: missing '{k}'"))
+    };
+    let layout = j
+        .get("layout")
+        .as_arr()
+        .ok_or_else(|| anyhow!("config {name}: missing layout"))?
+        .iter()
+        .map(|e| {
+            Ok(ParamEntry {
+                name: e.get("name").as_str().context("layout name")?.to_string(),
+                offset: e.get("offset").as_usize().context("layout offset")?,
+                shape: e
+                    .get("shape")
+                    .as_arr()
+                    .context("layout shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                init: match e.get("init").as_str() {
+                    Some("normal") => InitKind::Normal,
+                    Some("ones") => InitKind::Ones,
+                    _ => InitKind::Zeros,
+                },
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelCfg {
+        name: name.to_string(),
+        family: Family::parse(j.get("family").as_str().unwrap_or(""))?,
+        n_layer: u("n_layer")?,
+        n_head: u("n_head")?,
+        head_dim: u("head_dim")?,
+        d_model: u("d_model")?,
+        d_ff: u("d_ff")?,
+        vocab: u("vocab")?,
+        seq_len: u("seq_len")?,
+        batch: u("batch")?,
+        image_size: u("image_size")?,
+        patch_size: u("patch_size")?,
+        n_classes: u("n_classes")?,
+        n_params: u("n_params")?,
+        tokens_per_step: u("tokens_per_step")?,
+        flops_train_step: j.get("flops_train_step").as_f64().unwrap_or(0.0),
+        flops_fwd_token: j.get("flops_fwd_token").as_f64().unwrap_or(0.0),
+        layout,
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    let name = j.get("name").as_str().context("artifact name")?.to_string();
+    Ok(ArtifactSpec {
+        kind: j.get("kind").as_str().unwrap_or("").to_string(),
+        file: j.get("file").as_str().context("artifact file")?.to_string(),
+        config: j.get("config").as_str().unwrap_or("").to_string(),
+        config_small: j.get("config_small").as_str().map(String::from),
+        inputs: j
+            .get("inputs")
+            .as_arr()
+            .context("artifact inputs")?
+            .iter()
+            .map(|i| InputSpec {
+                name: i.get("name").as_str().unwrap_or("").to_string(),
+                dtype: i.get("dtype").as_str().unwrap_or("float32").to_string(),
+                shape: i
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+            })
+            .collect(),
+        output_shape: j
+            .get("output_shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+        meta: j.get("meta").clone(),
+        name,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'configs'"))?
+        {
+            configs.insert(name.clone(), parse_cfg(name, cj)?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for aj in j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let a = parse_artifact(aj)?;
+            artifacts.insert(a.name.clone(), a);
+        }
+        Ok(Manifest {
+            fingerprint: j.get("fingerprint").as_str().unwrap_or("").to_string(),
+            ft_classes: j.get("ft_classes").as_usize().unwrap_or(4),
+            lora_rank: j.get("lora_rank").as_usize().unwrap_or(4),
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn cfg(&self, name: &str) -> Result<&ModelCfg> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Sanity checks tying configs and artifacts together (used by tests).
+    pub fn validate(&self) -> Result<()> {
+        for (name, cfg) in &self.configs {
+            let last = cfg
+                .layout
+                .last()
+                .ok_or_else(|| anyhow!("config {name}: empty layout"))?;
+            if last.offset + last.size() != cfg.n_params {
+                bail!(
+                    "config {name}: layout ends at {} but n_params = {}",
+                    last.offset + last.size(),
+                    cfg.n_params
+                );
+            }
+        }
+        for (name, art) in &self.artifacts {
+            if !art.config.is_empty() && !self.configs.contains_key(&art.config) {
+                bail!("artifact {name}: unknown config {}", art.config);
+            }
+            if let Some(cs) = &art.config_small {
+                if !self.configs.contains_key(cs) {
+                    bail!("artifact {name}: unknown config_small {cs}");
+                }
+            }
+        }
+        Ok(())
+    }
+}

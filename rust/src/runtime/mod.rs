@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest, executable cache, device-resident
+//! training state, checkpointing.
+
+pub mod client;
+pub mod manifest;
+pub mod params;
+
+pub use client::{Arg, Exe, Runtime};
+pub use manifest::{ArtifactSpec, Family, InitKind, Manifest, ModelCfg, ParamEntry};
+pub use params::{init_state, init_theta, load_checkpoint, save_checkpoint, state_from_host,
+                 state_from_theta, State};

@@ -1,0 +1,238 @@
+//! Flat-parameter state management: initialization from the manifest layout,
+//! host/device conversion, named-tensor views, and checkpointing.
+//!
+//! The state vector layout (fixed by `python/compile/model.py`):
+//!
+//! ```text
+//!   state[0]            loss of the last step
+//!   state[1 .. 1+N]     theta (ravel_pytree order; see ModelCfg::layout)
+//!   state[1+N .. 1+2N]  Adam first moment
+//!   state[1+2N .. 1+3N] Adam second moment
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::manifest::{InitKind, ModelCfg};
+use crate::util::rng::Rng;
+
+/// Standard deviation for `normal` parameter init (mirrors model.INIT_STD).
+pub const INIT_STD: f32 = 0.02;
+
+/// A device-resident training state plus its host-side metadata.
+pub struct State {
+    pub buf: xla::PjRtBuffer,
+    pub n_params: usize,
+    /// analytic FLOPs spent producing this state (advanced by the trainer)
+    pub flops: f64,
+}
+
+impl State {
+    pub fn len(&self) -> usize {
+        3 * self.n_params + 1
+    }
+
+    /// The last training loss (4-byte device→host read).
+    pub fn loss(&self, rt: &Runtime) -> Result<f32> {
+        rt.read_scalar(&self.buf)
+    }
+
+    /// Full state to host.
+    pub fn to_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        rt.read_f32(&self.buf)
+    }
+
+    /// theta only (host copy).
+    pub fn theta(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        let host = self.to_host(rt)?;
+        Ok(host[1..1 + self.n_params].to_vec())
+    }
+}
+
+/// Synthesize the initial theta for a config with a seeded RNG, mirroring
+/// `model.init_params` (normal·0.02 / zeros / ones per layout entry).
+pub fn init_theta(cfg: &ModelCfg, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; cfg.n_params];
+    for entry in &cfg.layout {
+        let sl = &mut theta[entry.offset..entry.offset + entry.size()];
+        match entry.init {
+            InitKind::Normal => {
+                for v in sl.iter_mut() {
+                    *v = rng.normal() as f32 * INIT_STD;
+                }
+            }
+            InitKind::Ones => sl.fill(1.0),
+            InitKind::Zeros => {}
+        }
+    }
+    theta
+}
+
+/// Fresh device state (loss = 0, Adam moments = 0) for a config.
+pub fn init_state(rt: &Runtime, cfg: &ModelCfg, seed: u64) -> Result<State> {
+    let theta = init_theta(cfg, seed);
+    state_from_theta(rt, cfg, &theta)
+}
+
+/// Device state wrapping an explicit host theta.
+pub fn state_from_theta(rt: &Runtime, cfg: &ModelCfg, theta: &[f32]) -> Result<State> {
+    if theta.len() != cfg.n_params {
+        bail!("theta len {} != n_params {}", theta.len(), cfg.n_params);
+    }
+    let mut host = vec![0f32; cfg.state_len()];
+    host[1..1 + cfg.n_params].copy_from_slice(theta);
+    let buf = rt.upload_f32(&host, &[cfg.state_len()])?;
+    Ok(State { buf, n_params: cfg.n_params, flops: 0.0 })
+}
+
+/// Device state from a full host state vector.
+pub fn state_from_host(rt: &Runtime, cfg: &ModelCfg, host: &[f32]) -> Result<State> {
+    if host.len() != cfg.state_len() {
+        bail!("state len {} != expected {}", host.len(), cfg.state_len());
+    }
+    let buf = rt.upload_f32(host, &[cfg.state_len()])?;
+    Ok(State { buf, n_params: cfg.n_params, flops: 0.0 })
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing (App. C: resume overhead is parameter I/O)
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"MLCKPT01";
+
+/// Save theta (not the Adam moments — the paper re-inits the optimizer on
+/// resume) to a binary checkpoint: magic, config-name, N, raw f32 LE.
+pub fn save_checkpoint(path: &Path, cfg: &ModelCfg, theta: &[f32]) -> Result<()> {
+    if theta.len() != cfg.n_params {
+        bail!("theta len mismatch");
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    let name = cfg.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(theta.len() as u64).to_le_bytes())?;
+    // SAFETY-free path: serialize via to_le_bytes in chunks.
+    let mut bytes = Vec::with_capacity(theta.len() * 4);
+    for v in theta {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a checkpoint; verifies the config name and parameter count.
+pub fn load_checkpoint(path: &Path, cfg: &ModelCfg) -> Result<Vec<f32>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let name_len = u32::from_le_bytes(len4) as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name)?;
+    if name != cfg.name {
+        bail!("checkpoint is for config '{name}', expected '{}'", cfg.name);
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    if n != cfg.n_params {
+        bail!("checkpoint has {n} params, expected {}", cfg.n_params);
+    }
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let mut theta = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(4) {
+        theta.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamEntry;
+
+    fn dummy_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "dummy".into(),
+            family: crate::runtime::manifest::Family::Gpt,
+            n_layer: 1,
+            n_head: 1,
+            head_dim: 4,
+            d_model: 4,
+            d_ff: 16,
+            vocab: 8,
+            seq_len: 4,
+            batch: 2,
+            image_size: 0,
+            patch_size: 0,
+            n_classes: 0,
+            n_params: 10,
+            tokens_per_step: 8,
+            flops_train_step: 1.0,
+            flops_fwd_token: 1.0,
+            layout: vec![
+                ParamEntry { name: "a".into(), offset: 0, shape: vec![2, 3], init: InitKind::Normal },
+                ParamEntry { name: "b".into(), offset: 6, shape: vec![2], init: InitKind::Ones },
+                ParamEntry { name: "c".into(), offset: 8, shape: vec![2], init: InitKind::Zeros },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let cfg = dummy_cfg();
+        let theta = init_theta(&cfg, 1);
+        assert_eq!(theta.len(), 10);
+        assert!(theta[0..6].iter().any(|v| *v != 0.0));
+        assert!(theta[0..6].iter().all(|v| v.abs() < 0.2));
+        assert_eq!(&theta[6..8], &[1.0, 1.0]);
+        assert_eq!(&theta[8..10], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let cfg = dummy_cfg();
+        assert_eq!(init_theta(&cfg, 7), init_theta(&cfg, 7));
+        assert_ne!(init_theta(&cfg, 7), init_theta(&cfg, 8));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = dummy_cfg();
+        let theta = init_theta(&cfg, 3);
+        let dir = std::env::temp_dir().join(format!("mlckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        save_checkpoint(&path, &cfg, &theta).unwrap();
+        let back = load_checkpoint(&path, &cfg).unwrap();
+        assert_eq!(theta, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_config() {
+        let cfg = dummy_cfg();
+        let mut other = dummy_cfg();
+        other.name = "other".into();
+        let theta = init_theta(&cfg, 3);
+        let dir = std::env::temp_dir().join(format!("mlckpt_test2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        save_checkpoint(&path, &cfg, &theta).unwrap();
+        assert!(load_checkpoint(&path, &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`run`] per case: warmup, then timed iterations with mean / p50 / p99
+//! and a simple throughput column. Output is stable, grep-able text that
+//! EXPERIMENTS.md §Perf records verbatim.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>7} iters  mean {:>10}  p50 {:>10}  p99 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            fmt_dur(self.min),
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill ~`budget`.
+pub fn run<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
+
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let stats = Stats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p99: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
+        min: samples[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = run("spin", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p99);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_dur(Duration::from_nanos(10)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).ends_with('s'));
+    }
+}

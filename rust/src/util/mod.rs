@@ -1,0 +1,10 @@
+//! In-tree substrates replacing crates that the offline registry lacks
+//! (serde/serde_json, rand, clap, criterion, proptest, env_logger).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod table;

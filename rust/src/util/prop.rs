@@ -1,0 +1,89 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs and, on
+//! failure, greedily shrinks the input via the caller-supplied shrinker
+//! before panicking with the minimal counterexample.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`; shrink failures via `shrink`.
+///
+/// `shrink` returns candidate simpler inputs; the first that still fails is
+/// recursively shrunk (bounded depth so pathological shrinkers terminate).
+pub fn check<T, G, S, P>(name: &str, seed: u64, cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut cur = input.clone();
+            let mut cur_msg = msg;
+            let mut depth = 0;
+            'outer: while depth < 200 {
+                depth += 1;
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 minimal input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// No-op shrinker for inputs that don't shrink meaningfully.
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            "add-commutes",
+            1,
+            200,
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            no_shrink,
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "fails>=10",
+                2,
+                500,
+                |r| r.below(1000),
+                |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+                |&n| if n < 10 { Ok(()) } else { Err(format!("{n} >= 10")) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal input: 10"), "got: {msg}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration tests over the experiment harness: method programs compose,
+//! curves have the right structure, checkpoint/resume works end to end,
+//! fine-tuning probes learn.
+
+use multilevel::coordinator::finetune::finetune_once;
+use multilevel::coordinator::{Harness, Method, RunOpts};
+use multilevel::runtime::{init_state, load_checkpoint, save_checkpoint, state_from_theta,
+                          Runtime};
+
+fn rt() -> Runtime {
+    Runtime::load(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+fn quick_opts(base: &str, steps: usize) -> RunOpts {
+    let mut o = RunOpts::quick(base, steps);
+    o.eval_every = 10;
+    o.val_batches = 2;
+    o.budget_mult = 1.0;
+    o
+}
+
+#[test]
+fn vcycle_curve_has_three_phases_and_monotone_cost() {
+    let rt = rt();
+    let h = Harness::new(&rt, quick_opts("gpt_nano", 60));
+    let curve = h.run_method(&Method::VCycle { levels: 2, fit: false }, None).unwrap();
+    let phases: std::collections::BTreeSet<usize> =
+        curve.points.iter().map(|p| p.phase).collect();
+    assert!(phases.len() >= 3, "expected >=3 phases, got {phases:?}");
+    // cumulative cost strictly increases
+    for w in curve.points.windows(2) {
+        assert!(w[1].flops > w[0].flops);
+        assert!(w[1].wall >= w[0].wall);
+    }
+    // middle phase runs the coalesced config
+    let mid = curve.points.iter().find(|p| p.phase == 2).unwrap();
+    assert_eq!(mid.config, "gpt_nano_lv2");
+    // final phase is the base config again
+    assert_eq!(curve.points.last().unwrap().config, "gpt_nano");
+}
+
+#[test]
+fn vcycle_small_phase_is_cheaper_per_step() {
+    let rt = rt();
+    let h = Harness::new(&rt, quick_opts("gpt_nano", 60));
+    let curve = h.run_method(&Method::VCycle { levels: 2, fit: false }, None).unwrap();
+    let df = |phase: usize| {
+        let pts: Vec<_> = curve.points.iter().filter(|p| p.phase == phase).collect();
+        (pts.last().unwrap().flops - pts[0].flops) / pts.len().max(1) as f64
+    };
+    assert!(df(2) < df(3) * 0.5, "small phase not cheaper: {} vs {}", df(2), df(3));
+}
+
+#[test]
+fn every_method_program_runs_on_nano() {
+    let rt = rt();
+    let h = Harness::new(&rt, quick_opts("gpt_nano", 30));
+    for m in [
+        Method::Scratch,
+        Method::StackBert,
+        Method::Bert2Bert,
+        Method::LiGO { fit: false },
+        Method::NetExpansion,
+        Method::DecoalescedOnly,
+        Method::VCycleRandomSmall,
+        Method::VCycle { levels: 2, fit: false },
+    ] {
+        let curve = h.run_method(&m, None).unwrap_or_else(|e| panic!("{m:?}: {e}"));
+        assert!(curve.total_flops > 0.0, "{m:?} recorded no flops");
+        assert!(
+            curve.points.iter().all(|p| p.train_loss.is_finite()),
+            "{m:?} produced non-finite losses"
+        );
+    }
+}
+
+#[test]
+fn stop_target_early_stops() {
+    let rt = rt();
+    let h = Harness::new(&rt, quick_opts("gpt_nano", 80));
+    // a trivially reachable target must cut the run short
+    let full = h.run_method(&Method::Scratch, None).unwrap();
+    let stopped = h.run_method(&Method::Scratch, Some(10.0)).unwrap();
+    assert!(stopped.points.len() < full.points.len());
+}
+
+#[test]
+fn checkpoint_resume_roundtrip_through_device() {
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let state = init_state(&rt, &cfg, 99).unwrap();
+    let theta = state.theta(&rt).unwrap();
+    let dir = std::env::temp_dir().join(format!("ml_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    save_checkpoint(&path, &cfg, &theta).unwrap();
+    let theta2 = load_checkpoint(&path, &cfg).unwrap();
+    let resumed = state_from_theta(&rt, &cfg, &theta2).unwrap();
+    assert_eq!(resumed.theta(&rt).unwrap(), theta);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn finetune_probe_beats_chance() {
+    let rt = rt();
+    let cfg = rt.cfg("bert_base_sim").unwrap().clone();
+    // even an untrained backbone should learn an easy 4-way marker task well
+    // above chance when fine-tuned end to end
+    let theta = multilevel::runtime::init_theta(&cfg, 7);
+    let acc = finetune_once(&rt, "bert_base_sim", &theta, 0, 1, 150, 5e-3).unwrap();
+    assert!(acc > 32.0, "probe accuracy {acc}% not above 25% chance");
+}
+
+#[test]
+fn distinct_seeds_give_distinct_runs() {
+    let rt = rt();
+    let mut o1 = quick_opts("gpt_nano", 20);
+    let mut o2 = quick_opts("gpt_nano", 20);
+    o1.seed = 1;
+    o2.seed = 2;
+    let c1 = Harness::new(&rt, o1).run_method(&Method::Scratch, None).unwrap();
+    let c2 = Harness::new(&rt, o2).run_method(&Method::Scratch, None).unwrap();
+    assert_ne!(
+        c1.points.last().unwrap().train_loss,
+        c2.points.last().unwrap().train_loss
+    );
+}
+
+#[test]
+fn same_seed_reproduces_exactly() {
+    let rt = rt();
+    let o = quick_opts("gpt_nano", 20);
+    let c1 = Harness::new(&rt, o.clone()).run_method(&Method::Scratch, None).unwrap();
+    let c2 = Harness::new(&rt, o).run_method(&Method::Scratch, None).unwrap();
+    let l1: Vec<f32> = c1.points.iter().map(|p| p.train_loss).collect();
+    let l2: Vec<f32> = c2.points.iter().map(|p| p.train_loss).collect();
+    assert_eq!(l1, l2, "training is not deterministic under a fixed seed");
+}
+
+#[test]
+fn wcycle_runs_and_revisits_coarse_level() {
+    let rt = rt();
+    let h = Harness::new(&rt, quick_opts("gpt_nano", 40));
+    let curve = h.run_method(&Method::WCycle { levels: 2 }, None).unwrap();
+    // W shape: two distinct coarse phases on the lv2 config
+    let coarse_phases: std::collections::BTreeSet<usize> = curve
+        .points
+        .iter()
+        .filter(|p| p.config == "gpt_nano_lv2")
+        .map(|p| p.phase)
+        .collect();
+    assert!(coarse_phases.len() >= 2, "W-cycle visited coarse level once: {coarse_phases:?}");
+    assert!(curve.points.iter().all(|p| p.train_loss.is_finite()));
+    assert_eq!(curve.points.last().unwrap().config, "gpt_nano");
+}

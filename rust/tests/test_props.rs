@@ -1,0 +1,253 @@
+//! Property-based tests (via util::prop — proptest is unavailable offline)
+//! on coordinator invariants: schedules, metrics, data streams, JSON, RNG.
+
+use multilevel::coordinator::metrics::{savings_vs_scratch, Curve, Point};
+use multilevel::coordinator::LrSchedule;
+use multilevel::data::corpus::{Corpus, FIRST_WORD};
+use multilevel::data::batcher::mask_mlm;
+use multilevel::util::json::Json;
+use multilevel::util::prop::{check, no_shrink};
+use multilevel::util::rng::Rng;
+
+#[test]
+fn prop_lr_schedule_bounded_and_positive() {
+    check(
+        "lr in (0, peak]",
+        1,
+        300,
+        |r| {
+            let total = 10 + r.below(5000);
+            let warmup = r.below(total / 2 + 1);
+            let peak = 1e-5 + r.f64() as f32;
+            (warmup, peak, total, 1 + r.below(total))
+        },
+        no_shrink,
+        |&(warmup, peak, total, step)| {
+            let s = LrSchedule::new(warmup, peak, total);
+            let lr = s.lr(step);
+            if lr > 0.0 && lr <= peak * 1.0001 {
+                Ok(())
+            } else {
+                Err(format!("lr {lr} out of (0, {peak}]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lr_peak_reached_at_warmup_end() {
+    check(
+        "lr(warmup) == peak",
+        2,
+        200,
+        |r| (1 + r.below(100), 1e-4 + r.f32()),
+        no_shrink,
+        |&(warmup, peak)| {
+            let s = LrSchedule::new(warmup, peak, warmup * 10 + 10);
+            let lr = s.lr(warmup);
+            if (lr - peak).abs() < peak * 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("lr(warmup)={lr} != peak={peak}"))
+            }
+        },
+    );
+}
+
+fn synth_curve(rng: &mut Rng, cfg: &str) -> Curve {
+    let mut c = Curve::new("synthetic");
+    let n = 3 + rng.below(40);
+    let mut flops = 0.0;
+    let mut loss = 4.0 + rng.f32();
+    for i in 0..n {
+        flops += 1e8 * (1.0 + rng.f64());
+        loss = (loss - 0.1 * rng.f32()).max(0.5);
+        c.points.push(Point {
+            phase: 0,
+            config: cfg.into(),
+            step: i + 1,
+            flops,
+            wall: flops / 1e9,
+            train_loss: loss,
+            eval_loss: if i % 2 == 0 { Some(loss) } else { None },
+        });
+    }
+    c.total_flops = flops;
+    c.total_wall = flops / 1e9;
+    c
+}
+
+#[test]
+fn prop_time_to_target_monotone_in_target() {
+    // a looser target is never reached later
+    check(
+        "ttt monotone",
+        3,
+        300,
+        |r| {
+            let c = synth_curve(r, "m");
+            let t1 = 0.5 + r.f32() * 4.0;
+            let t2 = t1 + r.f32();
+            (c, t1, t2)
+        },
+        no_shrink,
+        |(c, t1, t2)| {
+            let a = c.time_to_target("m", *t1); // tighter
+            let b = c.time_to_target("m", *t2); // looser
+            match (a, b) {
+                (Some((fa, _)), Some((fb, _))) if fb > fa => {
+                    Err(format!("looser target reached later: {fb} > {fa}"))
+                }
+                (Some(_), None) => Err("tight target reached but loose not".into()),
+                _ => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_savings_identity_is_zero() {
+    // comparing a run against itself gives ~0 savings and reached=true
+    check(
+        "self savings == 0",
+        4,
+        200,
+        |r| synth_curve(r, "m"),
+        no_shrink,
+        |c| {
+            let s = savings_vs_scratch(c, c, "m");
+            if !s.reached {
+                return Err("self comparison did not reach".into());
+            }
+            if s.flops.abs() < 0.6 {
+                Ok(())
+            } else {
+                Err(format!("self saving {}", s.flops))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_corpus_tokens_in_vocab() {
+    check(
+        "corpus range",
+        5,
+        100,
+        |r| (64 + r.below(1000), r.next_u64(), r.next_u64()),
+        no_shrink,
+        |&(vocab, domain, seed)| {
+            let c = Corpus::new(vocab, domain);
+            let seq = c.sequence(64, &mut Rng::new(seed));
+            for &t in &seq[1..] {
+                if t < FIRST_WORD || t as usize >= vocab {
+                    return Err(format!("token {t} outside [2, {vocab})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mlm_masking_invariants() {
+    check(
+        "mlm invariants",
+        6,
+        200,
+        |r| {
+            let vocab = 32 + r.below(500);
+            let seq = 4 + r.below(60);
+            let rows = 1 + r.below(8);
+            let seed = r.next_u64();
+            (vocab, seq, rows, seed)
+        },
+        no_shrink,
+        |&(vocab, seq, rows, seed)| {
+            let c = Corpus::new(vocab, 0);
+            let mut rng = Rng::new(seed);
+            let mut tokens = Vec::new();
+            for _ in 0..rows {
+                tokens.extend(c.sequence(seq, &mut rng));
+            }
+            let (masked, labels) = mask_mlm(&tokens, vocab, seq, &mut rng);
+            if masked.len() != tokens.len() || labels.len() != tokens.len() {
+                return Err("length mismatch".into());
+            }
+            for r in 0..rows {
+                let row = &labels[r * seq..(r + 1) * seq];
+                if !row.iter().any(|&l| l >= 0) {
+                    return Err(format!("row {r} has no masked position"));
+                }
+            }
+            for i in 0..tokens.len() {
+                if labels[i] >= 0 {
+                    if labels[i] != tokens[i] {
+                        return Err("label != original token".into());
+                    }
+                } else if masked[i] != tokens[i] {
+                    return Err("unmasked position was altered".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    check(
+        "json roundtrip",
+        7,
+        300,
+        |r| {
+            let n = (r.f64() - 0.5) * 1e6;
+            let s: String = (0..r.below(20))
+                .map(|_| char::from_u32(32 + r.below(90) as u32).unwrap())
+                .collect();
+            (n, s)
+        },
+        no_shrink,
+        |(n, s)| {
+            let src = multilevel::util::json::obj(vec![
+                ("num", multilevel::util::json::num(*n)),
+                ("str", multilevel::util::json::s(s)),
+            ]);
+            let back = Json::parse(&src.to_string()).map_err(|e| e.to_string())?;
+            let got = back.get("num").as_f64().ok_or("missing num")?;
+            if (got - n).abs() > n.abs() * 1e-9 + 1e-9 {
+                return Err(format!("{got} != {n}"));
+            }
+            if back.get("str").as_str() != Some(s.as_str()) {
+                return Err("string mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_below_uniformish() {
+    check(
+        "rng below spread",
+        8,
+        20,
+        |r| (2 + r.below(50), r.next_u64()),
+        no_shrink,
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut counts = vec![0usize; n];
+            let draws = n * 200;
+            for _ in 0..draws {
+                counts[rng.below(n)] += 1;
+            }
+            let expect = draws / n;
+            for (i, &c) in counts.iter().enumerate() {
+                if c < expect / 4 || c > expect * 4 {
+                    return Err(format!("bucket {i}: {c} vs expected {expect}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

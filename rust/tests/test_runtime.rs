@@ -1,0 +1,149 @@
+//! Integration tests: the full AOT loop — manifest → compile → execute —
+//! over the nano artifacts. Requires `make artifacts` to have run.
+
+use multilevel::coordinator::{operators, LrSchedule, Trainer};
+use multilevel::runtime::{init_state, Runtime};
+
+fn rt() -> Runtime {
+    // tests run from the package root
+    Runtime::load(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let rt = rt();
+    assert!(rt.manifest.configs.len() >= 20);
+    assert!(rt.manifest.artifacts.len() >= 100);
+    let cfg = rt.cfg("gpt_nano").unwrap();
+    assert_eq!(cfg.n_layer, 2);
+    assert_eq!(cfg.d_model, cfg.n_head * cfg.head_dim);
+    // layout covers theta exactly
+    let total: usize = cfg.layout.iter().map(|p| p.size()).sum();
+    assert_eq!(total, cfg.n_params);
+}
+
+#[test]
+fn train_step_reduces_loss_gpt_nano() {
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let mut state = init_state(&rt, &cfg, 42).unwrap();
+    let mut trainer = Trainer::new(&rt, "gpt_nano", 0, 7, 2).unwrap();
+    let sched = LrSchedule::new(5, 2e-3, 60);
+    let first = trainer.eval(&rt, &state).unwrap();
+    for step in 1..=60 {
+        let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        state = s;
+    }
+    let last = trainer.eval(&rt, &state).unwrap();
+    assert!(
+        last < first - 0.3,
+        "training did not reduce eval loss: {first} -> {last}"
+    );
+}
+
+#[test]
+fn bert_and_vit_train_steps_run() {
+    let rt = rt();
+    for name in ["bert_nano", "vit_nano"] {
+        let cfg = rt.cfg(name).unwrap().clone();
+        let mut state = init_state(&rt, &cfg, 1).unwrap();
+        let mut trainer = Trainer::new(&rt, name, 0, 3, 1).unwrap();
+        let e0 = trainer.eval(&rt, &state).unwrap();
+        for step in 1..=20 {
+            let (s, loss) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            assert!(loss.is_finite(), "{name} loss not finite");
+            state = s;
+        }
+        let e1 = trainer.eval(&rt, &state).unwrap();
+        assert!(e1 < e0 + 0.1, "{name} loss exploded: {e0} -> {e1}");
+    }
+}
+
+#[test]
+fn pallas_train_step_matches_ref_path() {
+    // The gpt_nano Pallas-kernel build must produce (near-)identical losses
+    // to the ref-path build for the same seeds — kernels compose end to end.
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+
+    let run = |artifact: &str| -> Vec<f32> {
+        let mut state = init_state(&rt, &cfg, 9).unwrap();
+        let mut tr =
+            Trainer::with_artifact(&rt, "gpt_nano", artifact, 0, 5, 1).unwrap();
+        let mut losses = Vec::new();
+        for step in 1..=5 {
+            let (s, loss) = tr.step(&rt, &state, 1e-3, step).unwrap();
+            losses.push(loss);
+            state = s;
+        }
+        losses
+    };
+    let ref_losses = run("train_step__gpt_nano");
+    let pal_losses = run("train_step_pallas__gpt_nano");
+    for (a, b) in ref_losses.iter().zip(&pal_losses) {
+        assert!((a - b).abs() < 1e-4, "pallas {b} vs ref {a}");
+    }
+}
+
+#[test]
+fn coalesce_refine_roundtrip_preserves_function() {
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let state = init_state(&rt, &cfg, 3).unwrap();
+    let trainer = Trainer::new(&rt, "gpt_nano", 0, 1, 2).unwrap();
+    let loss_orig = trainer.eval(&rt, &state).unwrap();
+
+    let small = operators::coalesce(&rt, "gpt_nano", "gpt_nano_lv2", &state).unwrap();
+    assert_eq!(small.n_params, rt.cfg("gpt_nano_lv2").unwrap().n_params);
+    // de-coalesce with alpha=1 (pure growth): function is approximately
+    // preserved through the C → D round trip (paper Eq. 8–11)
+    let back = operators::refine(&rt, "gpt_nano", "gpt_nano_lv2", &state, &small, 1.0, false)
+        .unwrap();
+    let loss_back = trainer.eval(&rt, &back).unwrap();
+    assert!(
+        (loss_back - loss_orig).abs() < 0.25,
+        "round trip broke the function: {loss_orig} -> {loss_back}"
+    );
+
+    // alpha=0 must return exactly the original theta
+    let same = operators::refine(&rt, "gpt_nano", "gpt_nano_lv2", &state, &small, 0.0, false)
+        .unwrap();
+    let a = state.theta(&rt).unwrap();
+    let b = same.theta(&rt).unwrap();
+    let max_diff = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-6, "alpha=0 changed theta by {max_diff}");
+}
+
+#[test]
+fn interp_artifact_is_affine() {
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let a = init_state(&rt, &cfg, 1).unwrap();
+    let b = init_state(&rt, &cfg, 2).unwrap();
+    let mid = operators::interp_states(&rt, "gpt_nano", &a, &b, 0.5).unwrap();
+    let (ha, hb, hm) = (
+        a.to_host(&rt).unwrap(),
+        b.to_host(&rt).unwrap(),
+        mid.to_host(&rt).unwrap(),
+    );
+    for i in (0..ha.len()).step_by(997) {
+        let want = 0.5 * ha[i] + 0.5 * hb[i];
+        assert!((hm[i] - want).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn loss_scalar_read_matches_full_read() {
+    let rt = rt();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let state = init_state(&rt, &cfg, 4).unwrap();
+    let mut trainer = Trainer::new(&rt, "gpt_nano", 0, 11, 1).unwrap();
+    let (s, loss) = trainer.step(&rt, &state, 1e-3, 1).unwrap();
+    let full = s.to_host(&rt).unwrap();
+    assert_eq!(loss, full[0], "partial read != full read");
+}

@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""Embed results/*.md tables into EXPERIMENTS.md placeholders.
+
+Usage: python scripts/embed_results.py   (from the repo root)
+Replaces each `<!-- RESULTS:<tag> -->` marker with the matching results
+files' contents (idempotent: reruns overwrite the previous embed).
+"""
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+
+TAGS = {
+    "fig1": ["fig1.md"],
+    "fig3": ["fig3a.md", "fig3b.md", "fig3c.md"],
+    "tab1": ["tab1.md"],
+    "tab2": ["tab2.md"],
+    "tab3": ["tab3.md", "tab6.md"],
+    "tab4": ["tab4.md"],
+    "tab5": ["tab5.md"],
+    "appendix": ["fig4.md", "fig5.md", "fig6.md", "fig7.md", "fig8.md", "appc.md"],
+    "e2e": ["e2e.md"],
+    "perf": ["perf.md"],
+}
+
+
+def main() -> None:
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    for tag, files in TAGS.items():
+        blocks = []
+        for f in files:
+            p = RESULTS / f
+            if p.exists():
+                blocks.append(p.read_text().strip())
+        if not blocks:
+            continue
+        body = "\n\n".join(blocks)
+        marker = f"<!-- RESULTS:{tag} -->"
+        block_re = re.compile(
+            re.escape(marker) + r"(?:\n<!-- BEGIN EMBED -->.*?<!-- END EMBED -->)?",
+            re.S,
+        )
+        replacement = f"{marker}\n<!-- BEGIN EMBED -->\n{body}\n<!-- END EMBED -->"
+        text = block_re.sub(lambda _m: replacement, text, count=1)
+    path.write_text(text)
+    print("embedded results into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()
