@@ -217,6 +217,9 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
     arts += op_artifacts(n1, ns, width=False, depth=True)
     arts += op_artifacts(n1, nw, width=True, depth=False)
     arts.append(distill_artifact(n1, n2))
+    # fast fine-tune probes for the Rust test suite (mirrors the Rust
+    # built-in registry; see rust/src/runtime/registry.rs)
+    arts += ft_artifacts(cfgs["bert_nano"])
 
     # --- bert_base_sim: Fig. 3a, Table 1, Table 5, Fig. 1 -----------------
     b1 = reg(BASE_CONFIGS["bert_base_sim"])

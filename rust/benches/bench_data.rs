@@ -8,7 +8,7 @@ use multilevel::runtime::Runtime;
 use multilevel::util::bench::{black_box, run};
 
 fn main() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let rt = Runtime::load_default().expect("runtime init");
     println!("== bench_data ==");
 
     for name in ["gpt_base_sim", "bert_base_sim", "gpt_e2e"] {

@@ -9,7 +9,7 @@ use multilevel::runtime::{init_state, Runtime};
 use multilevel::util::bench::{black_box, run};
 
 fn main() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let rt = Runtime::load_default().expect("runtime init");
     println!("== bench_runtime ==");
 
     // one explicit cold compile (the cache makes repeats meaningless)

@@ -15,7 +15,7 @@ fn time_method(h: &Harness<'_>, m: &Method) -> (f64, multilevel::coordinator::Cu
 }
 
 fn main() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let rt = Runtime::load_default().expect("runtime init");
     println!("== bench_tables (nano-scale versions of every table) ==");
 
     // Table 1/2 family: all methods on a language model

@@ -9,9 +9,10 @@ use multilevel::coordinator::{operators, LrSchedule, Trainer};
 use multilevel::runtime::{init_state, Runtime};
 
 fn main() -> Result<()> {
-    // 1. runtime over the AOT artifacts (`make artifacts` builds them)
+    // 1. default runtime: reference backend (or PJRT over AOT artifacts
+    //    when built with `--features pjrt` and `make artifacts` has run)
     let rt = Runtime::load_default()?;
-    println!("platform = {}", rt.client.platform_name());
+    println!("platform = {}", rt.platform_name());
 
     // 2. fresh level-1 model
     let base = "gpt_nano";

@@ -7,14 +7,14 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::data::{Batcher, Corpus};
-use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime, State};
+use crate::runtime::{Arg, Buffer, Exe, Family, ModelCfg, Runtime, State};
 
 /// Student trainer holding the frozen teacher theta on device.
 pub struct DistillTrainer {
     pub cfg: ModelCfg,
     exe: Rc<Exe>,
     exe_eval: Rc<Exe>,
-    teacher_theta: xla::PjRtBuffer,
+    teacher_theta: Buffer,
     batcher: Batcher,
     val: Vec<crate::data::LangBatch>,
 }
@@ -24,7 +24,7 @@ impl DistillTrainer {
         rt: &Runtime,
         student_cfg: &str,
         exe: Rc<Exe>,
-        teacher_theta: xla::PjRtBuffer,
+        teacher_theta: Buffer,
         domain: u64,
         seed: u64,
         val_batches: usize,

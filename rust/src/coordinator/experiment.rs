@@ -12,7 +12,7 @@ use crate::coordinator::operators;
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::trainer::Trainer;
 use crate::info;
-use crate::runtime::{init_state, Runtime, State};
+use crate::runtime::{init_state, Buffer, Runtime, State};
 
 /// Options shared by every run of one experiment.
 #[derive(Debug, Clone)]
@@ -638,7 +638,7 @@ impl<'a> Harness<'a> {
 
 /// Extract theta (device → host → device) as a standalone `f32[N]` buffer —
 /// the teacher input of the distillation artifact.
-fn theta_buffer(rt: &Runtime, state: &State) -> Result<xla::PjRtBuffer> {
+fn theta_buffer(rt: &Runtime, state: &State) -> Result<Buffer> {
     let host = state.to_host(rt)?;
     let theta = &host[1..1 + state.n_params];
     rt.upload_f32(theta, &[state.n_params])

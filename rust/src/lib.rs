@@ -4,13 +4,60 @@
 //! reproducing *"A Multi-Level Framework for Accelerating Training
 //! Transformer Models"* (Zou, Zhang & Deng, ICLR 2024).
 //!
-//! Layer 1 (Pallas kernels) and Layer 2 (JAX models + the Coalescing /
-//! De-coalescing / Interpolation operators) live in `python/compile/` and
-//! are AOT-lowered to HLO-text artifacts; this crate loads them through the
-//! PJRT C API (`xla` crate) and owns everything on the training path:
-//! scheduling (the V-cycle of Algorithm 1), data, metrics, checkpoints,
-//! the experiment harness that regenerates every paper table and figure,
-//! and the CLI.
+//! The crate is a **backend-agnostic training coordinator**: everything on
+//! the training path — the V-cycle scheduler of Algorithm 1, baseline growth
+//! schedules, data synthesis, metrics, checkpoints, the experiment harness
+//! that regenerates every paper table/figure, and the CLI — drives an
+//! execution [`runtime::Backend`] through named *artifacts*
+//! (`train_step__{cfg}`, `coalesce__{big}__{small}`, …; see
+//! `ARCHITECTURE.md` for the naming contract). Two backends ship:
+//!
+//! * [`runtime::ReferenceBackend`] — pure-Rust f32 host execution of the
+//!   whole contract (default; no XLA, no artifact files, runs anywhere);
+//! * `PjrtBackend` (`pjrt` cargo feature) — the AOT path: Layer 2 (JAX
+//!   models + operators) and Layer 1 (Pallas kernels) live in
+//!   `python/compile/` and are lowered to HLO-text artifacts that this
+//!   backend compiles and executes through the PJRT C API.
+//!
+//! # Quickstart: a 2-level V-cycle on plain CPU
+//!
+//! ```
+//! use multilevel::coordinator::{Harness, Method, RunOpts};
+//! use multilevel::runtime::Runtime;
+//!
+//! let rt = Runtime::reference();
+//! let mut opts = RunOpts::quick("gpt_nano", 20);
+//! opts.eval_every = 10;
+//! opts.val_batches = 1;
+//! opts.budget_mult = 1.0;
+//! let h = Harness::new(&rt, opts);
+//! let curve = h.run_method(&Method::VCycle { levels: 2, fit: false }, None).unwrap();
+//! // the cycle descends to the coalesced config and returns to the base
+//! assert!(curve.points.iter().any(|p| p.config == "gpt_nano_lv2"));
+//! assert_eq!(curve.points.last().unwrap().config, "gpt_nano");
+//! ```
+//!
+//! # Level transitions preserve the artifact contract
+//!
+//! ```
+//! use multilevel::coordinator::operators;
+//! use multilevel::runtime::{init_state, Runtime};
+//!
+//! let rt = Runtime::reference();
+//! let state = init_state(&rt, rt.cfg("bert_nano").unwrap(), 7).unwrap();
+//! let small = operators::coalesce(&rt, "bert_nano", "bert_nano_lv2", &state).unwrap();
+//! assert_eq!(small.n_params, rt.cfg("bert_nano_lv2").unwrap().n_params);
+//! // α = 0 keeps the big model's parameters exactly (Algorithm 4)
+//! let back = operators::refine(&rt, "bert_nano", "bert_nano_lv2",
+//!                              &state, &small, 0.0, false).unwrap();
+//! assert_eq!(back.theta(&rt).unwrap(), state.theta(&rt).unwrap());
+//! ```
+
+// Numeric kernel code (reference backend) indexes flat tensors heavily;
+// index-based loops there are clearer than iterator chains and map 1:1 to
+// the Python/JAX reference implementation.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod coordinator;
 pub mod data;

@@ -51,7 +51,7 @@ fn main() -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     let rt = Runtime::load_default()?;
-    println!("platform: {}", rt.client.platform_name());
+    println!("platform: {}", rt.platform_name());
     println!("fingerprint: {}", rt.manifest.fingerprint);
     println!("configs: {}", rt.manifest.configs.len());
     for (name, c) in &rt.manifest.configs {

@@ -1,0 +1,169 @@
+//! The [`Backend`] trait: the execution contract every device backend
+//! implements, plus the backend-agnostic [`Buffer`] and [`Arg`] types that
+//! flow through the coordinator.
+//!
+//! # Contract
+//!
+//! A backend executes *artifacts* — named pure functions over flat tensors
+//! (see `ARCHITECTURE.md` for the naming contract). The coordinator never
+//! inspects tensor contents mid-run; it moves opaque [`Buffer`]s between
+//! [`Backend::execute`] calls and only crosses the host boundary through
+//! [`Backend::read_scalar`] / [`Backend::read_f32`].
+//!
+//! # Invariants
+//!
+//! * **Buffers are immutable.** `execute` never mutates its inputs; the new
+//!   training state is always a freshly produced output buffer. This is what
+//!   lets the V-cycle keep pre-coalescing snapshots alive without copies.
+//! * **Buffer lifetime** is plain ownership: a [`Buffer`] stays valid until
+//!   dropped, independent of the backend call that produced it. Host-backed
+//!   buffers share storage via `Rc`, so cloning one is O(1) and does not
+//!   duplicate the tensor.
+//! * **Param layout**: state vectors are `f32[3N + 1]` =
+//!   `[loss, theta, adam_m, adam_v]` with `theta` in the manifest's layout
+//!   order (`ModelCfg::layout`, sorted parameter names). Every backend must
+//!   honor that layout — it is the interchange format between levels,
+//!   checkpoints, and the fine-tune grafting path.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::ArtifactSpec;
+
+/// Host-side tensor storage for [`Buffer::Host`] buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    /// f32 tensor contents, row-major.
+    F32(Vec<f32>),
+    /// i32 tensor contents, row-major.
+    I32(Vec<i32>),
+}
+
+impl HostData {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            HostData::F32(v) => v.len(),
+            HostData::I32(v) => v.len(),
+        }
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A backend-owned tensor. The coordinator treats it as opaque.
+#[derive(Debug)]
+pub enum Buffer {
+    /// Host-resident tensor (the [`ReferenceBackend`] representation).
+    /// Storage is `Rc`-shared: buffers are immutable, so sharing is safe
+    /// and state snapshots are free.
+    ///
+    /// [`ReferenceBackend`]: super::ReferenceBackend
+    Host {
+        /// Shared tensor contents.
+        data: Rc<HostData>,
+        /// Row-major dimension extents (empty for scalars).
+        dims: Vec<usize>,
+    },
+    /// Device-resident PJRT buffer (the `pjrt` feature's representation).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl Buffer {
+    /// Wrap a host f32 tensor.
+    pub fn host_f32(data: Vec<f32>, dims: Vec<usize>) -> Buffer {
+        Buffer::Host { data: Rc::new(HostData::F32(data)), dims }
+    }
+
+    /// Wrap a host i32 tensor.
+    pub fn host_i32(data: Vec<i32>, dims: Vec<usize>) -> Buffer {
+        Buffer::Host { data: Rc::new(HostData::I32(data)), dims }
+    }
+
+    /// Borrow host f32 contents; errors for i32 or device buffers.
+    pub fn as_host_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buffer::Host { data, .. } => match data.as_ref() {
+                HostData::F32(v) => Ok(v),
+                HostData::I32(_) => bail!("expected f32 buffer, found i32"),
+            },
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => bail!("expected host buffer, found PJRT device buffer"),
+        }
+    }
+
+    /// Borrow host i32 contents; errors for f32 or device buffers.
+    pub fn as_host_i32(&self) -> Result<&[i32]> {
+        match self {
+            Buffer::Host { data, .. } => match data.as_ref() {
+                HostData::I32(v) => Ok(v),
+                HostData::F32(_) => bail!("expected i32 buffer, found f32"),
+            },
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => bail!("expected host buffer, found PJRT device buffer"),
+        }
+    }
+}
+
+/// An argument to an artifact call.
+pub enum Arg<'a> {
+    /// A backend-resident buffer (e.g. the state vector from the last step).
+    Buf(&'a Buffer),
+    /// Host f32 tensor, uploaded on call (owned dims avoid temp-lifetime
+    /// issues at call sites).
+    F32(&'a [f32], Vec<usize>),
+    /// Host i32 tensor, uploaded on call.
+    I32(&'a [i32], Vec<usize>),
+    /// f32 scalar (lr, step, alpha, …).
+    Scalar(f32),
+}
+
+/// Execution backend: artifact execution + buffer management + device info.
+///
+/// Implementations: [`ReferenceBackend`] (pure-Rust f32 host execution,
+/// always available) and `PjrtBackend` (compiled HLO artifacts through the
+/// PJRT C API, behind the `pjrt` cargo feature).
+///
+/// [`ReferenceBackend`]: super::ReferenceBackend
+pub trait Backend {
+    /// Human-readable platform name ("reference-cpu", "pjrt:cpu", …).
+    fn platform_name(&self) -> String;
+
+    /// Make an artifact executable (compile/cache); idempotent. The
+    /// reference backend validates the name; the PJRT backend compiles the
+    /// HLO file and caches the loaded executable.
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()>;
+
+    /// Execute an artifact. `args` must match `spec.inputs` positionally;
+    /// the result is the artifact's single array output.
+    fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer>;
+
+    /// Upload a host f32 tensor.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
+
+    /// Upload a host i32 tensor.
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
+
+    /// Copy a whole f32 buffer to the host.
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>>;
+
+    /// Read element 0 of an f32 buffer (the 4-byte loss read on the hot
+    /// path; backends avoid materializing the full state on the host).
+    fn read_scalar(&self, buf: &Buffer) -> Result<f32>;
+
+    /// Cumulative artifact-preparation time (compile overhead accounting,
+    /// App. C). Zero for backends that do not compile.
+    fn compile_seconds(&self) -> f64 {
+        0.0
+    }
+
+    /// Number of prepared executables currently cached.
+    fn cached_executables(&self) -> usize {
+        0
+    }
+}

@@ -1,119 +1,145 @@
-//! PJRT runtime: loads HLO-text artifacts, compiles them once, and executes
-//! them with device-resident buffers.
+//! [`Runtime`]: the coordinator-facing facade over a [`Backend`] — artifact
+//! registry + executable cache + buffer I/O.
 //!
-//! Everything stays on the device between calls: the training state is a
-//! single `f32[3N+1]` buffer that flows `execute_b → output buffer → next
-//! execute_b`; only the 4-byte loss scalar (index 0) is copied back per
-//! step. This is the §Perf-critical path — see EXPERIMENTS.md.
+//! The runtime owns a [`Manifest`] (which artifacts exist, their signatures)
+//! and a boxed [`Backend`] (how they execute). The coordinator code is
+//! backend-agnostic: it looks up an [`Exe`] by artifact name, `call`s it
+//! with [`Arg`]s, and moves opaque [`Buffer`]s between calls. Training state
+//! stays backend-resident; only the 4-byte loss scalar crosses to the host
+//! per step ([`Runtime::read_scalar`]) — the §Perf-critical path.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::rc::Rc;
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use super::backend::{Arg, Backend, Buffer};
 use super::manifest::{ArtifactSpec, Manifest, ModelCfg};
-use crate::debugln;
+use super::reference::ReferenceBackend;
 
-/// An argument to an artifact call.
-pub enum Arg<'a> {
-    /// A device-resident buffer (e.g. the state vector from the last step).
-    Buf(&'a xla::PjRtBuffer),
-    /// Host f32 tensor, uploaded on call (owned dims avoid temp-lifetime
-    /// issues at call sites).
-    F32(&'a [f32], Vec<usize>),
-    /// Host i32 tensor, uploaded on call.
-    I32(&'a [i32], Vec<usize>),
-    /// f32 scalar (lr, step, alpha, …).
-    Scalar(f32),
-}
-
-/// A compiled artifact plus its manifest signature.
+/// A prepared artifact handle: its manifest signature, ready to `call`.
+/// (Compiled code, when a backend compiles at all, is cached inside the
+/// backend keyed by artifact name.)
 pub struct Exe {
+    /// Manifest signature (inputs, output shape, meta).
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
 }
 
-/// The PJRT runtime: client + artifact registry + executable cache.
+/// The runtime: manifest + backend + prepared-artifact cache.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
+    /// Artifact registry and model configurations.
     pub manifest: Manifest,
-    dir: PathBuf,
+    backend: Box<dyn Backend>,
     cache: RefCell<HashMap<String, Rc<Exe>>>,
-    probe_cache: RefCell<HashMap<usize, Rc<xla::PjRtLoadedExecutable>>>,
-    /// cumulative compile time, for the App. C–style overhead accounting
-    pub compile_seconds: RefCell<f64>,
 }
 
 impl Runtime {
-    /// CPU-client runtime over an artifact directory (with manifest.json).
+    /// Runtime over the built-in registry and the pure-Rust
+    /// [`ReferenceBackend`] — always available, no artifacts or devices
+    /// needed.
+    ///
+    /// ```
+    /// use multilevel::runtime::Runtime;
+    /// let rt = Runtime::reference();
+    /// assert_eq!(rt.platform_name(), "reference-cpu");
+    /// assert!(rt.cfg("gpt_nano").is_ok());
+    /// ```
+    pub fn reference() -> Runtime {
+        let manifest = Manifest::builtin();
+        let backend = ReferenceBackend::new(&manifest);
+        Runtime { manifest, backend: Box::new(backend), cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Runtime over an explicit backend and manifest (backend injection —
+    /// tests and future multi-device backends use this).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { manifest, backend, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Runtime over an AOT artifact directory (with `manifest.json`).
+    ///
+    /// With the `pjrt` feature this executes the compiled HLO artifacts
+    /// through PJRT; without it, the on-disk manifest supplies the config
+    /// registry but execution still runs on the [`ReferenceBackend`].
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         manifest.validate()?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            probe_cache: RefCell::new(HashMap::new()),
-            compile_seconds: RefCell::new(0.0),
-        })
+        #[cfg(feature = "pjrt")]
+        {
+            let backend = super::pjrt::PjrtBackend::new(dir)?;
+            Ok(Runtime { manifest, backend: Box::new(backend), cache: RefCell::new(HashMap::new()) })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let backend = ReferenceBackend::new(&manifest);
+            Ok(Runtime { manifest, backend: Box::new(backend), cache: RefCell::new(HashMap::new()) })
+        }
     }
 
-    /// Default artifact dir: $ML_ARTIFACTS or ./artifacts.
+    /// Default runtime: the artifact dir (`$ML_ARTIFACTS` or `./artifacts`)
+    /// when it exists **and** a device backend is compiled in; otherwise the
+    /// reference backend over the built-in registry.
     pub fn load_default() -> Result<Runtime> {
         let dir = std::env::var("ML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load(Path::new(&dir))
+        let path = Path::new(&dir);
+        if cfg!(feature = "pjrt") && path.join("manifest.json").exists() {
+            return Self::load(path);
+        }
+        Ok(Self::reference())
     }
 
+    /// Backend platform name ("reference-cpu", "pjrt:cpu", …).
+    pub fn platform_name(&self) -> String {
+        self.backend.platform_name()
+    }
+
+    /// The backend itself (device info, compile accounting).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Cumulative artifact-preparation seconds (App. C overhead accounting).
+    pub fn compile_seconds(&self) -> f64 {
+        self.backend.compile_seconds()
+    }
+
+    /// Look up a model configuration.
     pub fn cfg(&self, name: &str) -> Result<&ModelCfg> {
         self.manifest.cfg(name)
     }
 
-    /// Compile (or fetch from cache) an artifact by name.
+    /// Prepare (or fetch from cache) an artifact by name.
     pub fn exe(&self, name: &str) -> Result<Rc<Exe>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
-        let path = self.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("loading {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        *self.compile_seconds.borrow_mut() += dt;
-        debugln!("compiled {name} in {dt:.2}s");
-        let e = Rc::new(Exe { spec, exe });
+        self.backend.prepare(&spec)?;
+        let e = Rc::new(Exe { spec });
         self.cache.borrow_mut().insert(name.to_string(), e.clone());
         Ok(e)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of prepared artifacts currently cached.
     pub fn cached(&self) -> usize {
         self.cache.borrow().len()
     }
 
     /// Upload a host f32 tensor.
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_f32(data, dims)
     }
 
     /// Upload a host i32 tensor.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_i32(data, dims)
     }
 
-    /// Execute `exe` with mixed host/device args; returns the single output
-    /// buffer (every artifact is lowered with a single array output).
-    pub fn call(&self, exe: &Exe, args: &[Arg<'_>]) -> Result<xla::PjRtBuffer> {
+    /// Execute `exe` with mixed host/backend args; returns the single
+    /// output buffer (every artifact has a single array output).
+    pub fn call(&self, exe: &Exe, args: &[Arg<'_>]) -> Result<Buffer> {
         if args.len() != exe.spec.inputs.len() {
             bail!(
                 "artifact '{}' expects {} inputs, got {}",
@@ -122,89 +148,39 @@ impl Runtime {
                 args.len()
             );
         }
-        // Upload host args (owned buffers live until the call returns).
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut order: Vec<usize> = Vec::new(); // arg i -> owned idx or usize::MAX
+        // Shape gate: every host-visible argument must match the manifest
+        // signature. (Device-resident PJRT buffers are checked by XLA at
+        // execute time; host buffers would otherwise be silently sliced or
+        // panic deep inside a reference kernel.)
         for (i, a) in args.iter().enumerate() {
-            match a {
-                Arg::Buf(_) => order.push(usize::MAX),
-                Arg::F32(data, dims) => {
-                    debug_assert_eq!(
-                        dims.iter().product::<usize>(),
-                        exe.spec.inputs[i].shape.iter().product::<usize>(),
-                        "arg {i} of {}",
-                        exe.spec.name
+            let got = match a {
+                Arg::F32(d, _) => Some(d.len()),
+                Arg::I32(d, _) => Some(d.len()),
+                Arg::Buf(Buffer::Host { data, .. }) => Some(data.len()),
+                _ => None,
+            };
+            if let Some(got) = got {
+                let expect: usize = exe.spec.inputs[i].shape.iter().product();
+                if got != expect {
+                    bail!(
+                        "artifact '{}': input {i} ('{}') has {got} elements, \
+                         signature expects {expect}",
+                        exe.spec.name,
+                        exe.spec.inputs[i].name,
                     );
-                    owned.push(self.upload_f32(data, dims)?);
-                    order.push(owned.len() - 1);
-                }
-                Arg::I32(data, dims) => {
-                    owned.push(self.upload_i32(data, dims)?);
-                    order.push(owned.len() - 1);
-                }
-                Arg::Scalar(v) => {
-                    owned.push(self.upload_f32(&[*v], &[])?);
-                    order.push(owned.len() - 1);
                 }
             }
         }
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for (i, a) in args.iter().enumerate() {
-            match a {
-                Arg::Buf(b) => refs.push(b),
-                _ => refs.push(&owned[order[i]]),
-            }
-        }
-        let mut out = self.exe_raw(exe, &refs)?;
-        let mut replica = out.pop().context("no output replica")?;
-        let buf = replica.pop().context("no output buffer")?;
-        Ok(buf)
+        self.backend.execute(&exe.spec, args)
     }
 
-    fn exe_raw(
-        &self,
-        exe: &Exe,
-        refs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
-        Ok(exe.exe.execute_b(refs)?)
-    }
-
-    /// Read a scalar f32 (element 0) out of a device buffer.
-    ///
-    /// The CPU PJRT plugin does not implement `CopyRawToHost` (partial
-    /// reads), so for buffers longer than a few elements this dispatches a
-    /// tiny cached slice executable built with `XlaBuilder` and copies only
-    /// its 4-byte output — the state vector itself never reaches the host.
-    pub fn read_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
-        let shape = xla::ArrayShape::try_from(&buf.on_device_shape()?)?;
-        let len: usize = shape.dims().iter().product::<i64>() as usize;
-        if len <= 16 {
-            let lit = buf.to_literal_sync()?;
-            let v = lit.to_vec::<f32>()?;
-            return Ok(*v.first().context("empty buffer")?);
-        }
-        let probe = self.probe_exe(len)?;
-        let out = probe.execute_b::<&xla::PjRtBuffer>(&[buf])?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_vec::<f32>()?[0])
-    }
-
-    /// Cached `f32[len] -> f32[1]` head-slice executable.
-    fn probe_exe(&self, len: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.probe_cache.borrow().get(&len) {
-            return Ok(e.clone());
-        }
-        let builder = xla::XlaBuilder::new(&format!("probe_{len}"));
-        let p = builder.parameter(0, xla::ElementType::F32, &[len as i64], "state")?;
-        let comp = p.slice_in_dim1(0, 1, 0)?.build()?;
-        let exe = Rc::new(self.client.compile(&comp)?);
-        self.probe_cache.borrow_mut().insert(len, exe.clone());
-        Ok(exe)
+    /// Read a scalar f32 (element 0) out of a buffer — the 4-byte loss read.
+    pub fn read_scalar(&self, buf: &Buffer) -> Result<f32> {
+        self.backend.read_scalar(buf)
     }
 
     /// Copy a whole f32 buffer to the host.
-    pub fn read_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        let lit = buf.to_literal_sync()?;
-        Ok(lit.to_vec::<f32>()?)
+    pub fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        self.backend.read_f32(buf)
     }
 }

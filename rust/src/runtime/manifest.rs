@@ -1,6 +1,13 @@
-//! `artifacts/manifest.json` loader: model configurations (geometry, flat
-//! parameter layout, analytic FLOPs) and artifact signatures (inputs /
-//! output shapes) emitted by `python/compile/aot.py`.
+//! The artifact manifest: model configurations (geometry, flat parameter
+//! layout, analytic FLOPs) and artifact signatures (inputs / output shapes).
+//!
+//! Two sources produce the same structure:
+//! * [`Manifest::builtin`] — synthesized in-process from the Rust config
+//!   registry ([`crate::runtime::registry`]); used by the reference backend,
+//!   no files needed.
+//! * [`Manifest::load`] — parsed from the `manifest.json` emitted by
+//!   `python/compile/aot.py` next to the AOT HLO artifacts; used by the
+//!   PJRT backend.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -203,6 +210,13 @@ fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
 }
 
 impl Manifest {
+    /// The built-in manifest (full config registry + artifact plan,
+    /// synthesized in-process — see [`crate::runtime::registry`]).
+    pub fn builtin() -> Manifest {
+        super::registry::builtin_manifest()
+    }
+
+    /// Load `manifest.json` from an AOT artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -1,11 +1,46 @@
-//! PJRT runtime: artifact manifest, executable cache, device-resident
-//! training state, checkpointing.
+//! Runtime layer: the pluggable [`Backend`] abstraction, the built-in
+//! config/artifact registry, backend-agnostic training state, and
+//! checkpointing.
+//!
+//! * [`Backend`] — the execution contract (artifact execution, buffer
+//!   alloc/copy, device info). Implementations:
+//!   [`ReferenceBackend`] (pure-Rust f32 host, always available) and
+//!   `PjrtBackend` (compiled HLO via the PJRT C API, `pjrt` feature).
+//! * [`Runtime`] — coordinator-facing facade: manifest + backend +
+//!   prepared-artifact cache.
+//! * [`Manifest`] / [`registry`] — which artifacts exist and the flat
+//!   parameter layout of every model configuration.
+//! * [`params`] — state-vector initialization and checkpoint I/O.
+//!
+//! # Example: one reference-backend train step
+//!
+//! ```
+//! use multilevel::coordinator::Trainer;
+//! use multilevel::runtime::{init_state, Runtime};
+//!
+//! let rt = Runtime::reference();
+//! let cfg = rt.cfg("gpt_nano").unwrap().clone();
+//! let state = init_state(&rt, &cfg, 42).unwrap();
+//! let mut trainer = Trainer::new(&rt, "gpt_nano", 0, 7, 1).unwrap();
+//! let (state, loss) = trainer.step(&rt, &state, 1e-3, 1).unwrap();
+//! assert!(loss.is_finite());
+//! assert_eq!(state.len(), 3 * cfg.n_params + 1);
+//! ```
 
+pub mod backend;
 pub mod client;
 pub mod manifest;
 pub mod params;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+pub mod registry;
 
-pub use client::{Arg, Exe, Runtime};
-pub use manifest::{ArtifactSpec, Family, InitKind, Manifest, ModelCfg, ParamEntry};
+pub use backend::{Arg, Backend, Buffer, HostData};
+pub use client::{Exe, Runtime};
+pub use manifest::{ArtifactSpec, Family, InitKind, InputSpec, Manifest, ModelCfg, ParamEntry};
 pub use params::{init_state, init_theta, load_checkpoint, save_checkpoint, state_from_host,
                  state_from_theta, State};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use reference::ReferenceBackend;

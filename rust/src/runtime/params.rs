@@ -15,6 +15,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::Buffer;
 use super::client::Runtime;
 use super::manifest::{InitKind, ModelCfg};
 use crate::util::rng::Rng;
@@ -22,17 +23,25 @@ use crate::util::rng::Rng;
 /// Standard deviation for `normal` parameter init (mirrors model.INIT_STD).
 pub const INIT_STD: f32 = 0.02;
 
-/// A device-resident training state plus its host-side metadata.
+/// A backend-resident training state plus its host-side metadata.
 pub struct State {
-    pub buf: xla::PjRtBuffer,
+    /// The `f32[3N+1]` state vector, resident wherever the backend keeps it.
+    pub buf: Buffer,
+    /// Parameter count N of the owning config.
     pub n_params: usize,
     /// analytic FLOPs spent producing this state (advanced by the trainer)
     pub flops: f64,
 }
 
 impl State {
+    /// State-vector length `3N + 1`.
     pub fn len(&self) -> usize {
         3 * self.n_params + 1
+    }
+
+    /// True iff `n_params` is zero (never, for real configs).
+    pub fn is_empty(&self) -> bool {
+        self.n_params == 0
     }
 
     /// The last training loss (4-byte device→host read).

@@ -1,0 +1,176 @@
+//! [`PjrtBackend`]: loads HLO-text artifacts, compiles them once through the
+//! PJRT C API, and executes them with device-resident buffers (the original
+//! `Runtime` execution path, now behind the `pjrt` cargo feature).
+//!
+//! Everything stays on the device between calls: the training state is a
+//! single `f32[3N+1]` buffer that flows `execute_b → output buffer → next
+//! execute_b`; only the 4-byte loss scalar (index 0) is copied back per
+//! step. This is the §Perf-critical path — see EXPERIMENTS.md.
+//!
+//! Building with `--features pjrt` links the `xla` crate; the workspace
+//! ships an API stub at `vendor/xla-stub` (compiles everywhere, errors at
+//! client creation) — vendor the real crate in its place to run on a PJRT
+//! plugin.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Arg, Backend, Buffer};
+use super::manifest::ArtifactSpec;
+use crate::debugln;
+
+/// PJRT execution backend: client + compiled-executable caches.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    probe_cache: RefCell<HashMap<usize, Rc<xla::PjRtLoadedExecutable>>>,
+    compile_seconds: RefCell<f64>,
+}
+
+impl PjrtBackend {
+    /// CPU-client backend over an artifact directory.
+    pub fn new(dir: &Path) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.to_path_buf(),
+            exes: RefCell::new(HashMap::new()),
+            probe_cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable of an artifact.
+    fn compiled(&self, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{}'", spec.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_seconds.borrow_mut() += dt;
+        debugln!("compiled {} in {dt:.2}s", spec.name);
+        let e = Rc::new(exe);
+        self.exes.borrow_mut().insert(spec.name.clone(), e.clone());
+        Ok(e)
+    }
+
+    fn device_buf<'a>(buf: &'a Buffer) -> Result<&'a xla::PjRtBuffer> {
+        match buf {
+            Buffer::Pjrt(b) => Ok(b),
+            Buffer::Host { .. } => bail!("PJRT backend received a host buffer"),
+        }
+    }
+
+    /// Cached `f32[len] -> f32[1]` head-slice executable.
+    ///
+    /// The CPU PJRT plugin does not implement `CopyRawToHost` (partial
+    /// reads), so for long buffers the loss read dispatches this tiny slice
+    /// executable and copies only its 4-byte output — the state vector
+    /// itself never reaches the host.
+    fn probe_exe(&self, len: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.probe_cache.borrow().get(&len) {
+            return Ok(e.clone());
+        }
+        let builder = xla::XlaBuilder::new(&format!("probe_{len}"));
+        let p = builder.parameter(0, xla::ElementType::F32, &[len as i64], "state")?;
+        let comp = p.slice_in_dim1(0, 1, 0)?.build()?;
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.probe_cache.borrow_mut().insert(len, exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform_name(&self) -> String {
+        format!("pjrt:{}", self.client.platform_name())
+    }
+
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        self.compiled(spec).map(|_| ())
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer> {
+        let exe = self.compiled(spec)?;
+        // Upload host args (owned buffers live until the call returns).
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // arg i -> owned idx or usize::MAX
+        for a in args.iter() {
+            match a {
+                Arg::Buf(_) => order.push(usize::MAX),
+                Arg::F32(data, dims) => {
+                    owned.push(self.client.buffer_from_host_buffer(data, dims, None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::I32(data, dims) => {
+                    owned.push(self.client.buffer_from_host_buffer(data, dims, None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::Scalar(v) => {
+                    owned.push(self.client.buffer_from_host_buffer(&[*v], &[], None)?);
+                    order.push(owned.len() - 1);
+                }
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Buf(b) => refs.push(Self::device_buf(b)?),
+                _ => refs.push(&owned[order[i]]),
+            }
+        }
+        let mut out = exe.execute_b(&refs)?;
+        let mut replica = out.pop().context("no output replica")?;
+        let buf = replica.pop().context("no output buffer")?;
+        Ok(Buffer::Pjrt(buf))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::Pjrt(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::Pjrt(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        let lit = Self::device_buf(buf)?.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    fn read_scalar(&self, buf: &Buffer) -> Result<f32> {
+        let buf = Self::device_buf(buf)?;
+        let shape = xla::ArrayShape::try_from(&buf.on_device_shape()?)?;
+        let len: usize = shape.dims().iter().product::<i64>() as usize;
+        if len <= 16 {
+            let lit = buf.to_literal_sync()?;
+            let v = lit.to_vec::<f32>()?;
+            return Ok(*v.first().context("empty buffer")?);
+        }
+        let probe = self.probe_exe(len)?;
+        let out = probe.execute_b::<&xla::PjRtBuffer>(&[buf])?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?[0])
+    }
+
+    fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.borrow()
+    }
+
+    fn cached_executables(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}

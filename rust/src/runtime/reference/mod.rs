@@ -1,0 +1,321 @@
+//! [`ReferenceBackend`]: a pure-Rust, f32 host implementation of the whole
+//! artifact contract — every artifact name the AOT pipeline lowers to HLO
+//! (`train_step__*`, `eval_loss__*`, `coalesce__A__B`, `refine__A__B`,
+//! `refine_fit__A__B`, `interp__*`, `distill_step__A__B`, `ft_step__*`,
+//! `ft_acc__*`, `lora_step__*`, `lora_eval__*`, `attn_maps__*`,
+//! `eval_acc__*`) executes directly on the host, no XLA device or artifact
+//! files required.
+//!
+//! Semantics match Algorithms 1–4 of the paper: width/depth coalescing as
+//! averaging maps, de-coalescing + α-interpolation as their right-inverse
+//! blend (see [`ops`]), and a real pre-LN transformer with AdamW for the
+//! training artifacts (see [`model`]). Execution is deterministic — the same
+//! state and batch always produce bit-identical outputs — which the
+//! experiment harness relies on for seed-reproducible comparisons.
+
+pub mod model;
+pub mod ops;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::{Arg, Backend, Buffer};
+use super::manifest::{ArtifactSpec, Family, Manifest, ModelCfg};
+use model::BatchRef;
+
+/// The pure-Rust reference backend. Holds only the config registry; all
+/// state lives in the [`Buffer`]s the coordinator passes around.
+pub struct ReferenceBackend {
+    configs: BTreeMap<String, ModelCfg>,
+}
+
+/// A borrowed view of one marshaled argument.
+enum View<'a> {
+    F(&'a [f32]),
+    I(&'a [i32]),
+}
+
+impl<'a> View<'a> {
+    fn f32s(&self) -> Result<&'a [f32]> {
+        match self {
+            View::F(v) => Ok(v),
+            View::I(_) => bail!("expected f32 argument, got i32"),
+        }
+    }
+    fn i32s(&self) -> Result<&'a [i32]> {
+        match self {
+            View::I(v) => Ok(v),
+            View::F(_) => bail!("expected i32 argument, got f32"),
+        }
+    }
+    fn scalar(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        v.first().copied().context("empty scalar argument")
+    }
+}
+
+/// Artifact kinds the reference backend interprets.
+const KINDS: [&str; 12] = [
+    "train_step",
+    "eval_loss",
+    "eval_acc",
+    "attn_maps",
+    "coalesce",
+    "refine",
+    "interp",
+    "distill_step",
+    "ft_step",
+    "ft_acc",
+    "lora_step",
+    "lora_eval",
+];
+
+impl ReferenceBackend {
+    /// Backend over a manifest's config registry (usually
+    /// [`Manifest::builtin`]).
+    pub fn new(manifest: &Manifest) -> ReferenceBackend {
+        ReferenceBackend { configs: manifest.configs.clone() }
+    }
+
+    fn cfg(&self, name: &str) -> Result<&ModelCfg> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config '{name}' not in registry"))
+    }
+
+    fn cfg_of(&self, spec: &ArtifactSpec) -> Result<&ModelCfg> {
+        self.cfg(&spec.config)
+    }
+
+    fn small_cfg_of(&self, spec: &ArtifactSpec) -> Result<&ModelCfg> {
+        let name = spec
+            .config_small
+            .as_deref()
+            .ok_or_else(|| anyhow!("artifact '{}' has no config_small", spec.name))?;
+        self.cfg(name)
+    }
+
+    /// Width/depth flags of a level-transition artifact: taken from the
+    /// manifest meta when present, else inferred from the geometry delta.
+    fn width_depth(spec: &ArtifactSpec, big: &ModelCfg, small: &ModelCfg) -> (bool, bool) {
+        let width = spec
+            .meta
+            .get("width")
+            .as_bool()
+            .unwrap_or(big.n_head != small.n_head);
+        let depth = spec
+            .meta
+            .get("depth")
+            .as_bool()
+            .unwrap_or(big.n_layer != small.n_layer);
+        (width, depth)
+    }
+
+    /// Parse the family-specific batch arguments starting at `views[i]`;
+    /// returns the batch and the index of the first argument after it.
+    fn batch_at<'a>(cfg: &ModelCfg, views: &[View<'a>], i: usize)
+                    -> Result<(BatchRef<'a>, usize)> {
+        match cfg.family {
+            Family::Gpt => Ok((BatchRef::Gpt { tokens: views[i].i32s()? }, i + 1)),
+            Family::Bert => Ok((
+                BatchRef::Bert { tokens: views[i].i32s()?, labels: views[i + 1].i32s()? },
+                i + 2,
+            )),
+            Family::Vit => Ok((
+                BatchRef::Vit { images: views[i].f32s()?, labels: views[i + 1].i32s()? },
+                i + 2,
+            )),
+        }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn platform_name(&self) -> String {
+        "reference-cpu".to_string()
+    }
+
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        if !KINDS.contains(&spec.kind.as_str()) {
+            bail!("reference backend cannot execute artifact kind '{}'", spec.kind);
+        }
+        self.cfg_of(spec).map(|_| ())
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer> {
+        // marshal: scalars first (they need owned storage), then views
+        let scalars: Vec<f32> = args
+            .iter()
+            .filter_map(|a| match a {
+                Arg::Scalar(v) => Some(*v),
+                _ => None,
+            })
+            .collect();
+        let mut views: Vec<View<'_>> = Vec::with_capacity(args.len());
+        let mut si = 0usize;
+        for a in args {
+            views.push(match a {
+                Arg::Buf(b) => match b {
+                    Buffer::Host { data, .. } => match data.as_ref() {
+                        super::backend::HostData::F32(v) => View::F(v),
+                        super::backend::HostData::I32(v) => View::I(v),
+                    },
+                    #[cfg(feature = "pjrt")]
+                    Buffer::Pjrt(_) => {
+                        bail!("reference backend received a PJRT device buffer")
+                    }
+                },
+                Arg::F32(d, _) => View::F(d),
+                Arg::I32(d, _) => View::I(d),
+                Arg::Scalar(_) => {
+                    si += 1;
+                    View::F(&scalars[si - 1..si])
+                }
+            });
+        }
+
+        let scalar_out = |v: f32| Buffer::host_f32(vec![v], vec![]);
+        match spec.kind.as_str() {
+            "train_step" => {
+                let cfg = self.cfg_of(spec)?;
+                let state = views[0].f32s()?;
+                let (batch, i) = Self::batch_at(cfg, &views, 1)?;
+                let lr = views[i].scalar()?;
+                let step = views[i + 1].scalar()?;
+                let out = model::train_step(cfg, state, &batch, lr, step)?;
+                Ok(Buffer::host_f32(out, vec![cfg.state_len()]))
+            }
+            "eval_loss" => {
+                let cfg = self.cfg_of(spec)?;
+                let state = views[0].f32s()?;
+                let (batch, _) = Self::batch_at(cfg, &views, 1)?;
+                let theta = &state[1..1 + cfg.n_params];
+                Ok(scalar_out(model::eval_loss(cfg, theta, &batch)?))
+            }
+            "eval_acc" => {
+                let cfg = self.cfg_of(spec)?;
+                let state = views[0].f32s()?;
+                let theta = &state[1..1 + cfg.n_params];
+                let acc =
+                    model::eval_acc(cfg, theta, views[1].f32s()?, views[2].i32s()?)?;
+                Ok(scalar_out(acc))
+            }
+            "attn_maps" => {
+                let cfg = self.cfg_of(spec)?;
+                let state = views[0].f32s()?;
+                let theta = &state[1..1 + cfg.n_params];
+                let maps = model::attn_maps(cfg, theta, views[1].i32s()?)?;
+                let dims = vec![cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.seq_len];
+                Ok(Buffer::host_f32(maps, dims))
+            }
+            "coalesce" => {
+                let big = self.cfg_of(spec)?;
+                let small = self.small_cfg_of(spec)?;
+                let (width, depth) = Self::width_depth(spec, big, small);
+                let out = ops::coalesce(big, small, width, depth, views[0].f32s()?)?;
+                Ok(Buffer::host_f32(out, vec![small.state_len()]))
+            }
+            "refine" => {
+                let big = self.cfg_of(spec)?;
+                let small = self.small_cfg_of(spec)?;
+                let (width, depth) = Self::width_depth(spec, big, small);
+                let fit = spec.meta.get("fit").as_bool().unwrap_or(false);
+                let out = ops::refine(
+                    big,
+                    small,
+                    width,
+                    depth,
+                    fit,
+                    views[0].f32s()?,
+                    views[1].f32s()?,
+                    views[2].scalar()?,
+                )?;
+                Ok(Buffer::host_f32(out, vec![big.state_len()]))
+            }
+            "interp" => {
+                let a = views[0].f32s()?;
+                let b = views[1].f32s()?;
+                let alpha = views[2].scalar()?;
+                let out = ops::interp(a, b, alpha)?;
+                let n = out.len();
+                Ok(Buffer::host_f32(out, vec![n]))
+            }
+            "distill_step" => {
+                let student = self.cfg_of(spec)?;
+                let teacher = self.small_cfg_of(spec)?;
+                let state = views[0].f32s()?;
+                let theta_t = views[1].f32s()?;
+                let (batch, i) = Self::batch_at(student, &views, 2)?;
+                let kd_w = views[i].scalar()?;
+                let lr = views[i + 1].scalar()?;
+                let step = views[i + 2].scalar()?;
+                let out = model::distill_step(student, teacher, state, theta_t, &batch,
+                                              kd_w, lr, step)?;
+                Ok(Buffer::host_f32(out, vec![student.state_len()]))
+            }
+            "ft_step" => {
+                let cfg = self.cfg_of(spec)?;
+                let n_ft = spec.meta.get("n_ft").as_usize()
+                    .context("ft artifact missing n_ft")?;
+                let n_cls = spec.meta.get("n_classes").as_usize().unwrap_or(4);
+                let out = model::ft_step(
+                    cfg,
+                    n_ft,
+                    n_cls,
+                    views[0].f32s()?,
+                    views[1].i32s()?,
+                    views[2].i32s()?,
+                    views[3].scalar()?,
+                    views[4].scalar()?,
+                )?;
+                Ok(Buffer::host_f32(out, vec![3 * n_ft + 1]))
+            }
+            "ft_acc" => {
+                let cfg = self.cfg_of(spec)?;
+                let n_ft = spec.meta.get("n_ft").as_usize()
+                    .context("ft artifact missing n_ft")?;
+                let n_cls = spec.meta.get("n_classes").as_usize().unwrap_or(4);
+                let acc = model::ft_acc(cfg, n_ft, n_cls, views[0].f32s()?,
+                                        views[1].i32s()?, views[2].i32s()?)?;
+                Ok(scalar_out(acc))
+            }
+            "lora_step" => {
+                let cfg = self.cfg_of(spec)?;
+                let rank = spec.meta.get("rank").as_usize().unwrap_or(4);
+                let state = views[0].f32s()?;
+                let theta_base = views[1].f32s()?;
+                let (batch, i) = Self::batch_at(cfg, &views, 2)?;
+                let lr = views[i].scalar()?;
+                let step = views[i + 1].scalar()?;
+                let out = model::lora_step(cfg, rank, state, theta_base, &batch, lr, step)?;
+                let n = out.len();
+                Ok(Buffer::host_f32(out, vec![n]))
+            }
+            "lora_eval" => {
+                let cfg = self.cfg_of(spec)?;
+                let rank = spec.meta.get("rank").as_usize().unwrap_or(4);
+                let state = views[0].f32s()?;
+                let theta_base = views[1].f32s()?;
+                let (batch, _) = Self::batch_at(cfg, &views, 2)?;
+                Ok(scalar_out(model::lora_eval(cfg, rank, state, theta_base, &batch)?))
+            }
+            other => bail!("artifact '{}': unknown kind '{other}'", spec.name),
+        }
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::host_f32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::host_i32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        Ok(buf.as_host_f32()?.to_vec())
+    }
+
+    fn read_scalar(&self, buf: &Buffer) -> Result<f32> {
+        buf.as_host_f32()?.first().copied().context("empty buffer")
+    }
+}

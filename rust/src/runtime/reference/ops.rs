@@ -1,0 +1,675 @@
+//! The paper's level-transition operators in pure Rust: Coalescing
+//! (Algorithm 2), De-coalescing + Interpolation (Algorithms 3–4), and the
+//! elementwise state interpolation — a faithful port of
+//! `python/compile/operators.py` (Appendix A/E matrices).
+//!
+//! Width matrices follow Appendix A/E exactly:
+//! * `F_out` per stream (emb / qk / v / fc1) is a grouped-averaging matrix
+//!   with head-block structure `kron(H, I_head_dim)` (Eq. 15);
+//! * `F_in = F_outᵀ · diag(1 / sum_col(F_out F_outᵀ))` (Eq. 2);
+//! * de-coalescing uses `T_in = diag(1/sum_row(F_inᵀF_in)) · F_inᵀ` and
+//!   `T_out = F_outᵀ · diag(1/sum_col(F_out F_outᵀ))` (Eq. 11);
+//! * depth matrices `R` (Eq. 16) and `G` (Eq. 9) use adjacent-pair grouping.
+//!
+//! `refine(α = 1)` is **exactly** pure de-coalescing — the big state only
+//! enters through the interpolation, so the result is independent of it.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::ModelCfg;
+
+/// A named parameter tensor during a level transition.
+struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+type ParamMap = BTreeMap<String, Tensor>;
+
+fn unpack(cfg: &ModelCfg, theta: &[f32]) -> ParamMap {
+    let mut map = ParamMap::new();
+    for e in &cfg.layout {
+        map.insert(
+            e.name.clone(),
+            Tensor {
+                shape: e.shape.clone(),
+                data: theta[e.offset..e.offset + e.size()].to_vec(),
+            },
+        );
+    }
+    map
+}
+
+fn pack(cfg: &ModelCfg, map: &ParamMap) -> Result<Vec<f32>> {
+    let mut theta = vec![0.0f32; cfg.n_params];
+    for e in &cfg.layout {
+        let t = map
+            .get(&e.name)
+            .ok_or_else(|| anyhow!("missing projected param '{}'", e.name))?;
+        if t.data.len() != e.size() {
+            bail!(
+                "param '{}': projected size {} != target size {} (config {})",
+                e.name,
+                t.data.len(),
+                e.size(),
+                cfg.name
+            );
+        }
+        theta[e.offset..e.offset + e.size()].copy_from_slice(&t.data);
+    }
+    Ok(theta)
+}
+
+// ---------------------------------------------------------------------------
+// Grouping / projection matrices (row-major [rows, cols])
+// ---------------------------------------------------------------------------
+
+/// Python-`round` (half-to-even) for the adjacent-grouping bounds.
+fn round_half_even(x: f64) -> usize {
+    let f = x.floor();
+    let frac = x - f;
+    let fi = f as usize;
+    if frac > 0.5 {
+        fi + 1
+    } else if frac < 0.5 {
+        fi
+    } else if fi % 2 == 0 {
+        fi
+    } else {
+        fi + 1
+    }
+}
+
+/// Averaging matrix `[n1, n2]`: column j averages its group's members.
+/// `stack` grouping (Eq. 15) when `n2 | n1`, else contiguous (Eq. 16/17).
+fn group_matrix(n1: usize, n2: usize, stack: bool) -> Vec<f32> {
+    assert!((1..=n1).contains(&n2));
+    let mut f = vec![0.0f32; n1 * n2];
+    if stack && n1 % n2 == 0 {
+        let reps = n1 / n2;
+        let w = 1.0 / reps as f32;
+        for j in 0..n2 {
+            for r in 0..reps {
+                f[(j + r * n2) * n2 + j] = w;
+            }
+        }
+    } else {
+        let bounds: Vec<usize> =
+            (0..=n2).map(|j| round_half_even(j as f64 * n1 as f64 / n2 as f64)).collect();
+        for j in 0..n2 {
+            let members = bounds[j]..bounds[j + 1];
+            let w = 1.0 / members.len() as f32;
+            for i in members {
+                f[i * n2 + j] = w;
+            }
+        }
+    }
+    f
+}
+
+/// `kron(h [a,b], I_hd)` → `[a·hd, b·hd]`.
+fn kron_identity(h: &[f32], a: usize, b: usize, hd: usize) -> Vec<f32> {
+    let (rows, cols) = (a * hd, b * hd);
+    let mut k = vec![0.0f32; rows * cols];
+    for i in 0..a {
+        for j in 0..b {
+            let v = h[i * b + j];
+            if v == 0.0 {
+                continue;
+            }
+            for u in 0..hd {
+                k[(i * hd + u) * cols + (j * hd + u)] = v;
+            }
+        }
+    }
+    k
+}
+
+/// `s[i] = Σ_rows (F Fᵀ)[·, i]` — the column sums of `F_out F_outᵀ`.
+fn colsum_ff_t(f: &[f32], n1: usize, n2: usize) -> Vec<f32> {
+    // s[i] = Σ_k (Σ_r F[r,k]) · F[i,k]
+    let mut c = vec![0.0f32; n2];
+    for r in 0..n1 {
+        for k in 0..n2 {
+            c[k] += f[r * n2 + k];
+        }
+    }
+    let mut s = vec![0.0f32; n1];
+    for i in 0..n1 {
+        let mut acc = 0.0f32;
+        for k in 0..n2 {
+            acc += c[k] * f[i * n2 + k];
+        }
+        s[i] = acc;
+    }
+    s
+}
+
+/// All projection matrices of one stream: the coalescing pair
+/// `(F_in [n2,n1], F_out [n1,n2])` and the de-coalescing pair
+/// `(T_in [n1,n2], T_out [n2,n1])`.
+struct StreamMaps {
+    big: usize,
+    small: usize,
+    f_out: Vec<f32>,
+    f_in: Vec<f32>,
+    t_in: Vec<f32>,
+    t_out: Vec<f32>,
+}
+
+impl StreamMaps {
+    fn new(n_big: usize, n_small: usize, hd: usize) -> StreamMaps {
+        let h = group_matrix(n_big, n_small, true);
+        let f_out = kron_identity(&h, n_big, n_small, hd);
+        let (n1, n2) = (n_big * hd, n_small * hd);
+        // F_in = F_outᵀ · diag(1/s)  (Eq. 2)
+        let s = colsum_ff_t(&f_out, n1, n2);
+        let mut f_in = vec![0.0f32; n2 * n1];
+        for j in 0..n2 {
+            for i in 0..n1 {
+                f_in[j * n1 + i] = f_out[i * n2 + j] / s[i];
+            }
+        }
+        // T_in = diag(1/rowsum(F_inᵀ F_in)) · F_inᵀ  (Eq. 11)
+        // rowsum[i] = Σ_k F_in[k,i] · (Σ_j F_in[k,j])
+        let mut rf = vec![0.0f32; n2];
+        for k in 0..n2 {
+            for j in 0..n1 {
+                rf[k] += f_in[k * n1 + j];
+            }
+        }
+        let mut rs = vec![0.0f32; n1];
+        for i in 0..n1 {
+            let mut acc = 0.0f32;
+            for k in 0..n2 {
+                acc += f_in[k * n1 + i] * rf[k];
+            }
+            rs[i] = acc;
+        }
+        let mut t_in = vec![0.0f32; n1 * n2];
+        for i in 0..n1 {
+            for j in 0..n2 {
+                t_in[i * n2 + j] = f_in[j * n1 + i] / rs[i];
+            }
+        }
+        // T_out = F_outᵀ · diag(1/s) — numerically identical to F_in
+        let t_out = f_in.clone();
+        StreamMaps { big: n1, small: n2, f_out, f_in, t_in, t_out }
+    }
+}
+
+/// Projection streams (Appendix A): residual/emb, Q=K, V, FFN-hidden.
+struct WidthMaps {
+    emb: StreamMaps,
+    qk: StreamMaps,
+    v: StreamMaps,
+    fc1: StreamMaps,
+}
+
+impl WidthMaps {
+    fn new(big: &ModelCfg, small: &ModelCfg) -> Result<WidthMaps> {
+        if big.head_dim != small.head_dim || big.family != small.family {
+            bail!("width maps need matching head_dim/family: {} vs {}", big.name, small.name);
+        }
+        let hd = big.head_dim;
+        // fc1 grouping derives from the configs' own FFN widths (Python's
+        // `ffn_mult * n_head`): d_ff = ffn_mult · n_head · head_dim.
+        if big.d_ff % hd != 0 || small.d_ff % hd != 0 {
+            bail!("d_ff must be a multiple of head_dim for width maps");
+        }
+        Ok(WidthMaps {
+            emb: StreamMaps::new(big.n_head, small.n_head, hd),
+            qk: StreamMaps::new(big.n_head, small.n_head, hd),
+            v: StreamMaps::new(big.n_head, small.n_head, hd),
+            fc1: StreamMaps::new(big.d_ff / hd, small.d_ff / hd, hd),
+        })
+    }
+
+    fn stream(&self, key: Stream) -> &StreamMaps {
+        match key {
+            Stream::Emb => &self.emb,
+            Stream::Qk => &self.qk,
+            Stream::V => &self.v,
+            Stream::Fc1 => &self.fc1,
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Stream {
+    Emb,
+    Qk,
+    V,
+    Fc1,
+}
+
+/// Per-parameter width rule `(in_stream, out_stream)` — `_WIDTH_RULES`.
+fn width_rule(name: &str) -> Result<(Option<Stream>, Option<Stream>)> {
+    use Stream::*;
+    Ok(match name {
+        "emb" | "pos" | "patch_w" | "patch_b" | "cls" | "lnf_w" | "lnf_b"
+        | "blk.ln1_w" | "blk.ln1_b" | "blk.ln2_w" | "blk.ln2_b" | "blk.bo"
+        | "blk.fc2_b" => (None, Some(Emb)),
+        "blk.wq" | "blk.wk" => (Some(Emb), Some(Qk)),
+        "blk.bq" | "blk.bk" => (None, Some(Qk)),
+        "blk.wv" => (Some(Emb), Some(V)),
+        "blk.bv" => (None, Some(V)),
+        "blk.wo" => (Some(V), Some(Emb)),
+        "blk.fc1_w" => (Some(Emb), Some(Fc1)),
+        "blk.fc1_b" => (None, Some(Fc1)),
+        "blk.fc2_w" => (Some(Fc1), Some(Emb)),
+        "head_w" => (Some(Emb), None),
+        "head_b" => (None, None),
+        other => bail!("no width rule for param '{other}'"),
+    })
+}
+
+/// Right-multiply along the trailing dim: `w[..., from] @ f[from, to]`.
+fn apply_right(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
+    let last = *t.shape.last().expect("tensor rank >= 1");
+    assert_eq!(last, from, "right-factor dim mismatch");
+    let rows = t.data.len() / from;
+    let mut out = vec![0.0f32; rows * to];
+    for r in 0..rows {
+        let wrow = &t.data[r * from..(r + 1) * from];
+        let orow = &mut out[r * to..(r + 1) * to];
+        for (c, &wv) in wrow.iter().enumerate() {
+            if wv == 0.0 {
+                continue;
+            }
+            let frow = &f[c * to..(c + 1) * to];
+            for j in 0..to {
+                orow[j] += wv * frow[j];
+            }
+        }
+    }
+    let mut shape = t.shape.clone();
+    *shape.last_mut().unwrap() = to;
+    Tensor { shape, data: out }
+}
+
+/// Left-multiply the second-to-last dim: `f[to, from] @ w[..., from, n]`,
+/// batched over any leading layer axis.
+fn apply_left(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
+    let rank = t.shape.len();
+    assert!(rank >= 2, "left factor needs a matrix");
+    let n = t.shape[rank - 1];
+    let m = t.shape[rank - 2];
+    assert_eq!(m, from, "left-factor dim mismatch");
+    let batches = t.data.len() / (m * n);
+    let mut out = vec![0.0f32; batches * to * n];
+    for bi in 0..batches {
+        let wb = &t.data[bi * m * n..(bi + 1) * m * n];
+        let ob = &mut out[bi * to * n..(bi + 1) * to * n];
+        for p in 0..to {
+            let frow = &f[p * from..(p + 1) * from];
+            let orow = &mut ob[p * n..(p + 1) * n];
+            for (c, &fv) in frow.iter().enumerate() {
+                if fv == 0.0 {
+                    continue;
+                }
+                let wrow = &wb[c * n..(c + 1) * n];
+                for j in 0..n {
+                    orow[j] += fv * wrow[j];
+                }
+            }
+        }
+    }
+    let mut shape = t.shape.clone();
+    shape[rank - 2] = to;
+    Tensor { shape, data: out }
+}
+
+/// Project every parameter through its stream pair.
+/// `coalesce = true` uses `(F_in, F_out)`; `false` uses `(T_in, T_out)`.
+fn apply_width(params: ParamMap, maps: &WidthMaps, coalesce: bool) -> Result<ParamMap> {
+    let mut out = ParamMap::new();
+    for (name, t) in params {
+        let (a, b) = width_rule(&name)?;
+        let mut t = t;
+        if let Some(bs) = b {
+            let sm = maps.stream(bs);
+            t = if coalesce {
+                apply_right(&t, &sm.f_out, sm.big, sm.small)
+            } else {
+                apply_right(&t, &sm.t_out, sm.small, sm.big)
+            };
+        }
+        if let Some(as_) = a {
+            let sm = maps.stream(as_);
+            t = if coalesce {
+                apply_left(&t, &sm.f_in, sm.big, sm.small)
+            } else {
+                apply_left(&t, &sm.t_in, sm.small, sm.big)
+            };
+        }
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Depth mixing on the stacked `blk.*` leaves:
+/// `out[k, …] = Σ_l w[l, …] · mat[l, k]`, `mat: [l_from, l_to]`.
+fn apply_depth(params: ParamMap, mat: &[f32], l_from: usize, l_to: usize) -> ParamMap {
+    let mut out = ParamMap::new();
+    for (name, t) in params {
+        if !name.starts_with("blk.") {
+            out.insert(name, t);
+            continue;
+        }
+        assert_eq!(t.shape[0], l_from, "depth mixing on wrong layer count");
+        let sz = t.data.len() / l_from;
+        let mut data = vec![0.0f32; l_to * sz];
+        for l in 0..l_from {
+            let src = &t.data[l * sz..(l + 1) * sz];
+            for k in 0..l_to {
+                let w = mat[l * l_to + k];
+                if w == 0.0 {
+                    continue;
+                }
+                let dst = &mut data[k * sz..(k + 1) * sz];
+                for i in 0..sz {
+                    dst[i] += w * src[i];
+                }
+            }
+        }
+        let mut shape = t.shape.clone();
+        shape[0] = l_to;
+        out.insert(name, Tensor { shape, data });
+    }
+    out
+}
+
+/// Depth matrices `R [l1, l2]` (Eq. 16) and `G [l2, l1]` (Eq. 9).
+fn depth_matrices(l1: usize, l2: usize) -> (Vec<f32>, Vec<f32>) {
+    let r = group_matrix(l1, l2, false);
+    let s = colsum_ff_t(&r, l1, l2);
+    let mut g = vec![0.0f32; l2 * l1];
+    for k in 0..l2 {
+        for i in 0..l1 {
+            g[k * l1 + i] = r[i * l2 + k] / s[i];
+        }
+    }
+    (r, g)
+}
+
+// ---------------------------------------------------------------------------
+// Public operators over flat state vectors
+// ---------------------------------------------------------------------------
+
+/// Algorithm 2: `state_big[3N₁+1] → state_small[3N₂+1]`.
+/// Theta is projected; Adam moments re-initialize to zero (App. C).
+pub fn coalesce(big: &ModelCfg, small: &ModelCfg, width: bool, depth: bool,
+                state: &[f32]) -> Result<Vec<f32>> {
+    if state.len() != big.state_len() {
+        bail!("coalesce: state len {} != {}", state.len(), big.state_len());
+    }
+    let mut params = unpack(big, &state[1..1 + big.n_params]);
+    if width {
+        let maps = WidthMaps::new(big, small)?;
+        params = apply_width(params, &maps, true)?;
+    }
+    if depth {
+        let (r, _) = depth_matrices(big.n_layer, small.n_layer);
+        params = apply_depth(params, &r, big.n_layer, small.n_layer);
+    }
+    let theta2 = pack(small, &params)?;
+    let mut out = vec![0.0f32; small.state_len()];
+    out[0] = state[0];
+    out[1..1 + small.n_params].copy_from_slice(&theta2);
+    Ok(out)
+}
+
+/// Stack every `blk.*` leaf flattened per layer → `[L, P]`
+/// (sorted name order; the App. J least-squares design matrix).
+fn stack_blk(params: &ParamMap) -> (usize, Vec<f32>) {
+    let l = params
+        .iter()
+        .find(|(n, _)| n.starts_with("blk."))
+        .map(|(_, t)| t.shape[0])
+        .unwrap_or(0);
+    let mut rows: Vec<Vec<f32>> = vec![Vec::new(); l];
+    for (name, t) in params {
+        if !name.starts_with("blk.") {
+            continue;
+        }
+        let sz = t.data.len() / l;
+        for (li, row) in rows.iter_mut().enumerate() {
+            row.extend_from_slice(&t.data[li * sz..(li + 1) * sz]);
+        }
+    }
+    let p = rows.first().map(Vec::len).unwrap_or(0);
+    let mut flat = Vec::with_capacity(l * p);
+    for row in rows {
+        flat.extend(row);
+    }
+    (p, flat)
+}
+
+/// Unrolled Gauss-Jordan solve `a·x = b` for tiny SPD(+ridge) systems
+/// (`a: [n,n]`, `b: [n,m]` → `x: [n,m]`; port of `_gauss_solve`).
+fn gauss_solve(a: &[f32], b: &[f32], n: usize, m: usize) -> Vec<f32> {
+    let cols = n + m;
+    let mut aug = vec![0.0f32; n * cols];
+    for i in 0..n {
+        aug[i * cols..i * cols + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        aug[i * cols + n..(i + 1) * cols].copy_from_slice(&b[i * m..(i + 1) * m]);
+    }
+    for i in 0..n {
+        let piv = aug[i * cols + i];
+        for j in 0..cols {
+            aug[i * cols + j] /= piv;
+        }
+        for r in 0..n {
+            if r == i {
+                continue;
+            }
+            let f = aug[r * cols + i];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..cols {
+                aug[r * cols + j] -= f * aug[i * cols + j];
+            }
+        }
+    }
+    let mut x = vec![0.0f32; n * m];
+    for i in 0..n {
+        x[i * m..(i + 1) * m].copy_from_slice(&aug[i * cols + n..(i + 1) * cols]);
+    }
+    x
+}
+
+/// Algorithms 3+4: `(state_big, state_small, α) → state_big'`.
+///
+/// De-coalesces the small theta back to the big geometry and interpolates
+/// `θ ← (1−α)·θ_big + α·D(θ_small)`; Adam moments re-initialize.
+/// `fit = true` replaces the analytic `G` with the closed-form least-squares
+/// fit against the pre-coalescing large parameters (App. J).
+pub fn refine(big: &ModelCfg, small: &ModelCfg, width: bool, depth: bool, fit: bool,
+              state_big: &[f32], state_small: &[f32], alpha: f32) -> Result<Vec<f32>> {
+    if state_big.len() != big.state_len() || state_small.len() != small.state_len() {
+        bail!("refine: state lengths {}/{} don't match configs",
+              state_big.len(), state_small.len());
+    }
+    let mut params = unpack(small, &state_small[1..1 + small.n_params]);
+    if width {
+        let maps = WidthMaps::new(big, small)?;
+        params = apply_width(params, &maps, false)?;
+    }
+    if depth {
+        let (_, g_analytic) = depth_matrices(big.n_layer, small.n_layer);
+        let g = if fit {
+            // A: width-decoalesced small layers [L2, P]; B: target [L1, P]
+            let (p, a) = stack_blk(&params);
+            let big_params = unpack(big, &state_big[1..1 + big.n_params]);
+            let (pb, b) = stack_blk(&big_params);
+            if p != pb {
+                bail!("refine_fit: stacked widths differ ({p} vs {pb})");
+            }
+            let (l2, l1) = (small.n_layer, big.n_layer);
+            // ata = A·Aᵀ + 1e-4·I   [L2, L2]
+            let mut ata = vec![0.0f32; l2 * l2];
+            for i in 0..l2 {
+                for j in 0..l2 {
+                    let mut acc = 0.0f32;
+                    for k in 0..p {
+                        acc += a[i * p + k] * a[j * p + k];
+                    }
+                    ata[i * l2 + j] = acc + if i == j { 1e-4 } else { 0.0 };
+                }
+            }
+            // rhs = A·Bᵀ   [L2, L1]
+            let mut rhs = vec![0.0f32; l2 * l1];
+            for i in 0..l2 {
+                for j in 0..l1 {
+                    let mut acc = 0.0f32;
+                    for k in 0..p {
+                        acc += a[i * p + k] * b[j * p + k];
+                    }
+                    rhs[i * l1 + j] = acc;
+                }
+            }
+            gauss_solve(&ata, &rhs, l2, l1)
+        } else {
+            g_analytic
+        };
+        params = apply_depth(params, &g, small.n_layer, big.n_layer);
+    }
+    let theta_d = pack(big, &params)?;
+    let n1 = big.n_params;
+    let mut out = vec![0.0f32; big.state_len()];
+    out[0] = state_big[0];
+    for i in 0..n1 {
+        out[1 + i] = (1.0 - alpha) * state_big[1 + i] + alpha * theta_d[i];
+    }
+    Ok(out)
+}
+
+/// Elementwise `(1−α)·a + α·b` over whole state vectors (Eq. 13).
+pub fn interp(a: &[f32], b: &[f32], alpha: f32) -> Result<Vec<f32>> {
+    if a.len() != b.len() {
+        bail!("interp: length mismatch {} vs {}", a.len(), b.len());
+    }
+    Ok(a.iter().zip(b).map(|(x, y)| (1.0 - alpha) * x + alpha * y).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::params::init_theta;
+
+    fn state_of(cfg: &ModelCfg, seed: u64) -> Vec<f32> {
+        let theta = init_theta(cfg, seed);
+        let mut st = vec![0.0f32; cfg.state_len()];
+        st[1..1 + cfg.n_params].copy_from_slice(&theta);
+        st
+    }
+
+    #[test]
+    fn group_matrix_columns_average() {
+        for (n1, n2, stack) in [(8, 4, true), (8, 6, false), (5, 2, false)] {
+            let f = group_matrix(n1, n2, stack);
+            // every row sums to the reciprocal of its group size > 0; every
+            // column sums to exactly 1 (averaging)
+            for j in 0..n2 {
+                let col: f32 = (0..n1).map(|i| f[i * n2 + j]).sum();
+                assert!((col - 1.0).abs() < 1e-6, "col {j} sums to {col}");
+            }
+            for i in 0..n1 {
+                let row: f32 = (0..n2).map(|j| f[i * n2 + j]).sum();
+                assert!(row > 0.0, "row {i} empty");
+            }
+        }
+    }
+
+    #[test]
+    fn coalesce_matches_small_layout() {
+        let m = Manifest::builtin();
+        let big = m.cfg("gpt_nano").unwrap();
+        let small = m.cfg("gpt_nano_lv2").unwrap();
+        let st = state_of(big, 3);
+        let out = coalesce(big, small, true, true, &st).unwrap();
+        assert_eq!(out.len(), small.state_len());
+        assert_eq!(out[0], st[0]);
+        // Adam moments zeroed
+        let n2 = small.n_params;
+        assert!(out[1 + n2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn refine_alpha0_returns_big_theta() {
+        let m = Manifest::builtin();
+        let big = m.cfg("gpt_nano").unwrap();
+        let small = m.cfg("gpt_nano_lv2").unwrap();
+        let stb = state_of(big, 5);
+        let sts = state_of(small, 6);
+        let out = refine(big, small, true, true, false, &stb, &sts, 0.0).unwrap();
+        for i in 0..big.n_params {
+            assert!((out[1 + i] - stb[1 + i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn refine_alpha1_is_pure_decoalescing() {
+        // α = 1 must be independent of the big state (Algorithms 3+4)
+        let m = Manifest::builtin();
+        let big = m.cfg("gpt_nano").unwrap();
+        let small = m.cfg("gpt_nano_lv2").unwrap();
+        let sts = state_of(small, 7);
+        let out_a = refine(big, small, true, true, false, &state_of(big, 1), &sts, 1.0).unwrap();
+        let out_b = refine(big, small, true, true, false, &state_of(big, 2), &sts, 1.0).unwrap();
+        assert_eq!(out_a[1..], out_b[1..], "α=1 depends on the big state");
+    }
+
+    #[test]
+    fn coalesce_then_decoalesce_is_near_identity_on_constant_heads() {
+        // A big model whose head pairs are identical coalesces losslessly:
+        // C then D(α=1) reproduces it exactly (the paper's Eq. 8–11 fixture).
+        let m = Manifest::builtin();
+        let big = m.cfg("gpt_nano").unwrap();
+        let small = m.cfg("gpt_nano_lv2").unwrap();
+        // build a head-symmetric theta: start from the decoalesced small model
+        let sts = state_of(small, 9);
+        let sym = refine(big, small, true, true, false, &state_of(big, 1), &sts, 1.0).unwrap();
+        let down = coalesce(big, small, true, true, &sym).unwrap();
+        let back = refine(big, small, true, true, false, &sym, &down, 1.0).unwrap();
+        let mut max_diff = 0.0f32;
+        for i in 0..big.n_params {
+            max_diff = max_diff.max((back[1 + i] - sym[1 + i]).abs());
+        }
+        assert!(max_diff < 1e-4, "C∘D round trip drifted by {max_diff}");
+    }
+
+    #[test]
+    fn gauss_solve_inverts() {
+        // a = [[2,1],[1,3]], b = identity → x = a⁻¹
+        let a = [2.0f32, 1.0, 1.0, 3.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0];
+        let x = gauss_solve(&a, &b, 2, 2);
+        let det = 5.0;
+        let want = [3.0 / det, -1.0 / det, -1.0 / det, 2.0 / det];
+        for i in 0..4 {
+            assert!((x[i] - want[i]).abs() < 1e-5, "{:?}", x);
+        }
+    }
+
+    #[test]
+    fn depth_only_and_width_only_pairs() {
+        let m = Manifest::builtin();
+        let big = m.cfg("gpt_nano").unwrap();
+        for (small_name, width, depth) in
+            [("gpt_nano_stk", false, true), ("gpt_nano_wid", true, false)]
+        {
+            let small = m.cfg(small_name).unwrap();
+            let st = state_of(big, 4);
+            let down = coalesce(big, small, width, depth, &st).unwrap();
+            assert_eq!(down.len(), small.state_len());
+            let up = refine(big, small, width, depth, false, &st, &down, 1.0).unwrap();
+            assert_eq!(up.len(), big.state_len());
+        }
+    }
+}

@@ -1,0 +1,742 @@
+//! Built-in model/artifact registry: the Rust mirror of
+//! `python/compile/configs.py` (model geometry) and the artifact plan of
+//! `python/compile/aot.py`.
+//!
+//! This is what lets the crate run **without** `make artifacts`: the
+//! [`ReferenceBackend`](super::ReferenceBackend) interprets artifact names
+//! directly, so all it needs is the same config registry and parameter
+//! layouts the AOT pipeline would have exported into `manifest.json`.
+//! Layout order matters: parameter names are sorted (mirroring
+//! `ravel_pytree`'s sorted-dict flattening), so a checkpoint written against
+//! a built-in config round-trips against an AOT manifest of the same config.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{num, obj, Json};
+
+use super::manifest::{
+    ArtifactSpec, Family, InitKind, InputSpec, Manifest, ModelCfg, ParamEntry,
+};
+
+/// Number of classes of the GLUE-substitute fine-tuning probes
+/// (`FT_CLASSES` in `aot.py`).
+pub const FT_CLASSES: usize = 4;
+
+/// LoRA adapter rank of the Fig. 8 baseline (`LORA_RANK` in `configs.py`).
+pub const LORA_RANK: usize = 4;
+
+/// FFN width multiple (`ModelConfig.ffn_mult`; constant across the registry).
+const FFN_MULT: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Config construction (mirrors configs.py + model.py layout/flops)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct Geometry {
+    name: String,
+    family: Family,
+    n_layer: usize,
+    n_head: usize,
+    head_dim: usize,
+    vocab: usize,
+    seq_len: usize,
+    batch: usize,
+    image_size: usize,
+    patch_size: usize,
+    n_classes: usize,
+}
+
+impl Geometry {
+    fn d_model(&self) -> usize {
+        self.n_head * self.head_dim
+    }
+    fn d_ff(&self) -> usize {
+        FFN_MULT * self.d_model()
+    }
+    fn n_patches(&self) -> usize {
+        let g = self.image_size / self.patch_size;
+        g * g
+    }
+    /// Tokens consumed per training step (per-step FLOPs scale).
+    fn tokens_per_step(&self) -> usize {
+        match self.family {
+            Family::Vit => self.batch * (self.n_patches() + 1),
+            _ => self.batch * self.seq_len,
+        }
+    }
+    /// Derived variant with a different depth/width (`with_size`).
+    fn with_size(&self, n_layer: usize, n_head: usize, suffix: &str) -> Geometry {
+        let mut g = self.clone();
+        g.name = format!("{}{suffix}", self.name);
+        g.n_layer = n_layer;
+        g.n_head = n_head;
+        g
+    }
+    /// Level-`level` coalesced geometry: depth and heads halve per level.
+    fn coalesced(&self, level: usize) -> Geometry {
+        assert!(level >= 2);
+        let f = 1 << (level - 1);
+        assert!(self.n_layer / f >= 1 && self.n_head / f >= 1);
+        self.with_size(self.n_layer / f, self.n_head / f, &format!("_lv{level}"))
+    }
+}
+
+fn lang(name: &str, family: Family, l: usize, h: usize, hd: usize, vocab: usize,
+        seq: usize, batch: usize) -> Geometry {
+    Geometry {
+        name: name.to_string(),
+        family,
+        n_layer: l,
+        n_head: h,
+        head_dim: hd,
+        vocab,
+        seq_len: seq,
+        batch,
+        image_size: 0,
+        patch_size: 0,
+        n_classes: 0,
+    }
+}
+
+fn vit(name: &str, l: usize, h: usize, hd: usize, img: usize, patch: usize,
+       classes: usize, batch: usize) -> Geometry {
+    Geometry {
+        name: name.to_string(),
+        family: Family::Vit,
+        n_layer: l,
+        n_head: h,
+        head_dim: hd,
+        vocab: 0,
+        seq_len: 0,
+        batch,
+        image_size: img,
+        patch_size: patch,
+        n_classes: classes,
+    }
+}
+
+/// Parameter spec `(name, shape, init)` — mirrors `model.param_spec`.
+fn param_spec(g: &Geometry) -> Vec<(String, Vec<usize>, InitKind)> {
+    let (d, dff, l) = (g.d_model(), g.d_ff(), g.n_layer);
+    let mut spec: Vec<(String, Vec<usize>, InitKind)> = Vec::new();
+    match g.family {
+        Family::Gpt | Family::Bert => {
+            spec.push(("emb".into(), vec![g.vocab, d], InitKind::Normal));
+            spec.push(("pos".into(), vec![g.seq_len, d], InitKind::Normal));
+        }
+        Family::Vit => {
+            spec.push(("patch_w".into(), vec![g.patch_size * g.patch_size * 3, d],
+                       InitKind::Normal));
+            spec.push(("patch_b".into(), vec![d], InitKind::Zeros));
+            spec.push(("cls".into(), vec![d], InitKind::Normal));
+            spec.push(("pos".into(), vec![g.n_patches() + 1, d], InitKind::Normal));
+        }
+    }
+    let blocks: [(&str, Vec<usize>, InitKind); 16] = [
+        ("ln1_w", vec![l, d], InitKind::Ones),
+        ("ln1_b", vec![l, d], InitKind::Zeros),
+        ("wq", vec![l, d, d], InitKind::Normal),
+        ("bq", vec![l, d], InitKind::Zeros),
+        ("wk", vec![l, d, d], InitKind::Normal),
+        ("bk", vec![l, d], InitKind::Zeros),
+        ("wv", vec![l, d, d], InitKind::Normal),
+        ("bv", vec![l, d], InitKind::Zeros),
+        ("wo", vec![l, d, d], InitKind::Normal),
+        ("bo", vec![l, d], InitKind::Zeros),
+        ("ln2_w", vec![l, d], InitKind::Ones),
+        ("ln2_b", vec![l, d], InitKind::Zeros),
+        ("fc1_w", vec![l, d, dff], InitKind::Normal),
+        ("fc1_b", vec![l, dff], InitKind::Zeros),
+        ("fc2_w", vec![l, dff, d], InitKind::Normal),
+        ("fc2_b", vec![l, d], InitKind::Zeros),
+    ];
+    for (name, shape, kind) in blocks {
+        spec.push((format!("blk.{name}"), shape, kind));
+    }
+    spec.push(("lnf_w".into(), vec![d], InitKind::Ones));
+    spec.push(("lnf_b".into(), vec![d], InitKind::Zeros));
+    let head_cols = match g.family {
+        Family::Vit => g.n_classes,
+        _ => g.vocab,
+    };
+    spec.push(("head_w".into(), vec![d, head_cols], InitKind::Normal));
+    spec.push(("head_b".into(), vec![head_cols], InitKind::Zeros));
+    spec
+}
+
+/// Matmul FLOPs per token, forward only (`model.flops_per_fwd_token`).
+fn flops_per_fwd_token(g: &Geometry) -> f64 {
+    let (d, dff, l) = (g.d_model() as f64, g.d_ff() as f64, g.n_layer as f64);
+    let s = match g.family {
+        Family::Vit => (g.n_patches() + 1) as f64,
+        _ => g.seq_len as f64,
+    };
+    let per_layer = 2.0 * (4.0 * d * d + 2.0 * d * dff);
+    let attn = 2.0 * 2.0 * s * d;
+    let head_cols = match g.family {
+        Family::Vit => g.n_classes as f64,
+        _ => g.vocab as f64,
+    };
+    let head = 2.0 * d * head_cols;
+    l * (per_layer + attn) + head
+}
+
+/// Full [`ModelCfg`] (layout sorted by name, offsets assigned, FLOPs).
+fn model_cfg(g: &Geometry) -> ModelCfg {
+    let mut spec = param_spec(g);
+    spec.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut layout = Vec::with_capacity(spec.len());
+    let mut off = 0usize;
+    for (name, shape, init) in spec {
+        let size: usize = shape.iter().product();
+        layout.push(ParamEntry { name, offset: off, shape, init });
+        off += size;
+    }
+    let fwd = flops_per_fwd_token(g);
+    ModelCfg {
+        name: g.name.clone(),
+        family: g.family,
+        n_layer: g.n_layer,
+        n_head: g.n_head,
+        head_dim: g.head_dim,
+        d_model: g.d_model(),
+        d_ff: g.d_ff(),
+        vocab: g.vocab,
+        seq_len: g.seq_len,
+        batch: g.batch,
+        image_size: g.image_size,
+        patch_size: g.patch_size,
+        n_classes: g.n_classes,
+        n_params: off,
+        tokens_per_step: g.tokens_per_step(),
+        flops_train_step: 3.0 * fwd * g.tokens_per_step() as f64,
+        flops_fwd_token: fwd,
+        layout,
+    }
+}
+
+/// Size of the fine-tune head appended to theta (`model.ft_head_size`).
+pub fn ft_head_size(cfg: &ModelCfg, n_cls: usize) -> usize {
+    cfg.d_model * n_cls + n_cls
+}
+
+/// Total LoRA adapter parameters (`model.lora_n_params`):
+/// `aq/bq2/av/bv2`, each `L·d·rank`.
+pub fn lora_n_params(cfg: &ModelCfg, rank: usize) -> usize {
+    4 * cfg.n_layer * cfg.d_model * rank
+}
+
+// ---------------------------------------------------------------------------
+// Artifact plan (mirrors aot.py build_plan)
+// ---------------------------------------------------------------------------
+
+fn state_input(cfg: &ModelCfg) -> InputSpec {
+    InputSpec {
+        name: "state".into(),
+        dtype: "float32".into(),
+        shape: vec![cfg.state_len()],
+    }
+}
+
+fn scalar_input(name: &str) -> InputSpec {
+    InputSpec { name: name.into(), dtype: "float32".into(), shape: vec![] }
+}
+
+fn batch_inputs(cfg: &ModelCfg) -> Vec<InputSpec> {
+    let b = cfg.batch;
+    match cfg.family {
+        Family::Gpt => vec![InputSpec {
+            name: "tokens".into(),
+            dtype: "int32".into(),
+            shape: vec![b, cfg.seq_len],
+        }],
+        Family::Bert => vec![
+            InputSpec {
+                name: "tokens".into(),
+                dtype: "int32".into(),
+                shape: vec![b, cfg.seq_len],
+            },
+            InputSpec {
+                name: "labels".into(),
+                dtype: "int32".into(),
+                shape: vec![b, cfg.seq_len],
+            },
+        ],
+        Family::Vit => vec![
+            InputSpec {
+                name: "images".into(),
+                dtype: "float32".into(),
+                shape: vec![b, cfg.image_size, cfg.image_size, 3],
+            },
+            InputSpec { name: "labels".into(), dtype: "int32".into(), shape: vec![b] },
+        ],
+    }
+}
+
+fn spec(name: String, kind: &str, config: &str, config_small: Option<&str>,
+        inputs: Vec<InputSpec>, output_shape: Vec<usize>, meta: Json) -> ArtifactSpec {
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: kind.into(),
+        config: config.into(),
+        config_small: config_small.map(String::from),
+        inputs,
+        output_shape,
+        meta,
+    }
+}
+
+fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<ArtifactSpec> {
+    let mut arts = Vec::new();
+    let mut train_inputs = vec![state_input(cfg)];
+    train_inputs.extend(batch_inputs(cfg));
+    train_inputs.push(scalar_input("lr"));
+    train_inputs.push(scalar_input("step"));
+    arts.push(spec(
+        format!("train_step__{}", cfg.name),
+        "train_step",
+        &cfg.name,
+        None,
+        train_inputs.clone(),
+        vec![cfg.state_len()],
+        Json::Null,
+    ));
+    let mut eval_inputs = vec![state_input(cfg)];
+    eval_inputs.extend(batch_inputs(cfg));
+    arts.push(spec(
+        format!("eval_loss__{}", cfg.name),
+        "eval_loss",
+        &cfg.name,
+        None,
+        eval_inputs.clone(),
+        vec![],
+        Json::Null,
+    ));
+    if with_pallas {
+        arts.push(spec(
+            format!("train_step_pallas__{}", cfg.name),
+            "train_step",
+            &cfg.name,
+            None,
+            train_inputs,
+            vec![cfg.state_len()],
+            obj(vec![("pallas", Json::Bool(true))]),
+        ));
+    }
+    if with_attn {
+        arts.push(spec(
+            format!("attn_maps__{}", cfg.name),
+            "attn_maps",
+            &cfg.name,
+            None,
+            vec![
+                state_input(cfg),
+                InputSpec {
+                    name: "tokens".into(),
+                    dtype: "int32".into(),
+                    shape: vec![cfg.batch, cfg.seq_len],
+                },
+            ],
+            vec![cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.seq_len],
+            Json::Null,
+        ));
+    }
+    if cfg.family == Family::Vit {
+        arts.push(spec(
+            format!("eval_acc__{}", cfg.name),
+            "eval_acc",
+            &cfg.name,
+            None,
+            eval_inputs,
+            vec![],
+            Json::Null,
+        ));
+    }
+    arts
+}
+
+fn op_artifacts(big: &ModelCfg, small: &ModelCfg, width: bool, depth: bool,
+                with_fit: bool) -> Vec<ArtifactSpec> {
+    let meta = || {
+        obj(vec![("width", Json::Bool(width)), ("depth", Json::Bool(depth))])
+    };
+    let refine_inputs = || {
+        vec![
+            state_input(big),
+            InputSpec {
+                name: "state_small".into(),
+                dtype: "float32".into(),
+                shape: vec![small.state_len()],
+            },
+            scalar_input("alpha"),
+        ]
+    };
+    let mut arts = vec![
+        spec(
+            format!("coalesce__{}__{}", big.name, small.name),
+            "coalesce",
+            &big.name,
+            Some(&small.name),
+            vec![state_input(big)],
+            vec![small.state_len()],
+            meta(),
+        ),
+        spec(
+            format!("refine__{}__{}", big.name, small.name),
+            "refine",
+            &big.name,
+            Some(&small.name),
+            refine_inputs(),
+            vec![big.state_len()],
+            meta(),
+        ),
+    ];
+    if with_fit {
+        arts.push(spec(
+            format!("refine_fit__{}__{}", big.name, small.name),
+            "refine",
+            &big.name,
+            Some(&small.name),
+            refine_inputs(),
+            vec![big.state_len()],
+            obj(vec![
+                ("width", Json::Bool(width)),
+                ("depth", Json::Bool(depth)),
+                ("fit", Json::Bool(true)),
+            ]),
+        ));
+    }
+    arts
+}
+
+fn interp_artifact(cfg: &ModelCfg) -> ArtifactSpec {
+    let n = cfg.state_len();
+    spec(
+        format!("interp__{}", cfg.name),
+        "interp",
+        &cfg.name,
+        None,
+        vec![
+            InputSpec { name: "a".into(), dtype: "float32".into(), shape: vec![n] },
+            InputSpec { name: "b".into(), dtype: "float32".into(), shape: vec![n] },
+            scalar_input("alpha"),
+        ],
+        vec![n],
+        Json::Null,
+    )
+}
+
+fn ft_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
+    let nf = cfg.n_params + ft_head_size(cfg, FT_CLASSES);
+    let st = InputSpec {
+        name: "state".into(),
+        dtype: "float32".into(),
+        shape: vec![3 * nf + 1],
+    };
+    let toks = InputSpec {
+        name: "tokens".into(),
+        dtype: "int32".into(),
+        shape: vec![cfg.batch, cfg.seq_len],
+    };
+    let labels = InputSpec {
+        name: "labels".into(),
+        dtype: "int32".into(),
+        shape: vec![cfg.batch],
+    };
+    let meta = || {
+        obj(vec![
+            ("n_ft", num(nf as f64)),
+            ("n_classes", num(FT_CLASSES as f64)),
+        ])
+    };
+    vec![
+        spec(
+            format!("ft_step__{}", cfg.name),
+            "ft_step",
+            &cfg.name,
+            None,
+            vec![st.clone(), toks.clone(), labels.clone(), scalar_input("lr"),
+                 scalar_input("step")],
+            vec![3 * nf + 1],
+            meta(),
+        ),
+        spec(
+            format!("ft_acc__{}", cfg.name),
+            "ft_acc",
+            &cfg.name,
+            None,
+            vec![st, toks, labels],
+            vec![],
+            meta(),
+        ),
+    ]
+}
+
+fn distill_artifact(student: &ModelCfg, teacher: &ModelCfg) -> ArtifactSpec {
+    let mut inputs = vec![
+        state_input(student),
+        InputSpec {
+            name: "theta_teacher".into(),
+            dtype: "float32".into(),
+            shape: vec![teacher.n_params],
+        },
+    ];
+    inputs.extend(batch_inputs(student));
+    inputs.push(scalar_input("kd_w"));
+    inputs.push(scalar_input("lr"));
+    inputs.push(scalar_input("step"));
+    spec(
+        format!("distill_step__{}__{}", student.name, teacher.name),
+        "distill_step",
+        &student.name,
+        Some(&teacher.name),
+        inputs,
+        vec![student.state_len()],
+        Json::Null,
+    )
+}
+
+fn lora_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
+    let rn = lora_n_params(cfg, LORA_RANK);
+    let st = InputSpec {
+        name: "state".into(),
+        dtype: "float32".into(),
+        shape: vec![3 * rn + 1],
+    };
+    let theta = InputSpec {
+        name: "theta_base".into(),
+        dtype: "float32".into(),
+        shape: vec![cfg.n_params],
+    };
+    let meta = || {
+        obj(vec![
+            ("rank", num(LORA_RANK as f64)),
+            ("n_lora", num(rn as f64)),
+        ])
+    };
+    let mut step_inputs = vec![st.clone(), theta.clone()];
+    step_inputs.extend(batch_inputs(cfg));
+    step_inputs.push(scalar_input("lr"));
+    step_inputs.push(scalar_input("step"));
+    let mut eval_inputs = vec![st, theta];
+    eval_inputs.extend(batch_inputs(cfg));
+    vec![
+        spec(
+            format!("lora_step__{}", cfg.name),
+            "lora_step",
+            &cfg.name,
+            None,
+            step_inputs,
+            vec![3 * rn + 1],
+            meta(),
+        ),
+        spec(
+            format!("lora_eval__{}", cfg.name),
+            "lora_eval",
+            &cfg.name,
+            None,
+            eval_inputs,
+            vec![],
+            meta(),
+        ),
+    ]
+}
+
+/// Build the complete built-in manifest: every config + artifact of the AOT
+/// plan, synthesized in-process. `fingerprint` is `"builtin"` so a stale
+/// on-disk manifest is never confused with this one.
+pub fn builtin_manifest() -> Manifest {
+    fn reg(g: &Geometry, configs: &mut BTreeMap<String, ModelCfg>) -> ModelCfg {
+        let cfg = model_cfg(g);
+        configs.entry(cfg.name.clone()).or_insert_with(|| cfg.clone());
+        cfg
+    }
+
+    let mut configs: BTreeMap<String, ModelCfg> = BTreeMap::new();
+    let mut arts: Vec<ArtifactSpec> = Vec::new();
+
+    // --- nano configs: tests + Pallas-integration proof -------------------
+    let nano_bases = [
+        lang("gpt_nano", Family::Gpt, 2, 2, 16, 64, 16, 4),
+        lang("bert_nano", Family::Bert, 2, 2, 16, 64, 16, 4),
+        vit("vit_nano", 2, 2, 16, 8, 4, 4, 4),
+    ];
+    for g1 in &nano_bases {
+        let c1 = reg(g1, &mut configs);
+        let g2 = g1.coalesced(2);
+        let c2 = reg(&g2, &mut configs);
+        arts.extend(model_artifacts(&c1, g1.name == "gpt_nano", false));
+        arts.extend(model_artifacts(&c2, false, false));
+        arts.extend(op_artifacts(&c1, &c2, true, true, false));
+    }
+    // gpt_nano also carries the full baseline set (CI-scale bench_tables)
+    let n1g = nano_bases[0].clone();
+    let n1 = configs["gpt_nano"].clone();
+    let n2 = configs["gpt_nano_lv2"].clone();
+    let ns = reg(&n1g.with_size(n1g.n_layer / 2, n1g.n_head, "_stk"), &mut configs);
+    let nw = reg(&n1g.with_size(n1g.n_layer, n1g.n_head / 2, "_wid"), &mut configs);
+    arts.extend(model_artifacts(&ns, false, false));
+    arts.extend(model_artifacts(&nw, false, false));
+    arts.extend(op_artifacts(&n1, &ns, false, true, false));
+    arts.extend(op_artifacts(&n1, &nw, true, false, false));
+    arts.push(distill_artifact(&n1, &n2));
+    // fast fine-tune probes for the test suite (bert_nano ft artifacts)
+    let bn = configs["bert_nano"].clone();
+    arts.extend(ft_artifacts(&bn));
+
+    // --- bert_base_sim: Fig. 3a, Table 1, Table 5, Fig. 1 -----------------
+    let b1g = lang("bert_base_sim", Family::Bert, 8, 8, 16, 512, 32, 8);
+    let b1 = reg(&b1g, &mut configs);
+    let b2 = reg(&b1g.coalesced(2), &mut configs);
+    let b3 = reg(&b1g.coalesced(3), &mut configs);
+    arts.extend(model_artifacts(&b1, false, true));
+    arts.extend(model_artifacts(&b2, false, false));
+    arts.extend(model_artifacts(&b3, false, false));
+    arts.extend(op_artifacts(&b1, &b2, true, true, false));
+    arts.extend(op_artifacts(&b2, &b3, true, true, false));
+    // Table 5 (D): alternative coalesced sizes ((4,4) is the default lv2)
+    for (l, h) in [(2usize, 2usize), (6, 6)] {
+        let cc = reg(&b1g.with_size(l, h, &format!("_c{l}x{h}")), &mut configs);
+        arts.extend(model_artifacts(&cc, false, false));
+        arts.extend(op_artifacts(&b1, &cc, true, true, false));
+    }
+    let bs = reg(&b1g.with_size(b1g.n_layer / 2, b1g.n_head, "_stk"), &mut configs);
+    let bw = reg(&b1g.with_size(b1g.n_layer, b1g.n_head / 2, "_wid"), &mut configs);
+    arts.extend(model_artifacts(&bs, false, false));
+    arts.extend(model_artifacts(&bw, false, false));
+    arts.extend(op_artifacts(&b1, &bs, false, true, false));
+    arts.extend(op_artifacts(&b1, &bw, true, false, false));
+    arts.push(distill_artifact(&b1, &b2));
+    arts.extend(ft_artifacts(&b1));
+    arts.extend(lora_artifacts(&b1));
+
+    // --- gpt_base_sim: Fig. 3b, Table 2, Fig. 4/6/7 -----------------------
+    let g1g = lang("gpt_base_sim", Family::Gpt, 6, 6, 16, 512, 32, 8);
+    let g1 = reg(&g1g, &mut configs);
+    let g2 = reg(&g1g.coalesced(2), &mut configs);
+    arts.extend(model_artifacts(&g1, false, false));
+    arts.extend(model_artifacts(&g2, false, false));
+    arts.extend(op_artifacts(&g1, &g2, true, true, true));
+    let gs = reg(&g1g.with_size(g1g.n_layer / 2, g1g.n_head, "_stk"), &mut configs);
+    let gw = reg(&g1g.with_size(g1g.n_layer, g1g.n_head / 2, "_wid"), &mut configs);
+    arts.extend(model_artifacts(&gs, false, false));
+    arts.extend(model_artifacts(&gw, false, false));
+    arts.extend(op_artifacts(&g1, &gs, false, true, false));
+    arts.extend(op_artifacts(&g1, &gw, true, false, false));
+    arts.push(distill_artifact(&g1, &g2));
+    // Fig. 4 registers a mid-size alias config (no extra artifacts)
+    reg(&g1g.coalesced(2).with_size(g2.n_layer, g2.n_head, "_m"), &mut configs);
+
+    // --- bert_large_sim: Fig. 3c, Table 4 ---------------------------------
+    let l1g = lang("bert_large_sim", Family::Bert, 12, 12, 16, 512, 32, 8);
+    let l1 = reg(&l1g, &mut configs);
+    let l2 = reg(&l1g.coalesced(2), &mut configs);
+    let l3 = reg(&l1g.coalesced(3), &mut configs);
+    arts.extend(model_artifacts(&l1, false, false));
+    arts.extend(model_artifacts(&l2, false, false));
+    arts.extend(model_artifacts(&l3, false, false));
+    arts.extend(op_artifacts(&l1, &l2, true, true, false));
+    arts.extend(op_artifacts(&l2, &l3, true, true, false));
+    arts.extend(ft_artifacts(&l1));
+
+    // --- vision: Table 3 (vit_b_sim), Table 6 (vit_s_sim) -----------------
+    for (vname, l, h) in [("vit_b_sim", 6usize, 6usize), ("vit_s_sim", 4, 4)] {
+        let v1g = vit(vname, l, h, 16, 16, 4, 8, 8);
+        let v1 = reg(&v1g, &mut configs);
+        let v2 = reg(&v1g.coalesced(2), &mut configs);
+        arts.extend(model_artifacts(&v1, false, false));
+        arts.extend(model_artifacts(&v2, false, false));
+        arts.extend(op_artifacts(&v1, &v2, true, true, false));
+        if vname == "vit_b_sim" {
+            let vs = reg(&v1g.with_size(v1g.n_layer / 2, v1g.n_head, "_stk"), &mut configs);
+            let vw = reg(&v1g.with_size(v1g.n_layer, v1g.n_head / 2, "_wid"), &mut configs);
+            arts.extend(model_artifacts(&vs, false, false));
+            arts.extend(model_artifacts(&vw, false, false));
+            arts.extend(op_artifacts(&v1, &vs, false, true, false));
+            arts.extend(op_artifacts(&v1, &vw, true, false, false));
+        }
+    }
+
+    // --- end-to-end example ------------------------------------------------
+    let e1g = lang("gpt_e2e", Family::Gpt, 6, 8, 32, 2048, 64, 8);
+    let e1 = reg(&e1g, &mut configs);
+    let e2 = reg(&e1g.coalesced(2), &mut configs);
+    arts.extend(model_artifacts(&e1, false, false));
+    arts.extend(model_artifacts(&e2, false, false));
+    arts.extend(op_artifacts(&e1, &e2, true, true, false));
+
+    // elementwise state interpolation for every config
+    let all: Vec<ModelCfg> = configs.values().cloned().collect();
+    for c in &all {
+        arts.push(interp_artifact(c));
+    }
+
+    // de-dup by name (configs shared across experiments)
+    let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+    for a in arts {
+        artifacts.entry(a.name.clone()).or_insert(a);
+    }
+
+    Manifest {
+        fingerprint: "builtin".to_string(),
+        ft_classes: FT_CLASSES,
+        lora_rank: LORA_RANK,
+        configs,
+        artifacts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_validates() {
+        let m = builtin_manifest();
+        m.validate().unwrap();
+        assert!(m.configs.len() >= 20, "{} configs", m.configs.len());
+        assert!(m.artifacts.len() >= 100, "{} artifacts", m.artifacts.len());
+    }
+
+    #[test]
+    fn gpt_nano_matches_aot_counts() {
+        // n_params and state length cross-checked against the AOT manifest
+        // (bench_runtime.rs hard-codes the 30144-param nano state).
+        let m = builtin_manifest();
+        let c = m.cfg("gpt_nano").unwrap();
+        assert_eq!(c.n_params, 30144);
+        assert_eq!(c.state_len(), 3 * 30144 + 1);
+        assert_eq!(c.d_model, 32);
+        let total: usize = c.layout.iter().map(|p| p.size()).sum();
+        assert_eq!(total, c.n_params);
+    }
+
+    #[test]
+    fn layout_is_sorted_and_contiguous() {
+        let m = builtin_manifest();
+        for cfg in m.configs.values() {
+            let mut off = 0usize;
+            let mut prev = String::new();
+            for p in &cfg.layout {
+                assert!(p.name > prev, "{}: {} out of order", cfg.name, p.name);
+                assert_eq!(p.offset, off, "{}: {} offset", cfg.name, p.name);
+                off += p.size();
+                prev = p.name.clone();
+            }
+            assert_eq!(off, cfg.n_params);
+        }
+    }
+
+    #[test]
+    fn levels_shrink_params() {
+        let m = builtin_manifest();
+        let base = m.cfg("bert_base_sim").unwrap();
+        let lv2 = m.cfg("bert_base_sim_lv2").unwrap();
+        let lv3 = m.cfg("bert_base_sim_lv3").unwrap();
+        assert!(lv2.n_params < base.n_params);
+        assert!(lv3.n_params < lv2.n_params);
+        assert_eq!(lv2.head_dim, base.head_dim);
+    }
+}

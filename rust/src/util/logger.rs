@@ -3,21 +3,30 @@
 //! Level comes from `ML_LOG` (error|warn|info|debug|trace), default `info`.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
+/// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but recoverable conditions.
     Warn = 1,
+    /// Progress reporting (default).
     Info = 2,
+    /// Verbose internals (compile times, cache hits).
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> &'static Instant {
+    START.get_or_init(Instant::now)
+}
 
 /// Install the level from `ML_LOG`; call once at startup (idempotent).
 pub fn init() {
@@ -29,7 +38,7 @@ pub fn init() {
         _ => Level::Info,
     };
     LEVEL.store(lvl as u8, Ordering::Relaxed);
-    Lazy::force(&START);
+    let _ = start();
 }
 
 pub fn set_level(lvl: Level) {
@@ -42,7 +51,7 @@ pub fn enabled(lvl: Level) -> bool {
 
 pub fn log(lvl: Level, args: std::fmt::Arguments) {
     if enabled(lvl) {
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         let tag = match lvl {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",

@@ -1,6 +1,7 @@
 //! Integration tests over the experiment harness: method programs compose,
 //! curves have the right structure, checkpoint/resume works end to end,
-//! fine-tuning probes learn.
+//! fine-tuning probes learn. All of it runs on the pure-Rust
+//! `ReferenceBackend` — no XLA device or AOT artifacts required.
 
 use multilevel::coordinator::finetune::finetune_once;
 use multilevel::coordinator::{Harness, Method, RunOpts};
@@ -8,7 +9,7 @@ use multilevel::runtime::{init_state, load_checkpoint, save_checkpoint, state_fr
                           Runtime};
 
 fn rt() -> Runtime {
-    Runtime::load(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+    Runtime::reference()
 }
 
 fn quick_opts(base: &str, steps: usize) -> RunOpts {
@@ -103,11 +104,11 @@ fn checkpoint_resume_roundtrip_through_device() {
 #[test]
 fn finetune_probe_beats_chance() {
     let rt = rt();
-    let cfg = rt.cfg("bert_base_sim").unwrap().clone();
+    let cfg = rt.cfg("bert_nano").unwrap().clone();
     // even an untrained backbone should learn an easy 4-way marker task well
     // above chance when fine-tuned end to end
     let theta = multilevel::runtime::init_theta(&cfg, 7);
-    let acc = finetune_once(&rt, "bert_base_sim", &theta, 0, 1, 150, 5e-3).unwrap();
+    let acc = finetune_once(&rt, "bert_nano", &theta, 0, 1, 150, 5e-3).unwrap();
     assert!(acc > 32.0, "probe accuracy {acc}% not above 25% chance");
 }
 

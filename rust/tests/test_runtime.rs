@@ -1,12 +1,15 @@
-//! Integration tests: the full AOT loop — manifest → compile → execute —
-//! over the nano artifacts. Requires `make artifacts` to have run.
+//! Integration tests: the full artifact loop — manifest → prepare → execute
+//! — over the nano configs on the [`ReferenceBackend`] (no XLA device, no
+//! `make artifacts` needed). Device-requiring coverage is gated behind the
+//! `pjrt` cargo feature at the bottom of this file.
+//!
+//! [`ReferenceBackend`]: multilevel::runtime::ReferenceBackend
 
 use multilevel::coordinator::{operators, LrSchedule, Trainer};
 use multilevel::runtime::{init_state, Runtime};
 
 fn rt() -> Runtime {
-    // tests run from the package root
-    Runtime::load(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+    Runtime::reference()
 }
 
 #[test]
@@ -20,6 +23,17 @@ fn manifest_loads_and_validates() {
     // layout covers theta exactly
     let total: usize = cfg.layout.iter().map(|p| p.size()).sum();
     assert_eq!(total, cfg.n_params);
+    rt.manifest.validate().unwrap();
+}
+
+#[test]
+fn unknown_artifact_and_config_error_cleanly() {
+    let rt = rt();
+    assert!(rt.cfg("no_such_config").is_err());
+    assert!(rt.exe("train_step__no_such_config").is_err());
+    // arity mismatch is rejected before execution
+    let exe = rt.exe("interp__gpt_nano").unwrap();
+    assert!(rt.call(&exe, &[]).is_err());
 }
 
 #[test]
@@ -28,9 +42,9 @@ fn train_step_reduces_loss_gpt_nano() {
     let cfg = rt.cfg("gpt_nano").unwrap().clone();
     let mut state = init_state(&rt, &cfg, 42).unwrap();
     let mut trainer = Trainer::new(&rt, "gpt_nano", 0, 7, 2).unwrap();
-    let sched = LrSchedule::new(5, 2e-3, 60);
+    let sched = LrSchedule::new(5, 2e-3, 80);
     let first = trainer.eval(&rt, &state).unwrap();
-    for step in 1..=60 {
+    for step in 1..=80 {
         let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step).unwrap();
         assert!(loss.is_finite(), "loss diverged at step {step}");
         state = s;
@@ -63,7 +77,9 @@ fn bert_and_vit_train_steps_run() {
 #[test]
 fn pallas_train_step_matches_ref_path() {
     // The gpt_nano Pallas-kernel build must produce (near-)identical losses
-    // to the ref-path build for the same seeds — kernels compose end to end.
+    // to the ref-path build for the same seeds. On the reference backend
+    // both names dispatch to the same host kernels, so this also proves the
+    // artifact alias resolves.
     let rt = rt();
     let cfg = rt.cfg("gpt_nano").unwrap().clone();
 
@@ -146,4 +162,33 @@ fn loss_scalar_read_matches_full_read() {
     let (s, loss) = trainer.step(&rt, &state, 1e-3, 1).unwrap();
     let full = s.to_host(&rt).unwrap();
     assert_eq!(loss, full[0], "partial read != full read");
+}
+
+// ---------------------------------------------------------------------------
+// Device-requiring coverage (needs `--features pjrt` + `make artifacts` +
+// a real `xla` crate vendored in place of the stub)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_manifest_loads_when_artifacts_present() {
+    let dir = std::env::var("ML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let path = std::path::Path::new(&dir);
+    if !path.join("manifest.json").exists() {
+        eprintln!("skipping: no AOT artifacts at {dir}");
+        return;
+    }
+    // the on-disk manifest must parse + validate regardless of device
+    let m = multilevel::runtime::Manifest::load(path).unwrap();
+    m.validate().unwrap();
+    // a real PJRT device (not the API stub) additionally runs a train step
+    if let Ok(rt) = Runtime::load(path) {
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let state = init_state(&rt, &cfg, 1).unwrap();
+        let mut tr = Trainer::new(&rt, "gpt_nano", 0, 2, 1).unwrap();
+        let (_, loss) = tr.step(&rt, &state, 1e-3, 1).unwrap();
+        assert!(loss.is_finite());
+    } else {
+        eprintln!("skipping device execution: PJRT client unavailable (xla stub)");
+    }
 }

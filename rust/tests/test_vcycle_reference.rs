@@ -1,0 +1,106 @@
+//! End-to-end V-cycle coverage on the [`ReferenceBackend`]: a 2-level
+//! BERT-tiny cycle (coalesce → train small → refine → train big) asserting
+//! that level transitions preserve shapes/param counts, that `refine(α=1)`
+//! reproduces pure de-coalescing exactly, and that the savings machinery
+//! runs end to end on plain CPU.
+//!
+//! [`ReferenceBackend`]: multilevel::runtime::ReferenceBackend
+
+use multilevel::coordinator::{operators, savings_vs_scratch, Harness, Method, RunOpts};
+use multilevel::runtime::{init_state, Runtime};
+
+fn opts(base: &str, steps: usize) -> RunOpts {
+    let mut o = RunOpts::quick(base, steps);
+    o.alpha = 0.5; // paper: α = 0.5 for BERT
+    o.eval_every = 10;
+    o.val_batches = 2;
+    o.budget_mult = 1.0;
+    o
+}
+
+#[test]
+fn bert_tiny_two_level_vcycle_end_to_end() {
+    let rt = Runtime::reference();
+    let base = "bert_nano";
+    let small = "bert_nano_lv2";
+    let h = Harness::new(&rt, opts(base, 40));
+    let curve = h.run_method(&Method::VCycle { levels: 2, fit: false }, None).unwrap();
+
+    // three phases: warmup on base, coarse phase on lv2, final on base
+    let phases: std::collections::BTreeSet<usize> =
+        curve.points.iter().map(|p| p.phase).collect();
+    assert!(phases.len() >= 3, "expected >= 3 phases, got {phases:?}");
+    let mid = curve.points.iter().find(|p| p.phase == 2).unwrap();
+    assert_eq!(mid.config, small);
+    assert_eq!(curve.points.last().unwrap().config, base);
+    assert!(curve.points.iter().all(|p| p.train_loss.is_finite()));
+    // coarse steps are cheaper (fewer params/FLOPs per step)
+    let df = |phase: usize| {
+        let pts: Vec<_> = curve.points.iter().filter(|p| p.phase == phase).collect();
+        (pts.last().unwrap().flops - pts[0].flops) / pts.len().max(1) as f64
+    };
+    assert!(df(2) < df(3), "coarse phase not cheaper: {} vs {}", df(2), df(3));
+}
+
+#[test]
+fn coalesce_train_refine_preserves_shapes_and_counts() {
+    let rt = Runtime::reference();
+    let base_cfg = rt.cfg("bert_nano").unwrap().clone();
+    let small_cfg = rt.cfg("bert_nano_lv2").unwrap().clone();
+    let state = init_state(&rt, &base_cfg, 11).unwrap();
+
+    let down = operators::coalesce(&rt, "bert_nano", "bert_nano_lv2", &state).unwrap();
+    assert_eq!(down.n_params, small_cfg.n_params);
+    let host = down.to_host(&rt).unwrap();
+    assert_eq!(host.len(), 3 * small_cfg.n_params + 1);
+    // Adam moments re-initialize at the transition (App. C)
+    assert!(host[1 + small_cfg.n_params..].iter().all(|&v| v == 0.0));
+
+    // train the coarse model a few steps, then come back up
+    let mut tr = multilevel::coordinator::Trainer::new(&rt, "bert_nano_lv2", 0, 5, 1).unwrap();
+    let mut coarse = down;
+    for step in 1..=5 {
+        let (s, loss) = tr.step(&rt, &coarse, 1e-3, step).unwrap();
+        assert!(loss.is_finite());
+        coarse = s;
+    }
+    let up = operators::refine(&rt, "bert_nano", "bert_nano_lv2", &state, &coarse, 0.5, false)
+        .unwrap();
+    assert_eq!(up.n_params, base_cfg.n_params);
+    assert_eq!(up.to_host(&rt).unwrap().len(), 3 * base_cfg.n_params + 1);
+}
+
+#[test]
+fn refine_alpha1_reproduces_decoalescing_exactly() {
+    // With α = 1 the interpolation keeps none of the big model: the result
+    // must be the pure de-coalescing of the small state, independent of
+    // which big state is passed in (Algorithms 3+4).
+    let rt = Runtime::reference();
+    let base_cfg = rt.cfg("bert_nano").unwrap().clone();
+    let small = init_state(&rt, rt.cfg("bert_nano_lv2").unwrap(), 3).unwrap();
+    let big_a = init_state(&rt, &base_cfg, 1).unwrap();
+    let big_b = init_state(&rt, &base_cfg, 2).unwrap();
+    let up_a =
+        operators::refine(&rt, "bert_nano", "bert_nano_lv2", &big_a, &small, 1.0, false).unwrap();
+    let up_b =
+        operators::refine(&rt, "bert_nano", "bert_nano_lv2", &big_b, &small, 1.0, false).unwrap();
+    assert_eq!(
+        up_a.theta(&rt).unwrap(),
+        up_b.theta(&rt).unwrap(),
+        "refine(α=1) depends on the big state — not pure de-coalescing"
+    );
+}
+
+#[test]
+fn savings_vs_scratch_runs_on_reference_backend() {
+    let rt = Runtime::reference();
+    let h = Harness::new(&rt, opts("bert_nano", 30));
+    let scratch = h.run_method(&Method::Scratch, None).unwrap();
+    let vcycle = h
+        .run_method(&Method::VCycle { levels: 2, fit: false },
+                    scratch.final_eval("bert_nano", 3))
+        .unwrap();
+    let s = savings_vs_scratch(&scratch, &vcycle, "bert_nano");
+    assert!(s.target.is_finite());
+    assert!(s.flops.is_finite() && s.wall.is_finite());
+}

@@ -1,0 +1,142 @@
+//! In-tree substrate for the `anyhow` crate — the offline registry this
+//! repository builds against has no crates.io access, so the subset of the
+//! `anyhow` API the workspace uses is reimplemented here as a path
+//! dependency (same pattern as the crate's `util::json` / `util::rng`
+//! substrates for serde / rand).
+//!
+//! Provided surface: [`Error`], [`Result`], the [`anyhow!`] and [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//! Error chains are flattened into a single message joined by `": "`, which
+//! is how this workspace renders them anyway.
+
+use std::fmt;
+
+/// A flattened error: the context chain joined into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (what `Context::context` does).
+    pub fn wrap<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: `Error` itself does not implement `std::error::Error`
+// (that would conflict with the blanket `From` below), but converts from
+// anything that does.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include the source chain, flattened
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: disk on fire");
+        let e2: Result<u32> = None.with_context(|| format!("missing {}", "key"));
+        assert_eq!(e2.unwrap_err().to_string(), "missing key");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn inner(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("too many: {n}");
+            }
+            Ok(())
+        }
+        assert!(inner(2).is_ok());
+        assert_eq!(inner(5).unwrap_err().to_string(), "too many: 5");
+    }
+}

@@ -1,0 +1,221 @@
+//! API-compatible **stub** of the subset of the `xla` crate (PJRT C-API
+//! bindings) that the `pjrt` feature of the `multilevel` crate compiles
+//! against.
+//!
+//! The offline registry has no `xla` crate and no XLA shared libraries, so
+//! this stub lets `cargo build --features pjrt` type-check everywhere while
+//! failing fast at runtime: [`PjRtClient::cpu`] returns an error explaining
+//! that the real bindings are not linked. To actually run against PJRT,
+//! vendor the real `xla` crate (same API surface) in place of this package —
+//! every type and signature here mirrors the real crate's.
+//!
+//! None of the value-carrying types ([`PjRtBuffer`], [`Literal`], …) can be
+//! observed in a live program built against the stub: the only constructor
+//! path starts at `PjRtClient::cpu()`, which always errors.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (implements `std::error::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub `Result` alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "built against the in-tree xla API stub; vendor the real `xla` crate \
+         (and its PJRT plugin) to enable the PJRT backend"
+            .to_string(),
+    ))
+}
+
+/// Element dtypes supported by the artifact contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// On-device shape of the buffer.
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        unavailable()
+    }
+
+    /// Synchronous device→host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host-side literal (device→host copy result).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Reinterpret the literal as a flat vector.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Opaque on-device shape.
+#[derive(Debug)]
+pub struct Shape {
+    _private: (),
+}
+
+/// Dense array shape (dims view over a [`Shape`]).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl TryFrom<&Shape> for ArrayShape {
+    type Error = Error;
+    fn try_from(_s: &Shape) -> Result<ArrayShape> {
+        unavailable()
+    }
+}
+
+/// Compiled + loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with buffer arguments; returns per-replica output buffers.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (one per plugin/device).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU-plugin client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Compile an [`XlaComputation`] for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    /// Upload a host tensor.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    /// Plugin platform name ("cpu", "cuda", …).
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO **text** (the interchange format emitted by `aot.py`).
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Computation handle accepted by [`PjRtClient::compile`].
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Graph builder (used for the tiny head-slice probe executable).
+#[derive(Debug)]
+pub struct XlaBuilder {
+    _private: (),
+}
+
+/// Graph op handle.
+#[derive(Debug)]
+pub struct XlaOp {
+    _private: (),
+}
+
+impl XlaBuilder {
+    /// New builder for a named computation.
+    pub fn new(_name: &str) -> XlaBuilder {
+        XlaBuilder { _private: () }
+    }
+
+    /// Declare parameter `index` with the given dtype/shape.
+    pub fn parameter(
+        &self,
+        _index: i64,
+        _ty: ElementType,
+        _dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        unavailable()
+    }
+}
+
+impl XlaOp {
+    /// `slice_in_dim(start, stop, dim)` with stride 1.
+    pub fn slice_in_dim1(&self, _start: i64, _stop: i64, _dim: i64) -> Result<XlaOp> {
+        unavailable()
+    }
+
+    /// Finish the computation rooted at this op.
+    pub fn build(&self) -> Result<XlaComputation> {
+        unavailable()
+    }
+}
