@@ -11,6 +11,7 @@ use multilevel::util::bench::{black_box, run};
 fn main() {
     let rt = Runtime::load_default().expect("runtime init");
     println!("== bench_runtime ==");
+    println!("device: {}", rt.device_info());
 
     // one explicit cold compile (the cache makes repeats meaningless)
     let t0 = std::time::Instant::now();

@@ -1,0 +1,114 @@
+//! CI bench gate: timed train-step smoke benches on the reference backend.
+//!
+//! Measures mean train-step wall time per config, writes a JSON report
+//! (the `BENCH_pr.json` CI artifact), and — when `--baseline` is given —
+//! exits nonzero if any config regressed more than `--max-regress`
+//! (default 0.5 = +50%) over the checked-in ceiling.
+//!
+//! ```sh
+//! cargo run --release --example bench_ci -- \
+//!     --out BENCH_pr.json --baseline ci/bench_baseline.json
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use multilevel::coordinator::Trainer;
+use multilevel::runtime::{init_state, Runtime};
+use multilevel::util::bench;
+use multilevel::util::cli::Args;
+use multilevel::util::json::{arr, num, obj, s, Json};
+use multilevel::util::threadpool;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let out_path = args.get_or("out", "BENCH_pr.json").to_string();
+    let baseline_path = args.get("baseline").map(str::to_string);
+    let max_regress = args.f64_or("max-regress", 0.5);
+    let budget = Duration::from_millis(args.u64_or("budget-ms", 1200));
+    let configs: Vec<String> = args
+        .get_or("configs", "gpt_nano,bert_nano,gpt_base_sim,bert_base_sim")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+
+    let rt = Runtime::reference();
+    println!("== bench_ci on {} ==", rt.device_info());
+
+    let mut rows = Vec::new();
+    for name in &configs {
+        let cfg = rt.cfg(name)?.clone();
+        let mut state = init_state(&rt, &cfg, 1)?;
+        let mut trainer = Trainer::new(&rt, name, 0, 2, 1)?;
+        let (warm, _) = trainer.step(&rt, &state, 1e-3, 1)?; // prepare + warm
+        state = warm;
+        let mut step = 1usize;
+        let stats = bench::run(&format!("train_step {name}"), budget, || {
+            step += 1;
+            let (next, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            state = next;
+        });
+        rows.push((name.clone(), stats));
+    }
+
+    let report = obj(vec![
+        ("schema", num(1.0)),
+        ("device", s(&rt.device_info())),
+        ("threads", num(threadpool::threads() as f64)),
+        (
+            "results",
+            arr(rows
+                .iter()
+                .map(|(name, st)| {
+                    obj(vec![
+                        ("config", s(name)),
+                        ("train_step_ms", num(st.mean.as_secs_f64() * 1e3)),
+                        ("p50_ms", num(st.p50.as_secs_f64() * 1e3)),
+                        ("min_ms", num(st.min.as_secs_f64() * 1e3)),
+                        ("iters", num(st.iters as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{report}\n"))
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+
+    let Some(bp) = baseline_path else {
+        return Ok(());
+    };
+    let text = std::fs::read_to_string(&bp).with_context(|| format!("reading {bp}"))?;
+    let base = Json::parse(&text).with_context(|| format!("parsing {bp}"))?;
+    let empty: &[Json] = &[];
+    let baseline_rows = base.get("results").as_arr().unwrap_or(empty);
+    println!("-- gate: max allowed regression +{:.0}% over {bp} --", max_regress * 100.0);
+    let mut failures = Vec::new();
+    for (name, st) in &rows {
+        let got_ms = st.mean.as_secs_f64() * 1e3;
+        let base_ms = baseline_rows
+            .iter()
+            .find(|e| e.get("config").as_str() == Some(name.as_str()))
+            .and_then(|e| e.get("train_step_ms").as_f64);
+        match base_ms {
+            None => println!("  {name:16} {got_ms:10.2} ms  (no baseline entry — recorded only)"),
+            Some(b) => {
+                let limit = b * (1.0 + max_regress);
+                let verdict = if got_ms > limit {
+                    failures.push(name.clone());
+                    "REGRESSED"
+                } else {
+                    "ok"
+                };
+                println!(
+                    "  {name:16} {got_ms:10.2} ms  baseline {b:.2} ms  limit {limit:.2} ms  {verdict}"
+                );
+            }
+        }
+    }
+    if !failures.is_empty() {
+        eprintln!("bench gate failed for: {}", failures.join(", "));
+        std::process::exit(1);
+    }
+    Ok(())
+}

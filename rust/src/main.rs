@@ -52,6 +52,7 @@ fn main() -> Result<()> {
 fn cmd_info() -> Result<()> {
     let rt = Runtime::load_default()?;
     println!("platform: {}", rt.platform_name());
+    println!("device:   {}", rt.device_info());
     println!("fingerprint: {}", rt.manifest.fingerprint);
     println!("configs: {}", rt.manifest.configs.len());
     for (name, c) in &rt.manifest.configs {
@@ -124,6 +125,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
     let rt = Runtime::load_default()?;
+    println!("device: {}", rt.device_info());
     let config = args.get("config").unwrap_or("gpt_nano").to_string();
     let cfg = rt.cfg(&config)?.clone();
     let mut state = init_state(&rt, &cfg, 1)?;

@@ -134,6 +134,13 @@ pub trait Backend {
     /// Human-readable platform name ("reference-cpu", "pjrt:cpu", …).
     fn platform_name(&self) -> String;
 
+    /// One-line executor description for logs and `info` output — thread
+    /// counts, tile/block sizes, driver details. Defaults to
+    /// [`platform_name`](Backend::platform_name).
+    fn device_info(&self) -> String {
+        self.platform_name()
+    }
+
     /// Make an artifact executable (compile/cache); idempotent. The
     /// reference backend validates the name; the PJRT backend compiles the
     /// HLO file and caches the loaded executable.

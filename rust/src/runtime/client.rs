@@ -95,6 +95,17 @@ impl Runtime {
         self.backend.platform_name()
     }
 
+    /// One-line executor description (thread count, GEMM block sizes, …).
+    ///
+    /// ```
+    /// use multilevel::runtime::Runtime;
+    /// let rt = Runtime::reference();
+    /// assert!(rt.device_info().contains("threads="));
+    /// ```
+    pub fn device_info(&self) -> String {
+        self.backend.device_info()
+    }
+
     /// The backend itself (device info, compile accounting).
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()

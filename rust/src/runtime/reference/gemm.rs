@@ -1,0 +1,337 @@
+//! Cache-blocked, transpose-aware f32 GEMM — the single dense kernel behind
+//! every `matmul*` wrapper in [`model`](super::model).
+//!
+//! Shape: `C[m,n] (+)= opA(A) · opB(B)` with `opA(A) = A[m,k]` or `A[k,m]ᵀ`
+//! and `opB(B) = B[k,n]` or `B[n,k]ᵀ`, which covers the four dense kernels
+//! the transformer needs (forward, weight-gradient, activation-gradient).
+//!
+//! Scheme (BLIS-lite, no split-K):
+//! * B is packed once per call into `NR`-column panels, k-major and
+//!   zero-padded — a transposed operand only changes the pack gather, never
+//!   the inner loop;
+//! * the M dimension is cut into [`MC`]-row blocks, the thread pool's unit
+//!   of parallelism; each block packs its A rows `MR`-interleaved k-major
+//!   and runs an `MR×NR` register-tile micro-kernel over the full K extent.
+//!
+//! # Determinism
+//!
+//! Every output element is accumulated over `k` in strictly ascending order
+//! by exactly one task, so results are bit-identical for every thread count
+//! — and bit-identical to a naive triple loop with a private accumulator
+//! (the test oracle asserts exact equality, not a tolerance).
+
+use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// Micro-tile rows (register accumulator height).
+pub const MR: usize = 8;
+/// Micro-tile columns (register accumulator width = B panel width).
+pub const NR: usize = 8;
+/// Rows per parallel task — the M-blocking factor. Kept small so that
+/// short-M shapes (weight gradients, `m = d_model`) still split into
+/// enough tasks to fill a 4-core runner.
+pub const MC: usize = 32;
+/// Under this many multiply-adds a pool dispatch costs more than it saves.
+const PAR_FLOP_MIN: usize = 1 << 17;
+
+/// `out[m,n] (+)= opA(a) · opB(b)`; `acc` selects `+=` over `=`, `ta`/`tb`
+/// mark `a`/`b` as stored transposed (`a: [k,m]`, `b: [n,k]`).
+pub fn gemm(
+    out: &mut [f32],
+    acc: bool,
+    a: &[f32],
+    ta: bool,
+    b: &[f32],
+    tb: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(out.len(), m * n, "gemm: C has {} elems, want {m}x{n}", out.len());
+    assert_eq!(a.len(), m * k, "gemm: A has {} elems, want {m}x{k}", a.len());
+    assert_eq!(b.len(), k * n, "gemm: B has {} elems, want {k}x{n}", b.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            out.fill(0.0);
+        }
+        return;
+    }
+    let pb = pack_b(b, tb, k, n);
+    let blocks = m.div_ceil(MC);
+    let cbase = SendPtr(out.as_mut_ptr());
+    let block = |blk: usize| {
+        let i0 = blk * MC;
+        let mrows = MC.min(m - i0);
+        // SAFETY: MC-row C blocks are pairwise disjoint and in bounds;
+        // `out` is exclusively borrowed for the whole call.
+        let cblk = unsafe { cbase.slice_mut(i0 * n, mrows * n) };
+        gemm_block(cblk, acc, a, ta, &pb, i0, mrows, m, k, n);
+    };
+    if m * n * k < PAR_FLOP_MIN {
+        for blk in 0..blocks {
+            block(blk);
+        }
+    } else {
+        parallel_for(blocks, block);
+    }
+}
+
+/// Pack `opB(b)` into zero-padded `NR`-column panels, k-major:
+/// `pb[p · k·NR + kk · NR + jj] = B_logical[kk, p·NR + jj]`.
+fn pack_b(b: &[f32], tb: bool, k: usize, n: usize) -> Vec<f32> {
+    let np = n.div_ceil(NR);
+    let mut pb = vec![0.0f32; np * k * NR];
+    for p in 0..np {
+        let j0 = p * NR;
+        let jn = NR.min(n - j0);
+        let panel = &mut pb[p * k * NR..(p + 1) * k * NR];
+        if tb {
+            // b is [n, k]: logical column j0+jj is row j0+jj of b
+            for jj in 0..jn {
+                let brow = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+                for (kk, &v) in brow.iter().enumerate() {
+                    panel[kk * NR + jj] = v;
+                }
+            }
+        } else {
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + jn].copy_from_slice(&b[kk * n + j0..kk * n + j0 + jn]);
+            }
+        }
+    }
+    pb
+}
+
+/// One MC-row block: pack A panels, run the micro-kernel over every B panel.
+fn gemm_block(
+    cblk: &mut [f32],
+    acc: bool,
+    a: &[f32],
+    ta: bool,
+    pb: &[f32],
+    i0: usize,
+    mrows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let np = n.div_ceil(NR);
+    let mut pa = vec![0.0f32; MR * k];
+    let row_panels = mrows.div_ceil(MR);
+    for r in 0..row_panels {
+        let ri = r * MR;
+        let mr = MR.min(mrows - ri);
+        // pack A rows i0+ri .. i0+ri+mr, MR-interleaved k-major
+        if mr < MR {
+            pa.fill(0.0); // keep the padded lanes zero
+        }
+        if ta {
+            // a is [k, m]
+            for kk in 0..k {
+                let arow = &a[kk * m + i0 + ri..kk * m + i0 + ri + mr];
+                pa[kk * MR..kk * MR + mr].copy_from_slice(arow);
+            }
+        } else {
+            // a is [m, k]
+            for ii in 0..mr {
+                let arow = &a[(i0 + ri + ii) * k..(i0 + ri + ii + 1) * k];
+                for (kk, &v) in arow.iter().enumerate() {
+                    pa[kk * MR + ii] = v;
+                }
+            }
+        }
+        for p in 0..np {
+            let j0 = p * NR;
+            let jn = NR.min(n - j0);
+            let panel = &pb[p * k * NR..(p + 1) * k * NR];
+            // MR×NR register tile; k strictly ascending (the determinism
+            // contract — no split-K, no reassociation)
+            let mut t = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let arow = &pa[kk * MR..(kk + 1) * MR];
+                let brow = &panel[kk * NR..(kk + 1) * NR];
+                for ii in 0..MR {
+                    let av = arow[ii];
+                    let trow = &mut t[ii];
+                    for (jj, &bv) in brow.iter().enumerate() {
+                        trow[jj] += av * bv;
+                    }
+                }
+            }
+            for ii in 0..mr {
+                let crow = &mut cblk[(ri + ii) * n + j0..(ri + ii) * n + j0 + jn];
+                let trow = &t[ii];
+                if acc {
+                    for jj in 0..jn {
+                        crow[jj] += trow[jj];
+                    }
+                } else {
+                    crow.copy_from_slice(&trow[..jn]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::{set_threads, threads, TEST_POOL_LOCK};
+
+    /// The old naive kernels, generalized into one test-only oracle: a
+    /// triple loop with a private accumulator and the same per-element k
+    /// order as the blocked kernel, so comparisons are exact.
+    fn naive(
+        out: &mut [f32],
+        acc: bool,
+        a: &[f32],
+        ta: bool,
+        b: &[f32],
+        tb: bool,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    let av = if ta { a[kk * m + i] } else { a[i * k + kk] };
+                    let bv = if tb { b[j * k + kk] } else { b[kk * n + j] };
+                    s += av * bv;
+                }
+                let o = &mut out[i * n + j];
+                if acc {
+                    *o += s;
+                } else {
+                    *o = s;
+                }
+            }
+        }
+    }
+
+    fn fill_rng(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    type Case = (usize, usize, usize, bool, bool, bool, u64);
+
+    fn run_case(case: &Case) -> Result<(), String> {
+        let &(m, k, n, ta, tb, acc, seed) = case;
+        let mut rng = Rng::new(seed);
+        let a = fill_rng(&mut rng, m * k);
+        let b = fill_rng(&mut rng, k * n);
+        let init = fill_rng(&mut rng, m * n);
+        let mut want = init.clone();
+        naive(&mut want, acc, &a, ta, &b, tb, m, k, n);
+        let mut got = init;
+        gemm(&mut got, acc, &a, ta, &b, tb, m, k, n);
+        for i in 0..m * n {
+            if want[i].to_bits() != got[i].to_bits() {
+                return Err(format!(
+                    "m={m} k={k} n={n} ta={ta} tb={tb} acc={acc}: C[{i}] = {} want {}",
+                    got[i], want[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn matches_naive_on_edge_shapes() {
+        // 1×N / N×1 edges, odd sizes, exact tile multiples, tile+1 overhangs
+        let shapes = [
+            (1, 1, 1),
+            (1, 7, 1),
+            (1, 1, 9),
+            (5, 1, 3),
+            (1, 16, 33),
+            (33, 16, 1),
+            (8, 8, 8),
+            (9, 9, 9),
+            (13, 17, 19),
+            (64, 32, 8),
+            (65, 3, 17),
+            (70, 33, 41),
+        ];
+        let mut seed = 100;
+        for (m, k, n) in shapes {
+            for ta in [false, true] {
+                for tb in [false, true] {
+                    for acc in [false, true] {
+                        seed += 1;
+                        if let Err(e) = run_case(&(m, k, n, ta, tb, acc, seed)) {
+                            panic!("{e}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_matches_naive_on_random_shapes() {
+        check(
+            "gemm == naive oracle",
+            7,
+            60,
+            |r| {
+                (
+                    1 + r.below(48),
+                    1 + r.below(48),
+                    1 + r.below(48),
+                    r.below(2) == 1,
+                    r.below(2) == 1,
+                    r.below(2) == 1,
+                    r.next_u64(),
+                )
+            },
+            |&(m, k, n, ta, tb, acc, seed)| {
+                let mut cands: Vec<Case> = Vec::new();
+                if m > 1 {
+                    cands.push((m / 2, k, n, ta, tb, acc, seed));
+                }
+                if k > 1 {
+                    cands.push((m, k / 2, n, ta, tb, acc, seed));
+                }
+                if n > 1 {
+                    cands.push((m, k, n / 2, ta, tb, acc, seed));
+                }
+                cands
+            },
+            run_case,
+        );
+    }
+
+    #[test]
+    fn crosses_the_parallel_threshold_and_stays_exact() {
+        // m spans multiple MC blocks and m·n·k exceeds PAR_FLOP_MIN, so the
+        // parallel path runs (when the pool has > 1 thread)
+        run_case(&(130, 64, 40, false, false, false, 42)).unwrap();
+        run_case(&(130, 64, 40, true, true, true, 43)).unwrap();
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let _g = TEST_POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = threads();
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (150, 70, 60); // parallel path for threads > 1
+        let a = fill_rng(&mut rng, m * k);
+        let b = fill_rng(&mut rng, k * n);
+        let mut runs = Vec::new();
+        for t in [1usize, 2, 8] {
+            set_threads(t);
+            let mut c = vec![0.0f32; m * n];
+            gemm(&mut c, false, &a, false, &b, false, m, k, n);
+            runs.push(c);
+        }
+        set_threads(before);
+        assert_eq!(runs[0], runs[1], "1 vs 2 threads");
+        assert_eq!(runs[0], runs[2], "1 vs 8 threads");
+    }
+}

@@ -13,6 +13,7 @@
 //! state and batch always produce bit-identical outputs — which the
 //! experiment harness relies on for seed-reproducible comparisons.
 
+pub mod gemm;
 pub mod model;
 pub mod ops;
 
@@ -22,10 +23,16 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::backend::{Arg, Backend, Buffer};
 use super::manifest::{ArtifactSpec, Family, Manifest, ModelCfg};
+use crate::util::threadpool;
 use model::BatchRef;
 
 /// The pure-Rust reference backend. Holds only the config registry; all
 /// state lives in the [`Buffer`]s the coordinator passes around.
+///
+/// Compute kernels run on the shared fork-join pool
+/// ([`crate::util::threadpool`]) over a cache-blocked GEMM ([`gemm`]);
+/// `PALLAS_REF_THREADS` (or [`ReferenceBackend::with_threads`]) sets the
+/// fan-out. Results are bit-identical for every thread count.
 pub struct ReferenceBackend {
     configs: BTreeMap<String, ModelCfg>,
 }
@@ -73,8 +80,21 @@ const KINDS: [&str; 12] = [
 
 impl ReferenceBackend {
     /// Backend over a manifest's config registry (usually
-    /// [`Manifest::builtin`]).
+    /// [`Manifest::builtin`]). Thread count comes from the shared pool
+    /// (`PALLAS_REF_THREADS`, default: available parallelism).
     pub fn new(manifest: &Manifest) -> ReferenceBackend {
+        Self::with_threads(manifest, threadpool::threads())
+    }
+
+    /// Backend constructed with an explicit compute-thread count.
+    ///
+    /// The kernel pool is **process-global**: this resizes it for every
+    /// reference backend in the process (the last call wins), it does not
+    /// pin this instance in isolation. Results never depend on the thread
+    /// count — only wall time does — so sharing the pool is observable
+    /// only through timing.
+    pub fn with_threads(manifest: &Manifest, threads: usize) -> ReferenceBackend {
+        threadpool::set_threads(threads);
         ReferenceBackend { configs: manifest.configs.clone() }
     }
 
@@ -133,6 +153,16 @@ impl ReferenceBackend {
 impl Backend for ReferenceBackend {
     fn platform_name(&self) -> String {
         "reference-cpu".to_string()
+    }
+
+    fn device_info(&self) -> String {
+        format!(
+            "reference-cpu (threads={}, gemm {}x{} micro-tile, {}-row blocks)",
+            threadpool::threads(),
+            gemm::MR,
+            gemm::NR,
+            gemm::MC,
+        )
     }
 
     fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {

@@ -11,7 +11,11 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::gemm::gemm;
 use crate::runtime::manifest::{Family, ModelCfg};
+use crate::util::threadpool::{
+    par_chunks_mut, parallel_for_min, SendPtr, ELEM_CHUNK, ROW_CHUNK,
+};
 
 /// AdamW hyper-parameters (`model.py` constants).
 pub const ADAM_B1: f32 = 0.9;
@@ -35,63 +39,28 @@ pub enum BatchRef<'a> {
 }
 
 // ---------------------------------------------------------------------------
-// Small dense kernels (row-major)
+// Small dense kernels (row-major). The four matmul shapes are thin wrappers
+// over the blocked, thread-parallel GEMM in [`super::gemm`].
 // ---------------------------------------------------------------------------
 
 /// `out[m,n] = a[m,k] @ b[k,n]` (overwrites `out`).
 fn matmul(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    out[..m * n].fill(0.0);
-    matmul_acc(out, a, b, m, k, n);
+    gemm(out, false, a, false, b, false, m, k, n);
 }
 
 /// `out[m,n] += a[m,k] @ b[k,n]`.
 fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
+    gemm(out, true, a, false, b, false, m, k, n);
 }
 
 /// `out[m,n] += a[k,m]ᵀ @ b[k,n]` (weight-gradient shape).
 fn matmul_at_b_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
+    gemm(out, true, a, true, b, false, m, k, n);
 }
 
 /// `out[m,n] = a[m,k] @ b[n,k]ᵀ` (activation-gradient shape; overwrites).
 fn matmul_a_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            *o = acc;
-        }
-    }
+    gemm(out, false, a, false, b, true, m, k, n);
 }
 
 /// Broadcast-add a row bias: `x[t, :] += bias` for every row.
@@ -128,6 +97,8 @@ fn gelu_grad(u: f32) -> f32 {
 }
 
 /// LayerNorm over trailing dim; fills `xhat`, `rstd`, `y = xhat·w + b`.
+/// Row-parallel; per-row math is untouched, so results are thread-count
+/// independent.
 fn layernorm_fwd(
     x: &[f32],
     w: &[f32],
@@ -138,30 +109,47 @@ fn layernorm_fwd(
     rstd: &mut [f32],
     y: &mut [f32],
 ) {
-    for t in 0..rows {
-        let xi = &x[t * d..(t + 1) * d];
-        let mut mu = 0.0f32;
-        for &v in xi {
-            mu += v;
+    assert_eq!(xhat.len(), rows * d);
+    assert_eq!(rstd.len(), rows);
+    assert_eq!(y.len(), rows * d);
+    let px = SendPtr(xhat.as_mut_ptr());
+    let pr = SendPtr(rstd.as_mut_ptr());
+    let py = SendPtr(y.as_mut_ptr());
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    parallel_for_min(rows * d, chunks, |c| {
+        let t0 = c * ROW_CHUNK;
+        let t1 = (t0 + ROW_CHUNK).min(rows);
+        // SAFETY: row ranges [t0, t1) are pairwise disjoint across chunks.
+        let xhat = unsafe { px.slice_mut(t0 * d, (t1 - t0) * d) };
+        let rstd = unsafe { pr.slice_mut(t0, t1 - t0) };
+        let y = unsafe { py.slice_mut(t0 * d, (t1 - t0) * d) };
+        for t in t0..t1 {
+            let xi = &x[t * d..(t + 1) * d];
+            let mut mu = 0.0f32;
+            for &v in xi {
+                mu += v;
+            }
+            mu /= d as f32;
+            let mut var = 0.0f32;
+            for &v in xi {
+                var += (v - mu) * (v - mu);
+            }
+            var /= d as f32;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            rstd[t - t0] = rs;
+            let xh = &mut xhat[(t - t0) * d..(t - t0 + 1) * d];
+            let yo = &mut y[(t - t0) * d..(t - t0 + 1) * d];
+            for j in 0..d {
+                xh[j] = (xi[j] - mu) * rs;
+                yo[j] = xh[j] * w[j] + b[j];
+            }
         }
-        mu /= d as f32;
-        let mut var = 0.0f32;
-        for &v in xi {
-            var += (v - mu) * (v - mu);
-        }
-        var /= d as f32;
-        let rs = 1.0 / (var + LN_EPS).sqrt();
-        rstd[t] = rs;
-        let xh = &mut xhat[t * d..(t + 1) * d];
-        let yo = &mut y[t * d..(t + 1) * d];
-        for j in 0..d {
-            xh[j] = (xi[j] - mu) * rs;
-            yo[j] = xh[j] * w[j] + b[j];
-        }
-    }
+    });
 }
 
-/// LayerNorm backward. `dx += …`; `dw/db += …`.
+/// LayerNorm backward. `dx += …`; `dw/db += …`. Row-parallel with per-chunk
+/// `dw`/`db` partials combined in fixed chunk order (thread-count
+/// independent).
 fn layernorm_bwd(
     dy: &[f32],
     xhat: &[f32],
@@ -173,25 +161,48 @@ fn layernorm_bwd(
     dw: &mut [f32],
     db: &mut [f32],
 ) {
-    for t in 0..rows {
-        let dyi = &dy[t * d..(t + 1) * d];
-        let xh = &xhat[t * d..(t + 1) * d];
-        let mut mean_dxhat = 0.0f32;
-        let mut mean_dxhat_xhat = 0.0f32;
-        for j in 0..d {
-            let dxh = dyi[j] * w[j];
-            mean_dxhat += dxh;
-            mean_dxhat_xhat += dxh * xh[j];
-            dw[j] += dyi[j] * xh[j];
-            db[j] += dyi[j];
+    assert_eq!(dx.len(), rows * d);
+    assert_eq!(dw.len(), d);
+    assert_eq!(db.len(), d);
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    let mut partials = vec![0.0f32; chunks * 2 * d];
+    let pdx = SendPtr(dx.as_mut_ptr());
+    let pp = SendPtr(partials.as_mut_ptr());
+    parallel_for_min(rows * d, chunks, |c| {
+        let t0 = c * ROW_CHUNK;
+        let t1 = (t0 + ROW_CHUNK).min(rows);
+        // SAFETY: chunk c exclusively owns dx rows [t0, t1) and its own
+        // 2·d partial slot.
+        let dx = unsafe { pdx.slice_mut(t0 * d, (t1 - t0) * d) };
+        let part = unsafe { pp.slice_mut(c * 2 * d, 2 * d) };
+        let (dwp, dbp) = part.split_at_mut(d);
+        for t in t0..t1 {
+            let dyi = &dy[t * d..(t + 1) * d];
+            let xh = &xhat[t * d..(t + 1) * d];
+            let mut mean_dxhat = 0.0f32;
+            let mut mean_dxhat_xhat = 0.0f32;
+            for j in 0..d {
+                let dxh = dyi[j] * w[j];
+                mean_dxhat += dxh;
+                mean_dxhat_xhat += dxh * xh[j];
+                dwp[j] += dyi[j] * xh[j];
+                dbp[j] += dyi[j];
+            }
+            mean_dxhat /= d as f32;
+            mean_dxhat_xhat /= d as f32;
+            let rs = rstd[t];
+            let dxi = &mut dx[(t - t0) * d..(t - t0 + 1) * d];
+            for j in 0..d {
+                let dxh = dyi[j] * w[j];
+                dxi[j] += rs * (dxh - mean_dxhat - xh[j] * mean_dxhat_xhat);
+            }
         }
-        mean_dxhat /= d as f32;
-        mean_dxhat_xhat /= d as f32;
-        let rs = rstd[t];
-        let dxi = &mut dx[t * d..(t + 1) * d];
+    });
+    for c in 0..chunks {
+        let part = &partials[c * 2 * d..(c + 1) * 2 * d];
         for j in 0..d {
-            let dxh = dyi[j] * w[j];
-            dxi[j] += rs * (dxh - mean_dxhat - xh[j] * mean_dxhat_xhat);
+            dw[j] += part[j];
+            db[j] += part[d + j];
         }
     }
 }
@@ -339,52 +350,64 @@ struct Cache {
 
 /// Multi-head attention forward for one batch of rows.
 /// q/k/v are `[T,d]` with head h occupying columns `h*hd..(h+1)*hd`.
+/// Parallel over `(batch, head)` tasks; each task owns its `probs` block
+/// and its column stripe of `att`.
 fn attention_fwd(q: &[f32], k: &[f32], v: &[f32], dm: &Dims, probs: &mut [f32], att: &mut [f32]) {
     let (s, d, hd) = (dm.s, dm.d, dm.hd);
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; s];
-    for b in 0..dm.b {
-        for h in 0..dm.nh {
-            let c0 = h * hd;
-            for si in 0..s {
-                let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
-                let lim = if dm.causal { si + 1 } else { s };
-                let mut max = f32::NEG_INFINITY;
-                for (ti, sc) in scores.iter_mut().enumerate().take(lim) {
-                    let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    let mut acc = 0.0f32;
-                    for j in 0..hd {
-                        acc += qrow[j] * krow[j];
-                    }
-                    *sc = acc * scale;
-                    if *sc > max {
-                        max = *sc;
-                    }
+    assert_eq!(probs.len(), dm.b * dm.nh * s * s);
+    assert_eq!(att.len(), dm.rows() * d);
+    let pprobs = SendPtr(probs.as_mut_ptr());
+    let patt = SendPtr(att.as_mut_ptr());
+    let tasks = dm.b * dm.nh;
+    parallel_for_min(tasks * s * s * hd, tasks, |task| {
+        let b = task / dm.nh;
+        let h = task % dm.nh;
+        let c0 = h * hd;
+        // SAFETY: task (b, h) exclusively owns probs block b·nh + h and the
+        // att columns [c0, c0+hd) of rows b·s .. (b+1)·s.
+        let probs = unsafe { pprobs.slice_mut((b * dm.nh + h) * s * s, s * s) };
+        let mut scores = vec![0.0f32; s];
+        for si in 0..s {
+            let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            let lim = if dm.causal { si + 1 } else { s };
+            let mut max = f32::NEG_INFINITY;
+            for (ti, sc) in scores.iter_mut().enumerate().take(lim) {
+                let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                let mut acc = 0.0f32;
+                for j in 0..hd {
+                    acc += qrow[j] * krow[j];
                 }
-                let mut denom = 0.0f32;
-                for sc in scores.iter_mut().take(lim) {
-                    *sc = (*sc - max).exp();
-                    denom += *sc;
+                *sc = acc * scale;
+                if *sc > max {
+                    max = *sc;
                 }
-                let prow = &mut probs[(((b * dm.nh + h) * s) + si) * s..][..s];
-                for ti in 0..s {
-                    prow[ti] = if ti < lim { scores[ti] / denom } else { 0.0 };
-                }
-                let orow = &mut att[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
-                orow.fill(0.0);
-                for (ti, &p) in prow.iter().enumerate().take(lim) {
-                    let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    for j in 0..hd {
-                        orow[j] += p * vrow[j];
-                    }
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(lim) {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            let prow = &mut probs[si * s..(si + 1) * s];
+            for ti in 0..s {
+                prow[ti] = if ti < lim { scores[ti] / denom } else { 0.0 };
+            }
+            // SAFETY: within this task's att stripe (row b·s + si).
+            let orow = unsafe { patt.slice_mut((b * s + si) * d + c0, hd) };
+            orow.fill(0.0);
+            for (ti, &p) in prow.iter().enumerate().take(lim) {
+                let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                for j in 0..hd {
+                    orow[j] += p * vrow[j];
                 }
             }
         }
-    }
+    });
 }
 
 /// Attention backward: consumes `datt` (grad wrt concatenated head outputs),
-/// accumulates `dq/dk/dv` (zero-initialized by the caller).
+/// accumulates `dq/dk/dv` (zero-initialized by the caller). Parallel over
+/// `(batch, head)` tasks; each task owns its column stripe of `dq/dk/dv`.
 fn attention_bwd(
     q: &[f32],
     k: &[f32],
@@ -398,53 +421,64 @@ fn attention_bwd(
 ) {
     let (s, d, hd) = (dm.s, dm.d, dm.hd);
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dp = vec![0.0f32; s];
-    let mut ds = vec![0.0f32; s];
-    for b in 0..dm.b {
-        for h in 0..dm.nh {
-            let c0 = h * hd;
-            for si in 0..s {
-                let lim = if dm.causal { si + 1 } else { s };
-                let prow = &probs[(((b * dm.nh + h) * s) + si) * s..][..s];
-                let darow = &datt[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
-                // dP[si,ti] = datt · v[ti];  dv[ti] += P[si,ti] · datt
-                for ti in 0..lim {
-                    let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    let dvrow = &mut dv[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    let mut acc = 0.0f32;
-                    let p = prow[ti];
-                    for j in 0..hd {
-                        acc += darow[j] * vrow[j];
-                        dvrow[j] += p * darow[j];
-                    }
-                    dp[ti] = acc;
+    assert_eq!(dq.len(), dm.rows() * d);
+    assert_eq!(dk.len(), dm.rows() * d);
+    assert_eq!(dv.len(), dm.rows() * d);
+    let pdq = SendPtr(dq.as_mut_ptr());
+    let pdk = SendPtr(dk.as_mut_ptr());
+    let pdv = SendPtr(dv.as_mut_ptr());
+    let tasks = dm.b * dm.nh;
+    parallel_for_min(tasks * s * s * hd, tasks, |task| {
+        let b = task / dm.nh;
+        let h = task % dm.nh;
+        let c0 = h * hd;
+        let mut dp = vec![0.0f32; s];
+        let mut ds = vec![0.0f32; s];
+        for si in 0..s {
+            let lim = if dm.causal { si + 1 } else { s };
+            let prow = &probs[(((b * dm.nh + h) * s) + si) * s..][..s];
+            let darow = &datt[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            // dP[si,ti] = datt · v[ti];  dv[ti] += P[si,ti] · datt
+            for ti in 0..lim {
+                let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                // SAFETY: task (b, h) exclusively owns columns [c0, c0+hd)
+                // of rows b·s .. (b+1)·s in dq/dk/dv.
+                let dvrow = unsafe { pdv.slice_mut((b * s + ti) * d + c0, hd) };
+                let mut acc = 0.0f32;
+                let p = prow[ti];
+                for j in 0..hd {
+                    acc += darow[j] * vrow[j];
+                    dvrow[j] += p * darow[j];
                 }
-                // softmax backward: ds = P ⊙ (dP − Σ dP⊙P)
-                let mut dot = 0.0f32;
-                for ti in 0..lim {
-                    dot += dp[ti] * prow[ti];
+                dp[ti] = acc;
+            }
+            // softmax backward: ds = P ⊙ (dP − Σ dP⊙P)
+            let mut dot = 0.0f32;
+            for ti in 0..lim {
+                dot += dp[ti] * prow[ti];
+            }
+            for ti in 0..lim {
+                ds[ti] = prow[ti] * (dp[ti] - dot) * scale;
+            }
+            // dq[si] += ds · k[ti];  dk[ti] += ds · q[si]
+            let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            // SAFETY: same stripe ownership as above (dq and dk are
+            // separate buffers, so the si == ti diagonal cannot alias).
+            let dqrow = unsafe { pdq.slice_mut((b * s + si) * d + c0, hd) };
+            for ti in 0..lim {
+                let w = ds[ti];
+                if w == 0.0 {
+                    continue;
                 }
-                for ti in 0..lim {
-                    ds[ti] = prow[ti] * (dp[ti] - dot) * scale;
-                }
-                // dq[si] += ds · k[ti];  dk[ti] += ds · q[si]
-                let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
-                let dqrow = &mut dq[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
-                for ti in 0..lim {
-                    let w = ds[ti];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    let dkrow = &mut dk[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                    for j in 0..hd {
-                        dqrow[j] += w * krow[j];
-                        dkrow[j] += w * qrow[j];
-                    }
+                let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                let dkrow = unsafe { pdk.slice_mut((b * s + ti) * d + c0, hd) };
+                for j in 0..hd {
+                    dqrow[j] += w * krow[j];
+                    dkrow[j] += w * qrow[j];
                 }
             }
         }
-    }
+    });
 }
 
 /// Backbone forward from the embedding output `x0` through the final LN.
@@ -495,8 +529,15 @@ fn backbone_fwd(theta: &[f32], off: &Offsets, dm: &Dims, x0: Vec<f32>) -> Cache 
         matmul(&mut u, &x2, fc1_w, t, d, dff);
         add_bias(&mut u, &theta[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], t, dff);
         let mut g = vec![0.0f32; t * dff];
-        for i in 0..t * dff {
-            g[i] = gelu(u[i]);
+        {
+            let u = &u;
+            // tanh is ~10 flops per element
+            par_chunks_mut(10 * t * dff, &mut g, ELEM_CHUNK, |ci, chunk| {
+                let o = ci * ELEM_CHUNK;
+                for (i, gv) in chunk.iter_mut().enumerate() {
+                    *gv = gelu(u[o + i]);
+                }
+            });
         }
         let fc2_w = &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d];
         let mut h_out = h_mid.clone();
@@ -571,8 +612,15 @@ fn backbone_bwd(theta: &[f32], off: &Offsets, dm: &Dims, cache: &Cache, dxf: &[f
         let fc2_w = &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d];
         let mut du = vec![0.0f32; t * dff];
         matmul_a_bt(&mut du, &dh, fc2_w, t, d, dff);
-        for i in 0..t * dff {
-            du[i] *= gelu_grad(lc.u[i]);
+        {
+            let u = &lc.u;
+            // tanh is ~10 flops per element
+            par_chunks_mut(10 * t * dff, &mut du, ELEM_CHUNK, |ci, chunk| {
+                let o = ci * ELEM_CHUNK;
+                for (i, dv) in chunk.iter_mut().enumerate() {
+                    *dv *= gelu_grad(u[o + i]);
+                }
+            });
         }
         matmul_at_b_acc(
             &mut grad[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff],
@@ -683,21 +731,26 @@ fn backbone_bwd(theta: &[f32], off: &Offsets, dm: &Dims, cache: &Cache, dxf: &[f
 
 fn embed_lang(theta: &[f32], off: &Offsets, dm: &Dims, tokens: &[i32]) -> Result<Vec<f32>> {
     let (d, s) = (dm.d, dm.s);
-    let mut x0 = vec![0.0f32; dm.rows() * d];
-    for b in 0..dm.b {
-        for si in 0..s {
-            let tok = tokens[b * s + si];
-            if tok < 0 {
-                bail!("negative token id {tok}");
-            }
-            let erow = &theta[off.emb + (tok as usize) * d..off.emb + (tok as usize + 1) * d];
+    let rows = dm.rows();
+    if tokens.len() != rows {
+        bail!("token batch has {} elements, want {rows}", tokens.len());
+    }
+    if let Some(&tok) = tokens.iter().find(|&&t| t < 0) {
+        bail!("negative token id {tok}");
+    }
+    let mut x0 = vec![0.0f32; rows * d];
+    par_chunks_mut(rows * d, &mut x0, ROW_CHUNK * d, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, xrow) in chunk.chunks_mut(d).enumerate() {
+            let r = r0 + rl;
+            let (tok, si) = (tokens[r] as usize, r % s);
+            let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
             let prow = &theta[off.pos + si * d..off.pos + (si + 1) * d];
-            let xrow = &mut x0[(b * s + si) * d..(b * s + si + 1) * d];
             for j in 0..d {
                 xrow[j] = erow[j] + prow[j];
             }
         }
-    }
+    });
     Ok(x0)
 }
 
@@ -736,11 +789,13 @@ fn embed_vit(theta: &[f32], off: &Offsets, cfg: &ModelCfg, dm: &Dims, images: &[
     let g = cfg.image_size / p;
     let pp3 = p * p * 3;
     let mut x0 = vec![0.0f32; dm.rows() * d];
-    let mut pv = vec![0.0f32; pp3];
-    for b in 0..dm.b {
+    // one task per batch item: chunk b covers rows b·s .. (b+1)·s;
+    // each patch row costs ~pp3 mul-adds per output column
+    par_chunks_mut(dm.rows() * d * pp3, &mut x0, dm.s * d, |b, xb| {
+        let mut pv = vec![0.0f32; pp3];
         // class token at sequence position 0
         {
-            let xrow = &mut x0[b * dm.s * d..(b * dm.s + 1) * d];
+            let xrow = &mut xb[0..d];
             for j in 0..d {
                 xrow[j] = theta[off.cls + j] + theta[off.pos + j];
             }
@@ -749,7 +804,7 @@ fn embed_vit(theta: &[f32], off: &Offsets, cfg: &ModelCfg, dm: &Dims, images: &[
             for gx in 0..g {
                 let si = 1 + gy * g + gx;
                 patch_vec(images, cfg, b, gy, gx, &mut pv);
-                let xrow = &mut x0[(b * dm.s + si) * d..(b * dm.s + si + 1) * d];
+                let xrow = &mut xb[si * d..(si + 1) * d];
                 for j in 0..d {
                     let mut acc = theta[off.patch_b + j] + theta[off.pos + si * d + j];
                     for (i, &pvi) in pv.iter().enumerate() {
@@ -759,7 +814,7 @@ fn embed_vit(theta: &[f32], off: &Offsets, cfg: &ModelCfg, dm: &Dims, images: &[
                 }
             }
         }
-    }
+    });
     x0
 }
 
@@ -803,37 +858,52 @@ fn embed_vit_bwd(off: &Offsets, cfg: &ModelCfg, dm: &Dims, images: &[f32], dx0: 
 /// Row-wise log-softmax loss bookkeeping: given logits `[rows, v]` and a
 /// per-row target (`None` = row not counted), returns the mean NLL over the
 /// counted rows and fills `dlogits` with `(softmax − onehot) / count`.
-fn softmax_xent(logits: &[f32], targets: &[Option<usize>], v: usize,
-                dlogits: &mut [f32]) -> f32 {
+/// Row-parallel; per-chunk loss partials combine in fixed chunk order.
+fn softmax_xent(logits: &[f32], targets: &[Option<usize>], v: usize, dlogits: &mut [f32]) -> f32 {
     let rows = targets.len();
+    assert_eq!(dlogits.len(), rows * v);
     let count = targets.iter().filter(|t| t.is_some()).count().max(1) as f32;
-    let mut loss = 0.0f64;
-    for r in 0..rows {
-        let lrow = &logits[r * v..(r + 1) * v];
-        let drow = &mut dlogits[r * v..(r + 1) * v];
-        match targets[r] {
-            None => drow.fill(0.0),
-            Some(label) => {
-                let mut max = f32::NEG_INFINITY;
-                for &x in lrow {
-                    if x > max {
-                        max = x;
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    let mut partials = vec![0.0f64; chunks];
+    let pd = SendPtr(dlogits.as_mut_ptr());
+    let pl = SendPtr(partials.as_mut_ptr());
+    parallel_for_min(rows * v, chunks, |c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(rows);
+        // SAFETY: chunk c exclusively owns dlogits rows [r0, r1) and its
+        // own loss partial.
+        let dl = unsafe { pd.slice_mut(r0 * v, (r1 - r0) * v) };
+        let part = unsafe { pl.slice_mut(c, 1) };
+        let mut loss = 0.0f64;
+        for r in r0..r1 {
+            let lrow = &logits[r * v..(r + 1) * v];
+            let drow = &mut dl[(r - r0) * v..(r - r0 + 1) * v];
+            match targets[r] {
+                None => drow.fill(0.0),
+                Some(label) => {
+                    let mut max = f32::NEG_INFINITY;
+                    for &x in lrow {
+                        if x > max {
+                            max = x;
+                        }
                     }
+                    let mut denom = 0.0f32;
+                    for j in 0..v {
+                        let e = (lrow[j] - max).exp();
+                        drow[j] = e;
+                        denom += e;
+                    }
+                    loss += f64::from(max + denom.ln() - lrow[label]);
+                    for j in 0..v {
+                        drow[j] /= denom * count;
+                    }
+                    drow[label] -= 1.0 / count;
                 }
-                let mut denom = 0.0f32;
-                for j in 0..v {
-                    let e = (lrow[j] - max).exp();
-                    drow[j] = e;
-                    denom += e;
-                }
-                loss += f64::from(max + denom.ln() - lrow[label]);
-                for j in 0..v {
-                    drow[j] /= denom * count;
-                }
-                drow[label] -= 1.0 / count;
             }
         }
-    }
+        part[0] = loss;
+    });
+    let loss: f64 = partials.iter().sum();
     (loss / f64::from(count)) as f32
 }
 
@@ -976,13 +1046,12 @@ pub fn attn_maps(cfg: &ModelCfg, theta: &[f32], tokens: &[i32]) -> Result<Vec<f3
     let cache = backbone_fwd(theta, &off, &dm, x0);
     let s = dm.s;
     let mut out = vec![0.0f32; dm.l * dm.nh * s * s];
-    for (l, lc) in cache.layers.iter().enumerate() {
-        for h in 0..dm.nh {
-            let src = &lc.probs[(h * s) * s..(h * s) * s + s * s]; // batch 0
-            let dst = &mut out[(l * dm.nh + h) * s * s..(l * dm.nh + h + 1) * s * s];
-            dst.copy_from_slice(src);
-        }
-    }
+    // one task per (layer, head) map
+    par_chunks_mut(dm.l * dm.nh * s * s, &mut out, s * s, |lh, dst| {
+        let (l, h) = (lh / dm.nh, lh % dm.nh);
+        let src = &cache.layers[l].probs[(h * s) * s..(h * s) * s + s * s]; // batch 0
+        dst.copy_from_slice(src);
+    });
     Ok(out)
 }
 
@@ -991,16 +1060,34 @@ pub fn attn_maps(cfg: &ModelCfg, theta: &[f32], tokens: &[i32]) -> Result<Vec<f3
 // ---------------------------------------------------------------------------
 
 /// One AdamW update over flat vectors (`model.adamw`; `step` is 1-based).
+/// Elementwise → chunk-parallel with no cross-chunk state.
 pub fn adamw(theta: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, step: f32) {
+    let n = theta.len();
+    assert_eq!(g.len(), n);
+    assert_eq!(m.len(), n);
+    assert_eq!(v.len(), n);
     let bc1 = 1.0 - ADAM_B1.powf(step);
     let bc2 = 1.0 - ADAM_B2.powf(step);
-    for i in 0..theta.len() {
-        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-        let mhat = m[i] / bc1;
-        let vhat = v[i] / bc2;
-        theta[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + WEIGHT_DECAY * theta[i]);
-    }
+    let pt = SendPtr(theta.as_mut_ptr());
+    let pm = SendPtr(m.as_mut_ptr());
+    let pv = SendPtr(v.as_mut_ptr());
+    let chunks = n.div_ceil(ELEM_CHUNK);
+    parallel_for_min(4 * n, chunks, |c| {
+        let i0 = c * ELEM_CHUNK;
+        let len = ELEM_CHUNK.min(n - i0);
+        // SAFETY: element ranges are pairwise disjoint across chunks.
+        let theta = unsafe { pt.slice_mut(i0, len) };
+        let m = unsafe { pm.slice_mut(i0, len) };
+        let v = unsafe { pv.slice_mut(i0, len) };
+        for i in 0..len {
+            let gi = g[i0 + i];
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            theta[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + WEIGHT_DECAY * theta[i]);
+        }
+    });
 }
 
 /// Split a state vector into `(theta, m, v)` copies.
@@ -1155,26 +1242,30 @@ pub fn ft_acc(cfg: &ModelCfg, n_ft: usize, n_cls: usize, state: &[f32], tokens: 
 // Distillation (KI baseline)
 // ---------------------------------------------------------------------------
 
-/// Row-wise softmax into `out`.
+/// Row-wise softmax into `out` (row-parallel).
 fn softmax_rows(logits: &[f32], rows: usize, v: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let lrow = &logits[r * v..(r + 1) * v];
-        let orow = &mut out[r * v..(r + 1) * v];
-        let mut max = f32::NEG_INFINITY;
-        for &x in lrow {
-            if x > max {
-                max = x;
+    assert_eq!(logits.len(), rows * v);
+    assert_eq!(out.len(), rows * v);
+    par_chunks_mut(rows * v, out, ROW_CHUNK * v, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, orow) in chunk.chunks_mut(v).enumerate() {
+            let lrow = &logits[(r0 + rl) * v..(r0 + rl + 1) * v];
+            let mut max = f32::NEG_INFINITY;
+            for &x in lrow {
+                if x > max {
+                    max = x;
+                }
+            }
+            let mut denom = 0.0f32;
+            for j in 0..v {
+                orow[j] = (lrow[j] - max).exp();
+                denom += orow[j];
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
             }
         }
-        let mut denom = 0.0f32;
-        for j in 0..v {
-            orow[j] = (lrow[j] - max).exp();
-            denom += orow[j];
-        }
-        for o in orow.iter_mut() {
-            *o /= denom;
-        }
-    }
+    });
 }
 
 /// Forward-only logits for a config (teacher path of distillation).

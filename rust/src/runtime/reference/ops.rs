@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::manifest::ModelCfg;
+use crate::util::threadpool::{par_chunks_mut, ELEM_CHUNK, ROW_CHUNK};
 
 /// A named parameter tensor during a level transition.
 struct Tensor {
@@ -266,32 +267,36 @@ fn width_rule(name: &str) -> Result<(Option<Stream>, Option<Stream>)> {
     })
 }
 
-/// Right-multiply along the trailing dim: `w[..., from] @ f[from, to]`.
+/// Right-multiply along the trailing dim: `w[..., from] @ f[from, to]`
+/// (row-parallel; the zero-skip exploits the sparsity of the F/T maps).
 fn apply_right(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
     let last = *t.shape.last().expect("tensor rank >= 1");
     assert_eq!(last, from, "right-factor dim mismatch");
     let rows = t.data.len() / from;
     let mut out = vec![0.0f32; rows * to];
-    for r in 0..rows {
-        let wrow = &t.data[r * from..(r + 1) * from];
-        let orow = &mut out[r * to..(r + 1) * to];
-        for (c, &wv) in wrow.iter().enumerate() {
-            if wv == 0.0 {
-                continue;
-            }
-            let frow = &f[c * to..(c + 1) * to];
-            for j in 0..to {
-                orow[j] += wv * frow[j];
+    par_chunks_mut(rows * to * from, &mut out, ROW_CHUNK * to, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, orow) in chunk.chunks_mut(to).enumerate() {
+            let r = r0 + rl;
+            let wrow = &t.data[r * from..(r + 1) * from];
+            for (c, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let frow = &f[c * to..(c + 1) * to];
+                for j in 0..to {
+                    orow[j] += wv * frow[j];
+                }
             }
         }
-    }
+    });
     let mut shape = t.shape.clone();
     *shape.last_mut().unwrap() = to;
     Tensor { shape, data: out }
 }
 
 /// Left-multiply the second-to-last dim: `f[to, from] @ w[..., from, n]`,
-/// batched over any leading layer axis.
+/// batched over any leading layer axis (parallel over output rows).
 fn apply_left(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
     let rank = t.shape.len();
     assert!(rank >= 2, "left factor needs a matrix");
@@ -300,12 +305,12 @@ fn apply_left(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
     assert_eq!(m, from, "left-factor dim mismatch");
     let batches = t.data.len() / (m * n);
     let mut out = vec![0.0f32; batches * to * n];
-    for bi in 0..batches {
-        let wb = &t.data[bi * m * n..(bi + 1) * m * n];
-        let ob = &mut out[bi * to * n..(bi + 1) * to * n];
-        for p in 0..to {
+    par_chunks_mut(batches * to * n * from, &mut out, ROW_CHUNK * n, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, orow) in chunk.chunks_mut(n).enumerate() {
+            let (bi, p) = ((r0 + rl) / to, (r0 + rl) % to);
+            let wb = &t.data[bi * m * n..(bi + 1) * m * n];
             let frow = &f[p * from..(p + 1) * from];
-            let orow = &mut ob[p * n..(p + 1) * n];
             for (c, &fv) in frow.iter().enumerate() {
                 if fv == 0.0 {
                     continue;
@@ -316,7 +321,7 @@ fn apply_left(t: &Tensor, f: &[f32], from: usize, to: usize) -> Tensor {
                 }
             }
         }
-    }
+    });
     let mut shape = t.shape.clone();
     shape[rank - 2] = to;
     Tensor { shape, data: out }
@@ -351,7 +356,8 @@ fn apply_width(params: ParamMap, maps: &WidthMaps, coalesce: bool) -> Result<Par
 }
 
 /// Depth mixing on the stacked `blk.*` leaves:
-/// `out[k, …] = Σ_l w[l, …] · mat[l, k]`, `mat: [l_from, l_to]`.
+/// `out[k, …] = Σ_l w[l, …] · mat[l, k]`, `mat: [l_from, l_to]`
+/// (parallel over target layers; the `l` sum stays in ascending order).
 fn apply_depth(params: ParamMap, mat: &[f32], l_from: usize, l_to: usize) -> ParamMap {
     let mut out = ParamMap::new();
     for (name, t) in params {
@@ -362,19 +368,18 @@ fn apply_depth(params: ParamMap, mat: &[f32], l_from: usize, l_to: usize) -> Par
         assert_eq!(t.shape[0], l_from, "depth mixing on wrong layer count");
         let sz = t.data.len() / l_from;
         let mut data = vec![0.0f32; l_to * sz];
-        for l in 0..l_from {
-            let src = &t.data[l * sz..(l + 1) * sz];
-            for k in 0..l_to {
+        par_chunks_mut(l_to * sz * l_from, &mut data, sz, |k, dst| {
+            for l in 0..l_from {
                 let w = mat[l * l_to + k];
                 if w == 0.0 {
                     continue;
                 }
-                let dst = &mut data[k * sz..(k + 1) * sz];
+                let src = &t.data[l * sz..(l + 1) * sz];
                 for i in 0..sz {
                     dst[i] += w * src[i];
                 }
             }
-        }
+        });
         let mut shape = t.shape.clone();
         shape[0] = l_to;
         out.insert(name, Tensor { shape, data });
@@ -548,12 +553,20 @@ pub fn refine(big: &ModelCfg, small: &ModelCfg, width: bool, depth: bool, fit: b
     Ok(out)
 }
 
-/// Elementwise `(1−α)·a + α·b` over whole state vectors (Eq. 13).
+/// Elementwise `(1−α)·a + α·b` over whole state vectors (Eq. 13);
+/// chunk-parallel, no cross-chunk state.
 pub fn interp(a: &[f32], b: &[f32], alpha: f32) -> Result<Vec<f32>> {
     if a.len() != b.len() {
         bail!("interp: length mismatch {} vs {}", a.len(), b.len());
     }
-    Ok(a.iter().zip(b).map(|(x, y)| (1.0 - alpha) * x + alpha * y).collect())
+    let mut out = vec![0.0f32; a.len()];
+    par_chunks_mut(a.len(), &mut out, ELEM_CHUNK, |ci, chunk| {
+        let o = ci * ELEM_CHUNK;
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = (1.0 - alpha) * a[o + i] + alpha * b[o + i];
+        }
+    });
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -1,5 +1,5 @@
 //! In-tree substrates replacing crates that the offline registry lacks
-//! (serde/serde_json, rand, clap, criterion, proptest, env_logger).
+//! (serde/serde_json, rand, clap, criterion, proptest, env_logger, rayon).
 
 pub mod bench;
 pub mod cli;
@@ -8,3 +8,4 @@ pub mod logger;
 pub mod prop;
 pub mod rng;
 pub mod table;
+pub mod threadpool;

@@ -1,0 +1,426 @@
+//! Scoped fork-join thread pool for the reference backend (std-only — the
+//! offline registry has no `rayon`).
+//!
+//! [`parallel_for`] runs `body(i)` for every `i in 0..n` across a set of
+//! persistent worker threads *plus the calling thread*, returning only once
+//! every index has finished — so `body` may borrow from the caller's stack
+//! (scoped semantics) even though the workers are long-lived.
+//!
+//! # Determinism contract
+//!
+//! The pool decides only *which thread* runs an index, never how the work
+//! inside an index is ordered. Reference-backend kernels therefore stay
+//! bit-identical across thread counts by construction, provided
+//!
+//! 1. each output element is written by exactly one index, and
+//! 2. cross-index reductions are combined by the caller in index order over
+//!    partials whose boundaries do not depend on the thread count
+//!    (fixed-size chunks — see [`par_chunks_mut`]).
+//!
+//! # Sizing
+//!
+//! The pool is created lazily on first use from `PALLAS_REF_THREADS`
+//! (default: `std::thread::available_parallelism()`); [`set_threads`]
+//! resizes it at runtime. Workers spawn on demand and park on their channel
+//! when idle; shrinking just stops dispatching to the extras. Thread count
+//! only changes wall time, never results.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Sanity cap on the fan-out (guards absurd `PALLAS_REF_THREADS` values).
+pub const MAX_THREADS: usize = 512;
+
+/// Work below this many inner-loop operations is not worth a dispatch;
+/// [`parallel_for_min`] runs it inline instead.
+pub const MIN_PAR_WORK: usize = 1 << 16;
+
+/// Rows per parallel task in row-parallel kernels. Cross-row reductions
+/// must combine fixed `ROW_CHUNK` partials in chunk order so results do
+/// not depend on the thread count (see the determinism contract above).
+pub const ROW_CHUNK: usize = 64;
+
+/// Elements per task in flat elementwise kernels (GELU, AdamW, interp).
+pub const ELEM_CHUNK: usize = 8192;
+
+thread_local! {
+    /// Set on pool workers (and on the caller while it participates) so a
+    /// nested `parallel_for` degrades to serial instead of deadlocking a
+    /// worker on its own queue.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One fork-join dispatch: lifetime-erased body + claim/completion state.
+struct Batch {
+    /// Next unclaimed index.
+    next: AtomicUsize,
+    /// Total indices.
+    n: usize,
+    /// Dispatched workers (excluding the caller) still holding the batch.
+    pending: AtomicUsize,
+    /// Set when any body invocation panicked.
+    poisoned: AtomicBool,
+    /// First worker panic payload; the dispatcher re-throws it so the
+    /// original message survives the thread hop.
+    panic_payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// The caller's closure, lifetime-erased to a raw pointer (raw so the
+    /// batch may outlive the referent without holding a dangling reference:
+    /// workers keep the `Arc` briefly after completion). `dispatch` blocks
+    /// until `pending == 0`, so the pointer is only ever *dereferenced*
+    /// while the `parallel_for` frame that owns the closure is alive.
+    body: *const (dyn Fn(usize) + Sync),
+}
+
+// SAFETY: all fields but `body` are Send + Sync; `body` is a plain address
+// whose dereference window is bounded by `dispatch` (see its field doc).
+unsafe impl Send for Batch {}
+unsafe impl Sync for Batch {}
+
+impl Batch {
+    fn run(&self) {
+        // SAFETY: `run` only executes between dispatch and completion —
+        // inside the window where the closure is alive.
+        let body = unsafe { &*self.body };
+        loop {
+            if self.poisoned.load(Ordering::Relaxed) {
+                break; // a sibling already failed; stop claiming work
+            }
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            body(i);
+        }
+    }
+
+    fn finish(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while self.pending.load(Ordering::Acquire) != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Pool {
+    /// Per-worker dispatch channels; grown on demand under the lock.
+    senders: Mutex<Vec<Sender<Arc<Batch>>>>,
+    /// Current fan-out (including the calling thread).
+    threads: AtomicUsize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        senders: Mutex::new(Vec::new()),
+        threads: AtomicUsize::new(default_threads()),
+    })
+}
+
+/// Parse a `PALLAS_REF_THREADS`-style override; `None` for invalid values.
+fn parse_threads(raw: &str) -> Option<usize> {
+    let n = raw.trim().parse::<usize>().ok()?;
+    if n == 0 {
+        None
+    } else {
+        Some(n.min(MAX_THREADS))
+    }
+}
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_REF_THREADS") {
+        if let Some(n) = parse_threads(&v) {
+            return n;
+        }
+    }
+    std::thread::available_parallelism()
+        .map_or(1, std::num::NonZeroUsize::get)
+        .min(MAX_THREADS)
+}
+
+/// Current fan-out of [`parallel_for`] (the calling thread included).
+pub fn threads() -> usize {
+    pool().threads.load(Ordering::Relaxed)
+}
+
+/// Resize the shared pool (clamped to `1..=MAX_THREADS`). Kernel results do
+/// not depend on this — only wall time does.
+pub fn set_threads(n: usize) {
+    pool().threads.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+fn spawn_worker(idx: usize) -> Sender<Arc<Batch>> {
+    let (tx, rx) = channel::<Arc<Batch>>();
+    std::thread::Builder::new()
+        .name(format!("pallas-ref-{idx}"))
+        .spawn(move || {
+            IN_POOL.with(|c| c.set(true));
+            while let Ok(batch) = rx.recv() {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| batch.run())) {
+                    batch.poisoned.store(true, Ordering::Release);
+                    let mut slot = batch.panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+                batch.finish();
+            }
+        })
+        .expect("failed to spawn reference-backend pool worker");
+    tx
+}
+
+fn dispatch(n: usize, workers: usize, body: &(dyn Fn(usize) + Sync)) {
+    // SAFETY: the erased pointer is only dereferenced between here and
+    // `wait()` observing `pending == 0` below; this frame (which the real
+    // lifetime outlives) blocks until then.
+    let body: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+    let batch = Arc::new(Batch {
+        next: AtomicUsize::new(0),
+        n,
+        pending: AtomicUsize::new(workers),
+        poisoned: AtomicBool::new(false),
+        panic_payload: Mutex::new(None),
+        lock: Mutex::new(()),
+        cv: Condvar::new(),
+        body: body as *const (dyn Fn(usize) + Sync),
+    });
+    {
+        let mut senders = pool().senders.lock().unwrap();
+        while senders.len() < workers {
+            senders.push(spawn_worker(senders.len()));
+        }
+        for s in senders.iter().take(workers) {
+            s.send(batch.clone()).expect("pool worker channel closed");
+        }
+    }
+    // The caller participates too; on panic the guard still waits for every
+    // worker before unwinding can release `body`'s referent.
+    struct WaitGuard<'a>(&'a Batch);
+    impl Drop for WaitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+    let guard = WaitGuard(&batch);
+    let inline = catch_unwind(AssertUnwindSafe(|| {
+        IN_POOL.with(|c| c.set(true));
+        batch.run();
+    }));
+    IN_POOL.with(|c| c.set(false));
+    if inline.is_err() {
+        batch.poisoned.store(true, Ordering::Relaxed); // workers bail early
+    }
+    drop(guard); // blocks until every worker released the batch
+    if let Err(p) = inline {
+        resume_unwind(p);
+    }
+    if batch.poisoned.load(Ordering::Acquire) {
+        if let Some(p) = batch.panic_payload.lock().unwrap().take() {
+            resume_unwind(p); // preserve the original worker panic
+        }
+        panic!("parallel_for: a pool worker panicked");
+    }
+}
+
+/// Run `body(i)` for every `i in 0..n`, fanned out over the pool; returns
+/// after the last index completes. Panics in `body` propagate to the caller
+/// (after all in-flight indices stop).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    let fanout = threads().min(n);
+    if fanout <= 1 || IN_POOL.with(|c| c.get()) {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    dispatch(n, fanout - 1, &body);
+}
+
+/// [`parallel_for`] gated on an approximate operation count: below
+/// [`MIN_PAR_WORK`] the dispatch overhead beats the win, so run inline.
+pub fn parallel_for_min<F: Fn(usize) + Sync>(work: usize, n: usize, body: F) {
+    if work < MIN_PAR_WORK {
+        for i in 0..n {
+            body(i);
+        }
+    } else {
+        parallel_for(n, body);
+    }
+}
+
+/// Raw mutable base pointer that may cross thread boundaries.
+///
+/// Used by kernels that hand **disjoint** sub-ranges of one buffer to
+/// different pool indices; the caller is responsible for disjointness and
+/// for keeping the buffer alive across the `parallel_for` call (which the
+/// scoped semantics guarantee).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: a SendPtr is a plain address; the disjointness contract above
+// makes concurrent use through it data-race free.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Reconstruct the mutable sub-slice `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds of the original allocation, disjoint
+    /// from every range any other thread touches concurrently, and the
+    /// returned lifetime must not outlive the buffer (it is unbounded).
+    pub unsafe fn slice_mut<'a>(self, start: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+/// Split `data` into `chunk`-sized pieces and run `body(chunk_index, piece)`
+/// over the pool (the last piece may be shorter). `work` is the caller's
+/// operation-count estimate: below [`MIN_PAR_WORK`] the chunks run inline,
+/// like [`parallel_for_min`]. Chunk boundaries are a function of `chunk`
+/// alone, so passing a fixed `chunk` keeps cross-chunk reductions
+/// independent of the thread count.
+pub fn par_chunks_mut<T, F>(work: usize, data: &mut [T], chunk: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let len = data.len();
+    let n = len.div_ceil(chunk);
+    let base = SendPtr(data.as_mut_ptr());
+    parallel_for_min(work, n, |i| {
+        let start = i * chunk;
+        let piece_len = chunk.min(len - start);
+        // SAFETY: [start, start + piece_len) ranges are pairwise disjoint
+        // and in bounds; `data` is exclusively borrowed for the whole call.
+        let piece = unsafe { base.slice_mut(start, piece_len) };
+        body(i, piece);
+    });
+}
+
+/// Serializes tests that assert on the *global* pool size (unit tests run
+/// concurrently in one process; everything else is thread-count invariant).
+#[cfg(test)]
+pub(crate) static TEST_POOL_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn covers_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_cover_exactly() {
+        // force the pooled path with a work estimate above the gate
+        let mut v = vec![0u32; 1003];
+        par_chunks_mut(MIN_PAR_WORK, &mut v, 64, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 64 + j) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+        // and the inline path
+        let mut w = vec![0u32; 100];
+        par_chunks_mut(0, &mut w, 7, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 7 + j) as u32;
+            }
+        });
+        for (i, x) in w.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn resize_and_report() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        assert_eq!(threads(), 4);
+        let total = AtomicUsize::new(0);
+        parallel_for(257, |i| {
+            total.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 257 * 258 / 2);
+        set_threads(0); // clamps to 1
+        assert_eq!(threads(), 1);
+        set_threads(before);
+    }
+
+    #[test]
+    fn nested_calls_serialize_instead_of_deadlocking() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        let total = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            parallel_for(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+        set_threads(before);
+    }
+
+    #[test]
+    fn body_panic_propagates() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        let r = std::panic::catch_unwind(|| {
+            parallel_for(64, |i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic in body was swallowed");
+        // the pool must still be usable afterwards
+        let total = AtomicUsize::new(0);
+        parallel_for(16, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+        set_threads(before);
+    }
+
+    #[test]
+    fn parse_threads_rejects_garbage() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("-1"), None);
+        assert_eq!(parse_threads("lots"), None);
+        assert_eq!(parse_threads("100000"), Some(MAX_THREADS));
+    }
+}

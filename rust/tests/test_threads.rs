@@ -1,0 +1,94 @@
+//! Thread-count invariance: `PALLAS_REF_THREADS` (and the pool size in
+//! general) must only change wall time — artifact results are required to
+//! be bit-identical for 1, 2, and 8 threads.
+//!
+//! Tests serialize on a local mutex because the pool is process-global and
+//! the test harness runs tests concurrently.
+
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::coordinator::{operators, Trainer};
+use multilevel::runtime::{init_state, Runtime};
+use multilevel::util::threadpool;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn train_steps_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let rt = Runtime::reference();
+    // big enough to cross every parallel-dispatch threshold (d=96, T=256)
+    let run = |threads: usize| {
+        threadpool::set_threads(threads);
+        let cfg = rt.cfg("gpt_base_sim").unwrap().clone();
+        let mut state = init_state(&rt, &cfg, 11).unwrap();
+        let mut tr = Trainer::new(&rt, "gpt_base_sim", 0, 5, 1).unwrap();
+        for step in 1..=2 {
+            let (s, loss) = tr.step(&rt, &state, 1e-3, step).unwrap();
+            assert!(loss.is_finite());
+            state = s;
+        }
+        state.to_host(&rt).unwrap()
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let t8 = run(8);
+    threadpool::set_threads(before);
+    assert_eq!(bits(&t1), bits(&t2), "1 vs 2 threads diverged");
+    assert_eq!(bits(&t1), bits(&t8), "1 vs 8 threads diverged");
+}
+
+#[test]
+fn level_transition_operators_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let rt = Runtime::reference();
+    let run = |threads: usize| {
+        threadpool::set_threads(threads);
+        let cfg = rt.cfg("bert_base_sim").unwrap().clone();
+        let state = init_state(&rt, &cfg, 3).unwrap();
+        let small =
+            operators::coalesce(&rt, "bert_base_sim", "bert_base_sim_lv2", &state).unwrap();
+        let back = operators::refine(
+            &rt,
+            "bert_base_sim",
+            "bert_base_sim_lv2",
+            &state,
+            &small,
+            0.3,
+            false,
+        )
+        .unwrap();
+        let mut out = small.to_host(&rt).unwrap();
+        out.extend(back.to_host(&rt).unwrap());
+        out
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let t8 = run(8);
+    threadpool::set_threads(before);
+    assert_eq!(bits(&t1), bits(&t2), "1 vs 2 threads diverged");
+    assert_eq!(bits(&t1), bits(&t8), "1 vs 8 threads diverged");
+}
+
+#[test]
+fn device_info_reports_thread_count_and_block_size() {
+    let _g = lock();
+    let before = threadpool::threads();
+    threadpool::set_threads(3);
+    let rt = Runtime::reference();
+    let info = rt.device_info();
+    threadpool::set_threads(before);
+    assert!(info.starts_with("reference-cpu"), "{info}");
+    assert!(info.contains("threads=3"), "{info}");
+    assert!(info.contains("gemm"), "{info}");
+}
