@@ -92,7 +92,13 @@ def model_artifacts(cfg: ModelConfig, with_pallas_variant=False,
     arts = [
         Artifact(f"train_step__{cfg.name}", "train_step", M.make_train_step(cfg),
                  [("state", state_spec(cfg))] + batch_specs(cfg)
-                 + [scalar("lr"), scalar("step")], {"config": cfg.name}),
+                 + [scalar("lr"), scalar("step")], {"config": cfg.name},
+                 meta={"shard": "batch"}),
+        # grad-only shard step of the data-parallel ShardedBackend:
+        # theta in, [loss, grad] out (mirrors the Rust built-in registry)
+        Artifact(f"train_grad__{cfg.name}", "train_grad", M.make_train_grad(cfg),
+                 [("theta", _spec((M.n_params(cfg),)))] + batch_specs(cfg),
+                 {"config": cfg.name}, meta={"shard": "batch"}),
         Artifact(f"eval_loss__{cfg.name}", "eval_loss", M.make_eval_loss(cfg),
                  [("state", state_spec(cfg))] + batch_specs(cfg),
                  {"config": cfg.name}),
@@ -103,7 +109,7 @@ def model_artifacts(cfg: ModelConfig, with_pallas_variant=False,
             M.make_train_step(cfg, use_pallas=True),
             [("state", state_spec(cfg))] + batch_specs(cfg)
             + [scalar("lr"), scalar("step")],
-            {"config": cfg.name}, meta={"pallas": True}))
+            {"config": cfg.name}, meta={"pallas": True, "shard": "batch"}))
     if with_attn:
         arts.append(Artifact(
             f"attn_maps__{cfg.name}", "attn_maps", M.make_attn_maps(cfg),

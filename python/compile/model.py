@@ -343,6 +343,27 @@ def make_train_step(cfg: ModelConfig, use_pallas: bool = False):
     return train_step
 
 
+def make_train_grad(cfg: ModelConfig, use_pallas: bool = False):
+    """(theta[N], *batch) -> [loss, grad][N+1] — the grad-only shard step.
+
+    The data-parallel ``ShardedBackend`` (rust/src/runtime/sharded/) runs
+    this per replica on a contiguous batch shard, all-reduces the shard
+    gradients (weighted by loss-target counts), and applies AdamW once on
+    the host — so the optimizer update stays exact rather than approximate.
+    The AOT artifact is lowered at the full batch shape; per-shard shapes
+    are a lowering variant for a future device data-parallel path.
+    """
+    unravel = unravel_fn(cfg)
+
+    def train_grad(theta, *batch):
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        loss, g = jax.value_and_grad(
+            lambda th: loss_fn(unravel(th), batch, cfg, use_pallas))(theta)
+        return jnp.concatenate([loss.reshape(1), g])
+
+    return train_grad
+
+
 def make_eval_loss(cfg: ModelConfig, use_pallas: bool = False):
     """(state, *batch) -> scalar mean loss."""
     n = n_params(cfg)

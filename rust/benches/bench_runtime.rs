@@ -12,6 +12,8 @@ fn main() {
     let rt = Runtime::load_default().expect("runtime init");
     println!("== bench_runtime ==");
     println!("device: {}", rt.device_info());
+    let (replicas, threads_per) = rt.shard_topology();
+    println!("topology: {replicas} replicas x {threads_per} threads-per-replica");
 
     // one explicit cold compile (the cache makes repeats meaningless)
     let t0 = std::time::Instant::now();
@@ -57,5 +59,30 @@ fn main() {
         run(&format!("eval(2 batches) {cfg_name}"), Duration::from_secs(1), || {
             black_box(trainer.eval(&rt, &state).unwrap());
         });
+    }
+
+    // data-parallel train step: replica scaling of the sharded backend
+    for replicas in [2usize, 4] {
+        let srt = Runtime::sharded(replicas);
+        let (r, t) = srt.shard_topology();
+        let cfg = srt.cfg("gpt_base_sim").unwrap().clone();
+        let mut state = init_state(&srt, &cfg, 1).unwrap();
+        let mut trainer = Trainer::new(&srt, "gpt_base_sim", 0, 2, 2).unwrap();
+        let (s, _) = trainer.step(&srt, &state, 1e-3, 1).unwrap(); // warm
+        state = s;
+        let mut step = 1usize;
+        let stats = run(
+            &format!("train_step gpt_base_sim sharded {r}x{t}"),
+            Duration::from_secs(2),
+            || {
+                step += 1;
+                let (s, _) = trainer.step(&srt, &state, 1e-3, step).unwrap();
+                state = s;
+            },
+        );
+        println!(
+            "  -> {:.2} GFLOP/s analytic",
+            cfg.flops_train_step / stats.mean.as_secs_f64() / 1e9
+        );
     }
 }

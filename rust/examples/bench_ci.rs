@@ -51,6 +51,34 @@ fn main() -> Result<()> {
         rows.push((name.clone(), stats));
     }
 
+    // sharded train step: the data-parallel grad → all-reduce → AdamW path
+    // (row name `<config>@r<R>`, gated like any other entry)
+    let replicas = args.usize_or("replicas", 4);
+    let sharded_configs: Vec<String> = args
+        .get_or("sharded-configs", "gpt_base_sim")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if replicas > 1 {
+        let srt = Runtime::sharded(replicas);
+        println!("-- sharded: {} --", srt.device_info());
+        for name in &sharded_configs {
+            let mut state = init_state(&srt, srt.cfg(name)?, 1)?;
+            let mut trainer = Trainer::new(&srt, name, 0, 2, 1)?;
+            let (warm, _) = trainer.step(&srt, &state, 1e-3, 1)?;
+            state = warm;
+            let mut step = 1usize;
+            let label = format!("{name}@r{replicas}");
+            let stats = bench::run(&format!("train_step {label}"), budget, || {
+                step += 1;
+                let (next, _) = trainer.step(&srt, &state, 1e-3, step).unwrap();
+                state = next;
+            });
+            rows.push((label, stats));
+        }
+    }
+
     let report = obj(vec![
         ("schema", num(1.0)),
         ("device", s(&rt.device_info())),

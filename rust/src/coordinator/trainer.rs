@@ -88,6 +88,11 @@ impl Trainer {
             );
         }
         let flops = state.flops + self.cfg.flops_train_step;
+        // Per-level replica config: cap the data-parallel fan-out at this
+        // level's batch size on every step, so trainers for different
+        // V-cycle levels (base vs coalesced) each shard with their own
+        // batch no matter how their calls interleave.
+        rt.backend().set_replica_cap(self.cfg.batch);
         let buf = match (&mut self.stream, self.cfg.family) {
             (Stream::Lang(b), Family::Gpt) => {
                 let batch = b.next_batch();

@@ -10,10 +10,14 @@
 //! that regenerates every paper table/figure, and the CLI — drives an
 //! execution [`runtime::Backend`] through named *artifacts*
 //! (`train_step__{cfg}`, `coalesce__{big}__{small}`, …; see
-//! `ARCHITECTURE.md` for the naming contract). Two backends ship:
+//! `ARCHITECTURE.md` for the naming contract). Three backends ship:
 //!
 //! * [`runtime::ReferenceBackend`] — pure-Rust f32 host execution of the
 //!   whole contract (default; no XLA, no artifact files, runs anywhere);
+//! * [`runtime::ShardedBackend`] — deterministic data-parallel training
+//!   across `R` reference replicas (`PALLAS_REPLICAS` / `--replicas`):
+//!   batch split, grad-only replica steps, weighted tree all-reduce,
+//!   host-side AdamW;
 //! * `PjrtBackend` (`pjrt` cargo feature) — the AOT path: Layer 2 (JAX
 //!   models + operators) and Layer 1 (Pallas kernels) live in
 //!   `python/compile/` and are lowered to HLO-text artifacts that this

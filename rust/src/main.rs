@@ -24,7 +24,19 @@ const USAGE: &str = "usage: multilevel <info|train|vcycle|exp|bench-step|list> [
   train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
   vcycle --base <name> --steps <n> [--levels <k>] [--alpha <f>]
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
-  bench-step --config <name> [--steps <n>]";
+  bench-step --config <name> [--steps <n>]
+  every command also accepts --replicas <R> (data-parallel train-step
+  sharding; defaults to $PALLAS_REPLICAS, 1 = unsharded)";
+
+/// Runtime honoring `--replicas` (overriding `PALLAS_REPLICAS`; a
+/// compiled-in device backend still wins, since sharding wraps only the
+/// host reference backend).
+fn runtime_of(args: &Args) -> Result<Runtime> {
+    match args.usize_opt("replicas") {
+        Some(r) => Runtime::load_default_sharded(r),
+        None => Runtime::load_default(),
+    }
+}
 
 fn main() -> Result<()> {
     logger::init();
@@ -34,7 +46,7 @@ fn main() -> Result<()> {
         return Ok(());
     };
     match cmd {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "list" => {
             for (id, desc) in experiments::REGISTRY {
                 println!("{id:8} {desc}");
@@ -49,10 +61,12 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_info() -> Result<()> {
-    let rt = Runtime::load_default()?;
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = runtime_of(args)?;
+    let (replicas, threads_per) = rt.shard_topology();
     println!("platform: {}", rt.platform_name());
     println!("device:   {}", rt.device_info());
+    println!("topology: {replicas} replicas x {threads_per} threads-per-replica");
     println!("fingerprint: {}", rt.manifest.fingerprint);
     println!("configs: {}", rt.manifest.configs.len());
     for (name, c) in &rt.manifest.configs {
@@ -67,7 +81,7 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = Runtime::load_default()?;
+    let rt = runtime_of(args)?;
     let config = args.get("config").unwrap_or("gpt_nano").to_string();
     let steps = args.usize_or("steps", 100);
     let lr = args.f64_or("lr", 1e-3) as f32;
@@ -95,7 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_vcycle(args: &Args) -> Result<()> {
-    let rt = Runtime::load_default()?;
+    let rt = runtime_of(args)?;
     let base = args.get("base").unwrap_or("gpt_nano").to_string();
     let steps = args.usize_or("steps", 200);
     let levels = args.usize_or("levels", 2);
@@ -119,13 +133,15 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let Some(id) = args.positional.get(1) else {
         bail!("exp needs an id (or 'all'); see `multilevel list`");
     };
-    let rt = Runtime::load_default()?;
+    let rt = runtime_of(args)?;
     experiments::run(&rt, id, args)
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
-    let rt = Runtime::load_default()?;
+    let rt = runtime_of(args)?;
+    let (replicas, threads_per) = rt.shard_topology();
     println!("device: {}", rt.device_info());
+    println!("topology: {replicas} replicas x {threads_per} threads-per-replica");
     let config = args.get("config").unwrap_or("gpt_nano").to_string();
     let cfg = rt.cfg(&config)?.clone();
     let mut state = init_state(&rt, &cfg, 1)?;

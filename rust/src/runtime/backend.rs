@@ -141,6 +141,21 @@ pub trait Backend {
         self.platform_name()
     }
 
+    /// Data-parallel shard topology as `(replicas, threads_per_replica)`.
+    /// Single-replica backends report `(1, total_kernel_threads)`; the
+    /// sharded backend reports its replica fan-out and the kernel-thread
+    /// share each replica's worker slice gets.
+    fn shard_topology(&self) -> (usize, usize) {
+        (1, crate::util::threadpool::threads())
+    }
+
+    /// Hint the largest useful data-parallel fan-out for upcoming artifact
+    /// calls — the active level's batch size. The V-cycle schedule calls
+    /// this per phase so a replica count tuned for the base level does not
+    /// over-partition a coalesced level's smaller batch. Single-replica
+    /// backends ignore it.
+    fn set_replica_cap(&self, _cap: usize) {}
+
     /// Make an artifact executable (compile/cache); idempotent. The
     /// reference backend validates the name; the PJRT backend compiles the
     /// HLO file and caches the loaded executable.

@@ -58,6 +58,26 @@ impl Runtime {
         Runtime { manifest, backend, cache: RefCell::new(HashMap::new()) }
     }
 
+    /// Runtime over the built-in registry and a data-parallel
+    /// [`ShardedBackend`] with `replicas` reference replicas; `replicas <= 1`
+    /// falls back to the plain [`ReferenceBackend`].
+    ///
+    /// ```
+    /// use multilevel::runtime::Runtime;
+    /// let rt = Runtime::sharded(2);
+    /// assert_eq!(rt.shard_topology().0, 2);
+    /// ```
+    ///
+    /// [`ShardedBackend`]: super::ShardedBackend
+    pub fn sharded(replicas: usize) -> Runtime {
+        if replicas <= 1 {
+            return Self::reference();
+        }
+        let manifest = Manifest::builtin();
+        let backend = super::sharded::ShardedBackend::new(&manifest, replicas);
+        Runtime { manifest, backend: Box::new(backend), cache: RefCell::new(HashMap::new()) }
+    }
+
     /// Runtime over an AOT artifact directory (with `manifest.json`).
     ///
     /// With the `pjrt` feature this executes the compiled HLO artifacts
@@ -80,14 +100,23 @@ impl Runtime {
 
     /// Default runtime: the artifact dir (`$ML_ARTIFACTS` or `./artifacts`)
     /// when it exists **and** a device backend is compiled in; otherwise the
-    /// reference backend over the built-in registry.
+    /// sharded backend when `PALLAS_REPLICAS > 1`; otherwise the reference
+    /// backend over the built-in registry.
     pub fn load_default() -> Result<Runtime> {
+        Self::load_default_sharded(super::sharded::env_replicas())
+    }
+
+    /// [`load_default`](Runtime::load_default) with an explicit replica
+    /// count (the CLI `--replicas` flag), overriding `PALLAS_REPLICAS`. A
+    /// compiled-in device backend still wins — sharding wraps only the
+    /// host reference backend.
+    pub fn load_default_sharded(replicas: usize) -> Result<Runtime> {
         let dir = std::env::var("ML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         let path = Path::new(&dir);
         if cfg!(feature = "pjrt") && path.join("manifest.json").exists() {
             return Self::load(path);
         }
-        Ok(Self::reference())
+        Ok(Self::sharded(replicas))
     }
 
     /// Backend platform name ("reference-cpu", "pjrt:cpu", …).
@@ -109,6 +138,11 @@ impl Runtime {
     /// The backend itself (device info, compile accounting).
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
+    }
+
+    /// Data-parallel shard topology: `(replicas, threads_per_replica)`.
+    pub fn shard_topology(&self) -> (usize, usize) {
+        self.backend.shard_topology()
     }
 
     /// Cumulative artifact-preparation seconds (App. C overhead accounting).

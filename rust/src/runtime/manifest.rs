@@ -113,6 +113,34 @@ pub struct ArtifactSpec {
     pub meta: Json,
 }
 
+impl ArtifactSpec {
+    /// True when this artifact's batch dimension may be split across
+    /// data-parallel replicas. Taken from the manifest meta
+    /// (`shard = "batch"`, emitted by the built-in registry for the
+    /// `train_*` plan entries) with a kind-based fallback for on-disk
+    /// manifests that predate the field.
+    pub fn shard_batch(&self) -> bool {
+        match self.meta.get("shard").as_str() {
+            Some(mode) => mode == "batch",
+            None => matches!(self.kind.as_str(), "train_step" | "train_grad"),
+        }
+    }
+
+    /// Indices of the inputs that carry the batch dimension (leading extent
+    /// equal to `batch`), excluding the state vector — these are the inputs
+    /// a data-parallel backend slices per replica.
+    pub fn batch_input_indices(&self, batch: usize) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| {
+                i.name != "state" && !i.shape.is_empty() && i.shape[0] == batch
+            })
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+}
+
 /// The whole manifest.
 #[derive(Debug)]
 pub struct Manifest {

@@ -4,8 +4,10 @@
 //!
 //! * [`Backend`] — the execution contract (artifact execution, buffer
 //!   alloc/copy, device info). Implementations:
-//!   [`ReferenceBackend`] (pure-Rust f32 host, always available) and
-//!   `PjrtBackend` (compiled HLO via the PJRT C API, `pjrt` feature).
+//!   [`ReferenceBackend`] (pure-Rust f32 host, always available),
+//!   [`ShardedBackend`] (deterministic data-parallel training across `R`
+//!   reference replicas; `PALLAS_REPLICAS`) and `PjrtBackend` (compiled HLO
+//!   via the PJRT C API, `pjrt` feature).
 //! * [`Runtime`] — coordinator-facing facade: manifest + backend +
 //!   prepared-artifact cache.
 //! * [`Manifest`] / [`registry`] — which artifacts exist and the flat
@@ -35,6 +37,7 @@ pub mod params;
 pub mod pjrt;
 pub mod reference;
 pub mod registry;
+pub mod sharded;
 
 pub use backend::{Arg, Backend, Buffer, HostData};
 pub use client::{Exe, Runtime};
@@ -44,3 +47,4 @@ pub use params::{init_state, init_theta, load_checkpoint, save_checkpoint, state
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use reference::ReferenceBackend;
+pub use sharded::ShardedBackend;

@@ -1,6 +1,6 @@
 //! [`ReferenceBackend`]: a pure-Rust, f32 host implementation of the whole
 //! artifact contract — every artifact name the AOT pipeline lowers to HLO
-//! (`train_step__*`, `eval_loss__*`, `coalesce__A__B`, `refine__A__B`,
+//! (`train_step__*`, `train_grad__*`, `eval_loss__*`, `coalesce__A__B`, `refine__A__B`,
 //! `refine_fit__A__B`, `interp__*`, `distill_step__A__B`, `ft_step__*`,
 //! `ft_acc__*`, `lora_step__*`, `lora_eval__*`, `attn_maps__*`,
 //! `eval_acc__*`) executes directly on the host, no XLA device or artifact
@@ -63,8 +63,9 @@ impl<'a> View<'a> {
 }
 
 /// Artifact kinds the reference backend interprets.
-const KINDS: [&str; 12] = [
+const KINDS: [&str; 13] = [
     "train_step",
+    "train_grad",
     "eval_loss",
     "eval_acc",
     "attn_maps",
@@ -214,6 +215,28 @@ impl Backend for ReferenceBackend {
                 let step = views[i + 1].scalar()?;
                 let out = model::train_step(cfg, state, &batch, lr, step)?;
                 Ok(Buffer::host_f32(out, vec![cfg.state_len()]))
+            }
+            "train_grad" => {
+                // grad-only shard step: theta (not the full state) in, the
+                // `[loss, grad]` vector out. The batch count comes from the
+                // argument buffers, so a data-parallel wrapper can pass any
+                // contiguous slice of the configured batch.
+                let cfg = self.cfg_of(spec)?;
+                let theta = views[0].f32s()?;
+                if theta.len() != cfg.n_params {
+                    bail!(
+                        "train_grad theta has {} elements, config {} needs {}",
+                        theta.len(),
+                        cfg.name,
+                        cfg.n_params
+                    );
+                }
+                let (batch, _) = Self::batch_at(cfg, &views, 1)?;
+                let (loss, grad) = model::train_grad(cfg, theta, &batch)?;
+                let mut out = Vec::with_capacity(1 + cfg.n_params);
+                out.push(loss);
+                out.extend_from_slice(&grad);
+                Ok(Buffer::host_f32(out, vec![1 + cfg.n_params]))
             }
             "eval_loss" => {
                 let cfg = self.cfg_of(spec)?;

@@ -294,6 +294,12 @@ struct Dims {
 
 impl Dims {
     fn of(cfg: &ModelCfg) -> Dims {
+        Self::with_batch(cfg, cfg.batch)
+    }
+
+    /// Geometry with an explicit batch count `b` — the data-parallel shard
+    /// path runs the same kernels on a slice of the configured batch.
+    fn with_batch(cfg: &ModelCfg, b: usize) -> Dims {
         let (s, v) = match cfg.family {
             Family::Vit => {
                 let g = cfg.image_size / cfg.patch_size;
@@ -302,7 +308,7 @@ impl Dims {
             _ => (cfg.seq_len, cfg.vocab),
         };
         Dims {
-            b: cfg.batch,
+            b,
             s,
             d: cfg.d_model,
             dff: cfg.d_ff,
@@ -956,12 +962,43 @@ fn embed_batch_bwd(off: &Offsets, cfg: &ModelCfg, dm: &Dims, batch: &BatchRef<'_
     }
 }
 
+/// Batch count carried by a [`BatchRef`]'s buffers (its leading extent).
+fn batch_rows(cfg: &ModelCfg, batch: &BatchRef<'_>) -> Result<usize> {
+    let (len, per_item) = match batch {
+        BatchRef::Gpt { tokens } | BatchRef::Bert { tokens, .. } => {
+            (tokens.len(), cfg.seq_len)
+        }
+        BatchRef::Vit { labels, .. } => (labels.len(), 1),
+    };
+    if per_item == 0 || len % per_item != 0 {
+        bail!("batch of {len} elements is not a multiple of {per_item}");
+    }
+    Ok(len / per_item)
+}
+
 /// Forward + loss + full backward. Returns `(loss, grad)` with `grad`
 /// laid out exactly like `theta`.
 pub fn loss_and_grad(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>)
                      -> Result<(f32, Vec<f32>)> {
+    loss_and_grad_with(cfg, theta, batch, Dims::of(cfg))
+}
+
+/// Grad-only step over a batch *shard* (the `train_grad__*` artifact):
+/// the batch count is taken from the buffers instead of the config, so a
+/// data-parallel backend can run the same kernels on `B/R` rows. Returns
+/// the shard-mean loss and the shard-mean gradient.
+pub fn train_grad(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>)
+                  -> Result<(f32, Vec<f32>)> {
+    let b = batch_rows(cfg, batch)?;
+    if b == 0 {
+        bail!("train_grad needs a non-empty batch shard");
+    }
+    loss_and_grad_with(cfg, theta, batch, Dims::with_batch(cfg, b))
+}
+
+fn loss_and_grad_with(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>, dm: Dims)
+                      -> Result<(f32, Vec<f32>)> {
     let off = Offsets::resolve(cfg)?;
-    let dm = Dims::of(cfg);
     let t = dm.rows();
     let (d, v) = (dm.d, dm.v);
 
@@ -1511,6 +1548,28 @@ mod tests {
             let nz = g.iter().filter(|&&x| x != 0.0).count();
             assert!(nz * 2 > g.len(), "{name}: only {nz}/{} grads nonzero", g.len());
         }
+    }
+
+    #[test]
+    fn train_grad_shards_recombine_to_full_gradient() {
+        let cfg = nano("gpt_nano"); // batch 4
+        let theta = init_theta(&cfg, 9);
+        let toks = gpt_batch(&cfg, 21);
+        let (full_loss, full_grad) =
+            loss_and_grad(&cfg, &theta, &BatchRef::Gpt { tokens: &toks }).unwrap();
+        // uneven split: shard of 1 sequence + shard of 3 sequences
+        let (a, b) = toks.split_at(cfg.seq_len);
+        let (la, ga) = train_grad(&cfg, &theta, &BatchRef::Gpt { tokens: a }).unwrap();
+        let (lb, gb) = train_grad(&cfg, &theta, &BatchRef::Gpt { tokens: b }).unwrap();
+        // GPT: every sequence carries s-1 targets, so weights ∝ rows
+        let (wa, wb) = (0.25f32, 0.75f32);
+        let loss = wa * la + wb * lb;
+        assert!((loss - full_loss).abs() < 5e-5, "{loss} vs {full_loss}");
+        let mut max = 0.0f32;
+        for i in 0..full_grad.len() {
+            max = max.max((wa * ga[i] + wb * gb[i] - full_grad[i]).abs());
+        }
+        assert!(max < 5e-5, "recombined shard gradient off by {max}");
     }
 
     #[test]

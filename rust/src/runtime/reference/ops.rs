@@ -569,6 +569,29 @@ pub fn interp(a: &[f32], b: &[f32], alpha: f32) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Elementwise `x *= a`; chunk-parallel with fixed chunk boundaries, so the
+/// result is thread-count independent (the gradient all-reduce scales each
+/// replica's shard gradient by its batch weight with this).
+pub fn scale_in_place(x: &mut [f32], a: f32) {
+    par_chunks_mut(x.len(), x, ELEM_CHUNK, |_, chunk| {
+        for v in chunk.iter_mut() {
+            *v *= a;
+        }
+    });
+}
+
+/// Elementwise `dst += src`; chunk-parallel with fixed chunk boundaries (the
+/// pairwise-combine step of the deterministic tree all-reduce).
+pub fn add_in_place(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    par_chunks_mut(dst.len(), dst, ELEM_CHUNK, |ci, chunk| {
+        let o = ci * ELEM_CHUNK;
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v += src[o + i];
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::util::json::{num, obj, Json};
+use crate::util::json::{num, obj, s, Json};
 
 use super::manifest::{
     ArtifactSpec, Family, InitKind, InputSpec, Manifest, ModelCfg, ParamEntry,
@@ -288,6 +288,12 @@ fn spec(name: String, kind: &str, config: &str, config_small: Option<&str>,
     }
 }
 
+/// Meta marking an artifact's batch dimension as splittable across
+/// data-parallel replicas (consumed by `ArtifactSpec::shard_batch`).
+fn shard_meta() -> Json {
+    obj(vec![("shard", s("batch"))])
+}
+
 fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<ArtifactSpec> {
     let mut arts = Vec::new();
     let mut train_inputs = vec![state_input(cfg)];
@@ -301,7 +307,24 @@ fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<Ar
         None,
         train_inputs.clone(),
         vec![cfg.state_len()],
-        Json::Null,
+        shard_meta(),
+    ));
+    // grad-only shard step: theta in, [loss, grad] out — the per-replica
+    // unit of the sharded backend's data-parallel train step
+    let mut grad_inputs = vec![InputSpec {
+        name: "theta".into(),
+        dtype: "float32".into(),
+        shape: vec![cfg.n_params],
+    }];
+    grad_inputs.extend(batch_inputs(cfg));
+    arts.push(spec(
+        format!("train_grad__{}", cfg.name),
+        "train_grad",
+        &cfg.name,
+        None,
+        grad_inputs,
+        vec![cfg.n_params + 1],
+        shard_meta(),
     ));
     let mut eval_inputs = vec![state_input(cfg)];
     eval_inputs.extend(batch_inputs(cfg));
@@ -322,7 +345,7 @@ fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<Ar
             None,
             train_inputs,
             vec![cfg.state_len()],
-            obj(vec![("pallas", Json::Bool(true))]),
+            obj(vec![("pallas", Json::Bool(true)), ("shard", s("batch"))]),
         ));
     }
     if with_attn {
@@ -727,6 +750,29 @@ mod tests {
             }
             assert_eq!(off, cfg.n_params);
         }
+    }
+
+    #[test]
+    fn train_artifacts_carry_shard_metadata() {
+        let m = builtin_manifest();
+        let gpt = m.cfg("gpt_nano").unwrap();
+        let ts = m.artifact("train_step__gpt_nano").unwrap();
+        assert!(ts.shard_batch());
+        assert_eq!(ts.batch_input_indices(gpt.batch), vec![1]);
+        let tg = m.artifact("train_grad__gpt_nano").unwrap();
+        assert_eq!(tg.kind, "train_grad");
+        assert!(tg.shard_batch());
+        assert_eq!(tg.inputs[0].name, "theta");
+        assert_eq!(tg.inputs[0].shape, vec![gpt.n_params]);
+        assert_eq!(tg.output_shape, vec![gpt.n_params + 1]);
+        // bert: tokens and labels both carry the batch dimension
+        let bert = m.cfg("bert_nano").unwrap();
+        let bs = m.artifact("train_step__bert_nano").unwrap();
+        assert_eq!(bs.batch_input_indices(bert.batch), vec![1, 2]);
+        // coalesced levels get a grad artifact too (sharded V-cycle)
+        assert!(m.artifact("train_grad__bert_nano_lv2").is_ok());
+        // eval artifacts are not shardable
+        assert!(!m.artifact("eval_loss__gpt_nano").unwrap().shard_batch());
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Deterministic combination primitives of the [`ShardedBackend`]: the
+//! weighted tree all-reduce over per-replica gradients and the host-side
+//! AdamW application that turns the reduced gradient into the next state.
+//!
+//! # Determinism contract
+//!
+//! Both kernels are bit-identical for every kernel-thread count:
+//! [`tree_weighted_sum`] combines replicas in a fixed binary-tree order over
+//! the replica index using fixed-chunk elementwise kernels, and
+//! [`apply_adamw`] reuses the chunk-parallel AdamW kernel of the fused
+//! `train_step` path. Results therefore depend only on the replica order and
+//! the shard weights — never on thread placement.
+//!
+//! [`ShardedBackend`]: super::ShardedBackend
+
+use anyhow::{bail, Result};
+
+use crate::runtime::reference::{model, ops};
+
+/// Combine per-replica vectors into `Σ_r weights[r] · parts[r]`.
+///
+/// Each part is first scaled by its weight (skipped when the weight is
+/// exactly 1.0, so a single-replica reduce is the identity bit-for-bit),
+/// then adjacent survivors are summed pairwise — `(0,1) (2,3) … → (0,2) …`
+/// — until one vector remains. The tree shape is a function of the replica
+/// count alone.
+pub fn tree_weighted_sum(mut parts: Vec<Vec<f32>>, weights: &[f32]) -> Result<Vec<f32>> {
+    if parts.is_empty() || parts.len() != weights.len() {
+        bail!(
+            "tree_weighted_sum: {} parts vs {} weights",
+            parts.len(),
+            weights.len()
+        );
+    }
+    let n = parts[0].len();
+    for p in &parts {
+        if p.len() != n {
+            bail!("tree_weighted_sum: part length {} != {n}", p.len());
+        }
+    }
+    for (p, &w) in parts.iter_mut().zip(weights) {
+        if w != 1.0 {
+            ops::scale_in_place(p, w);
+        }
+    }
+    let mut stride = 1usize;
+    while stride < parts.len() {
+        let mut i = 0usize;
+        while i + stride < parts.len() {
+            let (head, tail) = parts.split_at_mut(i + stride);
+            let src = std::mem::take(&mut tail[0]);
+            ops::add_in_place(&mut head[i], &src);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    Ok(std::mem::take(&mut parts[0]))
+}
+
+/// Apply one AdamW update to a full `[loss, theta, m, v]` state vector on
+/// the host, returning the next state with `loss` in slot 0. This is the
+/// same chunk-parallel kernel the fused `train_step` artifact runs, so a
+/// sharded step whose reduced gradient matches the fused step's gradient
+/// produces a bit-identical state.
+pub fn apply_adamw(state: &[f32], grad: &[f32], loss: f32, lr: f32, step: f32) -> Result<Vec<f32>> {
+    let n = grad.len();
+    if state.len() != 3 * n + 1 {
+        bail!("apply_adamw: state length {} != {}", state.len(), 3 * n + 1);
+    }
+    let mut out = Vec::with_capacity(state.len());
+    out.push(loss);
+    out.extend_from_slice(&state[1..]);
+    let body = &mut out[1..];
+    let (theta, rest) = body.split_at_mut(n);
+    let (m, v) = rest.split_at_mut(n);
+    model::adamw(theta, grad, m, v, lr, step);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_matches_linear_weighted_sum() {
+        // 5 replicas (non-power-of-two tree) over a length crossing chunk
+        // boundaries is still a plain weighted sum to f32 tolerance
+        let n = 10_000usize;
+        let parts: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..n).map(|i| ((i + r * 31) % 97) as f32 * 0.01).collect())
+            .collect();
+        let weights = [0.1f32, 0.3, 0.2, 0.25, 0.15];
+        let expect: Vec<f32> = (0..n)
+            .map(|i| {
+                parts
+                    .iter()
+                    .zip(&weights)
+                    .map(|(p, &w)| p[i] * w)
+                    .sum::<f32>()
+            })
+            .collect();
+        let got = tree_weighted_sum(parts, &weights).unwrap();
+        for i in 0..n {
+            assert!(
+                (got[i] - expect[i]).abs() < 1e-5,
+                "element {i}: {} vs {}",
+                got[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn unit_weight_single_part_is_identity() {
+        let part = vec![1.5f32, -2.25, 0.0, 3.0e-8];
+        let got = tree_weighted_sum(vec![part.clone()], &[1.0]).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&part));
+    }
+
+    #[test]
+    fn apply_adamw_matches_fused_packing() {
+        // zero gradient still decays moments and applies weight decay —
+        // exactly like the fused train_step's AdamW
+        let n = 4usize;
+        let mut state = vec![0.0f32; 3 * n + 1];
+        for (i, v) in state.iter_mut().enumerate() {
+            *v = i as f32 * 0.1;
+        }
+        let grad = vec![0.5f32; n];
+        let out = apply_adamw(&state, &grad, 1.25, 1e-3, 1.0).unwrap();
+        assert_eq!(out.len(), state.len());
+        assert_eq!(out[0], 1.25);
+        // theta moved against the gradient
+        assert!(out[1] < state[1] || state[1] == 0.0);
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        assert!(tree_weighted_sum(vec![vec![1.0], vec![1.0, 2.0]], &[0.5, 0.5]).is_err());
+        assert!(tree_weighted_sum(vec![vec![1.0]], &[0.5, 0.5]).is_err());
+        assert!(apply_adamw(&[0.0; 7], &[0.0; 3], 0.0, 1e-3, 1.0).is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! [`ShardedBackend`]: deterministic data-parallel training across `R`
+//! in-process replicas of the [`ReferenceBackend`].
+//!
+//! # Execution model
+//!
+//! A sharded `train_step__*` call is restructured into
+//! *grad → all-reduce → optimizer*:
+//!
+//! 1. the batch dimension of the artifact's batch inputs is split into `R`
+//!    contiguous shards (near-even `⌊r·B/R⌋` boundaries, so batches that do
+//!    not divide evenly still shard);
+//! 2. every replica runs the grad-only `train_grad__*` artifact on its
+//!    shard, concurrently on the fork-join pool via
+//!    [`threadpool::partitioned`] — each replica driver owns a disjoint
+//!    slice of `PALLAS_REF_THREADS / R` kernel workers, so replica fan-out
+//!    composes with the blocked-GEMM fan-out instead of serializing it;
+//! 3. shard gradients are combined by a deterministic weighted tree
+//!    all-reduce (fixed replica order, fixed-chunk reductions; weights are
+//!    each shard's share of the loss-target count, which makes the reduced
+//!    gradient the exact full-batch mean gradient up to f32 rounding);
+//! 4. one host-side AdamW application ([`allreduce::apply_adamw`]) turns
+//!    `[loss, theta, m, v]` plus the reduced gradient into the next state.
+//!
+//! Reducing gradients *before* the optimizer keeps AdamW semantics exact
+//! rather than approximate: the sharded step is tolerance-equal to the
+//! single-replica fused step (identical up to f32 summation order), and for
+//! a fixed replica count it is **bit-identical** for every thread count and
+//! thread placement. Artifacts without a batch dimension (coalesce /
+//! refine / interp, eval, attn_maps, …) are transparently delegated to
+//! replica 0.
+//!
+//! The replica count comes from `PALLAS_REPLICAS` (see [`env_replicas`]) or
+//! the `--replicas` CLI flag; [`Backend::set_replica_cap`] lets the V-cycle
+//! schedule cap the fan-out at the active level's batch size.
+//!
+//! [`ReferenceBackend`]: super::ReferenceBackend
+
+pub mod allreduce;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Arg, Backend, Buffer, HostData};
+use super::manifest::{ArtifactSpec, Family, Manifest, ModelCfg};
+use super::reference::ReferenceBackend;
+use crate::util::threadpool;
+
+/// Sanity cap on the replica fan-out (guards absurd `PALLAS_REPLICAS`).
+pub const MAX_REPLICAS: usize = 64;
+
+/// Parse a `PALLAS_REPLICAS`-style override; `None` for invalid values.
+fn parse_replicas(raw: &str) -> Option<usize> {
+    let n = raw.trim().parse::<usize>().ok()?;
+    if n == 0 {
+        None
+    } else {
+        Some(n.min(MAX_REPLICAS))
+    }
+}
+
+/// Replica count requested through the environment (`PALLAS_REPLICAS`,
+/// default 1 = unsharded).
+pub fn env_replicas() -> usize {
+    match std::env::var("PALLAS_REPLICAS") {
+        Ok(v) => parse_replicas(&v).unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// Data-parallel backend: `R` inner [`ReferenceBackend`] replicas behind
+/// the single-buffer [`Backend`] contract. See the module docs for the
+/// execution model and determinism contract.
+pub struct ShardedBackend {
+    replicas: Vec<ReferenceBackend>,
+    configs: BTreeMap<String, ModelCfg>,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Largest useful fan-out for upcoming calls (the active level's batch
+    /// size); set through [`Backend::set_replica_cap`].
+    cap: Cell<usize>,
+}
+
+/// One batch-carrying artifact input, ready to slice per replica.
+enum ShardInput<'a> {
+    F32 { data: &'a [f32], row: usize },
+    I32 { data: &'a [i32], row: usize },
+}
+
+/// The parsed arguments of a shardable `train_step__*` call.
+struct TrainArgs<'a> {
+    state: &'a [f32],
+    batch: Vec<ShardInput<'a>>,
+    lr: f32,
+    step: f32,
+}
+
+/// Move a host f32 buffer's storage out without copying (the reference
+/// backend returns freshly allocated, unshared buffers; a shared buffer
+/// falls back to one clone).
+fn take_host_f32(buf: Buffer) -> Result<Vec<f32>> {
+    match buf {
+        Buffer::Host { data, .. } => match Rc::try_unwrap(data) {
+            Ok(HostData::F32(v)) => Ok(v),
+            Ok(HostData::I32(_)) => bail!("expected f32 buffer, found i32"),
+            Err(shared) => match shared.as_ref() {
+                HostData::F32(v) => Ok(v.clone()),
+                HostData::I32(_) => bail!("expected f32 buffer, found i32"),
+            },
+        },
+        #[cfg(feature = "pjrt")]
+        Buffer::Pjrt(_) => bail!("sharded backend received a device buffer"),
+    }
+}
+
+fn buf_f32<'a>(b: &'a Buffer) -> Option<&'a [f32]> {
+    match b {
+        Buffer::Host { data, .. } => match data.as_ref() {
+            HostData::F32(v) => Some(v),
+            HostData::I32(_) => None,
+        },
+        #[cfg(feature = "pjrt")]
+        Buffer::Pjrt(_) => None,
+    }
+}
+
+fn buf_i32<'a>(b: &'a Buffer) -> Option<&'a [i32]> {
+    match b {
+        Buffer::Host { data, .. } => match data.as_ref() {
+            HostData::I32(v) => Some(v),
+            HostData::F32(_) => None,
+        },
+        #[cfg(feature = "pjrt")]
+        Buffer::Pjrt(_) => None,
+    }
+}
+
+/// Marshal a train-step argument list against its manifest signature.
+/// Returns `None` when any argument has an unexpected form (device buffer,
+/// unknown input name, …) — the caller then falls back to replica 0.
+fn parse_train_args<'a>(
+    spec: &ArtifactSpec,
+    cfg: &ModelCfg,
+    args: &'a [Arg<'a>],
+) -> Option<TrainArgs<'a>> {
+    if args.len() != spec.inputs.len() {
+        return None;
+    }
+    let batch_idx = spec.batch_input_indices(cfg.batch);
+    let mut state: Option<&'a [f32]> = None;
+    let mut lr: Option<f32> = None;
+    let mut step: Option<f32> = None;
+    let mut batch: Vec<ShardInput<'a>> = Vec::with_capacity(batch_idx.len());
+    for (i, (arg, inp)) in args.iter().zip(&spec.inputs).enumerate() {
+        match inp.name.as_str() {
+            "state" => match arg {
+                Arg::Buf(b) => state = Some(buf_f32(b)?),
+                Arg::F32(d, _) => state = Some(*d),
+                _ => return None,
+            },
+            "lr" => match arg {
+                Arg::Scalar(v) => lr = Some(*v),
+                _ => return None,
+            },
+            "step" => match arg {
+                Arg::Scalar(v) => step = Some(*v),
+                _ => return None,
+            },
+            _ if batch_idx.contains(&i) => {
+                let row: usize = inp.shape[1..].iter().product();
+                let si = match arg {
+                    Arg::Buf(b) => {
+                        if let Some(d) = buf_f32(b) {
+                            ShardInput::F32 { data: d, row }
+                        } else {
+                            ShardInput::I32 { data: buf_i32(b)?, row }
+                        }
+                    }
+                    Arg::F32(d, _) => ShardInput::F32 { data: *d, row },
+                    Arg::I32(d, _) => ShardInput::I32 { data: *d, row },
+                    Arg::Scalar(_) => return None,
+                };
+                let len = match &si {
+                    ShardInput::F32 { data, .. } => data.len(),
+                    ShardInput::I32 { data, .. } => data.len(),
+                };
+                if row == 0 || len != cfg.batch * row {
+                    return None;
+                }
+                batch.push(si);
+            }
+            _ => return None,
+        }
+    }
+    let state = state?;
+    if state.len() != cfg.state_len() || batch.is_empty() {
+        return None;
+    }
+    Some(TrainArgs { state, batch, lr: lr?, step: step? })
+}
+
+impl ShardedBackend {
+    /// Backend over a manifest's registry with `replicas` inner reference
+    /// replicas (clamped to `1..=MAX_REPLICAS`).
+    pub fn new(manifest: &Manifest, replicas: usize) -> ShardedBackend {
+        let r = replicas.clamp(1, MAX_REPLICAS);
+        ShardedBackend {
+            replicas: (0..r).map(|_| ReferenceBackend::new(manifest)).collect(),
+            configs: manifest.configs.clone(),
+            artifacts: manifest.artifacts.clone(),
+            cap: Cell::new(usize::MAX),
+        }
+    }
+
+    /// Configured replica count `R`.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Loss-target count of shard rows `[r0, r1)` — the shard's all-reduce
+    /// weight numerator (mirrors the per-family masking in
+    /// `model::targets_of`).
+    fn shard_count(cfg: &ModelCfg, ta: &TrainArgs<'_>, r0: usize, r1: usize) -> usize {
+        match cfg.family {
+            Family::Gpt => (r1 - r0) * cfg.seq_len.saturating_sub(1),
+            Family::Vit => r1 - r0,
+            Family::Bert => match ta.batch.get(1) {
+                Some(ShardInput::I32 { data, row }) => data[r0 * row..r1 * row]
+                    .iter()
+                    .filter(|&&l| l >= 0)
+                    .count(),
+                _ => 0,
+            },
+        }
+    }
+
+    /// The sharded grad → all-reduce → AdamW path. `None` when this call
+    /// cannot be sharded (no grad artifact, single-shard fan-out,
+    /// unexpected argument form) and should run unsharded on replica 0.
+    fn try_sharded(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
+        let Some(cfg) = self.configs.get(&spec.config) else {
+            return Ok(None);
+        };
+        let Some(grad_spec) = self.artifacts.get(&format!("train_grad__{}", spec.config))
+        else {
+            return Ok(None);
+        };
+        let r_eff = self.replicas.len().min(self.cap.get()).min(cfg.batch);
+        if r_eff <= 1 {
+            return Ok(None);
+        }
+        let Some(ta) = parse_train_args(spec, cfg, args) else {
+            return Ok(None);
+        };
+        self.sharded_train(cfg, grad_spec, &ta, r_eff).map(Some)
+    }
+
+    fn sharded_train(
+        &self,
+        cfg: &ModelCfg,
+        grad_spec: &ArtifactSpec,
+        ta: &TrainArgs<'_>,
+        r_eff: usize,
+    ) -> Result<Buffer> {
+        let b = cfg.batch;
+        let n = cfg.n_params;
+        let bounds: Vec<(usize, usize)> =
+            (0..r_eff).map(|r| (r * b / r_eff, (r + 1) * b / r_eff)).collect();
+        let counts: Vec<usize> =
+            bounds.iter().map(|&(r0, r1)| Self::shard_count(cfg, ta, r0, r1)).collect();
+        let total: usize = counts.iter().sum();
+        let theta = &ta.state[1..1 + n];
+
+        // replica shard steps, concurrent with partitioned kernel threads;
+        // results come back in replica order
+        let backends = &self.replicas;
+        let outs: Vec<Result<Vec<f32>>> = threadpool::partitioned(r_eff, |r| {
+            let (r0, r1) = bounds[r];
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + ta.batch.len());
+            args.push(Arg::F32(theta, vec![n]));
+            for inp in &ta.batch {
+                match inp {
+                    ShardInput::F32 { data, row } => args.push(Arg::F32(
+                        &data[r0 * row..r1 * row],
+                        vec![r1 - r0, *row],
+                    )),
+                    ShardInput::I32 { data, row } => args.push(Arg::I32(
+                        &data[r0 * row..r1 * row],
+                        vec![r1 - r0, *row],
+                    )),
+                }
+            }
+            take_host_f32(backends[r].execute(grad_spec, &args)?)
+        });
+
+        let mut parts = Vec::with_capacity(r_eff);
+        for out in outs {
+            let v = out?;
+            if v.len() != 1 + n {
+                bail!(
+                    "train_grad__{} returned {} elements, expected {}",
+                    cfg.name,
+                    v.len(),
+                    1 + n
+                );
+            }
+            parts.push(v);
+        }
+
+        // shard weights: each shard's share of the loss-target count (an
+        // all-negative-label BERT shard weighs 0 and drops out). The whole
+        // `[loss, grad]` vectors reduce in one pass — the loss slot takes
+        // the same weighted sum the gradient does.
+        let weights: Vec<f32> = if total == 0 {
+            vec![0.0; r_eff]
+        } else {
+            counts.iter().map(|&c| c as f32 / total as f32).collect()
+        };
+        let reduced = allreduce::tree_weighted_sum(parts, &weights)?;
+        let out =
+            allreduce::apply_adamw(ta.state, &reduced[1..], reduced[0], ta.lr, ta.step)?;
+        Ok(Buffer::host_f32(out, vec![cfg.state_len()]))
+    }
+}
+
+impl Backend for ShardedBackend {
+    fn platform_name(&self) -> String {
+        format!("sharded({}x reference-cpu)", self.replicas.len())
+    }
+
+    fn device_info(&self) -> String {
+        let (r, t) = self.shard_topology();
+        format!(
+            "sharded data-parallel: replicas={r} × threads-per-replica={t}, \
+             tree all-reduce; inner: {}",
+            self.replicas[0].device_info()
+        )
+    }
+
+    fn shard_topology(&self) -> (usize, usize) {
+        let r = self.replicas.len();
+        (r, (threadpool::threads() / r).max(1))
+    }
+
+    fn set_replica_cap(&self, cap: usize) {
+        self.cap.set(cap.max(1));
+    }
+
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        if spec.kind == "train_step" && spec.shard_batch() {
+            if let Some(g) = self.artifacts.get(&format!("train_grad__{}", spec.config)) {
+                for r in &self.replicas {
+                    r.prepare(g)?;
+                }
+            }
+        }
+        self.replicas[0].prepare(spec)
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer> {
+        if self.replicas.len() > 1 && spec.kind == "train_step" && spec.shard_batch() {
+            if let Some(out) = self.try_sharded(spec, args)? {
+                return Ok(out);
+            }
+        }
+        self.replicas[0].execute(spec, args)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.replicas[0].upload_f32(data, dims)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.replicas[0].upload_i32(data, dims)
+    }
+
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        self.replicas[0].read_f32(buf)
+    }
+
+    fn read_scalar(&self, buf: &Buffer) -> Result<f32> {
+        self.replicas[0].read_scalar(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_replicas_rejects_garbage() {
+        assert_eq!(parse_replicas("4"), Some(4));
+        assert_eq!(parse_replicas(" 2 "), Some(2));
+        assert_eq!(parse_replicas("0"), None);
+        assert_eq!(parse_replicas("-3"), None);
+        assert_eq!(parse_replicas("many"), None);
+        assert_eq!(parse_replicas("100000"), Some(MAX_REPLICAS));
+    }
+
+    #[test]
+    fn shard_bounds_cover_odd_batches() {
+        // the ⌊r·B/R⌋ boundaries partition any batch into non-empty,
+        // contiguous, near-even shards whenever R <= B
+        for b in 1..=16usize {
+            for r_eff in 1..=b {
+                let bounds: Vec<(usize, usize)> = (0..r_eff)
+                    .map(|r| (r * b / r_eff, (r + 1) * b / r_eff))
+                    .collect();
+                assert_eq!(bounds[0].0, 0);
+                assert_eq!(bounds[r_eff - 1].1, b);
+                for w in bounds.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap in shard bounds");
+                }
+                for &(r0, r1) in &bounds {
+                    assert!(r1 > r0, "empty shard for B={b}, R={r_eff}");
+                    assert!(r1 - r0 <= b.div_ceil(r_eff), "uneven shard");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_batch_artifacts_delegate_to_replica_zero() {
+        let m = Manifest::builtin();
+        let be = ShardedBackend::new(&m, 4);
+        let spec = m.artifact("eval_loss__gpt_nano").unwrap();
+        be.prepare(spec).unwrap();
+        let cfg = m.cfg("gpt_nano").unwrap();
+        let state = vec![0.0f32; cfg.state_len()];
+        let tokens = vec![1i32; cfg.batch * cfg.seq_len];
+        let out = be
+            .execute(
+                spec,
+                &[
+                    Arg::F32(&state, vec![cfg.state_len()]),
+                    Arg::I32(&tokens, vec![cfg.batch, cfg.seq_len]),
+                ],
+            )
+            .unwrap();
+        assert!(be.read_scalar(&out).unwrap().is_finite());
+    }
+}

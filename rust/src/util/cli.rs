@@ -51,10 +51,16 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+    /// `Some(n)` when the option is present (panics on a non-integer value),
+    /// `None` when absent — for options whose default comes from elsewhere
+    /// (e.g. `--replicas` falling back to `PALLAS_REPLICAS`).
+    pub fn usize_opt(&self, name: &str) -> Option<usize> {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
-            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.usize_opt(name).unwrap_or(default)
     }
 
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
@@ -89,6 +95,8 @@ mod tests {
         assert_eq!(a.f64_or("alpha", 0.0), 0.25);
         assert!(a.flag("verbose"));
         assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_opt("steps"), Some(500));
+        assert_eq!(a.usize_opt("missing"), None);
     }
 
     #[test]

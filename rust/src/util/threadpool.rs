@@ -24,6 +24,16 @@
 //! resizes it at runtime. Workers spawn on demand and park on their channel
 //! when idle; shrinking just stops dispatching to the extras. Thread count
 //! only changes wall time, never results.
+//!
+//! # Partitioning
+//!
+//! [`partitioned`] runs `n` independent drivers concurrently (data-parallel
+//! replicas), splitting the kernel-thread budget between them: driver `i`
+//! gets a *disjoint* slice of the worker set for its nested `parallel_for`
+//! dispatches, so replica fan-out composes with kernel fan-out instead of
+//! degrading to serial (the pre-PR 3 behavior, where any nested dispatch
+//! ran inline). Worker slices only move work between threads — results
+//! remain bit-identical for every thread count and every replica count.
 
 use std::any::Any;
 use std::cell::Cell;
@@ -52,6 +62,12 @@ thread_local! {
     /// nested `parallel_for` degrades to serial instead of deadlocking a
     /// worker on its own queue.
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
+
+    /// Worker slice of the current thread: `(first_worker, fanout_cap)`.
+    /// `fanout_cap == 0` means unrestricted (the whole pool). Set by
+    /// [`partitioned`] on each replica driver so nested dispatches from
+    /// different replicas land on disjoint workers.
+    static WORKER_SLICE: Cell<(usize, usize)> = const { Cell::new((0, 0)) };
 }
 
 /// One fork-join dispatch: lifetime-erased body + claim/completion state.
@@ -183,7 +199,7 @@ fn spawn_worker(idx: usize) -> Sender<Arc<Batch>> {
     tx
 }
 
-fn dispatch(n: usize, workers: usize, body: &(dyn Fn(usize) + Sync)) {
+fn dispatch(n: usize, workers: usize, first: usize, body: &(dyn Fn(usize) + Sync)) {
     // SAFETY: the erased pointer is only dereferenced between here and
     // `wait()` observing `pending == 0` below; this frame (which the real
     // lifetime outlives) blocks until then.
@@ -200,10 +216,10 @@ fn dispatch(n: usize, workers: usize, body: &(dyn Fn(usize) + Sync)) {
     });
     {
         let mut senders = pool().senders.lock().unwrap();
-        while senders.len() < workers {
+        while senders.len() < first + workers {
             senders.push(spawn_worker(senders.len()));
         }
-        for s in senders.iter().take(workers) {
+        for s in senders.iter().skip(first).take(workers) {
             s.send(batch.clone()).expect("pool worker channel closed");
         }
     }
@@ -238,16 +254,72 @@ fn dispatch(n: usize, workers: usize, body: &(dyn Fn(usize) + Sync)) {
 
 /// Run `body(i)` for every `i in 0..n`, fanned out over the pool; returns
 /// after the last index completes. Panics in `body` propagate to the caller
-/// (after all in-flight indices stop).
+/// (after all in-flight indices stop). Inside a [`partitioned`] driver the
+/// fan-out is confined to that driver's worker slice.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
-    let fanout = threads().min(n);
+    let (first, cap) = WORKER_SLICE.with(|c| c.get());
+    let limit = if cap > 0 { cap.min(threads()) } else { threads() };
+    let fanout = limit.min(n);
     if fanout <= 1 || IN_POOL.with(|c| c.get()) {
         for i in 0..n {
             body(i);
         }
         return;
     }
-    dispatch(n, fanout - 1, &body);
+    dispatch(n, fanout - 1, first, &body);
+}
+
+/// Run `f` with the current thread's nested dispatches confined to the
+/// worker slice `[first, first + cap.saturating_sub(1))` (the thread itself
+/// is the `cap`-th lane). The previous slice is restored on exit, panics
+/// included.
+pub fn with_worker_slice<R>(first: usize, cap: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore((usize, usize));
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            WORKER_SLICE.with(|c| c.set(prev));
+        }
+    }
+    let _restore = Restore(WORKER_SLICE.with(|c| c.replace((first, cap.max(1)))));
+    f()
+}
+
+/// Run `n` independent tasks concurrently on dedicated driver threads,
+/// partitioning the kernel-thread budget: task `i` gets a disjoint slice of
+/// `threads() / n` pool workers for its nested [`parallel_for`] dispatches
+/// (the data-parallel replica substrate). Results return in task order, so
+/// callers combining them stay deterministic. Degrades to sequential inline
+/// execution when `n <= 1` or when already inside the pool or another
+/// partition (no nested partitioning).
+pub fn partitioned<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let nested =
+        IN_POOL.with(|c| c.get()) || WORKER_SLICE.with(|c| c.get()).1 > 0;
+    if n <= 1 || nested {
+        return (0..n).map(&f).collect();
+    }
+    let per = (threads() / n).max(1);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (1..n)
+            .map(|i| {
+                let f = &f;
+                scope.spawn(move || with_worker_slice(i * per, per, || f(i)))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        out.push(with_worker_slice(0, per, || f(0)));
+        for h in handles {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(p) => resume_unwind(p),
+            }
+        }
+        out
+    })
 }
 
 /// [`parallel_for`] gated on an approximate operation count: below
@@ -411,6 +483,80 @@ mod tests {
             total.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 16);
+        set_threads(before);
+    }
+
+    #[test]
+    fn partitioned_covers_all_tasks_in_order() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        let out = partitioned(3, |i| {
+            // nested kernel dispatch inside each partition driver
+            let total = AtomicUsize::new(0);
+            parallel_for(64, |j| {
+                total.fetch_add(j, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 64 * 63 / 2);
+            i * 10
+        });
+        assert_eq!(out, vec![0, 10, 20]);
+        set_threads(before);
+    }
+
+    #[test]
+    fn partitioned_inside_pool_degrades_to_serial() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        let total = AtomicUsize::new(0);
+        parallel_for(4, |_| {
+            let out = partitioned(3, |i| i + 1);
+            assert_eq!(out, vec![1, 2, 3]);
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+        set_threads(before);
+    }
+
+    #[test]
+    fn partitioned_panic_propagates() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        let r = std::panic::catch_unwind(|| {
+            partitioned(3, |i| {
+                if i == 2 {
+                    panic!("replica boom");
+                }
+                i
+            })
+        });
+        assert!(r.is_err(), "partition panic was swallowed");
+        // the pool must still be usable afterwards
+        let out = partitioned(2, |i| i);
+        assert_eq!(out, vec![0, 1]);
+        set_threads(before);
+    }
+
+    #[test]
+    fn worker_slice_restores_on_exit() {
+        let _g = lock();
+        let before = threads();
+        set_threads(4);
+        with_worker_slice(2, 2, || {
+            let total = AtomicUsize::new(0);
+            parallel_for(16, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 16);
+        });
+        // unrestricted again: a full-width dispatch still covers every index
+        let total = AtomicUsize::new(0);
+        parallel_for(64, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
         set_threads(before);
     }
 

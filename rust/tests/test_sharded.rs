@@ -1,0 +1,224 @@
+//! Sharded-backend determinism and parity: for a fixed replica count `R`
+//! the data-parallel train step must be bit-identical for every kernel
+//! thread count (the all-reduce is a fixed tree over replicas with
+//! fixed-chunk reductions), and across replica counts it must agree with
+//! the single-replica fused step to f32 tolerance — including batch sizes
+//! that do not divide evenly by `R`, and a full 2-level V-cycle.
+//!
+//! Tests serialize on a local mutex because the kernel pool is
+//! process-global and the test harness runs tests concurrently.
+
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::coordinator::{Harness, Method, RunOpts, Trainer};
+use multilevel::runtime::{
+    init_state, init_theta, Arg, Backend, Manifest, ReferenceBackend, Runtime, ShardedBackend,
+};
+use multilevel::util::threadpool;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Train `config` for `steps` on `rt`; returns (final host state, losses).
+fn run_steps(rt: &Runtime, config: &str, steps: usize) -> (Vec<f32>, Vec<f32>) {
+    let cfg = rt.cfg(config).unwrap().clone();
+    let mut state = init_state(rt, &cfg, 11).unwrap();
+    let mut tr = Trainer::new(rt, config, 0, 5, 1).unwrap();
+    let mut losses = Vec::with_capacity(steps);
+    for step in 1..=steps {
+        let (s, loss) = tr.step(rt, &state, 1e-3, step).unwrap();
+        assert!(loss.is_finite(), "{config} loss diverged at step {step}");
+        state = s;
+        losses.push(loss);
+    }
+    (state.to_host(rt).unwrap(), losses)
+}
+
+/// Robust state comparison: the losses must match tightly, and at most a
+/// handful of parameters may deviate visibly (elements whose gradient is a
+/// near-zero cancellation can flip sign under a different f32 summation
+/// order, which AdamW's sign-like first step amplifies to ~lr — that is
+/// expected float noise, not an error; a wrong shard weighting would move
+/// *every* element).
+fn assert_state_close(got: &[f32], want: &[f32], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: state length");
+    assert!(
+        (got[0] - want[0]).abs() < 1e-3,
+        "{label}: loss {} vs {}",
+        got[0],
+        want[0]
+    );
+    let mut max = 0.0f32;
+    let mut off = 0usize;
+    for (g, w) in got[1..].iter().zip(&want[1..]) {
+        let d = (g - w).abs();
+        if d > 1e-4 {
+            off += 1;
+        }
+        if d > max {
+            max = d;
+        }
+    }
+    let frac = off as f64 / (got.len() - 1) as f64;
+    assert!(
+        frac < 1e-3,
+        "{label}: {off} elements ({frac:.2e}) deviate > 1e-4 (max {max})"
+    );
+    assert!(max < 5e-2, "{label}: max deviation {max}");
+}
+
+#[test]
+fn sharded_steps_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let before = threadpool::threads();
+    for replicas in [1usize, 2, 4] {
+        let rt = Runtime::sharded(replicas);
+        let run = |threads: usize| {
+            threadpool::set_threads(threads);
+            run_steps(&rt, "gpt_base_sim", 2).0
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        let t8 = run(8);
+        assert_eq!(bits(&t1), bits(&t2), "R={replicas}: 1 vs 2 threads diverged");
+        assert_eq!(bits(&t1), bits(&t8), "R={replicas}: 1 vs 8 threads diverged");
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn sharded_matches_unsharded_within_tolerance() {
+    let _g = lock();
+    let reference = Runtime::reference();
+    let (base_state, base_losses) = run_steps(&reference, "gpt_base_sim", 2);
+    for replicas in [2usize, 4] {
+        let rt = Runtime::sharded(replicas);
+        let (state, losses) = run_steps(&rt, "gpt_base_sim", 2);
+        for (l, b) in losses.iter().zip(&base_losses) {
+            assert!((l - b).abs() < 1e-3, "R={replicas}: loss {l} vs {b}");
+        }
+        assert_state_close(&state, &base_state, &format!("R={replicas}"));
+    }
+}
+
+#[test]
+fn odd_batches_shard_without_remainder_loss() {
+    let _g = lock();
+    let before = threadpool::threads();
+    // gpt_base_sim has batch 8: R=3 gives shards of 2/3/3 rows;
+    // gpt_nano has batch 4: R=3 gives 1/1/2
+    let reference = Runtime::reference();
+    for config in ["gpt_nano", "gpt_base_sim"] {
+        let (base_state, _) = run_steps(&reference, config, 2);
+        let rt = Runtime::sharded(3);
+        let run = |threads: usize| {
+            threadpool::set_threads(threads);
+            run_steps(&rt, config, 2).0
+        };
+        let t2 = run(2);
+        let t8 = run(8);
+        assert_eq!(bits(&t2), bits(&t8), "{config} R=3 diverged across threads");
+        assert_state_close(&t2, &base_state, &format!("{config} R=3"));
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn replica_cap_of_one_is_bitwise_unsharded() {
+    let _g = lock();
+    let m = Manifest::builtin();
+    let cfg = m.cfg("gpt_nano").unwrap().clone();
+    let spec = m.artifact("train_step__gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 11);
+    let mut state = vec![0.0f32; cfg.state_len()];
+    state[1..1 + cfg.n_params].copy_from_slice(&theta);
+    let tokens: Vec<i32> =
+        (0..cfg.batch * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+    let run = |be: &dyn Backend| {
+        let out = be
+            .execute(
+                &spec,
+                &[
+                    Arg::F32(&state, vec![cfg.state_len()]),
+                    Arg::I32(&tokens, vec![cfg.batch, cfg.seq_len]),
+                    Arg::Scalar(1e-3),
+                    Arg::Scalar(1.0),
+                ],
+            )
+            .unwrap();
+        be.read_f32(&out).unwrap()
+    };
+
+    let reference = ReferenceBackend::new(&m);
+    let want = run(&reference);
+    // capped to a single shard, the sharded backend must fall back to the
+    // fused single-replica step — bit-for-bit
+    let sharded = ShardedBackend::new(&m, 2);
+    sharded.set_replica_cap(1);
+    let got = run(&sharded);
+    assert_eq!(bits(&got), bits(&want), "cap=1 is not the fused step");
+    // uncapped, the sharded path runs and stays within tolerance
+    sharded.set_replica_cap(usize::MAX);
+    let sharded_out = run(&sharded);
+    assert_state_close(&sharded_out, &want, "R=2 uncapped");
+}
+
+#[test]
+fn vcycle_bert_nano_matches_single_replica() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let run = |rt: &Runtime| {
+        let mut opts = RunOpts::quick("bert_nano", 12);
+        opts.seed = 17;
+        let h = Harness::new(rt, opts);
+        let curve = h.run_method(&Method::VCycle { levels: 2, fit: false }, None).unwrap();
+        let losses: Vec<f32> = curve.points.iter().map(|p| p.train_loss).collect();
+        assert!(!losses.is_empty());
+        losses
+    };
+
+    let single = run(&Runtime::reference());
+    let rt4 = Runtime::sharded(4);
+    threadpool::set_threads(2);
+    let sharded_t2 = run(&rt4);
+    threadpool::set_threads(8);
+    let sharded_t8 = run(&rt4);
+    threadpool::set_threads(before);
+
+    // sharded V-cycle is bit-identical across thread counts...
+    assert_eq!(bits(&sharded_t2), bits(&sharded_t8), "sharded V-cycle thread-dependent");
+    // ...and tracks the single-replica run within f32 tolerance
+    assert_eq!(single.len(), sharded_t2.len());
+    for (i, (s, u)) in sharded_t2.iter().zip(&single).enumerate() {
+        assert!(
+            (s - u).abs() < 2e-2,
+            "V-cycle loss diverged at point {i}: sharded {s} vs single {u}"
+        );
+    }
+}
+
+#[test]
+fn topology_reports_through_runtime() {
+    let _g = lock();
+    let before = threadpool::threads();
+    threadpool::set_threads(8);
+    let rt = Runtime::sharded(4);
+    let (r, t) = rt.shard_topology();
+    assert_eq!(r, 4);
+    assert_eq!(t, 2);
+    let info = rt.device_info();
+    assert!(info.contains("replicas=4"), "{info}");
+    assert!(info.contains("threads-per-replica=2"), "{info}");
+    assert!(rt.platform_name().contains("sharded"), "{}", rt.platform_name());
+    // unsharded backends report a single replica owning the whole pool
+    let single = Runtime::reference();
+    assert_eq!(single.shard_topology(), (1, 8));
+    threadpool::set_threads(before);
+}
