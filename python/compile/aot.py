@@ -101,7 +101,7 @@ def model_artifacts(cfg: ModelConfig, with_pallas_variant=False,
                  {"config": cfg.name}, meta={"shard": "batch"}),
         Artifact(f"eval_loss__{cfg.name}", "eval_loss", M.make_eval_loss(cfg),
                  [("state", state_spec(cfg))] + batch_specs(cfg),
-                 {"config": cfg.name}),
+                 {"config": cfg.name}, meta={"shard": "batch"}),
     ]
     if with_pallas_variant:
         arts.append(Artifact(
@@ -115,7 +115,9 @@ def model_artifacts(cfg: ModelConfig, with_pallas_variant=False,
             f"attn_maps__{cfg.name}", "attn_maps", M.make_attn_maps(cfg),
             [("state", state_spec(cfg)),
              ("tokens", _spec((cfg.batch, cfg.seq_len), jnp.int32))],
-            {"config": cfg.name}))
+            # the probe reads batch item 0 only; the host sharded backend
+            # may execute it over a leading sub-batch (bit-identical)
+            {"config": cfg.name}, meta={"shard": "batch"}))
     if cfg.family == "vit":
         arts.append(Artifact(
             f"eval_acc__{cfg.name}", "eval_acc", M.make_eval_acc(cfg),
@@ -161,25 +163,46 @@ def ft_artifacts(cfg: ModelConfig) -> List[Artifact]:
     st = _spec((3 * nf + 1,))
     toks = _spec((cfg.batch, cfg.seq_len), jnp.int32)
     labels = _spec((cfg.batch,), jnp.int32)
+    meta = {"n_ft": nf, "n_classes": FT_CLASSES}
     return [
         Artifact(f"ft_step__{cfg.name}", "ft_step", step,
                  [("state", st), ("tokens", toks), ("labels", labels),
                   scalar("lr"), scalar("step")],
-                 {"config": cfg.name}, meta={"n_ft": nf, "n_classes": FT_CLASSES}),
+                 {"config": cfg.name}, meta={**meta, "shard": "batch"}),
+        # grad-only shard step: theta‖head in, [loss, grad] out
+        Artifact(f"ft_grad__{cfg.name}", "ft_grad",
+                 M.make_ft_grad(cfg, FT_CLASSES),
+                 [("theta", _spec((nf,))), ("tokens", toks),
+                  ("labels", labels)],
+                 {"config": cfg.name}, meta={**meta, "shard": "batch"}),
         Artifact(f"ft_acc__{cfg.name}", "ft_acc", acc,
                  [("state", st), ("tokens", toks), ("labels", labels)],
-                 {"config": cfg.name}, meta={"n_ft": nf, "n_classes": FT_CLASSES}),
+                 {"config": cfg.name}, meta=meta),
     ]
 
 
-def distill_artifact(student: ModelConfig, teacher: ModelConfig) -> Artifact:
-    fn = M.make_distill_step(student, teacher)
-    return Artifact(
-        f"distill_step__{student.name}__{teacher.name}", "distill_step", fn,
-        [("state", state_spec(student)),
-         ("theta_teacher", _spec((M.n_params(teacher),)))]
-        + batch_specs(student) + [scalar("kd_w"), scalar("lr"), scalar("step")],
-        {"config": student.name, "config_small": teacher.name})
+def distill_artifacts(student: ModelConfig, teacher: ModelConfig) -> List[Artifact]:
+    pair = {"config": student.name, "config_small": teacher.name}
+    return [
+        Artifact(
+            f"distill_step__{student.name}__{teacher.name}", "distill_step",
+            M.make_distill_step(student, teacher),
+            [("state", state_spec(student)),
+             ("theta_teacher", _spec((M.n_params(teacher),)))]
+            + batch_specs(student) + [scalar("kd_w"), scalar("lr"),
+                                      scalar("step")],
+            pair, meta={"shard": "batch"}),
+        # grad-only shard step with explicit full-batch normalizers (the
+        # CE and KL terms normalize differently; see model.make_distill_grad)
+        Artifact(
+            f"distill_grad__{student.name}__{teacher.name}", "distill_grad",
+            M.make_distill_grad(student, teacher),
+            [("theta", _spec((M.n_params(student),))),
+             ("theta_teacher", _spec((M.n_params(teacher),)))]
+            + batch_specs(student) + [scalar("kd_w"), scalar("ce_count"),
+                                      scalar("kl_rows")],
+            pair, meta={"shard": "batch"}),
+    ]
 
 
 def lora_artifacts(cfg: ModelConfig) -> List[Artifact]:
@@ -222,7 +245,7 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
     arts += model_artifacts(ns) + model_artifacts(nw)
     arts += op_artifacts(n1, ns, width=False, depth=True)
     arts += op_artifacts(n1, nw, width=True, depth=False)
-    arts.append(distill_artifact(n1, n2))
+    arts += distill_artifacts(n1, n2)
     # fast fine-tune probes for the Rust test suite (mirrors the Rust
     # built-in registry; see rust/src/runtime/registry.rs)
     arts += ft_artifacts(cfgs["bert_nano"])
@@ -247,7 +270,7 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
     arts += model_artifacts(bs) + model_artifacts(bw)
     arts += op_artifacts(b1, bs, width=False, depth=True)
     arts += op_artifacts(b1, bw, width=True, depth=False)
-    arts.append(distill_artifact(b1, b2))
+    arts += distill_artifacts(b1, b2)
     arts += ft_artifacts(b1)
     arts += lora_artifacts(b1)  # Fig. 8 (coalesced BERT vs BERT+LoRA)
 
@@ -261,7 +284,7 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
     arts += model_artifacts(gs) + model_artifacts(gw)
     arts += op_artifacts(g1, gs, width=False, depth=True)
     arts += op_artifacts(g1, gw, width=True, depth=False)
-    arts.append(distill_artifact(g1, g2))
+    arts += distill_artifacts(g1, g2)
     # Fig. 4 monotonic growth: small -> mid -> big needs the (g2 -> mid) pair
     gmid = reg(coalesce_config(g1, 2).with_size(g2.n_layer, g2.n_head, "_m"))
     # (gmid is g2-sized; the twice-mapped chain reuses existing pairs)

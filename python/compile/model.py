@@ -456,6 +456,34 @@ def make_ft_step(cfg: ModelConfig, n_cls: int):
     return ft_step, ft_acc
 
 
+def make_ft_grad(cfg: ModelConfig, n_cls: int):
+    """(theta_ft[Nf], tokens, labels) -> [loss, grad][Nf+1].
+
+    Grad-only fine-tune shard step (mirrors the Rust ``ft_grad__*``
+    artifact): the data-parallel backend runs it per replica on a batch
+    shard and all-reduces with row-count weights (every item carries
+    exactly one target).
+    """
+    n = n_params(cfg)
+    nf = n + ft_head_size(cfg, n_cls)
+    unravel = unravel_fn(cfg)
+    d = cfg.d_model
+
+    def ft_loss(th, tokens, labels):
+        params = unravel(th[:n])
+        hw = th[n:n + d * n_cls].reshape(d, n_cls)
+        hb = th[n + d * n_cls:nf]
+        h, _ = _backbone(params, _embed_lang(params, tokens), cfg, False)
+        pooled = h.mean(axis=1)
+        return _xent(pooled @ hw + hb, labels)
+
+    def ft_grad(theta, tokens, labels):
+        loss, g = jax.value_and_grad(ft_loss)(theta, tokens, labels)
+        return jnp.concatenate([loss.reshape(1), g])
+
+    return ft_grad
+
+
 # ---------------------------------------------------------------------------
 # KI baseline: distillation train step (small teacher -> large student)
 # ---------------------------------------------------------------------------
@@ -490,6 +518,53 @@ def make_distill_step(cfg_s: ModelConfig, cfg_t: ModelConfig):
         return pack_state(theta, m, v, loss)
 
     return step_fn
+
+
+def make_distill_grad(cfg_s: ModelConfig, cfg_t: ModelConfig):
+    """(theta_s[N], theta_teacher, *batch, kd_w, ce_count, kl_rows)
+    -> globally-normalized partial [loss, grad][N+1].
+
+    Grad-only distillation shard step (mirrors the Rust
+    ``distill_grad__*`` artifact). The distill loss mixes two
+    normalizers — CE over counted targets, KL over all rows — which are
+    not proportional across BERT shards, so the full-batch normalizers
+    come in as scalars: every shard emits an already-globally-normalized
+    partial and the all-reduce is a plain unit-weight sum.
+    """
+    n_s = n_params(cfg_s)
+    unr_s, unr_t = unravel_fn(cfg_s), unravel_fn(cfg_t)
+
+    def local_count(batch):
+        # the shard's own CE target count (per-family masking rules)
+        if cfg_s.family == "gpt":
+            return float(batch.shape[0] * (batch.shape[1] - 1))
+        if cfg_s.family == "bert":
+            return (batch[1] >= 0).sum().astype(jnp.float32)
+        return float(batch[1].shape[0])
+
+    def kd_loss(th_s, th_t, batch, kd_w, ce_count, kl_rows):
+        tokens = batch if cfg_s.family == "gpt" else batch[0]
+        s_logits = logits_fn(unr_s(th_s), tokens, cfg_s, False)
+        t_logits = logits_fn(unr_t(th_t), tokens, cfg_t, False)
+        # rescale the local means to the full-batch normalizers so shard
+        # partials sum to the fused loss/grad exactly (up to f32 order)
+        ce = loss_fn(unr_s(th_s), batch, cfg_s, False) * local_count(batch) / ce_count
+        rows = 1.0
+        for dim in s_logits.shape[:-1]:
+            rows *= float(dim)
+        t_p = jax.nn.softmax(t_logits, axis=-1)
+        kl = (t_p * (jax.nn.log_softmax(t_logits, -1)
+                     - jax.nn.log_softmax(s_logits, -1))).sum(-1).mean()
+        return (1.0 - kd_w) * ce + kd_w * kl * rows / kl_rows
+
+    def distill_grad(theta, th_t, *args):
+        *batch, kd_w, ce_count, kl_rows = args
+        batch = batch[0] if len(batch) == 1 else tuple(batch)
+        loss, g = jax.value_and_grad(
+            lambda th: kd_loss(th, th_t, batch, kd_w, ce_count, kl_rows))(theta)
+        return jnp.concatenate([loss.reshape(1), g])
+
+    return distill_grad
 
 
 # ---------------------------------------------------------------------------

@@ -77,6 +77,21 @@ fn main() -> Result<()> {
             });
             rows.push((label, stats));
         }
+        // sharded forward-only eval throughput (the data-parallel
+        // eval_loss path: per-shard losses + weighted fixed-order combine)
+        for name in args.get_or("eval-configs", "bert_base_sim").split(',') {
+            if name.is_empty() {
+                continue;
+            }
+            let state = init_state(&srt, srt.cfg(name)?, 1)?;
+            let trainer = Trainer::new(&srt, name, 0, 2, 1)?;
+            trainer.eval(&srt, &state)?; // prepare + warm
+            let label = format!("eval_loss__{name}@r{replicas}");
+            let stats = bench::run(&label, budget, || {
+                trainer.eval(&srt, &state).unwrap();
+            });
+            rows.push((label, stats));
+        }
     }
 
     let report = obj(vec![
@@ -90,6 +105,10 @@ fn main() -> Result<()> {
                 .map(|(name, st)| {
                     obj(vec![
                         ("config", s(name)),
+                        // generic per-entry mean (entries now cover eval
+                        // loops too); "train_step_ms" kept as an alias so
+                        // older tooling reading the report keeps working
+                        ("ms", num(st.mean.as_secs_f64() * 1e3)),
                         ("train_step_ms", num(st.mean.as_secs_f64() * 1e3)),
                         ("p50_ms", num(st.p50.as_secs_f64() * 1e3)),
                         ("min_ms", num(st.min.as_secs_f64() * 1e3)),
@@ -117,7 +136,7 @@ fn main() -> Result<()> {
         let base_ms = baseline_rows
             .iter()
             .find(|e| e.get("config").as_str() == Some(name.as_str()))
-            .and_then(|e| e.get("train_step_ms").as_f64);
+            .and_then(|e| e.get("ms").as_f64().or_else(|| e.get("train_step_ms").as_f64()));
         match base_ms {
             None => println!("  {name:16} {got_ms:10.2} ms  (no baseline entry — recorded only)"),
             Some(b) => {
@@ -128,8 +147,12 @@ fn main() -> Result<()> {
                 } else {
                     "ok"
                 };
+                // speedup vs the checked-in ceiling, so a regression is
+                // diagnosable from the CI log alone (>1.0 = faster)
+                let speedup = b / got_ms;
                 println!(
-                    "  {name:16} {got_ms:10.2} ms  baseline {b:.2} ms  limit {limit:.2} ms  {verdict}"
+                    "  {name:32} {got_ms:10.2} ms  baseline {b:.2} ms  limit {limit:.2} ms  \
+                     speedup {speedup:5.2}x  {verdict}"
                 );
             }
         }

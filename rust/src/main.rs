@@ -8,7 +8,7 @@
 //!   bench-step --config C        per-step latency of the train hot loop
 //!   list                         available experiment ids
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use multilevel::coordinator::{Harness, LrSchedule, Method, RunOpts, Trainer};
 use multilevel::experiments;
@@ -17,6 +17,7 @@ use multilevel::runtime::{init_state, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::logger;
+use multilevel::util::threadpool;
 
 const USAGE: &str = "usage: multilevel <info|train|vcycle|exp|bench-step|list> [options]
   info                          show manifest summary
@@ -25,17 +26,31 @@ const USAGE: &str = "usage: multilevel <info|train|vcycle|exp|bench-step|list> [
   vcycle --base <name> --steps <n> [--levels <k>] [--alpha <f>]
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
   bench-step --config <name> [--steps <n>]
-  every command also accepts --replicas <R> (data-parallel train-step
-  sharding; defaults to $PALLAS_REPLICAS, 1 = unsharded)";
+  every command also accepts:
+    --replicas <R>  data-parallel sharding (defaults to $PALLAS_REPLICAS,
+                    1 = unsharded)
+    --threads <N>   kernel threads (defaults to $PALLAS_REF_THREADS, else
+                    the machine's available parallelism)";
 
 /// Runtime honoring `--replicas` (overriding `PALLAS_REPLICAS`; a
 /// compiled-in device backend still wins, since sharding wraps only the
 /// host reference backend).
 fn runtime_of(args: &Args) -> Result<Runtime> {
-    match args.usize_opt("replicas") {
+    match args.usize_res("replicas").map_err(|e| anyhow!("{e}\n{USAGE}"))? {
         Some(r) => Runtime::load_default_sharded(r),
         None => Runtime::load_default(),
     }
+}
+
+/// Resolve the kernel-thread count before any pool use: surface an
+/// unparsable `PALLAS_REF_THREADS` as a proper CLI error (never a silent
+/// fallback), then let an explicit `--threads` flag override it.
+fn apply_thread_opts(args: &Args) -> Result<()> {
+    threadpool::env_threads().map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    if let Some(t) = args.usize_res("threads").map_err(|e| anyhow!("{e}\n{USAGE}"))? {
+        threadpool::set_threads(t);
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -45,6 +60,7 @@ fn main() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    apply_thread_opts(&args)?;
     match cmd {
         "info" => cmd_info(&args),
         "list" => {

@@ -116,9 +116,10 @@ pub struct ArtifactSpec {
 impl ArtifactSpec {
     /// True when this artifact's batch dimension may be split across
     /// data-parallel replicas. Taken from the manifest meta
-    /// (`shard = "batch"`, emitted by the built-in registry for the
-    /// `train_*` plan entries) with a kind-based fallback for on-disk
-    /// manifests that predate the field.
+    /// (`shard = "batch"`, emitted by the built-in registry for every
+    /// batch-carrying plan entry: train/grad steps, eval_loss, ft/distill
+    /// steps, attn_maps) with a kind-based fallback for on-disk manifests
+    /// that predate the field.
     pub fn shard_batch(&self) -> bool {
         match self.meta.get("shard").as_str() {
             Some(mode) => mode == "batch",
@@ -127,14 +128,20 @@ impl ArtifactSpec {
     }
 
     /// Indices of the inputs that carry the batch dimension (leading extent
-    /// equal to `batch`), excluding the state vector — these are the inputs
-    /// a data-parallel backend slices per replica.
+    /// equal to `batch`), excluding state/parameter vectors — these are the
+    /// inputs a data-parallel backend slices per replica.
     pub fn batch_input_indices(&self, batch: usize) -> Vec<usize> {
+        // parameter-carrying inputs are never sliced, whatever their
+        // leading extent happens to equal
+        const NON_BATCH: [&str; 5] =
+            ["state", "state_small", "theta", "theta_teacher", "theta_base"];
         self.inputs
             .iter()
             .enumerate()
             .filter(|(_, i)| {
-                i.name != "state" && !i.shape.is_empty() && i.shape[0] == batch
+                !NON_BATCH.contains(&i.name.as_str())
+                    && !i.shape.is_empty()
+                    && i.shape[0] == batch
             })
             .map(|(idx, _)| idx)
             .collect()

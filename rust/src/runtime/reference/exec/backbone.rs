@@ -1,0 +1,342 @@
+//! Transformer backbone: pre-LN blocks (LayerNorm → multi-head attention →
+//! residual → LayerNorm → GELU FFN → residual) with forward caches and the
+//! hand-derived backward pass. All activations and caches live in
+//! [`Workspace`]-checked-out buffers; [`Cache::recycle`] returns them when
+//! a pass ends, so steady-state passes allocate nothing.
+
+use super::kernels::{
+    add_bias, attention_bwd, attention_fwd, col_sums_acc, gelu, gelu_grad, layernorm_bwd,
+    layernorm_fwd, matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc,
+};
+use super::layout::{Dims, Offsets};
+use super::workspace::Workspace;
+use crate::util::threadpool::{par_chunks_mut, ELEM_CHUNK};
+
+/// Per-layer forward caches (all buffers checked out of the workspace).
+pub(crate) struct LayerCache {
+    pub(crate) h_in: Vec<f32>,  // [T,d] block input (residual stream)
+    pub(crate) xhat1: Vec<f32>, // [T,d]
+    pub(crate) rstd1: Vec<f32>, // [T]
+    pub(crate) x1: Vec<f32>,    // [T,d] LN1 output
+    pub(crate) q: Vec<f32>,     // [T,d]
+    pub(crate) k: Vec<f32>,     // [T,d]
+    pub(crate) v: Vec<f32>,     // [T,d]
+    pub(crate) probs: Vec<f32>, // [B,nh,S,S]
+    pub(crate) att: Vec<f32>,   // [T,d] heads concatenated, pre-Wo
+    pub(crate) h_mid: Vec<f32>, // [T,d] after attention residual
+    pub(crate) xhat2: Vec<f32>, // [T,d]
+    pub(crate) rstd2: Vec<f32>, // [T]
+    pub(crate) x2: Vec<f32>,    // [T,d] LN2 output
+    pub(crate) u: Vec<f32>,     // [T,dff] pre-GELU
+    pub(crate) g: Vec<f32>,     // [T,dff] GELU output
+}
+
+/// Whole-backbone forward caches.
+pub(crate) struct Cache {
+    pub(crate) layers: Vec<LayerCache>,
+    pub(crate) h_last: Vec<f32>, // [T,d] input of the final LN
+    pub(crate) xhatf: Vec<f32>,
+    pub(crate) rstdf: Vec<f32>,
+    pub(crate) xf: Vec<f32>, // [T,d] final LN output
+}
+
+impl Cache {
+    /// Return every cached buffer to the workspace pool (fixed order, so
+    /// the take/give pairing is identical every step).
+    pub(crate) fn recycle(self, ws: &mut Workspace) {
+        let mut layers = self.layers;
+        for lc in layers.drain(..) {
+            ws.give(lc.h_in);
+            ws.give(lc.xhat1);
+            ws.give(lc.rstd1);
+            ws.give(lc.x1);
+            ws.give(lc.q);
+            ws.give(lc.k);
+            ws.give(lc.v);
+            ws.give(lc.probs);
+            ws.give(lc.att);
+            ws.give(lc.h_mid);
+            ws.give(lc.xhat2);
+            ws.give(lc.rstd2);
+            ws.give(lc.x2);
+            ws.give(lc.u);
+            ws.give(lc.g);
+        }
+        ws.give_layers(layers);
+        ws.give(self.h_last);
+        ws.give(self.xhatf);
+        ws.give(self.rstdf);
+        ws.give(self.xf);
+    }
+}
+
+/// Backbone forward from the embedding output `x0` through the final LN.
+/// Takes ownership of `x0` (it becomes the first layer's `h_in` cache).
+pub(crate) fn backbone_fwd(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    x0: Vec<f32>,
+    ws: &mut Workspace,
+) -> Cache {
+    let t = dm.rows();
+    let (d, dff) = (dm.d, dm.dff);
+    let mut layers = ws.take_layers(dm.l);
+    let mut h = x0;
+    for l in 0..dm.l {
+        let ln1_w = &theta[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
+        let ln1_b = &theta[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
+        let mut xhat1 = ws.take(t * d);
+        let mut rstd1 = ws.take(t);
+        let mut x1 = ws.take(t * d);
+        layernorm_fwd(&h, ln1_w, ln1_b, t, d, &mut xhat1, &mut rstd1, &mut x1);
+
+        let wq = &theta[off.wq + l * d * d..off.wq + (l + 1) * d * d];
+        let wk = &theta[off.wk + l * d * d..off.wk + (l + 1) * d * d];
+        let wv = &theta[off.wv + l * d * d..off.wv + (l + 1) * d * d];
+        let mut q = ws.take(t * d);
+        let mut k = ws.take(t * d);
+        let mut v = ws.take(t * d);
+        matmul(&mut q, &x1, wq, t, d, d);
+        matmul(&mut k, &x1, wk, t, d, d);
+        matmul(&mut v, &x1, wv, t, d, d);
+        add_bias(&mut q, &theta[off.bq + l * d..off.bq + (l + 1) * d], t, d);
+        add_bias(&mut k, &theta[off.bk + l * d..off.bk + (l + 1) * d], t, d);
+        add_bias(&mut v, &theta[off.bv + l * d..off.bv + (l + 1) * d], t, d);
+
+        let mut probs = ws.take(dm.b * dm.nh * dm.s * dm.s);
+        let mut att = ws.take(t * d);
+        attention_fwd(&q, &k, &v, dm, &mut probs, &mut att, ws);
+
+        let wo = &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d];
+        let mut h_mid = ws.take(t * d);
+        h_mid.copy_from_slice(&h);
+        matmul_acc(&mut h_mid, &att, wo, t, d, d);
+        add_bias(&mut h_mid, &theta[off.bo + l * d..off.bo + (l + 1) * d], t, d);
+
+        let ln2_w = &theta[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
+        let ln2_b = &theta[off.ln2_b + l * d..off.ln2_b + (l + 1) * d];
+        let mut xhat2 = ws.take(t * d);
+        let mut rstd2 = ws.take(t);
+        let mut x2 = ws.take(t * d);
+        layernorm_fwd(&h_mid, ln2_w, ln2_b, t, d, &mut xhat2, &mut rstd2, &mut x2);
+
+        let fc1_w = &theta[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff];
+        let mut u = ws.take(t * dff);
+        matmul(&mut u, &x2, fc1_w, t, d, dff);
+        add_bias(&mut u, &theta[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], t, dff);
+        let mut g = ws.take(t * dff);
+        {
+            let u = &u;
+            // tanh is ~10 flops per element
+            par_chunks_mut(10 * t * dff, &mut g, ELEM_CHUNK, |ci, chunk| {
+                let o = ci * ELEM_CHUNK;
+                for (i, gv) in chunk.iter_mut().enumerate() {
+                    *gv = gelu(u[o + i]);
+                }
+            });
+        }
+        let fc2_w = &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d];
+        let mut h_out = ws.take(t * d);
+        h_out.copy_from_slice(&h_mid);
+        matmul_acc(&mut h_out, &g, fc2_w, t, dff, d);
+        add_bias(&mut h_out, &theta[off.fc2_b + l * d..off.fc2_b + (l + 1) * d], t, d);
+
+        layers.push(LayerCache {
+            h_in: h,
+            xhat1,
+            rstd1,
+            x1,
+            q,
+            k,
+            v,
+            probs,
+            att,
+            h_mid,
+            xhat2,
+            rstd2,
+            x2,
+            u,
+            g,
+        });
+        h = h_out;
+    }
+    let lnf_w = &theta[off.lnf_w..off.lnf_w + d];
+    let lnf_b = &theta[off.lnf_b..off.lnf_b + d];
+    let mut xhatf = ws.take(t * d);
+    let mut rstdf = ws.take(t);
+    let mut xf = ws.take(t * d);
+    layernorm_fwd(&h, lnf_w, lnf_b, t, d, &mut xhatf, &mut rstdf, &mut xf);
+    Cache { layers, h_last: h, xhatf, rstdf, xf }
+}
+
+/// Backbone backward: from `dxf` (grad wrt final-LN output) down to `dx0`
+/// (grad wrt embedding output, returned to the caller to recycle);
+/// accumulates parameter grads into `grad`.
+pub(crate) fn backbone_bwd(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    cache: &Cache,
+    dxf: &[f32],
+    grad: &mut [f32],
+    ws: &mut Workspace,
+) -> Vec<f32> {
+    let t = dm.rows();
+    let (d, dff) = (dm.d, dm.dff);
+
+    // final LN
+    let mut dh = ws.take(t * d);
+    {
+        let lnf_w = &theta[off.lnf_w..off.lnf_w + d];
+        let mut dw = ws.take(d);
+        let mut db = ws.take(d);
+        layernorm_bwd(dxf, &cache.xhatf, &cache.rstdf, lnf_w, t, d, &mut dh, &mut dw, &mut db,
+                      ws);
+        for j in 0..d {
+            grad[off.lnf_w + j] += dw[j];
+            grad[off.lnf_b + j] += db[j];
+        }
+        ws.give(dw);
+        ws.give(db);
+    }
+
+    for l in (0..dm.l).rev() {
+        let lc = &cache.layers[l];
+
+        // --- FFN ---
+        // h_out = h_mid + g @ fc2 + fc2_b ; dh is d(h_out)
+        {
+            let dy = &dh;
+            matmul_at_b_acc(
+                &mut grad[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d],
+                &lc.g,
+                dy,
+                t,
+                dff,
+                d,
+            );
+            col_sums_acc(&mut grad[off.fc2_b + l * d..off.fc2_b + (l + 1) * d], dy, t, d);
+        }
+        let fc2_w = &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d];
+        let mut du = ws.take(t * dff);
+        matmul_a_bt(&mut du, &dh, fc2_w, t, d, dff);
+        {
+            let u = &lc.u;
+            // tanh is ~10 flops per element
+            par_chunks_mut(10 * t * dff, &mut du, ELEM_CHUNK, |ci, chunk| {
+                let o = ci * ELEM_CHUNK;
+                for (i, dv) in chunk.iter_mut().enumerate() {
+                    *dv *= gelu_grad(u[o + i]);
+                }
+            });
+        }
+        matmul_at_b_acc(
+            &mut grad[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff],
+            &lc.x2,
+            &du,
+            t,
+            d,
+            dff,
+        );
+        col_sums_acc(&mut grad[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], &du, t, dff);
+        let fc1_w = &theta[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff];
+        let mut dx2 = ws.take(t * d);
+        matmul_a_bt(&mut dx2, &du, fc1_w, t, dff, d);
+        ws.give(du);
+
+        // dh_mid = dh (residual) + LN2-backward(dx2)
+        let mut dh_mid = dh; // reuse: residual path carries dh through
+        {
+            let ln2_w = &theta[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
+            let mut dw = ws.take(d);
+            let mut db = ws.take(d);
+            layernorm_bwd(&dx2, &lc.xhat2, &lc.rstd2, ln2_w, t, d, &mut dh_mid, &mut dw,
+                          &mut db, ws);
+            let gw = &mut grad[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
+            for j in 0..d {
+                gw[j] += dw[j];
+            }
+            let gb = &mut grad[off.ln2_b + l * d..off.ln2_b + (l + 1) * d];
+            for j in 0..d {
+                gb[j] += db[j];
+            }
+            ws.give(dw);
+            ws.give(db);
+        }
+        ws.give(dx2);
+
+        // --- attention projection ---
+        // h_mid = h_in + att @ wo + bo
+        matmul_at_b_acc(
+            &mut grad[off.wo + l * d * d..off.wo + (l + 1) * d * d],
+            &lc.att,
+            &dh_mid,
+            t,
+            d,
+            d,
+        );
+        col_sums_acc(&mut grad[off.bo + l * d..off.bo + (l + 1) * d], &dh_mid, t, d);
+        let wo = &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d];
+        let mut datt = ws.take(t * d);
+        matmul_a_bt(&mut datt, &dh_mid, wo, t, d, d);
+
+        let mut dq = ws.take(t * d);
+        let mut dk = ws.take(t * d);
+        let mut dv = ws.take(t * d);
+        attention_bwd(&lc.q, &lc.k, &lc.v, &lc.probs, &datt, dm, &mut dq, &mut dk, &mut dv,
+                      ws);
+        ws.give(datt);
+
+        // q/k/v projections: x1 @ w + b
+        let mut dx1 = ws.take(t * d);
+        for (w_off, b_off, dgrad) in [
+            (off.wq, off.bq, &dq),
+            (off.wk, off.bk, &dk),
+            (off.wv, off.bv, &dv),
+        ] {
+            matmul_at_b_acc(
+                &mut grad[w_off + l * d * d..w_off + (l + 1) * d * d],
+                &lc.x1,
+                dgrad,
+                t,
+                d,
+                d,
+            );
+            col_sums_acc(&mut grad[b_off + l * d..b_off + (l + 1) * d], dgrad, t, d);
+            let w = &theta[w_off + l * d * d..w_off + (l + 1) * d * d];
+            let mut dxp = ws.take(t * d);
+            matmul_a_bt(&mut dxp, dgrad, w, t, d, d);
+            for i in 0..t * d {
+                dx1[i] += dxp[i];
+            }
+            ws.give(dxp);
+        }
+        ws.give(dq);
+        ws.give(dk);
+        ws.give(dv);
+
+        // dh_in = dh_mid (residual) + LN1-backward(dx1)
+        let mut dh_in = dh_mid;
+        {
+            let ln1_w = &theta[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
+            let mut dw = ws.take(d);
+            let mut db = ws.take(d);
+            layernorm_bwd(&dx1, &lc.xhat1, &lc.rstd1, ln1_w, t, d, &mut dh_in, &mut dw,
+                          &mut db, ws);
+            let gw = &mut grad[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
+            for j in 0..d {
+                gw[j] += dw[j];
+            }
+            let gb = &mut grad[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
+            for j in 0..d {
+                gb[j] += db[j];
+            }
+            ws.give(dw);
+            ws.give(db);
+        }
+        ws.give(dx1);
+        dh = dh_in;
+    }
+    dh
+}

@@ -1,0 +1,187 @@
+//! Distillation (KI baseline): the `distill_step__{student}__{teacher}`
+//! artifact — `loss = (1−kd_w)·CE + kd_w·KL(teacher ‖ student)`, teacher
+//! frozen — and the grad-only `distill_grad__*` shard step.
+//!
+//! # Shard normalization
+//!
+//! The distillation loss mixes two normalizers: CE averages over the
+//! counted loss targets, KL averages over **all** rows. For BERT those are
+//! not proportional across shards, so a single per-shard weight cannot
+//! reconstruct the full-batch gradient. The grad-only path therefore takes
+//! the **global** normalizers (`ce_count`, `kl_rows`) as explicit scalar
+//! inputs: every shard produces an already-globally-normalized partial
+//! `[loss, grad]`, and the all-reduce is a plain (unit-weight) fixed-order
+//! tree sum.
+
+use anyhow::{bail, Result};
+
+use super::backbone::{backbone_bwd, backbone_fwd};
+use super::embed::{embed_batch, embed_batch_bwd};
+use super::heads::head_logits;
+use super::kernels::{col_sums_acc, matmul_a_bt, matmul_at_b_acc, softmax_rows, softmax_xent};
+use super::layout::{batch_rows, count_targets, targets_into, BatchRef, Dims, Offsets};
+use super::steps::adamw_state_into;
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+
+/// Combined CE + KD loss and gradient over the student parameters,
+/// accumulated into the zeroed `grad` buffer. `norms` carries explicit
+/// `(ce_count, kl_rows)` normalizers for globally-normalized shard steps;
+/// `None` uses the local batch's own counts (the fused step).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn distill_loss_grad(
+    student: &ModelCfg,
+    teacher: &ModelCfg,
+    th: &[f32],
+    theta_t: &[f32],
+    batch: &BatchRef<'_>,
+    kd_w: f32,
+    norms: Option<(f32, f32)>,
+    ws: &mut Workspace,
+    grad: &mut [f32],
+) -> Result<f32> {
+    let b = batch_rows(student, batch)?;
+    if b == 0 {
+        bail!("distill needs a non-empty batch");
+    }
+    if theta_t.len() != teacher.n_params {
+        bail!(
+            "teacher theta has {} elements, config {} needs {}",
+            theta_t.len(),
+            teacher.name,
+            teacher.n_params
+        );
+    }
+    let off = Offsets::resolve(student)?;
+    let dm = Dims::with_batch(student, b);
+    let t = dm.rows();
+    let (d, vv) = (dm.d, dm.v);
+
+    // student forward
+    let x0 = embed_batch(th, &off, student, &dm, batch, ws)?;
+    let cache = backbone_fwd(th, &off, &dm, x0, ws);
+    let logits = head_logits(th, &off, &dm, &cache.xf, ws);
+
+    // CE part
+    let mut targets = ws.take_targets();
+    targets_into(&dm, batch, &mut targets);
+    let (ce_count, kl_rows) = norms.unwrap_or_else(|| (count_targets(&targets), t as f32));
+    let mut dlogits = ws.take(t * vv);
+    let ce = softmax_xent(&logits, &targets, vv, &mut dlogits, ce_count, ws);
+    ws.give_targets(targets);
+    for dl in dlogits.iter_mut() {
+        *dl *= 1.0 - kd_w;
+    }
+
+    // KL part: teacher forward (no grad), mean over kl_rows positions
+    let off_t = Offsets::resolve(teacher)?;
+    let dm_t = Dims::with_batch(teacher, b);
+    let xt0 = embed_batch(theta_t, &off_t, teacher, &dm_t, batch, ws)?;
+    let cache_t = backbone_fwd(theta_t, &off_t, &dm_t, xt0, ws);
+    let t_logits = head_logits(theta_t, &off_t, &dm_t, &cache_t.xf, ws);
+    cache_t.recycle(ws);
+    let mut p_t = ws.take(t * vv);
+    softmax_rows(&t_logits, t, vv, &mut p_t);
+    ws.give(t_logits);
+    let mut p_s = ws.take(t * vv);
+    softmax_rows(&logits, t, vv, &mut p_s);
+    let mut kl = 0.0f64;
+    let inv_rows = 1.0 / kl_rows;
+    for r in 0..t {
+        for j in 0..vv {
+            let (pt, ps) = (p_t[r * vv + j], p_s[r * vv + j]);
+            if pt > 0.0 {
+                kl += f64::from(pt)
+                    * (f64::from(pt.max(1e-30).ln()) - f64::from(ps.max(1e-30).ln()));
+            }
+            dlogits[r * vv + j] += kd_w * (ps - pt) * inv_rows;
+        }
+    }
+    ws.give(p_t);
+    ws.give(p_s);
+    let loss = (1.0 - kd_w) * ce + kd_w * (kl / f64::from(kl_rows)) as f32;
+    ws.give(logits);
+
+    // student backward with the combined dlogits
+    let head_w = &th[off.head_w..off.head_w + d * vv];
+    matmul_at_b_acc(&mut grad[off.head_w..off.head_w + d * vv], &cache.xf, &dlogits, t, d, vv);
+    col_sums_acc(&mut grad[off.head_b..off.head_b + vv], &dlogits, t, vv);
+    let mut dxf = ws.take(t * d);
+    matmul_a_bt(&mut dxf, &dlogits, head_w, t, vv, d);
+    ws.give(dlogits);
+    let dx0 = backbone_bwd(th, &off, &dm, &cache, &dxf, grad, ws);
+    ws.give(dxf);
+    embed_batch_bwd(&off, student, &dm, batch, &dx0, grad, ws);
+    ws.give(dx0);
+    cache.recycle(ws);
+    Ok(loss)
+}
+
+/// One distillation step (the `distill_step__*` artifact) into a
+/// caller-owned output buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn distill_step_into(
+    student: &ModelCfg,
+    teacher: &ModelCfg,
+    state: &[f32],
+    theta_t: &[f32],
+    batch: &BatchRef<'_>,
+    kd_w: f32,
+    lr: f32,
+    step: f32,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = student.n_params;
+    if state.len() != student.state_len() {
+        bail!("state length {} != {}", state.len(), student.state_len());
+    }
+    let mut grad = ws.take(n);
+    let loss = distill_loss_grad(student, teacher, &state[1..1 + n], theta_t, batch, kd_w,
+                                 None, ws, &mut grad)?;
+    adamw_state_into(state, &grad, loss, lr, step, out);
+    ws.give(grad);
+    Ok(())
+}
+
+/// One distillation step returning a fresh state vector.
+#[allow(clippy::too_many_arguments)]
+pub fn distill_step(student: &ModelCfg, teacher: &ModelCfg, state: &[f32], theta_t: &[f32],
+                    batch: &BatchRef<'_>, kd_w: f32, lr: f32, step: f32) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    distill_step_into(student, teacher, state, theta_t, batch, kd_w, lr, step,
+                      &mut Workspace::new(), &mut out)?;
+    Ok(out)
+}
+
+/// Grad-only distillation shard step (the `distill_grad__*` artifact):
+/// student theta + teacher theta + batch shard + global normalizers in,
+/// globally-normalized partial `[loss, grad]` out.
+#[allow(clippy::too_many_arguments)]
+pub fn distill_grad_into(
+    student: &ModelCfg,
+    teacher: &ModelCfg,
+    theta_s: &[f32],
+    theta_t: &[f32],
+    batch: &BatchRef<'_>,
+    kd_w: f32,
+    ce_count: f32,
+    kl_rows: f32,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = student.n_params;
+    if theta_s.len() != n {
+        bail!("student theta has {} elements, config {} needs {n}", theta_s.len(),
+              student.name);
+    }
+    if ce_count < 1.0 || kl_rows < 1.0 || ce_count.is_nan() || kl_rows.is_nan() {
+        bail!("distill_grad normalizers must be >= 1 (got {ce_count}, {kl_rows})");
+    }
+    out.clear();
+    out.resize(1 + n, 0.0);
+    let loss = distill_loss_grad(student, teacher, theta_s, theta_t, batch, kd_w,
+                                 Some((ce_count, kl_rows)), ws, &mut out[1..])?;
+    out[0] = loss;
+    Ok(())
+}

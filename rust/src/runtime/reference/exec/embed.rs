@@ -1,0 +1,198 @@
+//! Embedding forward/backward: token + position lookup for the language
+//! families, patch projection (+ class token) for ViT, and the family
+//! dispatch over [`BatchRef`].
+
+use anyhow::{bail, Result};
+
+use super::layout::{BatchRef, Dims, Offsets};
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+use crate::util::threadpool::{par_chunks_mut, ROW_CHUNK};
+
+/// Token + position embedding: `x0[r] = emb[token_r] + pos[r mod s]`.
+pub(crate) fn embed_lang(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    tokens: &[i32],
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    let (d, s) = (dm.d, dm.s);
+    let rows = dm.rows();
+    if tokens.len() != rows {
+        bail!("token batch has {} elements, want {rows}", tokens.len());
+    }
+    if let Some(&tok) = tokens.iter().find(|&&t| t < 0) {
+        bail!("negative token id {tok}");
+    }
+    let mut x0 = ws.take(rows * d);
+    par_chunks_mut(rows * d, &mut x0, ROW_CHUNK * d, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, xrow) in chunk.chunks_mut(d).enumerate() {
+            let r = r0 + rl;
+            let (tok, si) = (tokens[r] as usize, r % s);
+            let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
+            let prow = &theta[off.pos + si * d..off.pos + (si + 1) * d];
+            for j in 0..d {
+                xrow[j] = erow[j] + prow[j];
+            }
+        }
+    });
+    Ok(x0)
+}
+
+pub(crate) fn embed_lang_bwd(
+    off: &Offsets,
+    dm: &Dims,
+    tokens: &[i32],
+    dx0: &[f32],
+    grad: &mut [f32],
+) {
+    let (d, s) = (dm.d, dm.s);
+    for b in 0..dm.b {
+        for si in 0..s {
+            let tok = tokens[b * s + si] as usize;
+            let drow = &dx0[(b * s + si) * d..(b * s + si + 1) * d];
+            for j in 0..d {
+                grad[off.emb + tok * d + j] += drow[j];
+                grad[off.pos + si * d + j] += drow[j];
+            }
+        }
+    }
+}
+
+/// Extract one flattened patch vector (`p·p·3`) from an NHWC image batch.
+fn patch_vec(images: &[f32], cfg: &ModelCfg, b: usize, gy: usize, gx: usize, out: &mut [f32]) {
+    let (img, p) = (cfg.image_size, cfg.patch_size);
+    let mut idx = 0;
+    for py in 0..p {
+        for px in 0..p {
+            let base = ((b * img + gy * p + py) * img + gx * p + px) * 3;
+            out[idx] = images[base];
+            out[idx + 1] = images[base + 1];
+            out[idx + 2] = images[base + 2];
+            idx += 3;
+        }
+    }
+}
+
+pub(crate) fn embed_vit(
+    theta: &[f32],
+    off: &Offsets,
+    cfg: &ModelCfg,
+    dm: &Dims,
+    images: &[f32],
+    ws: &mut Workspace,
+) -> Vec<f32> {
+    let d = dm.d;
+    let p = cfg.patch_size;
+    let g = cfg.image_size / p;
+    let pp3 = p * p * 3;
+    let mut x0 = ws.take(dm.rows() * d);
+    let mut pvs = ws.take(dm.b * pp3);
+    let ppv = crate::util::threadpool::SendPtr(pvs.as_mut_ptr());
+    // one task per batch item: chunk b covers rows b·s .. (b+1)·s;
+    // each patch row costs ~pp3 mul-adds per output column
+    par_chunks_mut(dm.rows() * d * pp3, &mut x0, dm.s * d, |b, xb| {
+        // SAFETY: task b exclusively owns patch-scratch slot b.
+        let pv = unsafe { ppv.slice_mut(b * pp3, pp3) };
+        // class token at sequence position 0
+        {
+            let xrow = &mut xb[0..d];
+            for j in 0..d {
+                xrow[j] = theta[off.cls + j] + theta[off.pos + j];
+            }
+        }
+        for gy in 0..g {
+            for gx in 0..g {
+                let si = 1 + gy * g + gx;
+                patch_vec(images, cfg, b, gy, gx, pv);
+                let xrow = &mut xb[si * d..(si + 1) * d];
+                for j in 0..d {
+                    let mut acc = theta[off.patch_b + j] + theta[off.pos + si * d + j];
+                    for (i, &pvi) in pv.iter().enumerate() {
+                        acc += pvi * theta[off.emb + i * d + j];
+                    }
+                    xrow[j] = acc;
+                }
+            }
+        }
+    });
+    ws.give(pvs);
+    x0
+}
+
+pub(crate) fn embed_vit_bwd(
+    off: &Offsets,
+    cfg: &ModelCfg,
+    dm: &Dims,
+    images: &[f32],
+    dx0: &[f32],
+    grad: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let d = dm.d;
+    let p = cfg.patch_size;
+    let g = cfg.image_size / p;
+    let pp3 = p * p * 3;
+    let mut pv = ws.take(pp3);
+    for b in 0..dm.b {
+        {
+            let drow = &dx0[b * dm.s * d..(b * dm.s + 1) * d];
+            for j in 0..d {
+                grad[off.cls + j] += drow[j];
+                grad[off.pos + j] += drow[j];
+            }
+        }
+        for gy in 0..g {
+            for gx in 0..g {
+                let si = 1 + gy * g + gx;
+                patch_vec(images, cfg, b, gy, gx, &mut pv);
+                let drow = &dx0[(b * dm.s + si) * d..(b * dm.s + si + 1) * d];
+                for j in 0..d {
+                    let dj = drow[j];
+                    grad[off.patch_b + j] += dj;
+                    grad[off.pos + si * d + j] += dj;
+                    for (i, &pvi) in pv.iter().enumerate() {
+                        grad[off.emb + i * d + j] += pvi * dj;
+                    }
+                }
+            }
+        }
+    }
+    ws.give(pv);
+}
+
+/// Family dispatch: embed a [`BatchRef`] into the `[T, d]` residual stream.
+pub(crate) fn embed_batch(
+    theta: &[f32],
+    off: &Offsets,
+    cfg: &ModelCfg,
+    dm: &Dims,
+    batch: &BatchRef<'_>,
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    match batch {
+        BatchRef::Gpt { tokens } | BatchRef::Bert { tokens, .. } => {
+            embed_lang(theta, off, dm, tokens, ws)
+        }
+        BatchRef::Vit { images, .. } => Ok(embed_vit(theta, off, cfg, dm, images, ws)),
+    }
+}
+
+pub(crate) fn embed_batch_bwd(
+    off: &Offsets,
+    cfg: &ModelCfg,
+    dm: &Dims,
+    batch: &BatchRef<'_>,
+    dx0: &[f32],
+    grad: &mut [f32],
+    ws: &mut Workspace,
+) {
+    match batch {
+        BatchRef::Gpt { tokens } | BatchRef::Bert { tokens, .. } => {
+            embed_lang_bwd(off, dm, tokens, dx0, grad)
+        }
+        BatchRef::Vit { images, .. } => embed_vit_bwd(off, cfg, dm, images, dx0, grad, ws),
+    }
+}

@@ -1,0 +1,247 @@
+//! Fine-tune probe (backbone + mean-pool classification head): the
+//! `ft_step__*` / `ft_acc__*` artifacts and the grad-only `ft_grad__*`
+//! shard step over the grafted state `[loss, theta‖head, m, v]`.
+//!
+//! Every entry point derives its batch count from the token buffer, so the
+//! data-parallel backend can run the same kernels on a contiguous shard of
+//! the configured batch (every item carries exactly one target, making the
+//! shard weights plain row counts).
+
+use anyhow::{bail, Result};
+
+use super::backbone::{backbone_bwd, backbone_fwd, Cache};
+use super::embed::{embed_lang, embed_lang_bwd};
+use super::kernels::count_targets_xent;
+use super::layout::{Dims, Offsets};
+use super::steps::adamw_state_into;
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+
+/// Shared fine-tune forward: mean-pooled logits `[B, n_cls]` + caches.
+/// The logits buffer comes from `ws`; the caller gives it back.
+fn ft_forward(
+    cfg: &ModelCfg,
+    th: &[f32],
+    n: usize,
+    n_cls: usize,
+    tokens: &[i32],
+    ws: &mut Workspace,
+) -> Result<(Cache, Vec<f32>, Offsets, Dims)> {
+    if cfg.seq_len == 0 || tokens.len() % cfg.seq_len != 0 {
+        bail!(
+            "ft token batch of {} elements is not a multiple of {}",
+            tokens.len(),
+            cfg.seq_len
+        );
+    }
+    let b = tokens.len() / cfg.seq_len;
+    if b == 0 {
+        bail!("ft needs a non-empty batch");
+    }
+    let off = Offsets::resolve(cfg)?;
+    let dm = Dims::with_batch(cfg, b);
+    let d = dm.d;
+    let x0 = embed_lang(th, &off, &dm, tokens, ws)?;
+    let cache = backbone_fwd(th, &off, &dm, x0, ws);
+    // pooled[b] = mean_s xf[b,s]; logits = pooled @ hw + hb
+    let hw = &th[n..n + d * n_cls];
+    let hb = &th[n + d * n_cls..n + d * n_cls + n_cls];
+    let mut logits = ws.take(dm.b * n_cls);
+    let mut pooled = ws.take(d);
+    for bi in 0..dm.b {
+        pooled.fill(0.0);
+        for si in 0..dm.s {
+            let xrow = &cache.xf[(bi * dm.s + si) * d..(bi * dm.s + si + 1) * d];
+            for j in 0..d {
+                pooled[j] += xrow[j];
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= dm.s as f32;
+        }
+        let lrow = &mut logits[bi * n_cls..(bi + 1) * n_cls];
+        for c in 0..n_cls {
+            let mut acc = hb[c];
+            for j in 0..d {
+                acc += pooled[j] * hw[j * n_cls + c];
+            }
+            lrow[c] = acc;
+        }
+    }
+    ws.give(pooled);
+    Ok((cache, logits, off, dm))
+}
+
+/// Loss + gradient of the fine-tune objective over `th` (`n_ft` grafted
+/// parameters), accumulated into the zeroed `grad` buffer.
+pub(crate) fn ft_loss_grad(
+    cfg: &ModelCfg,
+    n_ft: usize,
+    n_cls: usize,
+    th: &[f32],
+    tokens: &[i32],
+    labels: &[i32],
+    ws: &mut Workspace,
+    grad: &mut [f32],
+) -> Result<f32> {
+    let n = cfg.n_params;
+    if n_ft != n + cfg.d_model * n_cls + n_cls {
+        bail!("n_ft {} inconsistent with config {}", n_ft, cfg.name);
+    }
+    if th.len() != n_ft {
+        bail!("ft theta has {} elements, want {n_ft}", th.len());
+    }
+    debug_assert_eq!(grad.len(), n_ft);
+    let (cache, logits, off, dm) = ft_forward(cfg, th, n, n_cls, tokens, ws)?;
+    if labels.len() != dm.b {
+        bail!("ft labels have {} elements, want {}", labels.len(), dm.b);
+    }
+    let d = dm.d;
+
+    let mut targets = ws.take_targets();
+    targets.extend(labels.iter().map(|&l| Some(l as usize)));
+    let mut dlogits = ws.take(dm.b * n_cls);
+    let loss = count_targets_xent(&logits, &targets, n_cls, &mut dlogits, ws);
+    ws.give_targets(targets);
+    ws.give(logits);
+
+    // head grads + dpooled
+    let hw = &th[n..n + d * n_cls];
+    let mut dxf = ws.take(dm.rows() * d);
+    let mut pooled = ws.take(d);
+    for bi in 0..dm.b {
+        // recompute pooled for the weight gradient
+        pooled.fill(0.0);
+        for si in 0..dm.s {
+            let xrow = &cache.xf[(bi * dm.s + si) * d..(bi * dm.s + si + 1) * d];
+            for j in 0..d {
+                pooled[j] += xrow[j];
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= dm.s as f32;
+        }
+        let drow = &dlogits[bi * n_cls..(bi + 1) * n_cls];
+        for c in 0..n_cls {
+            grad[n + d * n_cls + c] += drow[c];
+        }
+        for j in 0..d {
+            let mut dpool = 0.0f32;
+            for c in 0..n_cls {
+                grad[n + j * n_cls + c] += pooled[j] * drow[c];
+                dpool += drow[c] * hw[j * n_cls + c];
+            }
+            let dper = dpool / dm.s as f32;
+            for si in 0..dm.s {
+                dxf[(bi * dm.s + si) * d + j] += dper;
+            }
+        }
+    }
+    ws.give(pooled);
+    ws.give(dlogits);
+    let dx0 = backbone_bwd(th, &off, &dm, &cache, &dxf, &mut grad[..], ws);
+    ws.give(dxf);
+    embed_lang_bwd(&off, &dm, tokens, &dx0, grad);
+    ws.give(dx0);
+    cache.recycle(ws);
+    Ok(loss)
+}
+
+/// One fine-tune step (the `ft_step__*` artifact) into a caller-owned
+/// output buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn ft_step_into(
+    cfg: &ModelCfg,
+    n_ft: usize,
+    n_cls: usize,
+    state: &[f32],
+    tokens: &[i32],
+    labels: &[i32],
+    lr: f32,
+    step: f32,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if state.len() != 3 * n_ft + 1 {
+        bail!("state length {} != {}", state.len(), 3 * n_ft + 1);
+    }
+    let mut grad = ws.take(n_ft);
+    let loss = ft_loss_grad(cfg, n_ft, n_cls, &state[1..1 + n_ft], tokens, labels, ws,
+                            &mut grad)?;
+    adamw_state_into(state, &grad, loss, lr, step, out);
+    ws.give(grad);
+    Ok(())
+}
+
+/// One fine-tune step returning a fresh state vector.
+#[allow(clippy::too_many_arguments)]
+pub fn ft_step(cfg: &ModelCfg, n_ft: usize, n_cls: usize, state: &[f32], tokens: &[i32],
+               labels: &[i32], lr: f32, step: f32) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    ft_step_into(cfg, n_ft, n_cls, state, tokens, labels, lr, step, &mut Workspace::new(),
+                 &mut out)?;
+    Ok(out)
+}
+
+/// Grad-only fine-tune shard step (the `ft_grad__*` artifact): `theta‖head`
+/// + batch shard in, `[loss, grad]` out.
+#[allow(clippy::too_many_arguments)]
+pub fn ft_grad_into(
+    cfg: &ModelCfg,
+    n_ft: usize,
+    n_cls: usize,
+    th: &[f32],
+    tokens: &[i32],
+    labels: &[i32],
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    out.clear();
+    out.resize(1 + n_ft, 0.0);
+    let loss = ft_loss_grad(cfg, n_ft, n_cls, th, tokens, labels, ws, &mut out[1..])?;
+    out[0] = loss;
+    Ok(())
+}
+
+/// Probe accuracy fraction (the `ft_acc__*` artifact).
+pub fn ft_acc_ws(
+    cfg: &ModelCfg,
+    n_ft: usize,
+    n_cls: usize,
+    state: &[f32],
+    tokens: &[i32],
+    labels: &[i32],
+    ws: &mut Workspace,
+) -> Result<f32> {
+    let n = cfg.n_params;
+    if state.len() < 1 + n_ft {
+        bail!("ft state has {} elements, want at least {}", state.len(), 1 + n_ft);
+    }
+    let th = &state[1..1 + n_ft];
+    let (cache, logits, _off, dm) = ft_forward(cfg, th, n, n_cls, tokens, ws)?;
+    if labels.len() != dm.b {
+        bail!("ft labels have {} elements, want {}", labels.len(), dm.b);
+    }
+    let mut correct = 0usize;
+    for bi in 0..dm.b {
+        let lrow = &logits[bi * n_cls..(bi + 1) * n_cls];
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for (c, &x) in lrow.iter().enumerate() {
+            if x > best.1 {
+                best = (c, x);
+            }
+        }
+        if best.0 == labels[bi] as usize {
+            correct += 1;
+        }
+    }
+    ws.give(logits);
+    cache.recycle(ws);
+    Ok(correct as f32 / dm.b as f32)
+}
+
+/// [`ft_acc_ws`] with a private scratch arena.
+pub fn ft_acc(cfg: &ModelCfg, n_ft: usize, n_cls: usize, state: &[f32], tokens: &[i32],
+              labels: &[i32]) -> Result<f32> {
+    ft_acc_ws(cfg, n_ft, n_cls, state, tokens, labels, &mut Workspace::new())
+}

@@ -1,0 +1,155 @@
+//! Head and probe paths: LM/classifier logits, forward-only evaluation
+//! (`eval_loss__*`, `eval_acc__*`) and the attention-map probe
+//! (`attn_maps__*`).
+//!
+//! Every entry point derives its batch count from the argument buffers
+//! ([`batch_rows`]), not the config — so the data-parallel backend can run
+//! the same kernels on any contiguous slice of the configured batch. A
+//! full-batch call produces bit-identical results to the fixed-batch
+//! implementation it replaced.
+
+use anyhow::{bail, Result};
+
+use super::backbone::backbone_fwd;
+use super::embed::{embed_batch, embed_lang, embed_vit};
+use super::kernels::{add_bias, count_targets_xent, matmul};
+use super::layout::{batch_rows, targets_into, BatchRef, Dims, Offsets};
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+use crate::util::threadpool::par_chunks_mut;
+
+/// `logits = xf @ head_w + head_b` into a workspace buffer `[T, v]`.
+pub(crate) fn head_logits(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    xf: &[f32],
+    ws: &mut Workspace,
+) -> Vec<f32> {
+    let t = dm.rows();
+    let (d, v) = (dm.d, dm.v);
+    let head_w = &theta[off.head_w..off.head_w + d * v];
+    let mut logits = ws.take(t * v);
+    matmul(&mut logits, xf, head_w, t, d, v);
+    add_bias(&mut logits, &theta[off.head_b..off.head_b + v], t, v);
+    logits
+}
+
+/// Forward-only mean loss (the `eval_loss__*` artifact). The batch count
+/// comes from the buffers, so shards evaluate with the same kernels.
+pub fn eval_loss_ws(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    batch: &BatchRef<'_>,
+    ws: &mut Workspace,
+) -> Result<f32> {
+    let b = batch_rows(cfg, batch)?;
+    if b == 0 {
+        bail!("eval_loss needs a non-empty batch");
+    }
+    let off = Offsets::resolve(cfg)?;
+    let dm = Dims::with_batch(cfg, b);
+    let x0 = embed_batch(theta, &off, cfg, &dm, batch, ws)?;
+    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let logits = head_logits(theta, &off, &dm, &cache.xf, ws);
+    let mut targets = ws.take_targets();
+    targets_into(&dm, batch, &mut targets);
+    let mut dlogits = ws.take(dm.rows() * dm.v);
+    let loss = count_targets_xent(&logits, &targets, dm.v, &mut dlogits, ws);
+    ws.give_targets(targets);
+    ws.give(dlogits);
+    ws.give(logits);
+    cache.recycle(ws);
+    Ok(loss)
+}
+
+/// [`eval_loss_ws`] with a private scratch arena (test/utility entry).
+pub fn eval_loss(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>) -> Result<f32> {
+    eval_loss_ws(cfg, theta, batch, &mut Workspace::new())
+}
+
+/// ViT top-1 accuracy fraction (the `eval_acc__*` artifact).
+pub fn eval_acc_ws(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    images: &[f32],
+    labels: &[i32],
+    ws: &mut Workspace,
+) -> Result<f32> {
+    let b = labels.len();
+    if b == 0 {
+        bail!("eval_acc needs a non-empty batch");
+    }
+    let expect = b * cfg.image_size * cfg.image_size * 3;
+    if images.len() != expect {
+        bail!("eval_acc images have {} elements, want {expect}", images.len());
+    }
+    let off = Offsets::resolve(cfg)?;
+    let dm = Dims::with_batch(cfg, b);
+    let (d, v) = (dm.d, dm.v);
+    let x0 = embed_vit(theta, &off, cfg, &dm, images, ws);
+    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let head_w = &theta[off.head_w..off.head_w + d * v];
+    let head_b = &theta[off.head_b..off.head_b + v];
+    let mut correct = 0usize;
+    for bi in 0..dm.b {
+        let xrow = &cache.xf[bi * dm.s * d..(bi * dm.s + 1) * d];
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for c in 0..v {
+            let mut acc = head_b[c];
+            for j in 0..d {
+                acc += xrow[j] * head_w[j * v + c];
+            }
+            if acc > best.1 {
+                best = (c, acc);
+            }
+        }
+        if best.0 == labels[bi] as usize {
+            correct += 1;
+        }
+    }
+    cache.recycle(ws);
+    Ok(correct as f32 / dm.b as f32)
+}
+
+/// Attention probabilities of batch item 0: `[L, H, S, S]` (the Fig. 1
+/// probe artifact). Accepts any leading sub-batch that contains item 0 —
+/// per-row kernel results do not depend on the other rows, so a shard
+/// probe is bit-identical to the full-batch probe.
+pub fn attn_maps_ws(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    tokens: &[i32],
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    if cfg.seq_len == 0 || tokens.len() % cfg.seq_len != 0 {
+        bail!(
+            "attn_maps token batch of {} elements is not a multiple of {}",
+            tokens.len(),
+            cfg.seq_len
+        );
+    }
+    let b = tokens.len() / cfg.seq_len;
+    if b == 0 {
+        bail!("attn_maps needs at least one sequence");
+    }
+    let off = Offsets::resolve(cfg)?;
+    let dm = Dims::with_batch(cfg, b);
+    let x0 = embed_lang(theta, &off, &dm, tokens, ws)?;
+    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let s = dm.s;
+    let mut out = vec![0.0f32; dm.l * dm.nh * s * s];
+    // one task per (layer, head) map
+    par_chunks_mut(dm.l * dm.nh * s * s, &mut out, s * s, |lh, dst| {
+        let (l, h) = (lh / dm.nh, lh % dm.nh);
+        let src = &cache.layers[l].probs[(h * s) * s..(h * s) * s + s * s]; // batch 0
+        dst.copy_from_slice(src);
+    });
+    cache.recycle(ws);
+    Ok(out)
+}
+
+/// [`attn_maps_ws`] with a private scratch arena.
+pub fn attn_maps(cfg: &ModelCfg, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+    attn_maps_ws(cfg, theta, tokens, &mut Workspace::new())
+}

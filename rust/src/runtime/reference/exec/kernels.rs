@@ -1,0 +1,454 @@
+//! Dense and elementwise kernels of the execution core: the four GEMM
+//! wrappers, bias/column-sum helpers, GELU, LayerNorm forward/backward,
+//! softmax cross-entropy, row softmax, and multi-head attention
+//! forward/backward.
+//!
+//! Every kernel is thread-count invariant (see the determinism contract in
+//! [`crate::util::threadpool`]); scratch larger than a register tile comes
+//! from the caller's [`Workspace`] so steady-state execution allocates
+//! nothing.
+
+use super::layout::Dims;
+use super::workspace::Workspace;
+use crate::runtime::reference::gemm::gemm;
+use crate::util::threadpool::{parallel_for_min, SendPtr, ROW_CHUNK};
+
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// GEMM wrappers (row-major). The four matmul shapes are thin wrappers over
+// the blocked, thread-parallel GEMM in [`crate::runtime::reference::gemm`].
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (overwrites `out`).
+pub(crate) fn matmul(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    gemm(out, false, a, false, b, false, m, k, n);
+}
+
+/// `out[m,n] += a[m,k] @ b[k,n]`.
+pub(crate) fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    gemm(out, true, a, false, b, false, m, k, n);
+}
+
+/// `out[m,n] += a[k,m]ᵀ @ b[k,n]` (weight-gradient shape).
+pub(crate) fn matmul_at_b_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
+    gemm(out, true, a, true, b, false, m, k, n);
+}
+
+/// `out[m,n] = a[m,k] @ b[n,k]ᵀ` (activation-gradient shape; overwrites).
+pub(crate) fn matmul_a_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    gemm(out, false, a, false, b, true, m, k, n);
+}
+
+/// Broadcast-add a row bias: `x[t, :] += bias` for every row.
+pub(crate) fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    for t in 0..rows {
+        let row = &mut x[t * cols..(t + 1) * cols];
+        for j in 0..cols {
+            row[j] += bias[j];
+        }
+    }
+}
+
+/// Column sums: `out[j] += Σ_t x[t, j]`.
+pub(crate) fn col_sums_acc(out: &mut [f32], x: &[f32], rows: usize, cols: usize) {
+    for t in 0..rows {
+        let row = &x[t * cols..(t + 1) * cols];
+        for j in 0..cols {
+            out[j] += row[j];
+        }
+    }
+}
+
+pub(crate) fn gelu(u: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    const A: f32 = 0.044715;
+    0.5 * u * (1.0 + (C * (u + A * u * u * u)).tanh())
+}
+
+pub(crate) fn gelu_grad(u: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    const A: f32 = 0.044715;
+    let t = (C * (u + A * u * u * u)).tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * C * (1.0 + 3.0 * A * u * u)
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
+
+/// LayerNorm over trailing dim; fills `xhat`, `rstd`, `y = xhat·w + b`.
+/// Row-parallel; per-row math is untouched, so results are thread-count
+/// independent.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn layernorm_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+    y: &mut [f32],
+) {
+    assert_eq!(xhat.len(), rows * d);
+    assert_eq!(rstd.len(), rows);
+    assert_eq!(y.len(), rows * d);
+    let px = SendPtr(xhat.as_mut_ptr());
+    let pr = SendPtr(rstd.as_mut_ptr());
+    let py = SendPtr(y.as_mut_ptr());
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    parallel_for_min(rows * d, chunks, |c| {
+        let t0 = c * ROW_CHUNK;
+        let t1 = (t0 + ROW_CHUNK).min(rows);
+        // SAFETY: row ranges [t0, t1) are pairwise disjoint across chunks.
+        let xhat = unsafe { px.slice_mut(t0 * d, (t1 - t0) * d) };
+        let rstd = unsafe { pr.slice_mut(t0, t1 - t0) };
+        let y = unsafe { py.slice_mut(t0 * d, (t1 - t0) * d) };
+        for t in t0..t1 {
+            let xi = &x[t * d..(t + 1) * d];
+            let mut mu = 0.0f32;
+            for &v in xi {
+                mu += v;
+            }
+            mu /= d as f32;
+            let mut var = 0.0f32;
+            for &v in xi {
+                var += (v - mu) * (v - mu);
+            }
+            var /= d as f32;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            rstd[t - t0] = rs;
+            let xh = &mut xhat[(t - t0) * d..(t - t0 + 1) * d];
+            let yo = &mut y[(t - t0) * d..(t - t0 + 1) * d];
+            for j in 0..d {
+                xh[j] = (xi[j] - mu) * rs;
+                yo[j] = xh[j] * w[j] + b[j];
+            }
+        }
+    });
+}
+
+/// LayerNorm backward. `dx += …`; `dw/db += …`. Row-parallel with per-chunk
+/// `dw`/`db` partials combined in fixed chunk order (thread-count
+/// independent). Partial storage comes from `ws`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    ws: &mut Workspace,
+) {
+    assert_eq!(dx.len(), rows * d);
+    assert_eq!(dw.len(), d);
+    assert_eq!(db.len(), d);
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    let mut partials = ws.take(chunks * 2 * d);
+    let pdx = SendPtr(dx.as_mut_ptr());
+    let pp = SendPtr(partials.as_mut_ptr());
+    parallel_for_min(rows * d, chunks, |c| {
+        let t0 = c * ROW_CHUNK;
+        let t1 = (t0 + ROW_CHUNK).min(rows);
+        // SAFETY: chunk c exclusively owns dx rows [t0, t1) and its own
+        // 2·d partial slot.
+        let dx = unsafe { pdx.slice_mut(t0 * d, (t1 - t0) * d) };
+        let part = unsafe { pp.slice_mut(c * 2 * d, 2 * d) };
+        let (dwp, dbp) = part.split_at_mut(d);
+        for t in t0..t1 {
+            let dyi = &dy[t * d..(t + 1) * d];
+            let xh = &xhat[t * d..(t + 1) * d];
+            let mut mean_dxhat = 0.0f32;
+            let mut mean_dxhat_xhat = 0.0f32;
+            for j in 0..d {
+                let dxh = dyi[j] * w[j];
+                mean_dxhat += dxh;
+                mean_dxhat_xhat += dxh * xh[j];
+                dwp[j] += dyi[j] * xh[j];
+                dbp[j] += dyi[j];
+            }
+            mean_dxhat /= d as f32;
+            mean_dxhat_xhat /= d as f32;
+            let rs = rstd[t];
+            let dxi = &mut dx[(t - t0) * d..(t - t0 + 1) * d];
+            for j in 0..d {
+                let dxh = dyi[j] * w[j];
+                dxi[j] += rs * (dxh - mean_dxhat - xh[j] * mean_dxhat_xhat);
+            }
+        }
+    });
+    for c in 0..chunks {
+        let part = &partials[c * 2 * d..(c + 1) * 2 * d];
+        for j in 0..d {
+            dw[j] += part[j];
+            db[j] += part[d + j];
+        }
+    }
+    ws.give(partials);
+}
+
+// ---------------------------------------------------------------------------
+// Softmax / losses
+// ---------------------------------------------------------------------------
+
+/// Row-wise log-softmax loss bookkeeping: given logits `[rows, v]`, a
+/// per-row target (`None` = row not counted) and the normalizer `count`
+/// (the caller's target count — local for fused steps, the full-batch
+/// count for globally-normalized shard steps), returns `Σ NLL / count`
+/// over the counted rows and fills `dlogits` with
+/// `(softmax − onehot) / count`. Row-parallel; per-chunk loss partials
+/// combine in fixed chunk order.
+pub(crate) fn softmax_xent(
+    logits: &[f32],
+    targets: &[Option<usize>],
+    v: usize,
+    dlogits: &mut [f32],
+    count: f32,
+    ws: &mut Workspace,
+) -> f32 {
+    let rows = targets.len();
+    assert_eq!(dlogits.len(), rows * v);
+    let chunks = rows.div_ceil(ROW_CHUNK);
+    let mut partials = ws.take64(chunks);
+    let pd = SendPtr(dlogits.as_mut_ptr());
+    let pl = SendPtr(partials.as_mut_ptr());
+    parallel_for_min(rows * v, chunks, |c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(rows);
+        // SAFETY: chunk c exclusively owns dlogits rows [r0, r1) and its
+        // own loss partial.
+        let dl = unsafe { pd.slice_mut(r0 * v, (r1 - r0) * v) };
+        let part = unsafe { pl.slice_mut(c, 1) };
+        let mut loss = 0.0f64;
+        for r in r0..r1 {
+            let lrow = &logits[r * v..(r + 1) * v];
+            let drow = &mut dl[(r - r0) * v..(r - r0 + 1) * v];
+            match targets[r] {
+                None => drow.fill(0.0),
+                Some(label) => {
+                    let mut max = f32::NEG_INFINITY;
+                    for &x in lrow {
+                        if x > max {
+                            max = x;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    for j in 0..v {
+                        let e = (lrow[j] - max).exp();
+                        drow[j] = e;
+                        denom += e;
+                    }
+                    loss += f64::from(max + denom.ln() - lrow[label]);
+                    for j in 0..v {
+                        drow[j] /= denom * count;
+                    }
+                    drow[label] -= 1.0 / count;
+                }
+            }
+        }
+        part[0] = loss;
+    });
+    let loss: f64 = partials.iter().sum();
+    ws.give64(partials);
+    (loss / f64::from(count)) as f32
+}
+
+/// [`softmax_xent`] normalized by the local target count — the fused
+/// (unsharded) loss path.
+pub(crate) fn count_targets_xent(
+    logits: &[f32],
+    targets: &[Option<usize>],
+    v: usize,
+    dlogits: &mut [f32],
+    ws: &mut Workspace,
+) -> f32 {
+    let count = super::layout::count_targets(targets);
+    softmax_xent(logits, targets, v, dlogits, count, ws)
+}
+
+/// Row-wise softmax into `out` (row-parallel).
+pub(crate) fn softmax_rows(logits: &[f32], rows: usize, v: usize, out: &mut [f32]) {
+    assert_eq!(logits.len(), rows * v);
+    assert_eq!(out.len(), rows * v);
+    crate::util::threadpool::par_chunks_mut(rows * v, out, ROW_CHUNK * v, |ci, chunk| {
+        let r0 = ci * ROW_CHUNK;
+        for (rl, orow) in chunk.chunks_mut(v).enumerate() {
+            let lrow = &logits[(r0 + rl) * v..(r0 + rl + 1) * v];
+            let mut max = f32::NEG_INFINITY;
+            for &x in lrow {
+                if x > max {
+                    max = x;
+                }
+            }
+            let mut denom = 0.0f32;
+            for j in 0..v {
+                orow[j] = (lrow[j] - max).exp();
+                denom += orow[j];
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head attention
+// ---------------------------------------------------------------------------
+
+/// Multi-head attention forward for one batch of rows.
+/// q/k/v are `[T,d]` with head h occupying columns `h*hd..(h+1)*hd`.
+/// Parallel over `(batch, head)` tasks; each task owns its `probs` block,
+/// its column stripe of `att`, and its `s`-element score scratch slot.
+pub(crate) fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dm: &Dims,
+    probs: &mut [f32],
+    att: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (s, d, hd) = (dm.s, dm.d, dm.hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert_eq!(probs.len(), dm.b * dm.nh * s * s);
+    assert_eq!(att.len(), dm.rows() * d);
+    let tasks = dm.b * dm.nh;
+    let mut scratch = ws.take(tasks * s);
+    let pprobs = SendPtr(probs.as_mut_ptr());
+    let patt = SendPtr(att.as_mut_ptr());
+    let pscr = SendPtr(scratch.as_mut_ptr());
+    parallel_for_min(tasks * s * s * hd, tasks, |task| {
+        let b = task / dm.nh;
+        let h = task % dm.nh;
+        let c0 = h * hd;
+        // SAFETY: task (b, h) exclusively owns probs block b·nh + h, the
+        // att columns [c0, c0+hd) of rows b·s .. (b+1)·s, and scratch slot
+        // `task`.
+        let probs = unsafe { pprobs.slice_mut((b * dm.nh + h) * s * s, s * s) };
+        let scores = unsafe { pscr.slice_mut(task * s, s) };
+        for si in 0..s {
+            let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            let lim = if dm.causal { si + 1 } else { s };
+            let mut max = f32::NEG_INFINITY;
+            for (ti, sc) in scores.iter_mut().enumerate().take(lim) {
+                let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                let mut acc = 0.0f32;
+                for j in 0..hd {
+                    acc += qrow[j] * krow[j];
+                }
+                *sc = acc * scale;
+                if *sc > max {
+                    max = *sc;
+                }
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(lim) {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            let prow = &mut probs[si * s..(si + 1) * s];
+            for ti in 0..s {
+                prow[ti] = if ti < lim { scores[ti] / denom } else { 0.0 };
+            }
+            // SAFETY: within this task's att stripe (row b·s + si).
+            let orow = unsafe { patt.slice_mut((b * s + si) * d + c0, hd) };
+            orow.fill(0.0);
+            for (ti, &p) in prow.iter().enumerate().take(lim) {
+                let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                for j in 0..hd {
+                    orow[j] += p * vrow[j];
+                }
+            }
+        }
+    });
+    ws.give(scratch);
+}
+
+/// Attention backward: consumes `datt` (grad wrt concatenated head outputs),
+/// accumulates `dq/dk/dv` (zero-initialized by the caller). Parallel over
+/// `(batch, head)` tasks; each task owns its column stripe of `dq/dk/dv`
+/// and a `2·s` scratch slot (`dp` ‖ `ds`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    datt: &[f32],
+    dm: &Dims,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (s, d, hd) = (dm.s, dm.d, dm.hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert_eq!(dq.len(), dm.rows() * d);
+    assert_eq!(dk.len(), dm.rows() * d);
+    assert_eq!(dv.len(), dm.rows() * d);
+    let tasks = dm.b * dm.nh;
+    let mut scratch = ws.take(tasks * 2 * s);
+    let pdq = SendPtr(dq.as_mut_ptr());
+    let pdk = SendPtr(dk.as_mut_ptr());
+    let pdv = SendPtr(dv.as_mut_ptr());
+    let pscr = SendPtr(scratch.as_mut_ptr());
+    parallel_for_min(tasks * s * s * hd, tasks, |task| {
+        let b = task / dm.nh;
+        let h = task % dm.nh;
+        let c0 = h * hd;
+        // SAFETY: task exclusively owns scratch slot `task` (2·s elements).
+        let slot = unsafe { pscr.slice_mut(task * 2 * s, 2 * s) };
+        let (dp, ds) = slot.split_at_mut(s);
+        for si in 0..s {
+            let lim = if dm.causal { si + 1 } else { s };
+            let prow = &probs[(((b * dm.nh + h) * s) + si) * s..][..s];
+            let darow = &datt[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            // dP[si,ti] = datt · v[ti];  dv[ti] += P[si,ti] · datt
+            for ti in 0..lim {
+                let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                // SAFETY: task (b, h) exclusively owns columns [c0, c0+hd)
+                // of rows b·s .. (b+1)·s in dq/dk/dv.
+                let dvrow = unsafe { pdv.slice_mut((b * s + ti) * d + c0, hd) };
+                let mut acc = 0.0f32;
+                let p = prow[ti];
+                for j in 0..hd {
+                    acc += darow[j] * vrow[j];
+                    dvrow[j] += p * darow[j];
+                }
+                dp[ti] = acc;
+            }
+            // softmax backward: ds = P ⊙ (dP − Σ dP⊙P)
+            let mut dot = 0.0f32;
+            for ti in 0..lim {
+                dot += dp[ti] * prow[ti];
+            }
+            for ti in 0..lim {
+                ds[ti] = prow[ti] * (dp[ti] - dot) * scale;
+            }
+            // dq[si] += ds · k[ti];  dk[ti] += ds · q[si]
+            let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            // SAFETY: same stripe ownership as above (dq and dk are
+            // separate buffers, so the si == ti diagonal cannot alias).
+            let dqrow = unsafe { pdq.slice_mut((b * s + si) * d + c0, hd) };
+            for ti in 0..lim {
+                let w = ds[ti];
+                if w == 0.0 {
+                    continue;
+                }
+                let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                let dkrow = unsafe { pdk.slice_mut((b * s + ti) * d + c0, hd) };
+                for j in 0..hd {
+                    dqrow[j] += w * krow[j];
+                    dkrow[j] += w * qrow[j];
+                }
+            }
+        }
+    });
+    ws.give(scratch);
+}

@@ -1,0 +1,183 @@
+//! Shared geometry/addressing types of the execution core: the borrowed
+//! batch view ([`BatchRef`]), flat-theta parameter offsets ([`Offsets`]),
+//! the model-geometry snapshot ([`Dims`]), and the per-row loss-target
+//! rules ([`targets_into`]).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::{Family, ModelCfg};
+
+/// One training batch, borrowed from the caller's buffers.
+pub enum BatchRef<'a> {
+    /// Causal LM: tokens `[B, S]`, next-token targets.
+    Gpt { tokens: &'a [i32] },
+    /// MLM: masked tokens + labels `[B, S]` (`label < 0` = ignore).
+    Bert { tokens: &'a [i32], labels: &'a [i32] },
+    /// Classification: images `[B, H, W, 3]` NHWC in [0,1], labels `[B]`.
+    Vit { images: &'a [f32], labels: &'a [i32] },
+}
+
+/// Offsets of every tensor in the flat theta (resolved once per call).
+pub(crate) struct Offsets {
+    pub(crate) emb: usize,     // lang: token embedding; vit: patch_w
+    pub(crate) patch_b: usize, // vit only
+    pub(crate) cls: usize,     // vit only
+    pub(crate) pos: usize,
+    pub(crate) ln1_w: usize,
+    pub(crate) ln1_b: usize,
+    pub(crate) wq: usize,
+    pub(crate) bq: usize,
+    pub(crate) wk: usize,
+    pub(crate) bk: usize,
+    pub(crate) wv: usize,
+    pub(crate) bv: usize,
+    pub(crate) wo: usize,
+    pub(crate) bo: usize,
+    pub(crate) ln2_w: usize,
+    pub(crate) ln2_b: usize,
+    pub(crate) fc1_w: usize,
+    pub(crate) fc1_b: usize,
+    pub(crate) fc2_w: usize,
+    pub(crate) fc2_b: usize,
+    pub(crate) lnf_w: usize,
+    pub(crate) lnf_b: usize,
+    pub(crate) head_w: usize,
+    pub(crate) head_b: usize,
+}
+
+pub(crate) fn offset(cfg: &ModelCfg, name: &str) -> Result<usize> {
+    cfg.param(name)
+        .map(|p| p.offset)
+        .ok_or_else(|| anyhow!("config {}: missing param '{}'", cfg.name, name))
+}
+
+impl Offsets {
+    pub(crate) fn resolve(cfg: &ModelCfg) -> Result<Offsets> {
+        let is_vit = cfg.family == Family::Vit;
+        Ok(Offsets {
+            emb: offset(cfg, if is_vit { "patch_w" } else { "emb" })?,
+            patch_b: if is_vit { offset(cfg, "patch_b")? } else { 0 },
+            cls: if is_vit { offset(cfg, "cls")? } else { 0 },
+            pos: offset(cfg, "pos")?,
+            ln1_w: offset(cfg, "blk.ln1_w")?,
+            ln1_b: offset(cfg, "blk.ln1_b")?,
+            wq: offset(cfg, "blk.wq")?,
+            bq: offset(cfg, "blk.bq")?,
+            wk: offset(cfg, "blk.wk")?,
+            bk: offset(cfg, "blk.bk")?,
+            wv: offset(cfg, "blk.wv")?,
+            bv: offset(cfg, "blk.bv")?,
+            wo: offset(cfg, "blk.wo")?,
+            bo: offset(cfg, "blk.bo")?,
+            ln2_w: offset(cfg, "blk.ln2_w")?,
+            ln2_b: offset(cfg, "blk.ln2_b")?,
+            fc1_w: offset(cfg, "blk.fc1_w")?,
+            fc1_b: offset(cfg, "blk.fc1_b")?,
+            fc2_w: offset(cfg, "blk.fc2_w")?,
+            fc2_b: offset(cfg, "blk.fc2_b")?,
+            lnf_w: offset(cfg, "lnf_w")?,
+            lnf_b: offset(cfg, "lnf_b")?,
+            head_w: offset(cfg, "head_w")?,
+            head_b: offset(cfg, "head_b")?,
+        })
+    }
+}
+
+/// Model geometry snapshot used by the kernels.
+#[derive(Clone, Copy)]
+pub(crate) struct Dims {
+    pub(crate) b: usize,
+    pub(crate) s: usize,
+    pub(crate) d: usize,
+    pub(crate) dff: usize,
+    pub(crate) l: usize,
+    pub(crate) nh: usize,
+    pub(crate) hd: usize,
+    /// head output columns: vocab (lang) or n_classes (vit)
+    pub(crate) v: usize,
+    pub(crate) causal: bool,
+}
+
+impl Dims {
+    pub(crate) fn of(cfg: &ModelCfg) -> Dims {
+        Self::with_batch(cfg, cfg.batch)
+    }
+
+    /// Geometry with an explicit batch count `b` — the data-parallel shard
+    /// path runs the same kernels on a slice of the configured batch.
+    pub(crate) fn with_batch(cfg: &ModelCfg, b: usize) -> Dims {
+        let (s, v) = match cfg.family {
+            Family::Vit => {
+                let g = cfg.image_size / cfg.patch_size;
+                (g * g + 1, cfg.n_classes)
+            }
+            _ => (cfg.seq_len, cfg.vocab),
+        };
+        Dims {
+            b,
+            s,
+            d: cfg.d_model,
+            dff: cfg.d_ff,
+            l: cfg.n_layer,
+            nh: cfg.n_head,
+            hd: cfg.head_dim,
+            v,
+            causal: cfg.family == Family::Gpt,
+        }
+    }
+
+    pub(crate) fn rows(&self) -> usize {
+        self.b * self.s
+    }
+}
+
+/// Batch count carried by a [`BatchRef`]'s buffers (its leading extent).
+pub(crate) fn batch_rows(cfg: &ModelCfg, batch: &BatchRef<'_>) -> Result<usize> {
+    let (len, per_item) = match batch {
+        BatchRef::Gpt { tokens } | BatchRef::Bert { tokens, .. } => (tokens.len(), cfg.seq_len),
+        BatchRef::Vit { labels, .. } => (labels.len(), 1),
+    };
+    if per_item == 0 || len % per_item != 0 {
+        bail!("batch of {len} elements is not a multiple of {per_item}");
+    }
+    Ok(len / per_item)
+}
+
+/// Fill `out` with the per-row targets of a batch (the family's loss
+/// masking rules). `out` comes from [`super::Workspace::take_targets`] and
+/// is cleared here, so its capacity persists across steps.
+pub(crate) fn targets_into(dm: &Dims, batch: &BatchRef<'_>, out: &mut Vec<Option<usize>>) {
+    let (b, s) = (dm.b, dm.s);
+    out.clear();
+    match batch {
+        BatchRef::Gpt { tokens } => {
+            // next-token prediction: position s predicts token s+1
+            out.resize(b * s, None);
+            for bi in 0..b {
+                for si in 0..s - 1 {
+                    out[bi * s + si] = Some(tokens[bi * s + si + 1] as usize);
+                }
+            }
+        }
+        BatchRef::Bert { labels, .. } => {
+            out.extend(
+                labels
+                    .iter()
+                    .map(|&l| if l >= 0 { Some(l as usize) } else { None }),
+            );
+        }
+        BatchRef::Vit { labels, .. } => {
+            // only the class-token row (position 0) carries a target
+            out.resize(b * s, None);
+            for bi in 0..b {
+                out[bi * s] = Some(labels[bi] as usize);
+            }
+        }
+    }
+}
+
+/// Counted (unmasked) rows of a target list, clamped to ≥ 1 — the local
+/// softmax-xent normalizer.
+pub(crate) fn count_targets(targets: &[Option<usize>]) -> f32 {
+    targets.iter().filter(|t| t.is_some()).count().max(1) as f32
+}

@@ -1,0 +1,156 @@
+//! LoRA (rank-r adapters on W_q / W_v over a frozen base): the
+//! `lora_step__*` and `lora_eval__*` artifacts.
+
+use anyhow::{bail, Result};
+
+use super::heads::eval_loss_ws;
+use super::kernels::{matmul_a_bt, matmul_acc, matmul_at_b_acc};
+use super::layout::{offset, BatchRef, Dims};
+use super::steps::{adamw_state_into, loss_grad_ws};
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+
+/// LoRA adapter offsets in the flat `[aq, av, bq2, bv2]` vector
+/// (sorted-key order, mirroring `model.lora_spec`).
+struct LoraOffsets {
+    aq: usize,
+    av: usize,
+    bq2: usize,
+    bv2: usize,
+    per_layer: usize, // d · rank
+}
+
+fn lora_offsets(cfg: &ModelCfg, rank: usize) -> LoraOffsets {
+    let block = cfg.n_layer * cfg.d_model * rank;
+    LoraOffsets { aq: 0, av: block, bq2: 2 * block, bv2: 3 * block, per_layer: cfg.d_model * rank }
+}
+
+/// Merge adapters into a workspace copy of the base theta:
+/// `wq[l] += aq[l]@bq2[l]`, `wv[l] += av[l]@bv2[l]`.
+fn lora_merged(
+    cfg: &ModelCfg,
+    theta_base: &[f32],
+    lora: &[f32],
+    rank: usize,
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    if theta_base.len() != cfg.n_params {
+        bail!(
+            "base theta has {} elements, config {} needs {}",
+            theta_base.len(),
+            cfg.name,
+            cfg.n_params
+        );
+    }
+    let d = cfg.d_model;
+    let lo = lora_offsets(cfg, rank);
+    let off_wq = offset(cfg, "blk.wq")?;
+    let off_wv = offset(cfg, "blk.wv")?;
+    let mut th = ws.take(cfg.n_params);
+    th.copy_from_slice(theta_base);
+    for l in 0..cfg.n_layer {
+        let aq = &lora[lo.aq + l * lo.per_layer..lo.aq + (l + 1) * lo.per_layer];
+        let bq2 = &lora[lo.bq2 + l * lo.per_layer..lo.bq2 + (l + 1) * lo.per_layer];
+        matmul_acc(&mut th[off_wq + l * d * d..off_wq + (l + 1) * d * d], aq, bq2, d, rank, d);
+        let av = &lora[lo.av + l * lo.per_layer..lo.av + (l + 1) * lo.per_layer];
+        let bv2 = &lora[lo.bv2 + l * lo.per_layer..lo.bv2 + (l + 1) * lo.per_layer];
+        matmul_acc(&mut th[off_wv + l * d * d..off_wv + (l + 1) * d * d], av, bv2, d, rank, d);
+    }
+    Ok(th)
+}
+
+/// One LoRA step (the `lora_step__*` artifact) into a caller-owned output
+/// buffer: adapters train, base frozen.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_step_into(
+    cfg: &ModelCfg,
+    rank: usize,
+    state: &[f32],
+    theta_base: &[f32],
+    batch: &BatchRef<'_>,
+    lr: f32,
+    step: f32,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let d = cfg.d_model;
+    let n_lora = 4 * cfg.n_layer * d * rank;
+    if state.len() != 3 * n_lora + 1 {
+        bail!("state length {} != {}", state.len(), 3 * n_lora + 1);
+    }
+    let lora = &state[1..1 + n_lora];
+    let merged = lora_merged(cfg, theta_base, lora, rank, ws)?;
+    let mut g_full = ws.take(cfg.n_params);
+    let loss = loss_grad_ws(cfg, &merged, batch, Dims::of(cfg), ws, &mut g_full)?;
+    ws.give(merged);
+
+    // chain rule onto the adapters: dA = dW·Bᵀ, dB = Aᵀ·dW
+    let lo = lora_offsets(cfg, rank);
+    let off_wq = offset(cfg, "blk.wq")?;
+    let off_wv = offset(cfg, "blk.wv")?;
+    let mut g_lora = ws.take(n_lora);
+    for l in 0..cfg.n_layer {
+        for (w_off, a_off, b_off) in [(off_wq, lo.aq, lo.bq2), (off_wv, lo.av, lo.bv2)] {
+            let dw = &g_full[w_off + l * d * d..w_off + (l + 1) * d * d];
+            let a = &lora[a_off + l * lo.per_layer..a_off + (l + 1) * lo.per_layer];
+            let b = &lora[b_off + l * lo.per_layer..b_off + (l + 1) * lo.per_layer];
+            // da[d,r] = dw[d,d] @ b[r,d]ᵀ
+            matmul_a_bt(
+                &mut g_lora[a_off + l * lo.per_layer..a_off + (l + 1) * lo.per_layer],
+                dw,
+                b,
+                d,
+                d,
+                rank,
+            );
+            // db[r,d] = a[d,r]ᵀ @ dw[d,d]
+            matmul_at_b_acc(
+                &mut g_lora[b_off + l * lo.per_layer..b_off + (l + 1) * lo.per_layer],
+                a,
+                dw,
+                d,
+                rank,
+                d,
+            );
+        }
+    }
+    ws.give(g_full);
+    adamw_state_into(state, &g_lora, loss, lr, step, out);
+    ws.give(g_lora);
+    Ok(())
+}
+
+/// One LoRA step returning a fresh state vector.
+pub fn lora_step(cfg: &ModelCfg, rank: usize, state: &[f32], theta_base: &[f32],
+                 batch: &BatchRef<'_>, lr: f32, step: f32) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    lora_step_into(cfg, rank, state, theta_base, batch, lr, step, &mut Workspace::new(),
+                   &mut out)?;
+    Ok(out)
+}
+
+/// LoRA eval loss (the `lora_eval__*` artifact).
+pub fn lora_eval_ws(
+    cfg: &ModelCfg,
+    rank: usize,
+    state: &[f32],
+    theta_base: &[f32],
+    batch: &BatchRef<'_>,
+    ws: &mut Workspace,
+) -> Result<f32> {
+    let n_lora = 4 * cfg.n_layer * cfg.d_model * rank;
+    if state.len() < 1 + n_lora {
+        bail!("lora state has {} elements, want at least {}", state.len(), 1 + n_lora);
+    }
+    let lora = &state[1..1 + n_lora];
+    let merged = lora_merged(cfg, theta_base, lora, rank, ws)?;
+    let loss = eval_loss_ws(cfg, &merged, batch, ws)?;
+    ws.give(merged);
+    Ok(loss)
+}
+
+/// [`lora_eval_ws`] with a private scratch arena.
+pub fn lora_eval(cfg: &ModelCfg, rank: usize, state: &[f32], theta_base: &[f32],
+                 batch: &BatchRef<'_>) -> Result<f32> {
+    lora_eval_ws(cfg, rank, state, theta_base, batch, &mut Workspace::new())
+}

@@ -1,0 +1,58 @@
+//! The reference execution core: a pure-Rust f32 transformer (forward,
+//! hand-derived backward, AdamW) split into focused modules and built
+//! around the reusable [`Workspace`] arena.
+//!
+//! Replaces the former 1,600-line `model.rs` monolith:
+//!
+//! | module        | contents                                                |
+//! |---------------|---------------------------------------------------------|
+//! | [`workspace`] | scratch arena (alloc-free steady-state checkouts)       |
+//! | [`layout`]    | [`BatchRef`], parameter offsets, geometry, loss targets |
+//! | [`kernels`]   | GEMM wrappers, LayerNorm, softmax/xent, attention       |
+//! | [`embed`]     | token/position + ViT patch embedding (fwd/bwd)          |
+//! | [`backbone`]  | pre-LN transformer blocks with caches (fwd/bwd)         |
+//! | [`heads`]     | logits, `eval_loss`/`eval_acc`, `attn_maps` probes      |
+//! | [`steps`]     | AdamW, `train_step`, grad-only `train_grad`             |
+//! | [`ft`]        | fine-tune probe (`ft_step`/`ft_grad`/`ft_acc`)          |
+//! | [`distill`]   | distillation (`distill_step`/`distill_grad`)            |
+//! | [`lora`]      | LoRA adapters (`lora_step`/`lora_eval`)                 |
+//!
+//! Semantics mirror `python/compile/model.py`: pre-LN blocks
+//! (LayerNorm(1e-5) → multi-head attention → residual → LayerNorm → GELU
+//! FFN → residual), learned positions, untied LM head, AdamW over the flat
+//! `f32[3N+1]` state `[loss, theta, m, v]`, parameters addressed through
+//! the manifest layout (sorted names). Numerics are plain f32 host math —
+//! the contract is *semantic* equivalence with the AOT artifacts (same
+//! shapes/layout, loss decreases, deterministic), not bit equality.
+//!
+//! Every step entry point has an `*_into` variant that writes into a
+//! caller-owned buffer and draws scratch from a persistent [`Workspace`]:
+//! after one warm-up call, those paths perform **zero** heap allocations
+//! (proved by the counting-allocator probe in `tests/test_workspace.rs`).
+//! Batch-carrying entry points size themselves from their argument buffers,
+//! so the data-parallel [`ShardedBackend`] runs the same kernels on
+//! contiguous batch shards.
+//!
+//! [`ShardedBackend`]: crate::runtime::sharded::ShardedBackend
+
+pub mod backbone;
+pub mod distill;
+pub mod embed;
+pub mod ft;
+pub mod heads;
+pub mod kernels;
+pub mod layout;
+pub mod lora;
+pub mod steps;
+pub mod workspace;
+
+pub use distill::{distill_grad_into, distill_step, distill_step_into};
+pub use ft::{ft_acc, ft_acc_ws, ft_grad_into, ft_step, ft_step_into};
+pub use heads::{attn_maps, attn_maps_ws, eval_acc_ws, eval_loss, eval_loss_ws};
+pub use layout::BatchRef;
+pub use lora::{lora_eval, lora_eval_ws, lora_step, lora_step_into};
+pub use steps::{
+    adamw, loss_and_grad, train_grad, train_grad_into, train_step, train_step_into, ADAM_B1,
+    ADAM_B2, ADAM_EPS, WEIGHT_DECAY,
+};
+pub use workspace::Workspace;

@@ -1,0 +1,363 @@
+//! Optimizer-step paths: the shared loss+gradient core, AdamW, the fused
+//! `train_step__*` artifact and the grad-only `train_grad__*` shard step.
+//!
+//! The `*_into` entry points write their result into a caller-owned output
+//! buffer and draw every intermediate from the caller's [`Workspace`] —
+//! after one warm-up step they perform **zero** heap allocations
+//! (`tests/test_workspace.rs` proves it with a counting global allocator).
+//! The plain wrappers allocate a private arena per call; both produce
+//! bit-identical results.
+
+use anyhow::{bail, Result};
+
+use super::backbone::{backbone_bwd, backbone_fwd};
+use super::embed::{embed_batch, embed_batch_bwd};
+use super::heads::head_logits;
+use super::kernels::{col_sums_acc, count_targets_xent, matmul_a_bt, matmul_at_b_acc};
+use super::layout::{batch_rows, targets_into, BatchRef, Dims, Offsets};
+use super::workspace::Workspace;
+use crate::runtime::manifest::ModelCfg;
+use crate::util::threadpool::{parallel_for_min, SendPtr, ELEM_CHUNK};
+
+/// AdamW hyper-parameters (`model.py` constants).
+pub const ADAM_B1: f32 = 0.9;
+/// Second-moment decay.
+pub const ADAM_B2: f32 = 0.999;
+/// Denominator epsilon.
+pub const ADAM_EPS: f32 = 1e-8;
+/// Decoupled weight decay.
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// One AdamW update over flat vectors (`model.adamw`; `step` is 1-based).
+/// Elementwise → chunk-parallel with no cross-chunk state.
+pub fn adamw(theta: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, step: f32) {
+    let n = theta.len();
+    assert_eq!(g.len(), n);
+    assert_eq!(m.len(), n);
+    assert_eq!(v.len(), n);
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    let pt = SendPtr(theta.as_mut_ptr());
+    let pm = SendPtr(m.as_mut_ptr());
+    let pv = SendPtr(v.as_mut_ptr());
+    let chunks = n.div_ceil(ELEM_CHUNK);
+    parallel_for_min(4 * n, chunks, |c| {
+        let i0 = c * ELEM_CHUNK;
+        let len = ELEM_CHUNK.min(n - i0);
+        // SAFETY: element ranges are pairwise disjoint across chunks.
+        let theta = unsafe { pt.slice_mut(i0, len) };
+        let m = unsafe { pm.slice_mut(i0, len) };
+        let v = unsafe { pv.slice_mut(i0, len) };
+        for i in 0..len {
+            let gi = g[i0 + i];
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            theta[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + WEIGHT_DECAY * theta[i]);
+        }
+    });
+}
+
+/// Copy `state` into `out` and apply one AdamW update in place over its
+/// `[loss, theta, m, v]` layout, writing `loss` into slot 0.
+pub(crate) fn adamw_state_into(
+    state: &[f32],
+    grad: &[f32],
+    loss: f32,
+    lr: f32,
+    step: f32,
+    out: &mut Vec<f32>,
+) {
+    let n = grad.len();
+    debug_assert_eq!(state.len(), 3 * n + 1);
+    out.clear();
+    out.extend_from_slice(state);
+    out[0] = loss;
+    let body = &mut out[1..];
+    let (theta, rest) = body.split_at_mut(n);
+    let (m, v) = rest.split_at_mut(n);
+    adamw(theta, grad, m, v, lr, step);
+}
+
+/// Forward + loss + full backward over an explicit geometry, accumulating
+/// into the zeroed `grad` buffer (`len == cfg.n_params`). The shared core
+/// of `train_step`, `train_grad` and the LoRA step.
+pub(crate) fn loss_grad_ws(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    batch: &BatchRef<'_>,
+    dm: Dims,
+    ws: &mut Workspace,
+    grad: &mut [f32],
+) -> Result<f32> {
+    debug_assert_eq!(grad.len(), cfg.n_params);
+    let off = Offsets::resolve(cfg)?;
+    let t = dm.rows();
+    let (d, v) = (dm.d, dm.v);
+
+    let x0 = embed_batch(theta, &off, cfg, &dm, batch, ws)?;
+    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let logits = head_logits(theta, &off, &dm, &cache.xf, ws);
+
+    let mut targets = ws.take_targets();
+    targets_into(&dm, batch, &mut targets);
+    let mut dlogits = ws.take(t * v);
+    let loss = count_targets_xent(&logits, &targets, v, &mut dlogits, ws);
+    ws.give_targets(targets);
+    ws.give(logits);
+
+    let head_w = &theta[off.head_w..off.head_w + d * v];
+    matmul_at_b_acc(&mut grad[off.head_w..off.head_w + d * v], &cache.xf, &dlogits, t, d, v);
+    col_sums_acc(&mut grad[off.head_b..off.head_b + v], &dlogits, t, v);
+    let mut dxf = ws.take(t * d);
+    matmul_a_bt(&mut dxf, &dlogits, head_w, t, v, d);
+    ws.give(dlogits);
+
+    let dx0 = backbone_bwd(theta, &off, &dm, &cache, &dxf, grad, ws);
+    ws.give(dxf);
+    embed_batch_bwd(&off, cfg, &dm, batch, &dx0, grad, ws);
+    ws.give(dx0);
+    cache.recycle(ws);
+    Ok(loss)
+}
+
+/// Forward + loss + full backward. Returns `(loss, grad)` with `grad`
+/// laid out exactly like `theta`.
+pub fn loss_and_grad(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>)
+                     -> Result<(f32, Vec<f32>)> {
+    let mut grad = vec![0.0f32; cfg.n_params];
+    let loss =
+        loss_grad_ws(cfg, theta, batch, Dims::of(cfg), &mut Workspace::new(), &mut grad)?;
+    Ok((loss, grad))
+}
+
+/// One full train step (the `train_step__*` artifact) into a caller-owned
+/// output buffer: `state → state'` with the batch loss at index 0. The
+/// steady-state-alloc-free hot path.
+pub fn train_step_into(
+    cfg: &ModelCfg,
+    state: &[f32],
+    batch: &BatchRef<'_>,
+    lr: f32,
+    step: f32,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = cfg.n_params;
+    if state.len() != cfg.state_len() {
+        bail!("state length {} != {}", state.len(), cfg.state_len());
+    }
+    let mut grad = ws.take(n);
+    let loss = loss_grad_ws(cfg, &state[1..1 + n], batch, Dims::of(cfg), ws, &mut grad)?;
+    adamw_state_into(state, &grad, loss, lr, step, out);
+    ws.give(grad);
+    Ok(())
+}
+
+/// One full train step returning a fresh state vector.
+pub fn train_step(cfg: &ModelCfg, state: &[f32], batch: &BatchRef<'_>, lr: f32, step: f32)
+                  -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    train_step_into(cfg, state, batch, lr, step, &mut Workspace::new(), &mut out)?;
+    Ok(out)
+}
+
+/// Grad-only step over a batch *shard* (the `train_grad__*` artifact) into
+/// a caller-owned `[loss, grad]` buffer: the batch count is taken from the
+/// buffers instead of the config, so a data-parallel backend can run the
+/// same kernels on `B/R` rows. The result is the shard-mean loss and the
+/// shard-mean gradient.
+pub fn train_grad_into(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    batch: &BatchRef<'_>,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = cfg.n_params;
+    if theta.len() != n {
+        bail!("train_grad theta has {} elements, config {} needs {n}", theta.len(), cfg.name);
+    }
+    let b = batch_rows(cfg, batch)?;
+    if b == 0 {
+        bail!("train_grad needs a non-empty batch shard");
+    }
+    out.clear();
+    out.resize(1 + n, 0.0);
+    let loss = loss_grad_ws(cfg, theta, batch, Dims::with_batch(cfg, b), ws, &mut out[1..])?;
+    out[0] = loss;
+    Ok(())
+}
+
+/// Grad-only shard step returning `(loss, grad)`.
+pub fn train_grad(cfg: &ModelCfg, theta: &[f32], batch: &BatchRef<'_>)
+                  -> Result<(f32, Vec<f32>)> {
+    let mut out = Vec::new();
+    train_grad_into(cfg, theta, batch, &mut Workspace::new(), &mut out)?;
+    let loss = out[0];
+    out.remove(0);
+    Ok((loss, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::eval_loss;
+    use super::*;
+    use crate::runtime::manifest::{Family, Manifest};
+    use crate::runtime::params::init_theta;
+    use crate::util::rng::Rng;
+
+    fn nano(name: &str) -> ModelCfg {
+        Manifest::builtin().cfg(name).unwrap().clone()
+    }
+
+    fn gpt_batch(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+        let c = crate::data::Corpus::new(cfg.vocab, 0);
+        let mut rng = Rng::new(seed);
+        let mut toks = Vec::new();
+        for _ in 0..cfg.batch {
+            toks.extend(c.sequence(cfg.seq_len, &mut rng));
+        }
+        toks
+    }
+
+    #[test]
+    fn gradient_matches_directional_finite_difference() {
+        // Robust whole-vector check: the analytic gradient's norm must match
+        // the central finite difference of the loss along ĝ to ~1%.
+        let cfg = nano("gpt_nano");
+        let theta = init_theta(&cfg, 5);
+        let toks = gpt_batch(&cfg, 11);
+        let batch = BatchRef::Gpt { tokens: &toks };
+        let (_, g) = loss_and_grad(&cfg, &theta, &batch).unwrap();
+        let norm = g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+        assert!(norm > 1e-3, "gradient vanished: {norm}");
+        let h = 1e-2f64;
+        let mut plus = theta.clone();
+        let mut minus = theta.clone();
+        for i in 0..theta.len() {
+            let dir = (g[i] as f64 / norm) as f32;
+            plus[i] += h as f32 * dir;
+            minus[i] -= h as f32 * dir;
+        }
+        let lp = eval_loss(&cfg, &plus, &batch).unwrap() as f64;
+        let lm = eval_loss(&cfg, &minus, &batch).unwrap() as f64;
+        let fd = (lp - lm) / (2.0 * h); // ≈ ∇L·ĝ = ‖g‖
+        let rel = (fd - norm).abs() / norm;
+        // a wrong backward (missing term, bad transpose) is off by 50%+;
+        // 10% leaves headroom for f32 evaluation noise and curvature
+        assert!(rel < 0.10, "directional derivative {fd} vs ‖g‖ {norm} (rel {rel})");
+    }
+
+    #[test]
+    fn bert_and_vit_gradients_flow() {
+        for name in ["bert_nano", "vit_nano"] {
+            let cfg = nano(name);
+            let theta = init_theta(&cfg, 2);
+            let (loss, g) = match cfg.family {
+                Family::Bert => {
+                    let toks = gpt_batch(&cfg, 3);
+                    let labels: Vec<i32> =
+                        toks.iter().enumerate().map(|(i, &t)| if i % 7 == 0 { t } else { -1 })
+                            .collect();
+                    loss_and_grad(&cfg, &theta, &BatchRef::Bert { tokens: &toks, labels: &labels })
+                        .unwrap()
+                }
+                _ => {
+                    let mut gen = crate::data::VisionGen::new(&cfg, 0, 4);
+                    let b = gen.next_batch(cfg.batch);
+                    loss_and_grad(&cfg, &theta,
+                                  &BatchRef::Vit { images: &b.images, labels: &b.labels })
+                        .unwrap()
+                }
+            };
+            assert!(loss.is_finite(), "{name} loss not finite");
+            let nz = g.iter().filter(|&&x| x != 0.0).count();
+            assert!(nz * 2 > g.len(), "{name}: only {nz}/{} grads nonzero", g.len());
+        }
+    }
+
+    #[test]
+    fn train_grad_shards_recombine_to_full_gradient() {
+        let cfg = nano("gpt_nano"); // batch 4
+        let theta = init_theta(&cfg, 9);
+        let toks = gpt_batch(&cfg, 21);
+        let (full_loss, full_grad) =
+            loss_and_grad(&cfg, &theta, &BatchRef::Gpt { tokens: &toks }).unwrap();
+        // uneven split: shard of 1 sequence + shard of 3 sequences
+        let (a, b) = toks.split_at(cfg.seq_len);
+        let (la, ga) = train_grad(&cfg, &theta, &BatchRef::Gpt { tokens: a }).unwrap();
+        let (lb, gb) = train_grad(&cfg, &theta, &BatchRef::Gpt { tokens: b }).unwrap();
+        // GPT: every sequence carries s-1 targets, so weights ∝ rows
+        let (wa, wb) = (0.25f32, 0.75f32);
+        let loss = wa * la + wb * lb;
+        assert!((loss - full_loss).abs() < 5e-5, "{loss} vs {full_loss}");
+        let mut max = 0.0f32;
+        for i in 0..full_grad.len() {
+            max = max.max((wa * ga[i] + wb * gb[i] - full_grad[i]).abs());
+        }
+        assert!(max < 5e-5, "recombined shard gradient off by {max}");
+    }
+
+    #[test]
+    fn train_step_is_deterministic_and_reduces_loss() {
+        let cfg = nano("gpt_nano");
+        let n = cfg.n_params;
+        let theta = init_theta(&cfg, 7);
+        let mut state = vec![0.0f32; 3 * n + 1];
+        state[1..1 + n].copy_from_slice(&theta);
+        let toks = gpt_batch(&cfg, 1);
+        let batch = BatchRef::Gpt { tokens: &toks };
+        let s1 = train_step(&cfg, &state, &batch, 1e-3, 1.0).unwrap();
+        let s2 = train_step(&cfg, &state, &batch, 1e-3, 1.0).unwrap();
+        assert_eq!(s1, s2, "train_step not deterministic");
+        // loss after 30 steps on the same batch must drop well below initial
+        let mut st = state;
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 1..=30 {
+            st = train_step(&cfg, &st, &batch, 2e-3, step as f32).unwrap();
+            if step == 1 {
+                first = st[0];
+            }
+            last = st[0];
+        }
+        assert!(last < first - 0.5, "same-batch loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn arena_reuse_is_bitwise_identical_to_fresh_allocation() {
+        // A Workspace reused across steps must not change a single bit
+        // relative to a fresh arena per call (the PR 3 allocation pattern).
+        let cfg = nano("gpt_nano");
+        let n = cfg.n_params;
+        let theta = init_theta(&cfg, 13);
+        let mut state = vec![0.0f32; 3 * n + 1];
+        state[1..1 + n].copy_from_slice(&theta);
+        let toks = gpt_batch(&cfg, 31);
+        let batch = BatchRef::Gpt { tokens: &toks };
+
+        let mut ws = Workspace::new();
+        let mut fresh = state.clone();
+        let mut reused = state.clone();
+        let mut out = Vec::new();
+        for step in 1..=4 {
+            fresh = train_step(&cfg, &fresh, &batch, 1e-3, step as f32).unwrap();
+            train_step_into(&cfg, &reused, &batch, 1e-3, step as f32, &mut ws, &mut out)
+                .unwrap();
+            std::mem::swap(&mut reused, &mut out);
+            let fb: Vec<u32> = fresh.iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = reused.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(fb, rb, "arena reuse diverged at step {step}");
+        }
+        // grad-only path too
+        let (lf, gf) = train_grad(&cfg, &theta, &batch).unwrap();
+        let mut go = Vec::new();
+        train_grad_into(&cfg, &theta, &batch, &mut ws, &mut go).unwrap();
+        assert_eq!(lf.to_bits(), go[0].to_bits());
+        let gfb: Vec<u32> = gf.iter().map(|x| x.to_bits()).collect();
+        let gob: Vec<u32> = go[1..].iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gfb, gob, "train_grad arena reuse diverged");
+    }
+}

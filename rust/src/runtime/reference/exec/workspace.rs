@@ -1,0 +1,205 @@
+//! The [`Workspace`] arena: reusable scratch storage for every hot-path
+//! kernel in the execution core.
+//!
+//! # Why
+//!
+//! The V-cycle re-executes the same train/eval/coalesce artifacts thousands
+//! of times per run, so per-step constant costs dominate wall clock. Before
+//! the arena, every forward/backward pass allocated ~`6L + 10` fresh
+//! `Vec<f32>`s (activations, attention caches, dlogits, gradients); with it,
+//! a steady-state `train_step` performs **zero** heap allocations — every
+//! scratch buffer is checked out of a per-backend pool and returned when the
+//! pass ends.
+//!
+//! # Borrow rules
+//!
+//! * [`Workspace::take`] hands out an **owned**, zero-filled `Vec<f32>` of
+//!   exactly the requested length. Ownership (not borrowing) is what keeps
+//!   the borrow checker out of kernel signatures: a checked-out buffer is an
+//!   ordinary local, and `&mut Workspace` stays free for nested checkouts.
+//! * [`Workspace::give`] returns a buffer to the pool. Callers give back
+//!   every buffer they took (including those carried inside a
+//!   `Cache`) before the step function returns; a forgotten buffer is not
+//!   unsound, it just re-allocates on the next step.
+//! * Buffers are pooled **by length**, so a step that requests the same
+//!   sizes every iteration hits the pool every time. The first step of a new
+//!   config warms the pool; [`Workspace::alloc_misses`] counts pool misses
+//!   so tests can assert the steady state allocates nothing.
+//!
+//! # Determinism
+//!
+//! `take` zero-fills before handing out, exactly like the `vec![0.0; n]`
+//! allocations it replaces — kernel results are bit-identical to the
+//! allocate-per-step implementation (asserted by the parity tests in
+//! [`super::steps`]).
+
+use std::collections::BTreeMap;
+
+use super::backbone::LayerCache;
+
+/// Reusable scratch arena for the reference execution core. One instance
+/// per backend replica; not `Sync` — the owning backend serializes access
+/// (see `ReferenceBackend`).
+#[derive(Default)]
+pub struct Workspace {
+    /// f32 buffers pooled by length (LIFO per bucket).
+    pool: BTreeMap<usize, Vec<Vec<f32>>>,
+    /// f64 buffers (loss partials) pooled by length.
+    pool64: BTreeMap<usize, Vec<Vec<f64>>>,
+    /// The shared per-row target buffer (one live user at a time).
+    targets: Vec<Option<usize>>,
+    /// Pooled (empty) per-layer cache spines.
+    layer_stash: Vec<Vec<LayerCache>>,
+    /// Pool misses — the number of times a checkout had to allocate.
+    misses: usize,
+}
+
+impl Workspace {
+    /// Fresh, empty arena (allocates nothing until first use).
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out a zero-filled f32 buffer of exactly `n` elements.
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        let mut v = match self.pool.get_mut(&n).and_then(Vec::pop) {
+            Some(v) => v,
+            None => {
+                self.misses += 1;
+                Vec::with_capacity(n)
+            }
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return an f32 buffer to the pool (no-op for empty buffers).
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.entry(v.len().max(1)).or_default().push(v);
+        }
+    }
+
+    /// Check out a zero-filled f64 buffer of exactly `n` elements.
+    pub fn take64(&mut self, n: usize) -> Vec<f64> {
+        let mut v = match self.pool64.get_mut(&n).and_then(Vec::pop) {
+            Some(v) => v,
+            None => {
+                self.misses += 1;
+                Vec::with_capacity(n)
+            }
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return an f64 buffer to the pool.
+    pub fn give64(&mut self, v: Vec<f64>) {
+        if v.capacity() > 0 {
+            self.pool64.entry(v.len().max(1)).or_default().push(v);
+        }
+    }
+
+    /// Take the shared per-row target buffer (empty; capacity persists
+    /// across steps). Return it with [`Workspace::give_targets`].
+    pub fn take_targets(&mut self) -> Vec<Option<usize>> {
+        std::mem::take(&mut self.targets)
+    }
+
+    /// Return the target buffer taken with [`Workspace::take_targets`].
+    pub fn give_targets(&mut self, mut t: Vec<Option<usize>>) {
+        t.clear();
+        self.targets = t;
+    }
+
+    /// Check out an empty per-layer cache spine with room for `cap`
+    /// layers. Return it with [`Workspace::give_layers`].
+    pub(crate) fn take_layers(&mut self, cap: usize) -> Vec<LayerCache> {
+        let mut v = match self.layer_stash.pop() {
+            Some(v) => v,
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        };
+        v.reserve(cap);
+        v
+    }
+
+    /// Return a (drained) layer spine taken with
+    /// [`Workspace::take_layers`].
+    pub(crate) fn give_layers(&mut self, mut v: Vec<LayerCache>) {
+        v.clear();
+        self.layer_stash.push(v);
+    }
+
+    /// Number of pool misses so far — the allocation probe. Stops growing
+    /// once the arena is warm (asserted by `tests/test_workspace.rs`).
+    pub fn alloc_misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Buffers currently parked in the pools (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.pool.values().map(Vec::len).sum::<usize>()
+            + self.pool64.values().map(Vec::len).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_returned_buffers() {
+        let mut ws = Workspace::new();
+        let a = ws.take(128);
+        assert_eq!(a.len(), 128);
+        assert_eq!(ws.alloc_misses(), 1);
+        ws.give(a);
+        let b = ws.take(128);
+        assert_eq!(ws.alloc_misses(), 1, "second take of same size must hit the pool");
+        assert!(b.iter().all(|&x| x == 0.0), "reused buffer not zeroed");
+        ws.give(b);
+        // a different size is a fresh miss
+        let c = ws.take(64);
+        assert_eq!(ws.alloc_misses(), 2);
+        ws.give(c);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn repeated_sequences_stop_missing_after_warmup() {
+        let mut ws = Workspace::new();
+        let sizes = [256usize, 64, 256, 1024, 8];
+        for round in 0..4 {
+            let taken: Vec<Vec<f32>> = sizes.iter().map(|&n| ws.take(n)).collect();
+            let misses = ws.alloc_misses();
+            for v in taken {
+                ws.give(v);
+            }
+            if round > 0 {
+                assert_eq!(misses, sizes.len(), "round {round} allocated");
+            }
+        }
+        let p = ws.take64(16);
+        ws.give64(p);
+        let q = ws.take64(16);
+        assert_eq!(ws.alloc_misses(), sizes.len() + 1);
+        ws.give64(q);
+    }
+
+    #[test]
+    fn targets_buffer_round_trips() {
+        let mut ws = Workspace::new();
+        let mut t = ws.take_targets();
+        t.extend([Some(1), None, Some(3)]);
+        ws.give_targets(t);
+        let t2 = ws.take_targets();
+        assert!(t2.is_empty(), "targets buffer must come back cleared");
+        assert!(t2.capacity() >= 3, "targets capacity must persist");
+        ws.give_targets(t2);
+    }
+}

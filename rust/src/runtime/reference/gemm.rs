@@ -1,5 +1,5 @@
 //! Cache-blocked, transpose-aware f32 GEMM — the single dense kernel behind
-//! every `matmul*` wrapper in [`model`](super::model).
+//! every `matmul*` wrapper in [`exec::kernels`](super::exec::kernels).
 //!
 //! Shape: `C[m,n] (+)= opA(A) · opB(B)` with `opA(A) = A[m,k]` or `A[k,m]ᵀ`
 //! and `opB(B) = B[k,n]` or `B[n,k]ᵀ`, which covers the four dense kernels
@@ -20,7 +20,30 @@
 //! — and bit-identical to a naive triple loop with a private accumulator
 //! (the test oracle asserts exact equality, not a tolerance).
 
+//! # Allocation
+//!
+//! Pack buffers are **thread-local** and grow-once: the dispatching thread
+//! reuses its B-panel buffer across calls, and every pool worker reuses its
+//! A-panel buffer across blocks. On persistent threads (the caller and the
+//! long-lived pool workers) the kernel therefore performs zero heap
+//! allocations after the first call at a given shape — part of the
+//! workspace-arena alloc-free contract (see `exec::workspace`). Sharded
+//! replica *driver* threads are re-spawned per step by
+//! `threadpool::partitioned`, so their pack buffers re-warm each step;
+//! only the single-backend hot path carries the strict zero-alloc claim.
+
+use std::cell::RefCell;
+
 use crate::util::threadpool::{parallel_for, SendPtr};
+
+thread_local! {
+    /// Per-thread packed-B storage (the dispatching thread packs B once
+    /// per call and shares it with the workers by reference).
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread packed-A storage (each worker packs its own MC-row
+    /// blocks).
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Micro-tile rows (register accumulator height).
 pub const MR: usize = 8;
@@ -58,31 +81,41 @@ pub fn gemm(
         }
         return;
     }
-    let pb = pack_b(b, tb, k, n);
     let blocks = m.div_ceil(MC);
     let cbase = SendPtr(out.as_mut_ptr());
-    let block = |blk: usize| {
-        let i0 = blk * MC;
-        let mrows = MC.min(m - i0);
-        // SAFETY: MC-row C blocks are pairwise disjoint and in bounds;
-        // `out` is exclusively borrowed for the whole call.
-        let cblk = unsafe { cbase.slice_mut(i0 * n, mrows * n) };
-        gemm_block(cblk, acc, a, ta, &pb, i0, mrows, m, k, n);
-    };
-    if m * n * k < PAR_FLOP_MIN {
-        for blk in 0..blocks {
-            block(blk);
+    PACK_B.with(|cell| {
+        let mut pb_store = cell.borrow_mut();
+        pack_b(&mut pb_store, b, tb, k, n);
+        let pb: &[f32] = &pb_store;
+        let block = |blk: usize| {
+            let i0 = blk * MC;
+            let mrows = MC.min(m - i0);
+            // SAFETY: MC-row C blocks are pairwise disjoint and in bounds;
+            // `out` is exclusively borrowed for the whole call.
+            let cblk = unsafe { cbase.slice_mut(i0 * n, mrows * n) };
+            // SAFETY(pack-A reuse): each thread packs into its own
+            // thread-local buffer; blocks on one thread run sequentially.
+            PACK_A.with(|pa| {
+                gemm_block(cblk, acc, a, ta, pb, i0, mrows, m, k, n, &mut pa.borrow_mut())
+            });
+        };
+        if m * n * k < PAR_FLOP_MIN {
+            for blk in 0..blocks {
+                block(blk);
+            }
+        } else {
+            parallel_for(blocks, block);
         }
-    } else {
-        parallel_for(blocks, block);
-    }
+    });
 }
 
 /// Pack `opB(b)` into zero-padded `NR`-column panels, k-major:
 /// `pb[p · k·NR + kk · NR + jj] = B_logical[kk, p·NR + jj]`.
-fn pack_b(b: &[f32], tb: bool, k: usize, n: usize) -> Vec<f32> {
+/// Reuses (and re-zeroes) the caller's thread-local storage.
+fn pack_b(pb: &mut Vec<f32>, b: &[f32], tb: bool, k: usize, n: usize) {
     let np = n.div_ceil(NR);
-    let mut pb = vec![0.0f32; np * k * NR];
+    pb.clear();
+    pb.resize(np * k * NR, 0.0);
     for p in 0..np {
         let j0 = p * NR;
         let jn = NR.min(n - j0);
@@ -101,7 +134,6 @@ fn pack_b(b: &[f32], tb: bool, k: usize, n: usize) -> Vec<f32> {
             }
         }
     }
-    pb
 }
 
 /// One MC-row block: pack A panels, run the micro-kernel over every B panel.
@@ -116,9 +148,11 @@ fn gemm_block(
     m: usize,
     k: usize,
     n: usize,
+    pa: &mut Vec<f32>,
 ) {
     let np = n.div_ceil(NR);
-    let mut pa = vec![0.0f32; MR * k];
+    pa.clear();
+    pa.resize(MR * k, 0.0);
     let row_panels = mrows.div_ceil(MR);
     for r in 0..row_panels {
         let ri = r * MR;

@@ -1,33 +1,39 @@
 //! [`ReferenceBackend`]: a pure-Rust, f32 host implementation of the whole
 //! artifact contract — every artifact name the AOT pipeline lowers to HLO
-//! (`train_step__*`, `train_grad__*`, `eval_loss__*`, `coalesce__A__B`, `refine__A__B`,
-//! `refine_fit__A__B`, `interp__*`, `distill_step__A__B`, `ft_step__*`,
-//! `ft_acc__*`, `lora_step__*`, `lora_eval__*`, `attn_maps__*`,
-//! `eval_acc__*`) executes directly on the host, no XLA device or artifact
-//! files required.
+//! (`train_step__*`, `train_grad__*`, `eval_loss__*`, `coalesce__A__B`,
+//! `refine__A__B`, `refine_fit__A__B`, `interp__*`, `distill_step__A__B`,
+//! `distill_grad__A__B`, `ft_step__*`, `ft_grad__*`, `ft_acc__*`,
+//! `lora_step__*`, `lora_eval__*`, `attn_maps__*`, `eval_acc__*`) executes
+//! directly on the host, no XLA device or artifact files required.
 //!
 //! Semantics match Algorithms 1–4 of the paper: width/depth coalescing as
 //! averaging maps, de-coalescing + α-interpolation as their right-inverse
 //! blend (see [`ops`]), and a real pre-LN transformer with AdamW for the
-//! training artifacts (see [`model`]). Execution is deterministic — the same
+//! training artifacts (see [`exec`]). Execution is deterministic — the same
 //! state and batch always produce bit-identical outputs — which the
 //! experiment harness relies on for seed-reproducible comparisons.
+//!
+//! Each backend instance owns a [`Workspace`](exec::Workspace) arena; the
+//! step/eval hot paths borrow all scratch from it, so steady-state artifact
+//! execution allocates only its output buffer.
 
+pub mod exec;
 pub mod gemm;
-pub mod model;
 pub mod ops;
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::backend::{Arg, Backend, Buffer};
 use super::manifest::{ArtifactSpec, Family, Manifest, ModelCfg};
 use crate::util::threadpool;
-use model::BatchRef;
+use exec::{BatchRef, Workspace};
 
-/// The pure-Rust reference backend. Holds only the config registry; all
-/// state lives in the [`Buffer`]s the coordinator passes around.
+/// The pure-Rust reference backend. Holds the config registry and a
+/// reusable [`Workspace`] arena; all training state lives in the
+/// [`Buffer`]s the coordinator passes around.
 ///
 /// Compute kernels run on the shared fork-join pool
 /// ([`crate::util::threadpool`]) over a cache-blocked GEMM ([`gemm`]);
@@ -35,6 +41,11 @@ use model::BatchRef;
 /// fan-out. Results are bit-identical for every thread count.
 pub struct ReferenceBackend {
     configs: BTreeMap<String, ModelCfg>,
+    /// Per-backend scratch arena. A `Mutex` (never contended in practice —
+    /// callers issue one `execute` at a time per backend; sharded replicas
+    /// each own their own instance) keeps the backend `Sync` for the
+    /// data-parallel driver threads.
+    ws: Mutex<Workspace>,
 }
 
 /// A borrowed view of one marshaled argument.
@@ -63,7 +74,7 @@ impl<'a> View<'a> {
 }
 
 /// Artifact kinds the reference backend interprets.
-const KINDS: [&str; 13] = [
+const KINDS: [&str; 15] = [
     "train_step",
     "train_grad",
     "eval_loss",
@@ -73,7 +84,9 @@ const KINDS: [&str; 13] = [
     "refine",
     "interp",
     "distill_step",
+    "distill_grad",
     "ft_step",
+    "ft_grad",
     "ft_acc",
     "lora_step",
     "lora_eval",
@@ -96,7 +109,10 @@ impl ReferenceBackend {
     /// only through timing.
     pub fn with_threads(manifest: &Manifest, threads: usize) -> ReferenceBackend {
         threadpool::set_threads(threads);
-        ReferenceBackend { configs: manifest.configs.clone() }
+        ReferenceBackend {
+            configs: manifest.configs.clone(),
+            ws: Mutex::new(Workspace::new()),
+        }
     }
 
     fn cfg(&self, name: &str) -> Result<&ModelCfg> {
@@ -205,6 +221,11 @@ impl Backend for ReferenceBackend {
             });
         }
 
+        // scratch arena: one live execute per backend instance (recovering
+        // the arena from a poisoned lock is safe — it holds only scratch)
+        let mut guard = self.ws.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let ws = &mut *guard;
+
         let scalar_out = |v: f32| Buffer::host_f32(vec![v], vec![]);
         match spec.kind.as_str() {
             "train_step" => {
@@ -213,7 +234,8 @@ impl Backend for ReferenceBackend {
                 let (batch, i) = Self::batch_at(cfg, &views, 1)?;
                 let lr = views[i].scalar()?;
                 let step = views[i + 1].scalar()?;
-                let out = model::train_step(cfg, state, &batch, lr, step)?;
+                let mut out = Vec::new();
+                exec::train_step_into(cfg, state, &batch, lr, step, ws, &mut out)?;
                 Ok(Buffer::host_f32(out, vec![cfg.state_len()]))
             }
             "train_grad" => {
@@ -223,41 +245,43 @@ impl Backend for ReferenceBackend {
                 // contiguous slice of the configured batch.
                 let cfg = self.cfg_of(spec)?;
                 let theta = views[0].f32s()?;
-                if theta.len() != cfg.n_params {
-                    bail!(
-                        "train_grad theta has {} elements, config {} needs {}",
-                        theta.len(),
-                        cfg.name,
-                        cfg.n_params
-                    );
-                }
                 let (batch, _) = Self::batch_at(cfg, &views, 1)?;
-                let (loss, grad) = model::train_grad(cfg, theta, &batch)?;
-                let mut out = Vec::with_capacity(1 + cfg.n_params);
-                out.push(loss);
-                out.extend_from_slice(&grad);
-                Ok(Buffer::host_f32(out, vec![1 + cfg.n_params]))
+                let mut out = Vec::new();
+                exec::train_grad_into(cfg, theta, &batch, ws, &mut out)?;
+                Ok(Buffer::host_f32(out, vec![cfg.n_params + 1]))
             }
             "eval_loss" => {
+                // batch count from the buffers: shards evaluate too
                 let cfg = self.cfg_of(spec)?;
                 let state = views[0].f32s()?;
                 let (batch, _) = Self::batch_at(cfg, &views, 1)?;
+                if state.len() < 1 + cfg.n_params {
+                    bail!("eval_loss state has {} elements", state.len());
+                }
                 let theta = &state[1..1 + cfg.n_params];
-                Ok(scalar_out(model::eval_loss(cfg, theta, &batch)?))
+                Ok(scalar_out(exec::eval_loss_ws(cfg, theta, &batch, ws)?))
             }
             "eval_acc" => {
                 let cfg = self.cfg_of(spec)?;
                 let state = views[0].f32s()?;
+                if state.len() < 1 + cfg.n_params {
+                    bail!("eval_acc state has {} elements", state.len());
+                }
                 let theta = &state[1..1 + cfg.n_params];
                 let acc =
-                    model::eval_acc(cfg, theta, views[1].f32s()?, views[2].i32s()?)?;
+                    exec::eval_acc_ws(cfg, theta, views[1].f32s()?, views[2].i32s()?, ws)?;
                 Ok(scalar_out(acc))
             }
             "attn_maps" => {
+                // accepts any leading sub-batch containing item 0 (the
+                // sharded backend probes with the first shard only)
                 let cfg = self.cfg_of(spec)?;
                 let state = views[0].f32s()?;
+                if state.len() < 1 + cfg.n_params {
+                    bail!("attn_maps state has {} elements", state.len());
+                }
                 let theta = &state[1..1 + cfg.n_params];
-                let maps = model::attn_maps(cfg, theta, views[1].i32s()?)?;
+                let maps = exec::attn_maps_ws(cfg, theta, views[1].i32s()?, ws)?;
                 let dims = vec![cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.seq_len];
                 Ok(Buffer::host_f32(maps, dims))
             }
@@ -302,16 +326,34 @@ impl Backend for ReferenceBackend {
                 let kd_w = views[i].scalar()?;
                 let lr = views[i + 1].scalar()?;
                 let step = views[i + 2].scalar()?;
-                let out = model::distill_step(student, teacher, state, theta_t, &batch,
-                                              kd_w, lr, step)?;
+                let mut out = Vec::new();
+                exec::distill_step_into(student, teacher, state, theta_t, &batch, kd_w, lr,
+                                        step, ws, &mut out)?;
                 Ok(Buffer::host_f32(out, vec![student.state_len()]))
+            }
+            "distill_grad" => {
+                // grad-only distillation shard: globally-normalized partial
+                // [loss, grad] (see exec::distill for the normalizers)
+                let student = self.cfg_of(spec)?;
+                let teacher = self.small_cfg_of(spec)?;
+                let theta_s = views[0].f32s()?;
+                let theta_t = views[1].f32s()?;
+                let (batch, i) = Self::batch_at(student, &views, 2)?;
+                let kd_w = views[i].scalar()?;
+                let ce_count = views[i + 1].scalar()?;
+                let kl_rows = views[i + 2].scalar()?;
+                let mut out = Vec::new();
+                exec::distill_grad_into(student, teacher, theta_s, theta_t, &batch, kd_w,
+                                        ce_count, kl_rows, ws, &mut out)?;
+                Ok(Buffer::host_f32(out, vec![student.n_params + 1]))
             }
             "ft_step" => {
                 let cfg = self.cfg_of(spec)?;
                 let n_ft = spec.meta.get("n_ft").as_usize()
                     .context("ft artifact missing n_ft")?;
                 let n_cls = spec.meta.get("n_classes").as_usize().unwrap_or(4);
-                let out = model::ft_step(
+                let mut out = Vec::new();
+                exec::ft_step_into(
                     cfg,
                     n_ft,
                     n_cls,
@@ -320,16 +362,36 @@ impl Backend for ReferenceBackend {
                     views[2].i32s()?,
                     views[3].scalar()?,
                     views[4].scalar()?,
+                    ws,
+                    &mut out,
                 )?;
                 Ok(Buffer::host_f32(out, vec![3 * n_ft + 1]))
+            }
+            "ft_grad" => {
+                let cfg = self.cfg_of(spec)?;
+                let n_ft = spec.meta.get("n_ft").as_usize()
+                    .context("ft artifact missing n_ft")?;
+                let n_cls = spec.meta.get("n_classes").as_usize().unwrap_or(4);
+                let mut out = Vec::new();
+                exec::ft_grad_into(
+                    cfg,
+                    n_ft,
+                    n_cls,
+                    views[0].f32s()?,
+                    views[1].i32s()?,
+                    views[2].i32s()?,
+                    ws,
+                    &mut out,
+                )?;
+                Ok(Buffer::host_f32(out, vec![n_ft + 1]))
             }
             "ft_acc" => {
                 let cfg = self.cfg_of(spec)?;
                 let n_ft = spec.meta.get("n_ft").as_usize()
                     .context("ft artifact missing n_ft")?;
                 let n_cls = spec.meta.get("n_classes").as_usize().unwrap_or(4);
-                let acc = model::ft_acc(cfg, n_ft, n_cls, views[0].f32s()?,
-                                        views[1].i32s()?, views[2].i32s()?)?;
+                let acc = exec::ft_acc_ws(cfg, n_ft, n_cls, views[0].f32s()?,
+                                          views[1].i32s()?, views[2].i32s()?, ws)?;
                 Ok(scalar_out(acc))
             }
             "lora_step" => {
@@ -340,7 +402,9 @@ impl Backend for ReferenceBackend {
                 let (batch, i) = Self::batch_at(cfg, &views, 2)?;
                 let lr = views[i].scalar()?;
                 let step = views[i + 1].scalar()?;
-                let out = model::lora_step(cfg, rank, state, theta_base, &batch, lr, step)?;
+                let mut out = Vec::new();
+                exec::lora_step_into(cfg, rank, state, theta_base, &batch, lr, step, ws,
+                                     &mut out)?;
                 let n = out.len();
                 Ok(Buffer::host_f32(out, vec![n]))
             }
@@ -350,7 +414,7 @@ impl Backend for ReferenceBackend {
                 let state = views[0].f32s()?;
                 let theta_base = views[1].f32s()?;
                 let (batch, _) = Self::batch_at(cfg, &views, 2)?;
-                Ok(scalar_out(model::lora_eval(cfg, rank, state, theta_base, &batch)?))
+                Ok(scalar_out(exec::lora_eval_ws(cfg, rank, state, theta_base, &batch, ws)?))
             }
             other => bail!("artifact '{}': unknown kind '{other}'", spec.name),
         }

@@ -335,7 +335,7 @@ fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<Ar
         None,
         eval_inputs.clone(),
         vec![],
-        Json::Null,
+        shard_meta(),
     ));
     if with_pallas {
         arts.push(spec(
@@ -363,7 +363,9 @@ fn model_artifacts(cfg: &ModelCfg, with_pallas: bool, with_attn: bool) -> Vec<Ar
                 },
             ],
             vec![cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.seq_len],
-            Json::Null,
+            // the probe reads batch item 0 only; a data-parallel backend
+            // may execute it over a leading sub-batch (bit-identical)
+            shard_meta(),
         ));
     }
     if cfg.family == Family::Vit {
@@ -468,11 +470,21 @@ fn ft_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
         dtype: "int32".into(),
         shape: vec![cfg.batch],
     };
-    let meta = || {
-        obj(vec![
+    let meta = |shard: bool| {
+        let mut fields = vec![
             ("n_ft", num(nf as f64)),
             ("n_classes", num(FT_CLASSES as f64)),
-        ])
+        ];
+        if shard {
+            fields.push(("shard", s("batch")));
+        }
+        obj(fields)
+    };
+    // grad-only shard step: theta‖head in, [loss, grad] out
+    let theta_ft = InputSpec {
+        name: "theta".into(),
+        dtype: "float32".into(),
+        shape: vec![nf],
     };
     vec![
         spec(
@@ -483,7 +495,16 @@ fn ft_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
             vec![st.clone(), toks.clone(), labels.clone(), scalar_input("lr"),
                  scalar_input("step")],
             vec![3 * nf + 1],
-            meta(),
+            meta(true),
+        ),
+        spec(
+            format!("ft_grad__{}", cfg.name),
+            "ft_grad",
+            &cfg.name,
+            None,
+            vec![theta_ft, toks.clone(), labels.clone()],
+            vec![nf + 1],
+            meta(true),
         ),
         spec(
             format!("ft_acc__{}", cfg.name),
@@ -492,33 +513,56 @@ fn ft_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
             None,
             vec![st, toks, labels],
             vec![],
-            meta(),
+            meta(false),
         ),
     ]
 }
 
-fn distill_artifact(student: &ModelCfg, teacher: &ModelCfg) -> ArtifactSpec {
-    let mut inputs = vec![
-        state_input(student),
-        InputSpec {
-            name: "theta_teacher".into(),
-            dtype: "float32".into(),
-            shape: vec![teacher.n_params],
-        },
-    ];
+fn distill_artifacts(student: &ModelCfg, teacher: &ModelCfg) -> Vec<ArtifactSpec> {
+    let theta_teacher = InputSpec {
+        name: "theta_teacher".into(),
+        dtype: "float32".into(),
+        shape: vec![teacher.n_params],
+    };
+    let mut inputs = vec![state_input(student), theta_teacher.clone()];
     inputs.extend(batch_inputs(student));
     inputs.push(scalar_input("kd_w"));
     inputs.push(scalar_input("lr"));
     inputs.push(scalar_input("step"));
-    spec(
-        format!("distill_step__{}__{}", student.name, teacher.name),
-        "distill_step",
-        &student.name,
-        Some(&teacher.name),
-        inputs,
-        vec![student.state_len()],
-        Json::Null,
-    )
+    // grad-only shard step: globally-normalized partial [loss, grad] —
+    // ce_count/kl_rows are the full-batch normalizers (see exec::distill)
+    let mut grad_inputs = vec![
+        InputSpec {
+            name: "theta".into(),
+            dtype: "float32".into(),
+            shape: vec![student.n_params],
+        },
+        theta_teacher,
+    ];
+    grad_inputs.extend(batch_inputs(student));
+    grad_inputs.push(scalar_input("kd_w"));
+    grad_inputs.push(scalar_input("ce_count"));
+    grad_inputs.push(scalar_input("kl_rows"));
+    vec![
+        spec(
+            format!("distill_step__{}__{}", student.name, teacher.name),
+            "distill_step",
+            &student.name,
+            Some(&teacher.name),
+            inputs,
+            vec![student.state_len()],
+            shard_meta(),
+        ),
+        spec(
+            format!("distill_grad__{}__{}", student.name, teacher.name),
+            "distill_grad",
+            &student.name,
+            Some(&teacher.name),
+            grad_inputs,
+            vec![student.n_params + 1],
+            shard_meta(),
+        ),
+    ]
 }
 
 fn lora_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
@@ -604,7 +648,7 @@ pub fn builtin_manifest() -> Manifest {
     arts.extend(model_artifacts(&nw, false, false));
     arts.extend(op_artifacts(&n1, &ns, false, true, false));
     arts.extend(op_artifacts(&n1, &nw, true, false, false));
-    arts.push(distill_artifact(&n1, &n2));
+    arts.extend(distill_artifacts(&n1, &n2));
     // fast fine-tune probes for the test suite (bert_nano ft artifacts)
     let bn = configs["bert_nano"].clone();
     arts.extend(ft_artifacts(&bn));
@@ -631,7 +675,7 @@ pub fn builtin_manifest() -> Manifest {
     arts.extend(model_artifacts(&bw, false, false));
     arts.extend(op_artifacts(&b1, &bs, false, true, false));
     arts.extend(op_artifacts(&b1, &bw, true, false, false));
-    arts.push(distill_artifact(&b1, &b2));
+    arts.extend(distill_artifacts(&b1, &b2));
     arts.extend(ft_artifacts(&b1));
     arts.extend(lora_artifacts(&b1));
 
@@ -648,7 +692,7 @@ pub fn builtin_manifest() -> Manifest {
     arts.extend(model_artifacts(&gw, false, false));
     arts.extend(op_artifacts(&g1, &gs, false, true, false));
     arts.extend(op_artifacts(&g1, &gw, true, false, false));
-    arts.push(distill_artifact(&g1, &g2));
+    arts.extend(distill_artifacts(&g1, &g2));
     // Fig. 4 registers a mid-size alias config (no extra artifacts)
     reg(&g1g.coalesced(2).with_size(g2.n_layer, g2.n_head, "_m"), &mut configs);
 
@@ -771,8 +815,41 @@ mod tests {
         assert_eq!(bs.batch_input_indices(bert.batch), vec![1, 2]);
         // coalesced levels get a grad artifact too (sharded V-cycle)
         assert!(m.artifact("train_grad__bert_nano_lv2").is_ok());
-        // eval artifacts are not shardable
-        assert!(!m.artifact("eval_loss__gpt_nano").unwrap().shard_batch());
+        // eval and the attention probe are shardable too
+        assert!(m.artifact("eval_loss__gpt_nano").unwrap().shard_batch());
+        assert!(m.artifact("attn_maps__bert_base_sim").unwrap().shard_batch());
+    }
+
+    #[test]
+    fn ft_and_distill_carry_grad_artifacts() {
+        let m = builtin_manifest();
+        // ft: grad-only shard step over the grafted theta‖head vector
+        let bert = m.cfg("bert_nano").unwrap();
+        let nf = bert.n_params + ft_head_size(bert, FT_CLASSES);
+        let fs = m.artifact("ft_step__bert_nano").unwrap();
+        assert!(fs.shard_batch());
+        assert_eq!(fs.batch_input_indices(bert.batch), vec![1, 2]);
+        let fg = m.artifact("ft_grad__bert_nano").unwrap();
+        assert_eq!(fg.kind, "ft_grad");
+        assert!(fg.shard_batch());
+        assert_eq!(fg.inputs[0].name, "theta");
+        assert_eq!(fg.inputs[0].shape, vec![nf]);
+        assert_eq!(fg.output_shape, vec![nf + 1]);
+        assert!(!m.artifact("ft_acc__bert_nano").unwrap().shard_batch());
+        // distill: grad-only shard step with explicit global normalizers
+        let gpt = m.cfg("gpt_nano").unwrap();
+        let ds = m.artifact("distill_step__gpt_nano__gpt_nano_lv2").unwrap();
+        assert!(ds.shard_batch());
+        let dg = m.artifact("distill_grad__gpt_nano__gpt_nano_lv2").unwrap();
+        assert_eq!(dg.kind, "distill_grad");
+        assert!(dg.shard_batch());
+        assert_eq!(dg.inputs[0].name, "theta");
+        assert_eq!(dg.inputs[1].name, "theta_teacher");
+        // only the token input is sliced — theta tensors stay whole
+        assert_eq!(dg.batch_input_indices(gpt.batch), vec![2]);
+        let names: Vec<&str> = dg.inputs.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(&names[3..], ["kd_w", "ce_count", "kl_rows"]);
+        assert_eq!(dg.output_shape, vec![gpt.n_params + 1]);
     }
 
     #[test]

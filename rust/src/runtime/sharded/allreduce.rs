@@ -1,21 +1,32 @@
 //! Deterministic combination primitives of the [`ShardedBackend`]: the
-//! weighted tree all-reduce over per-replica gradients and the host-side
-//! AdamW application that turns the reduced gradient into the next state.
+//! weighted tree all-reduce over per-replica gradients — in both a
+//! post-barrier form ([`tree_weighted_sum`]) and a compute-overlapped form
+//! ([`overlapped_tree_reduce`]) — plus the host-side AdamW application that
+//! turns the reduced gradient into the next state.
 //!
 //! # Determinism contract
 //!
-//! Both kernels are bit-identical for every kernel-thread count:
-//! [`tree_weighted_sum`] combines replicas in a fixed binary-tree order over
-//! the replica index using fixed-chunk elementwise kernels, and
-//! [`apply_adamw`] reuses the chunk-parallel AdamW kernel of the fused
-//! `train_step` path. Results therefore depend only on the replica order and
-//! the shard weights — never on thread placement.
+//! All kernels are bit-identical for every kernel-thread count **and**
+//! every completion order: the reduction combines replicas in a fixed
+//! binary-tree order over the replica index — pairs `(0,1) (2,3) …`, then
+//! `(0,2) …` — using fixed-chunk elementwise kernels. In the overlapped
+//! form, whichever replica driver *arrives second* at a tree node performs
+//! that node's addition, so reduction work starts while slower shards are
+//! still inside their backward pass; the operands of every addition are
+//! fully determined by the tree position, never by timing, so the result is
+//! bit-identical to running [`tree_weighted_sum`] after a full barrier
+//! (asserted by the parity tests below). [`apply_adamw`] reuses the
+//! chunk-parallel AdamW kernel of the fused `train_step` path.
 //!
 //! [`ShardedBackend`]: super::ShardedBackend
 
-use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::runtime::reference::{model, ops};
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::reference::{exec, ops};
+use crate::util::threadpool;
 
 /// Combine per-replica vectors into `Σ_r weights[r] · parts[r]`.
 ///
@@ -57,6 +68,123 @@ pub fn tree_weighted_sum(mut parts: Vec<Vec<f32>>, weights: &[f32]) -> Result<Ve
     Ok(std::mem::take(&mut parts[0]))
 }
 
+/// Tournament-tree node state for [`overlapped_tree_reduce`].
+struct Node {
+    /// Arrival counter: the second arriver performs the node's addition.
+    arrivals: AtomicUsize,
+}
+
+/// Compute-overlapped weighted tree all-reduce: runs `produce(r)` for every
+/// replica `r` concurrently (on [`threadpool::partitioned`] driver threads
+/// with disjoint kernel-worker slices) and merges results up the fixed
+/// `(0,1) (2,3) … → (0,2) …` tree **as replica pairs complete** — the
+/// all-reduce overlaps the slowest shard's backward instead of waiting for
+/// a barrier.
+///
+/// Bit-identical to `tree_weighted_sum(all_parts, weights)`: the scale and
+/// the operands of every pairwise addition depend only on the replica
+/// index, never on completion order or thread placement. Errors from any
+/// `produce` call propagate (lowest replica index wins when several fail).
+pub fn overlapped_tree_reduce<F>(r: usize, weights: &[f32], produce: F) -> Result<Vec<f32>>
+where
+    F: Fn(usize) -> Result<Vec<f32>> + Sync,
+{
+    if r == 0 || weights.len() != r {
+        bail!("overlapped_tree_reduce: {r} replicas vs {} weights", weights.len());
+    }
+    // slots[i] holds the (partial) reduction rooted at replica i
+    let slots: Vec<Mutex<Option<Result<Vec<f32>>>>> = (0..r).map(|_| Mutex::new(None)).collect();
+    // one arrival counter per tree node, indexed [level][left/(2*stride)]
+    let levels = {
+        let mut l = 0usize;
+        let mut s = 1usize;
+        while s < r {
+            l += 1;
+            s *= 2;
+        }
+        l
+    };
+    let nodes: Vec<Vec<Node>> = (0..levels)
+        .map(|lv| {
+            let span = 2usize << lv; // 2 * stride at this level
+            (0..r.div_ceil(span)).map(|_| Node { arrivals: AtomicUsize::new(0) }).collect()
+        })
+        .collect();
+
+    // Merge slot `left + stride` into slot `left` (errors propagate, the
+    // lower-index error wins). Values depend only on the tree position.
+    let merge = |left: usize, stride: usize| {
+        let right = slots[left + stride]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .take()
+            .unwrap_or_else(|| Err(anyhow!("overlapped reduce: missing right operand")));
+        let mut slot = slots[left].lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let lhs = slot
+            .take()
+            .unwrap_or_else(|| Err(anyhow!("overlapped reduce: missing left operand")));
+        *slot = Some(match (lhs, right) {
+            (Ok(mut l), Ok(rv)) => {
+                if l.len() != rv.len() {
+                    Err(anyhow!(
+                        "overlapped reduce: part length {} != {}",
+                        rv.len(),
+                        l.len()
+                    ))
+                } else {
+                    ops::add_in_place(&mut l, &rv);
+                    Ok(l)
+                }
+            }
+            (Err(e), _) => Err(e),
+            (_, Err(e)) => Err(e),
+        });
+    };
+
+    threadpool::partitioned(r, |i| {
+        let part = produce(i).map(|mut v| {
+            if weights[i] != 1.0 {
+                ops::scale_in_place(&mut v, weights[i]);
+            }
+            v
+        });
+        *slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(part);
+        // cascade up the tournament tree: at each node the second arriver
+        // merges and continues; the first arriver's driver retires
+        let mut idx = i;
+        let mut stride = 1usize;
+        let mut level = 0usize;
+        while stride < r {
+            let left = if idx % (2 * stride) == 0 { idx } else { idx - stride };
+            if left + stride >= r {
+                // unpaired node at this level: carries up without work
+                stride *= 2;
+                level += 1;
+                continue;
+            }
+            // AcqRel: the second arriver must observe the partner's slot
+            let order = nodes[level][left / (2 * stride)]
+                .arrivals
+                .fetch_add(1, Ordering::AcqRel);
+            if order == 0 {
+                return; // partner still running; it will perform the merge
+            }
+            merge(left, stride);
+            idx = left;
+            stride *= 2;
+            level += 1;
+        }
+    });
+
+    slots
+        .into_iter()
+        .next()
+        .expect("r >= 1")
+        .into_inner()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .ok_or_else(|| anyhow!("overlapped reduce: no result in root slot"))?
+}
+
 /// Apply one AdamW update to a full `[loss, theta, m, v]` state vector on
 /// the host, returning the next state with `loss` in slot 0. This is the
 /// same chunk-parallel kernel the fused `train_step` artifact runs, so a
@@ -73,7 +201,7 @@ pub fn apply_adamw(state: &[f32], grad: &[f32], loss: f32, lr: f32, step: f32) -
     let body = &mut out[1..];
     let (theta, rest) = body.split_at_mut(n);
     let (m, v) = rest.split_at_mut(n);
-    model::adamw(theta, grad, m, v, lr, step);
+    exec::adamw(theta, grad, m, v, lr, step);
     Ok(out)
 }
 
@@ -116,6 +244,46 @@ mod tests {
         let got = tree_weighted_sum(vec![part.clone()], &[1.0]).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&got), bits(&part));
+    }
+
+    #[test]
+    fn overlapped_reduce_is_bit_identical_to_post_barrier_tree() {
+        // every replica count up to 6 (paired, unpaired, multi-level carry)
+        // and length crossing ELEM_CHUNK boundaries
+        let n = 9_000usize;
+        for r in 1..=6usize {
+            let parts: Vec<Vec<f32>> = (0..r)
+                .map(|i| (0..n).map(|j| ((j * 7 + i * 131) % 1013) as f32 * 0.003 - 1.0).collect())
+                .collect();
+            let weights: Vec<f32> = (0..r).map(|i| 1.0 / (i + 1) as f32).collect();
+            let want = tree_weighted_sum(parts.clone(), &weights).unwrap();
+            // stagger completion to exercise out-of-order arrivals
+            let got = overlapped_tree_reduce(r, &weights, |i| {
+                std::thread::sleep(std::time::Duration::from_millis(((r - i) * 3) as u64));
+                Ok(parts[i].clone())
+            })
+            .unwrap();
+            let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(wb, gb, "R={r}: overlapped reduce diverged from barrier tree");
+        }
+    }
+
+    #[test]
+    fn overlapped_reduce_propagates_errors() {
+        let weights = [0.5f32, 0.25, 0.25];
+        let err = overlapped_tree_reduce(3, &weights, |i| {
+            if i == 1 {
+                Err(anyhow!("replica {i} exploded"))
+            } else {
+                Ok(vec![1.0f32; 8])
+            }
+        });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("exploded"), "{msg}");
+        // mismatched lengths are an error, not a crash
+        let err2 = overlapped_tree_reduce(2, &[0.5, 0.5], |i| Ok(vec![0.0f32; 4 + i]));
+        assert!(err2.is_err());
     }
 
     #[test]

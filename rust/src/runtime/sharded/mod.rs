@@ -1,33 +1,51 @@
-//! [`ShardedBackend`]: deterministic data-parallel training across `R`
+//! [`ShardedBackend`]: deterministic data-parallel execution across `R`
 //! in-process replicas of the [`ReferenceBackend`].
 //!
 //! # Execution model
 //!
-//! A sharded `train_step__*` call is restructured into
-//! *grad → all-reduce → optimizer*:
+//! Every batch-carrying artifact (manifest meta `shard = "batch"`) is
+//! restructured for data parallelism; everything else transparently
+//! delegates to replica 0.
 //!
-//! 1. the batch dimension of the artifact's batch inputs is split into `R`
-//!    contiguous shards (near-even `⌊r·B/R⌋` boundaries, so batches that do
-//!    not divide evenly still shard);
-//! 2. every replica runs the grad-only `train_grad__*` artifact on its
-//!    shard, concurrently on the fork-join pool via
-//!    [`threadpool::partitioned`] — each replica driver owns a disjoint
-//!    slice of `PALLAS_REF_THREADS / R` kernel workers, so replica fan-out
-//!    composes with the blocked-GEMM fan-out instead of serializing it;
-//! 3. shard gradients are combined by a deterministic weighted tree
-//!    all-reduce (fixed replica order, fixed-chunk reductions; weights are
-//!    each shard's share of the loss-target count, which makes the reduced
-//!    gradient the exact full-batch mean gradient up to f32 rounding);
+//! **Optimizer steps** (`train_step__*`, `ft_step__*`, `distill_step__*`)
+//! become *grad → all-reduce → optimizer*:
+//!
+//! 1. the batch inputs are split into `R` contiguous shards (near-even
+//!    `⌊r·B/R⌋` boundaries, so batches that do not divide evenly still
+//!    shard);
+//! 2. every replica runs the matching grad-only artifact (`train_grad__*`,
+//!    `ft_grad__*`, `distill_grad__*`) on its shard, concurrently on the
+//!    fork-join pool via [`threadpool::partitioned`] — each replica driver
+//!    owns a disjoint slice of `PALLAS_REF_THREADS / R` kernel workers, so
+//!    replica fan-out composes with the blocked-GEMM fan-out instead of
+//!    serializing it;
+//! 3. shard `[loss, grad]` vectors combine by the **compute-overlapped**
+//!    deterministic tree all-reduce
+//!    ([`allreduce::overlapped_tree_reduce`]): fixed replica order, fixed
+//!    pairwise tree, fixed-chunk reductions — and tree nodes merge *as
+//!    replica pairs complete*, so the reduce overlaps the slowest shard's
+//!    backward instead of waiting on a barrier. Train/ft weights are each
+//!    shard's share of the loss-target count; the distill path instead
+//!    passes the full-batch normalizers into every shard and unit-weights
+//!    the sum (its CE and KL terms normalize differently — see
+//!    `exec::distill`);
 //! 4. one host-side AdamW application ([`allreduce::apply_adamw`]) turns
 //!    `[loss, theta, m, v]` plus the reduced gradient into the next state.
+//!
+//! **Forward-only evaluation** (`eval_loss__*`) runs the same artifact on
+//! every replica's shard concurrently and combines the per-shard mean
+//! losses with the same weighted fixed-order tree.
+//!
+//! **The attention probe** (`attn_maps__*`) reads only batch item 0, and
+//! per-row kernel results are independent of the other rows — so the
+//! sharded backend executes it on replica 0 over just the first shard,
+//! bit-identical to the full-batch probe at a fraction of the compute.
 //!
 //! Reducing gradients *before* the optimizer keeps AdamW semantics exact
 //! rather than approximate: the sharded step is tolerance-equal to the
 //! single-replica fused step (identical up to f32 summation order), and for
-//! a fixed replica count it is **bit-identical** for every thread count and
-//! thread placement. Artifacts without a batch dimension (coalesce /
-//! refine / interp, eval, attn_maps, …) are transparently delegated to
-//! replica 0.
+//! a fixed replica count it is **bit-identical** for every thread count,
+//! thread placement, and shard completion order.
 //!
 //! The replica count comes from `PALLAS_REPLICAS` (see [`env_replicas`]) or
 //! the `--replicas` CLI flag; [`Backend::set_replica_cap`] lets the V-cycle
@@ -88,12 +106,22 @@ enum ShardInput<'a> {
     I32 { data: &'a [i32], row: usize },
 }
 
-/// The parsed arguments of a shardable `train_step__*` call.
-struct TrainArgs<'a> {
-    state: &'a [f32],
+/// A shardable call's arguments, classified against its manifest signature.
+struct ParsedCall<'a> {
+    /// The `state` input, when the signature has one.
+    state: Option<&'a [f32]>,
+    /// Scalar inputs by signature name (`lr`, `step`, `kd_w`, …).
+    scalars: Vec<(&'a str, f32)>,
+    /// Batch-carrying inputs in signature order.
     batch: Vec<ShardInput<'a>>,
-    lr: f32,
-    step: f32,
+    /// Non-batch f32 tensors in signature order (`theta_teacher`, …).
+    passthrough: Vec<&'a [f32]>,
+}
+
+impl ParsedCall<'_> {
+    fn scalar(&self, name: &str) -> Option<f32> {
+        self.scalars.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
 }
 
 /// Move a host f32 buffer's storage out without copying (the reference
@@ -136,68 +164,82 @@ fn buf_i32<'a>(b: &'a Buffer) -> Option<&'a [i32]> {
     }
 }
 
-/// Marshal a train-step argument list against its manifest signature.
-/// Returns `None` when any argument has an unexpected form (device buffer,
-/// unknown input name, …) — the caller then falls back to replica 0.
-fn parse_train_args<'a>(
-    spec: &ArtifactSpec,
+/// Classify an argument list against its manifest signature. Returns
+/// `None` when any argument has an unexpected form (device buffer, i32
+/// passthrough, scalar where a tensor is expected, …) — the caller then
+/// falls back to replica 0.
+fn parse_call<'a>(
+    spec: &'a ArtifactSpec,
     cfg: &ModelCfg,
     args: &'a [Arg<'a>],
-) -> Option<TrainArgs<'a>> {
+) -> Option<ParsedCall<'a>> {
     if args.len() != spec.inputs.len() {
         return None;
     }
     let batch_idx = spec.batch_input_indices(cfg.batch);
-    let mut state: Option<&'a [f32]> = None;
-    let mut lr: Option<f32> = None;
-    let mut step: Option<f32> = None;
-    let mut batch: Vec<ShardInput<'a>> = Vec::with_capacity(batch_idx.len());
+    let mut pc = ParsedCall {
+        state: None,
+        scalars: Vec::new(),
+        batch: Vec::with_capacity(batch_idx.len()),
+        passthrough: Vec::new(),
+    };
     for (i, (arg, inp)) in args.iter().zip(&spec.inputs).enumerate() {
-        match inp.name.as_str() {
-            "state" => match arg {
-                Arg::Buf(b) => state = Some(buf_f32(b)?),
-                Arg::F32(d, _) => state = Some(*d),
+        if inp.name == "state" {
+            pc.state = Some(match arg {
+                Arg::Buf(b) => buf_f32(b)?,
+                Arg::F32(d, _) => d,
                 _ => return None,
-            },
-            "lr" => match arg {
-                Arg::Scalar(v) => lr = Some(*v),
+            });
+        } else if inp.shape.is_empty() {
+            match arg {
+                Arg::Scalar(v) => pc.scalars.push((inp.name.as_str(), *v)),
                 _ => return None,
-            },
-            "step" => match arg {
-                Arg::Scalar(v) => step = Some(*v),
-                _ => return None,
-            },
-            _ if batch_idx.contains(&i) => {
-                let row: usize = inp.shape[1..].iter().product();
-                let si = match arg {
-                    Arg::Buf(b) => {
-                        if let Some(d) = buf_f32(b) {
-                            ShardInput::F32 { data: d, row }
-                        } else {
-                            ShardInput::I32 { data: buf_i32(b)?, row }
-                        }
-                    }
-                    Arg::F32(d, _) => ShardInput::F32 { data: *d, row },
-                    Arg::I32(d, _) => ShardInput::I32 { data: *d, row },
-                    Arg::Scalar(_) => return None,
-                };
-                let len = match &si {
-                    ShardInput::F32 { data, .. } => data.len(),
-                    ShardInput::I32 { data, .. } => data.len(),
-                };
-                if row == 0 || len != cfg.batch * row {
-                    return None;
-                }
-                batch.push(si);
             }
-            _ => return None,
+        } else if batch_idx.contains(&i) {
+            let row: usize = inp.shape[1..].iter().product();
+            let si = match arg {
+                Arg::Buf(b) => {
+                    if let Some(d) = buf_f32(b) {
+                        ShardInput::F32 { data: d, row }
+                    } else {
+                        ShardInput::I32 { data: buf_i32(b)?, row }
+                    }
+                }
+                Arg::F32(d, _) => ShardInput::F32 { data: *d, row },
+                Arg::I32(d, _) => ShardInput::I32 { data: *d, row },
+                Arg::Scalar(_) => return None,
+            };
+            let len = match &si {
+                ShardInput::F32 { data, .. } => data.len(),
+                ShardInput::I32 { data, .. } => data.len(),
+            };
+            if row == 0 || len != cfg.batch * row {
+                return None;
+            }
+            pc.batch.push(si);
+        } else {
+            match arg {
+                Arg::Buf(b) => pc.passthrough.push(buf_f32(b)?),
+                Arg::F32(d, _) => pc.passthrough.push(d),
+                _ => return None,
+            }
         }
     }
-    let state = state?;
-    if state.len() != cfg.state_len() || batch.is_empty() {
+    if pc.batch.is_empty() {
         return None;
     }
-    Some(TrainArgs { state, batch, lr: lr?, step: step? })
+    Some(pc)
+}
+
+/// The optimizer-step restructure plan for one shardable step kind.
+enum OptPlan {
+    /// `train_step__C` → `train_grad__C` (family-count weights).
+    Train,
+    /// `ft_step__C` → `ft_grad__C` (row-count weights; `n = n_ft`).
+    Ft { n_ft: usize },
+    /// `distill_step__A__B` → `distill_grad__A__B` (global normalizers,
+    /// unit weights).
+    Distill { kd_w: f32 },
 }
 
 impl ShardedBackend {
@@ -218,14 +260,32 @@ impl ShardedBackend {
         self.replicas.len()
     }
 
+    /// Effective fan-out for a config: replicas, capped by the schedule's
+    /// replica cap and the batch size. `<= 1` means run unsharded.
+    fn r_eff(&self, cfg: &ModelCfg) -> usize {
+        self.replicas.len().min(self.cap.get()).min(cfg.batch)
+    }
+
+    /// Near-even contiguous shard bounds `⌊r·B/R⌋`.
+    fn bounds(b: usize, r_eff: usize) -> Vec<(usize, usize)> {
+        (0..r_eff).map(|r| (r * b / r_eff, (r + 1) * b / r_eff)).collect()
+    }
+
+    /// Rows (sequence positions) per batch item — the KL normalizer scale.
+    /// Taken from the execution core's own geometry so the sharded distill
+    /// normalizer can never diverge from the fused path's row count.
+    fn rows_per_item(cfg: &ModelCfg) -> usize {
+        crate::runtime::reference::exec::layout::Dims::with_batch(cfg, 1).rows()
+    }
+
     /// Loss-target count of shard rows `[r0, r1)` — the shard's all-reduce
     /// weight numerator (mirrors the per-family masking in
-    /// `model::targets_of`).
-    fn shard_count(cfg: &ModelCfg, ta: &TrainArgs<'_>, r0: usize, r1: usize) -> usize {
+    /// `exec::layout::targets_into`).
+    fn shard_count(cfg: &ModelCfg, batch: &[ShardInput<'_>], r0: usize, r1: usize) -> usize {
         match cfg.family {
             Family::Gpt => (r1 - r0) * cfg.seq_len.saturating_sub(1),
             Family::Vit => r1 - r0,
-            Family::Bert => match ta.batch.get(1) {
+            Family::Bert => match batch.get(1) {
                 Some(ShardInput::I32 { data, row }) => data[r0 * row..r1 * row]
                     .iter()
                     .filter(|&&l| l >= 0)
@@ -235,92 +295,226 @@ impl ShardedBackend {
         }
     }
 
-    /// The sharded grad → all-reduce → AdamW path. `None` when this call
-    /// cannot be sharded (no grad artifact, single-shard fan-out,
-    /// unexpected argument form) and should run unsharded on replica 0.
-    fn try_sharded(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
+    /// Per-family count-proportional shard weights (`counts[r] / total`,
+    /// all-zero when the batch carries no targets at all).
+    fn count_weights(counts: &[usize]) -> Vec<f32> {
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            vec![0.0; counts.len()]
+        } else {
+            counts.iter().map(|&c| c as f32 / total as f32).collect()
+        }
+    }
+
+    /// Slice the batch inputs for shard `[r0, r1)` into an argument list.
+    fn push_shard_args<'a>(
+        args: &mut Vec<Arg<'a>>,
+        batch: &[ShardInput<'a>],
+        r0: usize,
+        r1: usize,
+    ) {
+        for inp in batch {
+            match inp {
+                ShardInput::F32 { data, row } => {
+                    args.push(Arg::F32(&data[r0 * row..r1 * row], vec![r1 - r0, *row]))
+                }
+                ShardInput::I32 { data, row } => {
+                    args.push(Arg::I32(&data[r0 * row..r1 * row], vec![r1 - r0, *row]))
+                }
+            }
+        }
+    }
+
+    /// The sharded grad → overlapped all-reduce → AdamW path for the
+    /// optimizer-step kinds. `None` when this call cannot be sharded and
+    /// should run unsharded on replica 0.
+    fn try_opt_step(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
         let Some(cfg) = self.configs.get(&spec.config) else {
             return Ok(None);
         };
-        let Some(grad_spec) = self.artifacts.get(&format!("train_grad__{}", spec.config))
+        if self.r_eff(cfg) <= 1 {
+            return Ok(None);
+        }
+        let Some(pc) = parse_call(spec, cfg, args) else {
+            return Ok(None);
+        };
+        let (Some(state), Some(lr), Some(step)) =
+            (pc.state, pc.scalar("lr"), pc.scalar("step"))
         else {
             return Ok(None);
         };
-        let r_eff = self.replicas.len().min(self.cap.get()).min(cfg.batch);
-        if r_eff <= 1 {
-            return Ok(None);
-        }
-        let Some(ta) = parse_train_args(spec, cfg, args) else {
+        let (grad_name, plan) = match spec.kind.as_str() {
+            "train_step" => (format!("train_grad__{}", spec.config), OptPlan::Train),
+            "ft_step" => {
+                let Some(n_ft) = spec.meta.get("n_ft").as_usize() else {
+                    return Ok(None);
+                };
+                (format!("ft_grad__{}", spec.config), OptPlan::Ft { n_ft })
+            }
+            "distill_step" => {
+                let Some(small) = spec.config_small.as_deref() else {
+                    return Ok(None);
+                };
+                let Some(kd_w) = pc.scalar("kd_w") else {
+                    return Ok(None);
+                };
+                if pc.passthrough.len() != 1 {
+                    return Ok(None); // expects exactly theta_teacher
+                }
+                (
+                    format!("distill_grad__{}__{small}", spec.config),
+                    OptPlan::Distill { kd_w },
+                )
+            }
+            _ => return Ok(None),
+        };
+        let Some(grad_spec) = self.artifacts.get(&grad_name) else {
             return Ok(None);
         };
-        self.sharded_train(cfg, grad_spec, &ta, r_eff).map(Some)
+        let n = match plan {
+            OptPlan::Ft { n_ft } => n_ft,
+            _ => cfg.n_params,
+        };
+        if state.len() != 3 * n + 1 {
+            return Ok(None);
+        }
+        self.sharded_opt_step(cfg, grad_spec, &plan, &pc, state, n, lr, step)
+            .map(Some)
     }
 
-    fn sharded_train(
+    #[allow(clippy::too_many_arguments)]
+    fn sharded_opt_step(
         &self,
         cfg: &ModelCfg,
         grad_spec: &ArtifactSpec,
-        ta: &TrainArgs<'_>,
-        r_eff: usize,
+        plan: &OptPlan,
+        pc: &ParsedCall<'_>,
+        state: &[f32],
+        n: usize,
+        lr: f32,
+        step: f32,
     ) -> Result<Buffer> {
         let b = cfg.batch;
-        let n = cfg.n_params;
-        let bounds: Vec<(usize, usize)> =
-            (0..r_eff).map(|r| (r * b / r_eff, (r + 1) * b / r_eff)).collect();
-        let counts: Vec<usize> =
-            bounds.iter().map(|&(r0, r1)| Self::shard_count(cfg, ta, r0, r1)).collect();
-        let total: usize = counts.iter().sum();
-        let theta = &ta.state[1..1 + n];
+        let r_eff = self.r_eff(cfg);
+        let bounds = Self::bounds(b, r_eff);
 
-        // replica shard steps, concurrent with partitioned kernel threads;
-        // results come back in replica order
-        let backends = &self.replicas;
-        let outs: Vec<Result<Vec<f32>>> = threadpool::partitioned(r_eff, |r| {
-            let (r0, r1) = bounds[r];
-            let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + ta.batch.len());
-            args.push(Arg::F32(theta, vec![n]));
-            for inp in &ta.batch {
-                match inp {
-                    ShardInput::F32 { data, row } => args.push(Arg::F32(
-                        &data[r0 * row..r1 * row],
-                        vec![r1 - r0, *row],
-                    )),
-                    ShardInput::I32 { data, row } => args.push(Arg::I32(
-                        &data[r0 * row..r1 * row],
-                        vec![r1 - r0, *row],
-                    )),
-                }
+        // shard weights + plan-specific extra scalars for the grad artifact
+        let (weights, extra): (Vec<f32>, Vec<f32>) = match plan {
+            OptPlan::Train => {
+                let counts: Vec<usize> = bounds
+                    .iter()
+                    .map(|&(r0, r1)| Self::shard_count(cfg, &pc.batch, r0, r1))
+                    .collect();
+                (Self::count_weights(&counts), vec![])
             }
-            take_host_f32(backends[r].execute(grad_spec, &args)?)
-        });
+            OptPlan::Ft { .. } => {
+                // every fine-tune item carries exactly one target
+                let counts: Vec<usize> = bounds.iter().map(|&(r0, r1)| r1 - r0).collect();
+                (Self::count_weights(&counts), vec![])
+            }
+            OptPlan::Distill { kd_w } => {
+                // globally-normalized partials sum with unit weights; the
+                // shards receive the full-batch CE/KL normalizers
+                let ce_count = Self::shard_count(cfg, &pc.batch, 0, b).max(1) as f32;
+                let kl_rows = (b * Self::rows_per_item(cfg)).max(1) as f32;
+                (vec![1.0; r_eff], vec![*kd_w, ce_count, kl_rows])
+            }
+        };
 
-        let mut parts = Vec::with_capacity(r_eff);
-        for out in outs {
-            let v = out?;
-            if v.len() != 1 + n {
+        let theta = &state[1..1 + n];
+        let backends = &self.replicas;
+        let reduced = allreduce::overlapped_tree_reduce(r_eff, &weights, |r| {
+            let (r0, r1) = bounds[r];
+            let mut args: Vec<Arg<'_>> =
+                Vec::with_capacity(2 + pc.batch.len() + extra.len());
+            args.push(Arg::F32(theta, vec![n]));
+            for p in &pc.passthrough {
+                args.push(Arg::F32(p, vec![p.len()]));
+            }
+            Self::push_shard_args(&mut args, &pc.batch, r0, r1);
+            for &x in &extra {
+                args.push(Arg::Scalar(x));
+            }
+            let out = take_host_f32(backends[r].execute(grad_spec, &args)?)?;
+            if out.len() != 1 + n {
                 bail!(
-                    "train_grad__{} returned {} elements, expected {}",
-                    cfg.name,
-                    v.len(),
+                    "{} returned {} elements, expected {}",
+                    grad_spec.name,
+                    out.len(),
                     1 + n
                 );
             }
-            parts.push(v);
-        }
+            Ok(out)
+        })?;
 
-        // shard weights: each shard's share of the loss-target count (an
-        // all-negative-label BERT shard weighs 0 and drops out). The whole
-        // `[loss, grad]` vectors reduce in one pass — the loss slot takes
-        // the same weighted sum the gradient does.
-        let weights: Vec<f32> = if total == 0 {
-            vec![0.0; r_eff]
-        } else {
-            counts.iter().map(|&c| c as f32 / total as f32).collect()
+        let out = allreduce::apply_adamw(state, &reduced[1..], reduced[0], lr, step)?;
+        Ok(Buffer::host_f32(out, vec![state.len()]))
+    }
+
+    /// Sharded forward-only evaluation: run the eval artifact on every
+    /// replica's shard concurrently, combine the per-shard mean losses with
+    /// the weighted fixed-order tree. `None` → fall back to replica 0.
+    fn try_eval(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
+        let Some(cfg) = self.configs.get(&spec.config) else {
+            return Ok(None);
         };
-        let reduced = allreduce::tree_weighted_sum(parts, &weights)?;
-        let out =
-            allreduce::apply_adamw(ta.state, &reduced[1..], reduced[0], ta.lr, ta.step)?;
-        Ok(Buffer::host_f32(out, vec![cfg.state_len()]))
+        let r_eff = self.r_eff(cfg);
+        if r_eff <= 1 {
+            return Ok(None);
+        }
+        let Some(pc) = parse_call(spec, cfg, args) else {
+            return Ok(None);
+        };
+        let Some(state) = pc.state else {
+            return Ok(None);
+        };
+        let bounds = Self::bounds(cfg.batch, r_eff);
+        let counts: Vec<usize> = bounds
+            .iter()
+            .map(|&(r0, r1)| Self::shard_count(cfg, &pc.batch, r0, r1))
+            .collect();
+        let weights = Self::count_weights(&counts);
+
+        let backends = &self.replicas;
+        let shard_losses: Vec<Result<f32>> = threadpool::partitioned(r_eff, |r| {
+            let (r0, r1) = bounds[r];
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + pc.batch.len());
+            args.push(Arg::F32(state, vec![state.len()]));
+            Self::push_shard_args(&mut args, &pc.batch, r0, r1);
+            let out = backends[r].execute(spec, &args)?;
+            backends[r].read_scalar(&out)
+        });
+        let mut parts = Vec::with_capacity(r_eff);
+        for l in shard_losses {
+            parts.push(vec![l?]);
+        }
+        let loss = allreduce::tree_weighted_sum(parts, &weights)?[0];
+        Ok(Some(Buffer::host_f32(vec![loss], vec![])))
+    }
+
+    /// Sharded attention probe: the artifact reads only batch item 0 and
+    /// per-row kernels are independent of the other rows, so executing the
+    /// first shard alone is bit-identical to the full batch at `1/R` the
+    /// compute. `None` → fall back to replica 0 with the full batch.
+    fn try_attn(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
+        let Some(cfg) = self.configs.get(&spec.config) else {
+            return Ok(None);
+        };
+        let r_eff = self.r_eff(cfg);
+        if r_eff <= 1 {
+            return Ok(None);
+        }
+        let Some(pc) = parse_call(spec, cfg, args) else {
+            return Ok(None);
+        };
+        let Some(state) = pc.state else {
+            return Ok(None);
+        };
+        let b0 = Self::bounds(cfg.batch, r_eff)[0].1;
+        let mut shard_args: Vec<Arg<'_>> = Vec::with_capacity(1 + pc.batch.len());
+        shard_args.push(Arg::F32(state, vec![state.len()]));
+        Self::push_shard_args(&mut shard_args, &pc.batch, 0, b0);
+        self.replicas[0].execute(spec, &shard_args).map(Some)
     }
 }
 
@@ -333,7 +527,7 @@ impl Backend for ShardedBackend {
         let (r, t) = self.shard_topology();
         format!(
             "sharded data-parallel: replicas={r} × threads-per-replica={t}, \
-             tree all-reduce; inner: {}",
+             overlapped tree all-reduce; inner: {}",
             self.replicas[0].device_info()
         )
     }
@@ -348,10 +542,25 @@ impl Backend for ShardedBackend {
     }
 
     fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
-        if spec.kind == "train_step" && spec.shard_batch() {
-            if let Some(g) = self.artifacts.get(&format!("train_grad__{}", spec.config)) {
+        if spec.shard_batch() {
+            // prepare the per-replica shard path too
+            let grad_name = match spec.kind.as_str() {
+                "train_step" => Some(format!("train_grad__{}", spec.config)),
+                "ft_step" => Some(format!("ft_grad__{}", spec.config)),
+                "distill_step" => spec
+                    .config_small
+                    .as_deref()
+                    .map(|s| format!("distill_grad__{}__{s}", spec.config)),
+                _ => None,
+            };
+            if let Some(g) = grad_name.and_then(|g| self.artifacts.get(&g)) {
                 for r in &self.replicas {
                     r.prepare(g)?;
+                }
+            }
+            if matches!(spec.kind.as_str(), "eval_loss" | "attn_maps") {
+                for r in &self.replicas {
+                    r.prepare(spec)?;
                 }
             }
         }
@@ -359,8 +568,14 @@ impl Backend for ShardedBackend {
     }
 
     fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer> {
-        if self.replicas.len() > 1 && spec.kind == "train_step" && spec.shard_batch() {
-            if let Some(out) = self.try_sharded(spec, args)? {
+        if self.replicas.len() > 1 && spec.shard_batch() {
+            let sharded = match spec.kind.as_str() {
+                "train_step" | "ft_step" | "distill_step" => self.try_opt_step(spec, args)?,
+                "eval_loss" => self.try_eval(spec, args)?,
+                "attn_maps" => self.try_attn(spec, args)?,
+                _ => None,
+            };
+            if let Some(out) = sharded {
                 return Ok(out);
             }
         }
@@ -404,9 +619,7 @@ mod tests {
         // contiguous, near-even shards whenever R <= B
         for b in 1..=16usize {
             for r_eff in 1..=b {
-                let bounds: Vec<(usize, usize)> = (0..r_eff)
-                    .map(|r| (r * b / r_eff, (r + 1) * b / r_eff))
-                    .collect();
+                let bounds = ShardedBackend::bounds(b, r_eff);
                 assert_eq!(bounds[0].0, 0);
                 assert_eq!(bounds[r_eff - 1].1, b);
                 for w in bounds.windows(2) {
@@ -424,20 +637,22 @@ mod tests {
     fn non_batch_artifacts_delegate_to_replica_zero() {
         let m = Manifest::builtin();
         let be = ShardedBackend::new(&m, 4);
-        let spec = m.artifact("eval_loss__gpt_nano").unwrap();
+        let spec = m.artifact("interp__gpt_nano").unwrap();
         be.prepare(spec).unwrap();
         let cfg = m.cfg("gpt_nano").unwrap();
-        let state = vec![0.0f32; cfg.state_len()];
-        let tokens = vec![1i32; cfg.batch * cfg.seq_len];
+        let a = vec![1.0f32; cfg.state_len()];
+        let b = vec![3.0f32; cfg.state_len()];
         let out = be
             .execute(
                 spec,
                 &[
-                    Arg::F32(&state, vec![cfg.state_len()]),
-                    Arg::I32(&tokens, vec![cfg.batch, cfg.seq_len]),
+                    Arg::F32(&a, vec![cfg.state_len()]),
+                    Arg::F32(&b, vec![cfg.state_len()]),
+                    Arg::Scalar(0.5),
                 ],
             )
             .unwrap();
-        assert!(be.read_scalar(&out).unwrap().is_finite());
+        let host = be.read_f32(&out).unwrap();
+        assert!(host.iter().all(|&x| (x - 2.0).abs() < 1e-6));
     }
 }

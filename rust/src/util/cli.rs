@@ -51,6 +51,21 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// `Ok(Some(n))` when the option is present and parses to a *positive*
+    /// integer, `Ok(None)` when absent, `Err` with a clear message
+    /// otherwise — for options whose invalid values must surface as a
+    /// proper CLI error instead of a panic or a silent fallback
+    /// (e.g. `--threads`, `--replicas`).
+    pub fn usize_res(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if n > 0 => Ok(Some(n)),
+                _ => Err(format!("--{name} expects a positive integer, got '{v}'")),
+            },
+        }
+    }
+
     /// `Some(n)` when the option is present (panics on a non-integer value),
     /// `None` when absent — for options whose default comes from elsewhere
     /// (e.g. `--replicas` falling back to `PALLAS_REPLICAS`).
@@ -97,6 +112,19 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7), 7);
         assert_eq!(a.usize_opt("steps"), Some(500));
         assert_eq!(a.usize_opt("missing"), None);
+        assert_eq!(a.usize_res("steps"), Ok(Some(500)));
+        assert_eq!(a.usize_res("missing"), Ok(None));
+    }
+
+    #[test]
+    fn usize_res_reports_bad_values() {
+        let a = Args::parse_from(&argv("train --threads four --replicas 0"));
+        let err = a.usize_res("threads").unwrap_err();
+        assert!(err.contains("--threads"), "{err}");
+        assert!(err.contains("four"), "{err}");
+        // zero is not a silent fallback either
+        let err0 = a.usize_res("replicas").unwrap_err();
+        assert!(err0.contains("positive"), "{err0}");
     }
 
     #[test]

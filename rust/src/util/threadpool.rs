@@ -146,25 +146,42 @@ fn pool() -> &'static Pool {
     })
 }
 
-/// Parse a `PALLAS_REF_THREADS`-style override; `None` for invalid values.
-fn parse_threads(raw: &str) -> Option<usize> {
-    let n = raw.trim().parse::<usize>().ok()?;
-    if n == 0 {
-        None
-    } else {
-        Some(n.min(MAX_THREADS))
+/// Parse a `PALLAS_REF_THREADS`-style override: a positive integer,
+/// clamped to [`MAX_THREADS`]. Unparsable or zero values are an error —
+/// never a silent fallback.
+fn parse_threads(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!(
+            "PALLAS_REF_THREADS must be a positive integer, got '{raw}'"
+        )),
+        Ok(n) => Ok(n.min(MAX_THREADS)),
+        Err(_) => Err(format!(
+            "PALLAS_REF_THREADS must be a positive integer, got '{raw}'"
+        )),
+    }
+}
+
+/// Thread count requested through the environment: `Ok(None)` when unset,
+/// `Ok(Some(n))` for a valid value, `Err` with a clear message for an
+/// unparsable one. The CLI validates this at startup so the error surfaces
+/// before any compute.
+pub fn env_threads() -> Result<Option<usize>, String> {
+    match std::env::var("PALLAS_REF_THREADS") {
+        Ok(v) => parse_threads(&v).map(Some),
+        Err(_) => Ok(None),
     }
 }
 
 fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("PALLAS_REF_THREADS") {
-        if let Some(n) = parse_threads(&v) {
-            return n;
-        }
+    match env_threads() {
+        Ok(Some(n)) => n,
+        Ok(None) => std::thread::available_parallelism()
+            .map_or(1, std::num::NonZeroUsize::get)
+            .min(MAX_THREADS),
+        // library-path init: an unparsable override must not be silently
+        // replaced by a default the user did not ask for
+        Err(msg) => panic!("{msg}"),
     }
-    std::thread::available_parallelism()
-        .map_or(1, std::num::NonZeroUsize::get)
-        .min(MAX_THREADS)
 }
 
 /// Current fan-out of [`parallel_for`] (the calling thread included).
@@ -562,11 +579,13 @@ mod tests {
 
     #[test]
     fn parse_threads_rejects_garbage() {
-        assert_eq!(parse_threads("4"), Some(4));
-        assert_eq!(parse_threads(" 2 "), Some(2));
-        assert_eq!(parse_threads("0"), None);
-        assert_eq!(parse_threads("-1"), None);
-        assert_eq!(parse_threads("lots"), None);
-        assert_eq!(parse_threads("100000"), Some(MAX_THREADS));
+        assert_eq!(parse_threads("4"), Ok(4));
+        assert_eq!(parse_threads(" 2 "), Ok(2));
+        assert_eq!(parse_threads("100000"), Ok(MAX_THREADS));
+        for bad in ["0", "-1", "lots", ""] {
+            let err = parse_threads(bad).unwrap_err();
+            assert!(err.contains("positive integer"), "{err}");
+            assert!(err.contains(bad) || bad.is_empty(), "{err}");
+        }
     }
 }

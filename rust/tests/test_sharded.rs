@@ -1,9 +1,12 @@
 //! Sharded-backend determinism and parity: for a fixed replica count `R`
-//! the data-parallel train step must be bit-identical for every kernel
-//! thread count (the all-reduce is a fixed tree over replicas with
-//! fixed-chunk reductions), and across replica counts it must agree with
-//! the single-replica fused step to f32 tolerance — including batch sizes
-//! that do not divide evenly by `R`, and a full 2-level V-cycle.
+//! every data-parallel path (train step, eval_loss, ft_step, distill_step,
+//! attn_maps) must be bit-identical for every kernel thread count (the
+//! all-reduce is a fixed tree over replicas with fixed-chunk reductions,
+//! merged opportunistically but in a fixed pairing), and across replica
+//! counts it must agree with the single-replica path to f32 tolerance —
+//! including batch sizes that do not divide evenly by `R`, and a full
+//! 2-level V-cycle. The overlapped all-reduce is additionally pinned
+//! bit-for-bit against the post-barrier tree reduce it replaced.
 //!
 //! Tests serialize on a local mutex because the kernel pool is
 //! process-global and the test harness runs tests concurrently.
@@ -11,9 +14,12 @@
 use std::sync::{Mutex, MutexGuard};
 
 use multilevel::coordinator::{Harness, Method, RunOpts, Trainer};
+use multilevel::runtime::sharded::allreduce;
 use multilevel::runtime::{
-    init_state, init_theta, Arg, Backend, Manifest, ReferenceBackend, Runtime, ShardedBackend,
+    init_state, init_theta, Arg, Backend, Manifest, ModelCfg, ReferenceBackend, Runtime,
+    ShardedBackend,
 };
+use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
 static LOCK: Mutex<()> = Mutex::new(());
@@ -221,4 +227,267 @@ fn topology_reports_through_runtime() {
     let single = Runtime::reference();
     assert_eq!(single.shard_topology(), (1, 8));
     threadpool::set_threads(before);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded eval / ft / distill / attn_maps (PR 4)
+// ---------------------------------------------------------------------------
+
+fn host_state(cfg: &ModelCfg, seed: u64) -> Vec<f32> {
+    let theta = init_theta(cfg, seed);
+    let mut state = vec![0.0f32; cfg.state_len()];
+    state[1..1 + cfg.n_params].copy_from_slice(&theta);
+    state
+}
+
+fn tokens_of(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+    let c = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(seed);
+    let mut toks = Vec::new();
+    for _ in 0..cfg.batch {
+        toks.extend(c.sequence(cfg.seq_len, &mut rng));
+    }
+    toks
+}
+
+/// Masked-LM labels: every 7th position carries a target (shards get
+/// uneven counts, exercising the count-weighted combine).
+fn bert_labels(tokens: &[i32]) -> Vec<i32> {
+    tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i % 7 == 0 { t } else { -1 })
+        .collect()
+}
+
+#[test]
+fn sharded_eval_loss_bit_identical_across_thread_counts_and_close_to_unsharded() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let m = Manifest::builtin();
+    for config in ["gpt_base_sim", "bert_nano"] {
+        let cfg = m.cfg(config).unwrap().clone();
+        let spec = m.artifact(&format!("eval_loss__{config}")).unwrap().clone();
+        let state = host_state(&cfg, 23);
+        let toks = tokens_of(&cfg, 31);
+        let labels = bert_labels(&toks);
+        let run = |be: &dyn Backend| {
+            let mut args = vec![
+                Arg::F32(&state, vec![cfg.state_len()]),
+                Arg::I32(&toks, vec![cfg.batch, cfg.seq_len]),
+            ];
+            if config.starts_with("bert") {
+                args.push(Arg::I32(&labels, vec![cfg.batch, cfg.seq_len]));
+            }
+            let out = be.execute(&spec, &args).unwrap();
+            be.read_scalar(&out).unwrap()
+        };
+        let reference = ReferenceBackend::new(&m);
+        let want = run(&reference);
+        for replicas in [1usize, 2, 3, 4] {
+            let be = ShardedBackend::new(&m, replicas);
+            threadpool::set_threads(1);
+            let t1 = run(&be);
+            threadpool::set_threads(2);
+            let t2 = run(&be);
+            threadpool::set_threads(8);
+            let t8 = run(&be);
+            assert_eq!(
+                t1.to_bits(),
+                t2.to_bits(),
+                "{config} R={replicas}: eval 1 vs 2 threads diverged"
+            );
+            assert_eq!(
+                t1.to_bits(),
+                t8.to_bits(),
+                "{config} R={replicas}: eval 1 vs 8 threads diverged"
+            );
+            assert!(
+                (t1 - want).abs() < 5e-4,
+                "{config} R={replicas}: sharded eval {t1} vs unsharded {want}"
+            );
+            if replicas == 1 {
+                assert_eq!(t1.to_bits(), want.to_bits(), "R=1 eval is not the fused path");
+            }
+        }
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn sharded_ft_step_matches_unsharded_and_is_thread_stable() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let m = Manifest::builtin();
+    let cfg = m.cfg("bert_nano").unwrap().clone();
+    let spec = m.artifact("ft_step__bert_nano").unwrap().clone();
+    let n_ft = spec.meta.get("n_ft").as_usize().unwrap();
+    // grafted state: theta ‖ small random head, zero moments
+    let theta = init_theta(&cfg, 5);
+    let mut state = vec![0.0f32; 3 * n_ft + 1];
+    state[1..1 + cfg.n_params].copy_from_slice(&theta);
+    let mut rng = Rng::new(77);
+    for v in state[1 + cfg.n_params..1 + n_ft].iter_mut() {
+        *v = (rng.f32() - 0.5) * 0.1;
+    }
+    let toks = tokens_of(&cfg, 41);
+    let labels: Vec<i32> = (0..cfg.batch).map(|i| (i % 4) as i32).collect();
+    let run = |be: &dyn Backend| {
+        let out = be
+            .execute(
+                &spec,
+                &[
+                    Arg::F32(&state, vec![3 * n_ft + 1]),
+                    Arg::I32(&toks, vec![cfg.batch, cfg.seq_len]),
+                    Arg::I32(&labels, vec![cfg.batch]),
+                    Arg::Scalar(1e-3),
+                    Arg::Scalar(1.0),
+                ],
+            )
+            .unwrap();
+        be.read_f32(&out).unwrap()
+    };
+    let want = run(&ReferenceBackend::new(&m));
+    for replicas in [2usize, 3] {
+        let be = ShardedBackend::new(&m, replicas);
+        threadpool::set_threads(2);
+        let t2 = run(&be);
+        threadpool::set_threads(8);
+        let t8 = run(&be);
+        assert_eq!(bits(&t2), bits(&t8), "ft R={replicas} thread-dependent");
+        assert_state_close(&t2, &want, &format!("ft R={replicas}"));
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn sharded_distill_step_matches_unsharded_and_is_thread_stable() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let m = Manifest::builtin();
+    let student = m.cfg("gpt_nano").unwrap().clone();
+    let teacher = m.cfg("gpt_nano_lv2").unwrap().clone();
+    let spec = m.artifact("distill_step__gpt_nano__gpt_nano_lv2").unwrap().clone();
+    let state = host_state(&student, 11);
+    let theta_t = init_theta(&teacher, 19);
+    let toks = tokens_of(&student, 53);
+    let run = |be: &dyn Backend| {
+        let out = be
+            .execute(
+                &spec,
+                &[
+                    Arg::F32(&state, vec![student.state_len()]),
+                    Arg::F32(&theta_t, vec![teacher.n_params]),
+                    Arg::I32(&toks, vec![student.batch, student.seq_len]),
+                    Arg::Scalar(0.5),
+                    Arg::Scalar(1e-3),
+                    Arg::Scalar(1.0),
+                ],
+            )
+            .unwrap();
+        be.read_f32(&out).unwrap()
+    };
+    let want = run(&ReferenceBackend::new(&m));
+    for replicas in [2usize, 3, 4] {
+        let be = ShardedBackend::new(&m, replicas);
+        threadpool::set_threads(2);
+        let t2 = run(&be);
+        threadpool::set_threads(8);
+        let t8 = run(&be);
+        assert_eq!(bits(&t2), bits(&t8), "distill R={replicas} thread-dependent");
+        assert_state_close(&t2, &want, &format!("distill R={replicas}"));
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn sharded_attn_maps_probe_is_bitwise_identical_to_full_batch() {
+    let _g = lock();
+    let m = Manifest::builtin();
+    let cfg = m.cfg("bert_base_sim").unwrap().clone();
+    let spec = m.artifact("attn_maps__bert_base_sim").unwrap().clone();
+    let state = host_state(&cfg, 3);
+    let toks = tokens_of(&cfg, 7);
+    let run = |be: &dyn Backend| {
+        let out = be
+            .execute(
+                &spec,
+                &[
+                    Arg::F32(&state, vec![cfg.state_len()]),
+                    Arg::I32(&toks, vec![cfg.batch, cfg.seq_len]),
+                ],
+            )
+            .unwrap();
+        be.read_f32(&out).unwrap()
+    };
+    let want = run(&ReferenceBackend::new(&m));
+    let be = ShardedBackend::new(&m, 4);
+    let got = run(&be);
+    assert_eq!(want.len(), cfg.n_layer * cfg.n_head * cfg.seq_len * cfg.seq_len);
+    assert_eq!(
+        bits(&got),
+        bits(&want),
+        "sharded attention probe diverged from the full-batch probe"
+    );
+}
+
+#[test]
+fn overlapped_train_step_is_bit_identical_to_post_barrier_reduce() {
+    // Reproduce the PR 3 post-barrier pipeline by hand — shard grads on
+    // separate replicas, barrier, tree_weighted_sum, apply_adamw — and pin
+    // the overlapped backend path against it bit-for-bit.
+    let _g = lock();
+    let m = Manifest::builtin();
+    let cfg = m.cfg("gpt_base_sim").unwrap().clone();
+    let step_spec = m.artifact("train_step__gpt_base_sim").unwrap().clone();
+    let grad_spec = m.artifact("train_grad__gpt_base_sim").unwrap().clone();
+    let state = host_state(&cfg, 29);
+    let toks = tokens_of(&cfg, 37);
+    for r_eff in [2usize, 3, 4] {
+        // overlapped path (the backend)
+        let be = ShardedBackend::new(&m, r_eff);
+        let out = be
+            .execute(
+                &step_spec,
+                &[
+                    Arg::F32(&state, vec![cfg.state_len()]),
+                    Arg::I32(&toks, vec![cfg.batch, cfg.seq_len]),
+                    Arg::Scalar(1e-3),
+                    Arg::Scalar(1.0),
+                ],
+            )
+            .unwrap();
+        let got = be.read_f32(&out).unwrap();
+
+        // post-barrier oracle
+        let reference = ReferenceBackend::new(&m);
+        let b = cfg.batch;
+        let theta = &state[1..1 + cfg.n_params];
+        let mut parts = Vec::new();
+        let mut counts = Vec::new();
+        for r in 0..r_eff {
+            let (r0, r1) = (r * b / r_eff, (r + 1) * b / r_eff);
+            let shard = &toks[r0 * cfg.seq_len..r1 * cfg.seq_len];
+            let out = reference
+                .execute(
+                    &grad_spec,
+                    &[
+                        Arg::F32(theta, vec![cfg.n_params]),
+                        Arg::I32(shard, vec![r1 - r0, cfg.seq_len]),
+                    ],
+                )
+                .unwrap();
+            parts.push(reference.read_f32(&out).unwrap());
+            counts.push((r1 - r0) * (cfg.seq_len - 1));
+        }
+        let total: usize = counts.iter().sum();
+        let weights: Vec<f32> = counts.iter().map(|&c| c as f32 / total as f32).collect();
+        let reduced = allreduce::tree_weighted_sum(parts, &weights).unwrap();
+        let want = allreduce::apply_adamw(&state, &reduced[1..], reduced[0], 1e-3, 1.0).unwrap();
+        assert_eq!(
+            bits(&got),
+            bits(&want),
+            "R={r_eff}: overlapped reduce diverged from the post-barrier pipeline"
+        );
+    }
 }

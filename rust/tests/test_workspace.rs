@@ -1,0 +1,160 @@
+//! Workspace-arena allocation probe: a counting global allocator proves
+//! that steady-state `train_step_into` / `train_grad_into` perform **zero**
+//! heap allocations after warm-up.
+//!
+//! The probe pins the kernel pool to one thread: with a single thread every
+//! `parallel_for` runs inline, so the measurement sees exactly the compute
+//! path's allocations (with more threads the *scheduler* allocates dispatch
+//! bookkeeping — an `Arc` batch and channel nodes per fan-out — which is
+//! orthogonal to the tensor-allocation contract the arena guarantees;
+//! kernel results are bit-identical either way, see `test_threads.rs`).
+//!
+//! Tests in this file share one global counter, so they serialize on a
+//! local mutex.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::runtime::reference::exec::{
+    self, train_grad_into, train_step_into, BatchRef, Workspace,
+};
+use multilevel::runtime::{init_theta, Manifest, ModelCfg};
+use multilevel::util::rng::Rng;
+use multilevel::util::threadpool;
+
+/// Counts every allocation (alloc, alloc_zeroed, realloc) in the process.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn gpt_setup(name: &str) -> (ModelCfg, Vec<f32>, Vec<i32>) {
+    let m = Manifest::builtin();
+    let cfg = m.cfg(name).unwrap().clone();
+    let theta = init_theta(&cfg, 3);
+    let mut state = vec![0.0f32; cfg.state_len()];
+    state[1..1 + cfg.n_params].copy_from_slice(&theta);
+    let c = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(9);
+    let mut toks = Vec::new();
+    for _ in 0..cfg.batch {
+        toks.extend(c.sequence(cfg.seq_len, &mut rng));
+    }
+    (cfg, state, toks)
+}
+
+#[test]
+fn steady_state_train_step_performs_zero_heap_allocations() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    threadpool::set_threads(1);
+
+    let (cfg, state, toks) = gpt_setup("gpt_nano");
+    let batch = BatchRef::Gpt { tokens: &toks };
+    let mut ws = Workspace::new();
+    let mut cur = state;
+    let mut next = Vec::new();
+
+    // warm-up: first step allocates the arena, the next two settle the
+    // ping-pong output buffers and any second-order pool pairings
+    for step in 1..=3 {
+        train_step_into(&cfg, &cur, &batch, 1e-3, step as f32, &mut ws, &mut next).unwrap();
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    let warm_misses = ws.alloc_misses();
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for step in 4..=8 {
+        train_step_into(&cfg, &cur, &batch, 1e-3, step as f32, &mut ws, &mut next).unwrap();
+        std::mem::swap(&mut cur, &mut next);
+    }
+    let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state train_step allocated {delta} times over 5 steps"
+    );
+    assert_eq!(ws.alloc_misses(), warm_misses, "arena kept missing after warm-up");
+    assert!(cur[0].is_finite());
+
+    threadpool::set_threads(before_threads);
+}
+
+#[test]
+fn steady_state_train_grad_performs_zero_heap_allocations() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    threadpool::set_threads(1);
+
+    let (cfg, state, toks) = gpt_setup("gpt_nano");
+    let theta = state[1..1 + cfg.n_params].to_vec();
+    // shard-sized batch: the sharded backend's per-replica call shape
+    let shard = &toks[..2 * cfg.seq_len];
+    let batch = BatchRef::Gpt { tokens: shard };
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        train_grad_into(&cfg, &theta, &batch, &mut ws, &mut out).unwrap();
+    }
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..5 {
+        train_grad_into(&cfg, &theta, &batch, &mut ws, &mut out).unwrap();
+    }
+    let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state train_grad allocated {delta} times over 5 calls"
+    );
+
+    threadpool::set_threads(before_threads);
+}
+
+#[test]
+fn eval_loss_arena_misses_stabilize() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    threadpool::set_threads(1);
+
+    let (cfg, state, toks) = gpt_setup("gpt_nano");
+    let theta = &state[1..1 + cfg.n_params];
+    let batch = BatchRef::Gpt { tokens: &toks };
+    let mut ws = Workspace::new();
+    let mut first = f32::NAN;
+    for _ in 0..2 {
+        first = exec::eval_loss_ws(&cfg, theta, &batch, &mut ws).unwrap();
+    }
+    let warm = ws.alloc_misses();
+    for _ in 0..4 {
+        let l = exec::eval_loss_ws(&cfg, theta, &batch, &mut ws).unwrap();
+        assert_eq!(l.to_bits(), first.to_bits(), "eval not deterministic");
+    }
+    assert_eq!(ws.alloc_misses(), warm, "eval_loss kept allocating after warm-up");
+
+    threadpool::set_threads(before_threads);
+}
