@@ -134,9 +134,11 @@ def op_artifacts(big: ModelConfig, small: ModelConfig, *, width=True,
                  O.make_coalesce(big, small, width=width, depth=depth),
                  [("state", state_spec(big))], pair,
                  meta={"width": width, "depth": depth}),
+        # first input named "state" (the big level's), mirroring the Rust
+        # registry — the plan-parity gate diffs input names
         Artifact(f"refine__{big.name}__{small.name}{tag}", "refine",
                  O.make_refine(big, small, width=width, depth=depth),
-                 [("state_big", state_spec(big)),
+                 [("state", state_spec(big)),
                   ("state_small", state_spec(small)), scalar("alpha")],
                  pair, meta={"width": width, "depth": depth}),
     ]
@@ -144,7 +146,7 @@ def op_artifacts(big: ModelConfig, small: ModelConfig, *, width=True,
         arts.append(Artifact(
             f"refine_fit__{big.name}__{small.name}", "refine",
             O.make_refine(big, small, width=width, depth=depth, fit_depth=True),
-            [("state_big", state_spec(big)),
+            [("state", state_spec(big)),
              ("state_small", state_spec(small)), scalar("alpha")],
             pair, meta={"width": width, "depth": depth, "fit": True}))
     return arts
@@ -202,6 +204,28 @@ def distill_artifacts(student: ModelConfig, teacher: ModelConfig) -> List[Artifa
             + batch_specs(student) + [scalar("kd_w"), scalar("ce_count"),
                                       scalar("kl_rows")],
             pair, meta={"shard": "batch"}),
+    ]
+
+
+def decode_artifacts(cfg: ModelConfig) -> List[Artifact]:
+    """Incremental-decode serving pair of a causal config: ``prefill__*``
+    (padded prompt in, per-request decode records out) and
+    ``decode_step__*`` (one token + records in, updated records out).
+    Mirrors ``decode_artifacts`` in rust/src/runtime/registry.rs."""
+    assert cfg.family == "gpt"
+    rec = M.decode_rec_len(cfg)
+    theta = ("theta", _spec((M.n_params(cfg),)))
+    return [
+        Artifact(f"prefill__{cfg.name}", "prefill", M.make_prefill(cfg),
+                 [theta,
+                  ("tokens", _spec((cfg.batch, cfg.seq_len), jnp.int32)),
+                  scalar("len")],
+                 {"config": cfg.name}, meta={"shard": "batch"}),
+        Artifact(f"decode_step__{cfg.name}", "decode_step",
+                 M.make_decode_step(cfg),
+                 [theta, ("cache", _spec((cfg.batch, rec))),
+                  ("token", _spec((cfg.batch,), jnp.int32)), scalar("len")],
+                 {"config": cfg.name}, meta={"shard": "batch"}),
     ]
 
 
@@ -317,9 +341,12 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
     arts += op_artifacts(e1, e2)
 
     # elementwise state interpolation for every config (EMA folds, loss-path
-    # probes, state cloning)
+    # probes, state cloning); causal configs additionally carry the
+    # incremental-decode serving pair
     for c in list(cfgs.values()):
         arts.append(interp_artifact(c))
+        if c.family == "gpt":
+            arts += decode_artifacts(c)
 
     # de-dup by name (configs shared across experiments)
     seen, uniq = set(), []
@@ -328,6 +355,53 @@ def build_plan() -> Tuple[List[Artifact], Dict[str, ModelConfig]]:
             seen.add(a.name)
             uniq.append(a)
     return uniq, cfgs
+
+
+# ---------------------------------------------------------------------------
+# Canonical plan dump (CI plan-parity gate)
+# ---------------------------------------------------------------------------
+
+
+def _meta_value(v) -> str:
+    """Canonical scalar formatting shared with rust/src/runtime/plan.rs:
+    booleans lowercase, integral numbers without a decimal point."""
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, float) and v == int(v):
+        return str(int(v))
+    return str(v)
+
+
+def dump_plan() -> str:
+    """The canonical (config, artifact, shard-meta) table.
+
+    Must stay byte-identical to `multilevel dump-plan` (the Rust registry's
+    rendering in rust/src/runtime/plan.rs); the CI plan-parity job diffs
+    the two and fails the build on any drift.
+    """
+    arts, cfgs = build_plan()
+    lines = []
+    for name in sorted(cfgs):
+        c = cfgs[name]
+        lines.append(
+            f"config {name} family={c.family} n_layer={c.n_layer} "
+            f"n_head={c.n_head} head_dim={c.head_dim} d_model={c.d_model} "
+            f"d_ff={c.d_ff} vocab={c.vocab} seq_len={c.seq_len} "
+            f"batch={c.batch} image_size={c.image_size} "
+            f"patch_size={c.patch_size} n_classes={c.n_classes} "
+            f"n_params={M.n_params(c)}")
+    for a in sorted(arts, key=lambda a: a.name):
+        meta = ";".join(f"{k}={_meta_value(v)}"
+                        for k, v in sorted(a.meta.items())) or "-"
+        inputs = ",".join(
+            f"{n}:{s.dtype}[{'x'.join(str(dim) for dim in s.shape)}]"
+            for n, s in a.inputs)
+        small = a.configs.get("config_small") or "-"
+        lines.append(
+            f"artifact {a.name} kind={a.kind} config={a.configs['config']} "
+            f"config_small={small} meta={meta} inputs={inputs}")
+    lines.append(f"total {len(cfgs)} configs, {len(arts)} artifacts")
+    return "\n".join(lines) + "\n"
 
 
 # ---------------------------------------------------------------------------
@@ -386,8 +460,15 @@ def main() -> None:
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--only", default=None, help="regex filter on artifact names")
     ap.add_argument("--plan", action="store_true", help="print the plan and exit")
+    ap.add_argument("--dump-plan", action="store_true",
+                    help="print the canonical parity table and exit "
+                         "(diffed against `multilevel dump-plan` in CI)")
     ap.add_argument("--force", action="store_true", help="re-lower even if fresh")
     args = ap.parse_args()
+
+    if args.dump_plan:
+        sys.stdout.write(dump_plan())
+        return
 
     arts, cfgs = build_plan()
     if args.only:

@@ -190,15 +190,23 @@ def _attention(q, k, v, causal, use_pallas):
 
 
 def _block(h, blk, cfg: ModelConfig, use_pallas: bool, collect_attn: bool):
-    """One pre-LN transformer block. h: [B, S, d]."""
+    """One pre-LN transformer block. h: [B, S, d].
+
+    Returns ``(h', attn_probs, (k_rows, v_rows))``; ``attn_probs`` is None
+    unless ``collect_attn``. ``k_rows``/``v_rows`` are the pre-reshape
+    ``[B, S, d]`` projections — exactly what the decode path caches, so
+    ``make_prefill`` shares this forward instead of duplicating it.
+    """
     bsz, s, d = h.shape
     nh, hd = cfg.n_head, cfg.head_dim
     causal = cfg.family == "gpt"
 
     x = _layernorm(h, blk["ln1_w"], blk["ln1_b"], use_pallas)
+    k_rows = x @ blk["wk"] + blk["bk"]
+    v_rows = x @ blk["wv"] + blk["bv"]
     q = (x @ blk["wq"] + blk["bq"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
-    k = (x @ blk["wk"] + blk["bk"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
-    v = (x @ blk["wv"] + blk["bv"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    k = k_rows.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    v = v_rows.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
     attn_probs = None
     if collect_attn:
         scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(hd))
@@ -213,7 +221,7 @@ def _block(h, blk, cfg: ModelConfig, use_pallas: bool, collect_attn: bool):
     x = _layernorm(h, blk["ln2_w"], blk["ln2_b"], use_pallas)
     x = jax.nn.gelu(x @ blk["fc1_w"] + blk["fc1_b"])
     h = h + x @ blk["fc2_w"] + blk["fc2_b"]
-    return h, attn_probs
+    return h, attn_probs, (k_rows, v_rows)
 
 
 def _backbone(params, x_emb, cfg: ModelConfig, use_pallas: bool,
@@ -226,13 +234,13 @@ def _backbone(params, x_emb, cfg: ModelConfig, use_pallas: bool,
         h, maps = x_emb, []
         for l in range(cfg.n_layer):
             blk = {k: v[l] for k, v in blks.items()}
-            h, p = _block(h, blk, cfg, use_pallas, True)
+            h, p, _ = _block(h, blk, cfg, use_pallas, True)
             maps.append(p)
         h = _layernorm(h, params["lnf_w"], params["lnf_b"], use_pallas)
         return h, jnp.stack(maps)  # [L, B, H, S, S]
 
     def step(h, blk):
-        h, _ = _block(h, blk, cfg, use_pallas, False)
+        h, _, _ = _block(h, blk, cfg, use_pallas, False)
         return h, None
 
     h, _ = jax.lax.scan(step, x_emb, blks)
@@ -408,6 +416,114 @@ def make_attn_maps(cfg: ModelConfig):
         return maps[:, 0]  # [L, H, S, S]
 
     return attn_maps
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode (KV-cache serving path, causal families only)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_len(cfg: ModelConfig) -> int:
+    """Per-request K/V cache elements: [n_layer][2][seq_len][d_model]
+    (slot 0 = K rows, slot 1 = V rows, heads concatenated along features —
+    mirrors ``ModelCfg::kv_cache_len`` in rust/src/runtime/manifest.rs)."""
+    return cfg.n_layer * 2 * cfg.seq_len * cfg.d_model
+
+
+def decode_rec_len(cfg: ModelConfig) -> int:
+    """Per-request decode record: [next-token logits (vocab), kv cache]."""
+    return cfg.vocab + kv_cache_len(cfg)
+
+
+def make_prefill(cfg: ModelConfig):
+    """(theta[N], tokens[B,S], len) -> decode records [B, V + L*2*S*d].
+
+    Record layout per request: last-prompt-position logits (``vocab``)
+    followed by the K/V cache ``[L][2][S][d]``; cache rows at positions
+    ``>= len`` are zeroed. The forward is causal, so the padded positions
+    beyond ``len`` never influence the emitted rows — the Rust reference
+    interpreter simply computes positions ``0..len`` (semantically
+    identical, cheaper).
+    """
+    assert cfg.family == "gpt", "prefill is causal-only"
+    unravel = unravel_fn(cfg)
+    L, S = cfg.n_layer, cfg.seq_len
+
+    def prefill(theta, tokens, plen):
+        params = unravel(theta)
+        blks = {k[len("blk."):]: v for k, v in params.items()
+                if k.startswith("blk.")}
+        h = _embed_lang(params, tokens)
+        ks, vs = [], []
+        for l in range(L):
+            blk = {k: v[l] for k, v in blks.items()}
+            h, _, (k_rows, v_rows) = _block(h, blk, cfg, False, False)
+            ks.append(k_rows)
+            vs.append(v_rows)
+        h = ref.layernorm(h, params["lnf_w"], params["lnf_b"])
+        logits = h @ params["head_w"] + params["head_b"]  # [B, S, V]
+        p = plen.astype(jnp.int32)
+        logits_last = jnp.take(logits, p - 1, axis=1)  # [B, V]
+        kv = jnp.stack([jnp.stack([kl, vl]) for kl, vl in zip(ks, vs)])
+        # [L, 2, B, S, d] -> zero the unwritten positions -> [B, L*2*S*d]
+        mask = (jnp.arange(S) < p)[None, None, None, :, None]
+        kv = jnp.where(mask, kv, 0.0)
+        kv = kv.transpose(2, 0, 1, 3, 4).reshape(tokens.shape[0], -1)
+        return jnp.concatenate([logits_last, kv], axis=1)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(theta[N], cache[B, rec], token[B], len) -> updated records.
+
+    Advances every request by one token: the new token occupies position
+    ``len`` (``len < seq_len``), its K/V rows are appended to the cache,
+    and attention masks to positions ``<= len`` — prior keys/values are
+    reused, never recomputed, so one step is O(len) in sequence length.
+    """
+    assert cfg.family == "gpt", "decode_step is causal-only"
+    unravel = unravel_fn(cfg)
+    L, S, d, V = cfg.n_layer, cfg.seq_len, cfg.d_model, cfg.vocab
+    nh, hd = cfg.n_head, cfg.head_dim
+    ln = ref.layernorm  # handles the [B, d] decode activations
+
+    def decode_step(theta, cache, token, plen):
+        b = cache.shape[0]
+        params = unravel(theta)
+        blks = {k[len("blk."):]: v for k, v in params.items()
+                if k.startswith("blk.")}
+        p = plen.astype(jnp.int32)
+        kv = cache[:, V:].reshape(b, L, 2, S, d)
+        h = params["emb"][token] + jnp.take(params["pos"], p, axis=0)  # [B,d]
+        for l in range(L):
+            blk = {k: v[l] for k, v in blks.items()}
+            x1 = ln(h, blk["ln1_w"], blk["ln1_b"])
+            q = x1 @ blk["wq"] + blk["bq"]
+            kn = x1 @ blk["wk"] + blk["bk"]
+            vn = x1 @ blk["wv"] + blk["bv"]
+            kv = jax.lax.dynamic_update_slice(
+                kv, kn[:, None, None, None, :], (0, l, 0, p, 0))
+            kv = jax.lax.dynamic_update_slice(
+                kv, vn[:, None, None, None, :], (0, l, 1, p, 0))
+            kl = kv[:, l, 0].reshape(b, S, nh, hd)
+            vl = kv[:, l, 1].reshape(b, S, nh, hd)
+            qh = q.reshape(b, nh, hd)
+            scores = jnp.einsum("bhd,bshd->bhs", qh, kl)
+            scores = scores / jnp.sqrt(jnp.float32(hd))
+            mask = (jnp.arange(S) <= p)[None, None, :]
+            scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+            probs = jax.nn.softmax(scores, axis=-1)
+            att = jnp.einsum("bhs,bshd->bhd", probs, vl).reshape(b, d)
+            h = h + att @ blk["wo"] + blk["bo"]
+            x2 = ln(h, blk["ln2_w"], blk["ln2_b"])
+            h = h + jax.nn.gelu(x2 @ blk["fc1_w"] + blk["fc1_b"]) @ blk["fc2_w"] \
+                + blk["fc2_b"]
+        hf = ln(h, params["lnf_w"], params["lnf_b"])
+        logits = hf @ params["head_w"] + params["head_b"]
+        return jnp.concatenate([logits, kv.reshape(b, -1)], axis=1)
+
+    return decode_step
 
 
 # ---------------------------------------------------------------------------

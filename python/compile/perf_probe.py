@@ -65,7 +65,7 @@ def probe(name: str) -> None:
         h = x_emb
         for l in range(cfg2.n_layer):
             blk = {k: v[l] for k, v in blks.items()}
-            h, _ = model_mod._block(h, blk, cfg2, use_pallas, False)
+            h, _, _ = model_mod._block(h, blk, cfg2, use_pallas, False)
         return model_mod._layernorm(h, params["lnf_w"], params["lnf_b"], use_pallas), None
 
     model_mod._backbone = unrolled

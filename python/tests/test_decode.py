@@ -1,0 +1,91 @@
+"""Incremental-decode parity: prefill + decode_step must reproduce the
+full-sequence forward at every generated position, and the decode record
+must be exactly what a longer prefill would have produced.
+
+These are the JAX-side twins of rust/tests/test_decode.rs — the artifact
+*plan* parity is CI-gated (aot --dump-plan vs `multilevel dump-plan`);
+these tests pin the *semantics* of the Python mirror.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from compile import model as M
+from compile.configs import BASE_CONFIGS
+
+
+@pytest.fixture(scope="module")
+def gpt_setup():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    theta, _ = ravel_pytree(params)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    return cfg, params, theta, tokens
+
+
+def test_record_geometry():
+    cfg = BASE_CONFIGS["gpt_nano"]
+    assert M.kv_cache_len(cfg) == cfg.n_layer * 2 * cfg.seq_len * cfg.d_model
+    assert M.decode_rec_len(cfg) == cfg.vocab + M.kv_cache_len(cfg)
+
+
+def test_prefill_matches_full_forward(gpt_setup):
+    cfg, params, theta, tokens = gpt_setup
+    prefill = jax.jit(M.make_prefill(cfg))
+    logits_full = M.logits_fn(params, tokens, cfg, False)
+    for plen in (1, 3, cfg.seq_len):
+        rec = prefill(theta, tokens, jnp.float32(plen))
+        assert rec.shape == (cfg.batch, M.decode_rec_len(cfg))
+        np.testing.assert_allclose(
+            np.asarray(rec[:, :cfg.vocab]),
+            np.asarray(logits_full[:, plen - 1]), rtol=1e-4, atol=1e-5)
+
+
+def test_prefill_zeroes_cache_beyond_len(gpt_setup):
+    cfg, _, theta, tokens = gpt_setup
+    plen = 3
+    rec = jax.jit(M.make_prefill(cfg))(theta, tokens, jnp.float32(plen))
+    kv = np.asarray(rec[:, cfg.vocab:]).reshape(
+        cfg.batch, cfg.n_layer, 2, cfg.seq_len, cfg.d_model)
+    assert np.all(kv[:, :, :, plen:] == 0.0)
+    assert np.any(kv[:, :, :, :plen] != 0.0)
+
+
+def test_decode_chain_matches_full_forward(gpt_setup):
+    cfg, params, theta, tokens = gpt_setup
+    prefill = jax.jit(M.make_prefill(cfg))
+    decode = jax.jit(M.make_decode_step(cfg))
+    logits_full = M.logits_fn(params, tokens, cfg, False)
+    plen = 2
+    rec = prefill(theta, tokens, jnp.float32(plen))
+    for pos in range(plen, cfg.seq_len):
+        rec = decode(theta, rec, tokens[:, pos], jnp.float32(pos))
+        np.testing.assert_allclose(
+            np.asarray(rec[:, :cfg.vocab]), np.asarray(logits_full[:, pos]),
+            rtol=1e-3, atol=1e-4,
+            err_msg=f"decode logits diverged at position {pos}")
+
+
+def test_decode_record_equals_longer_prefill(gpt_setup):
+    cfg, _, theta, tokens = gpt_setup
+    prefill = jax.jit(M.make_prefill(cfg))
+    decode = jax.jit(M.make_decode_step(cfg))
+    plen = 4
+    stepped = decode(theta, prefill(theta, tokens, jnp.float32(plen)),
+                     tokens[:, plen], jnp.float32(plen))
+    longer = prefill(theta, tokens, jnp.float32(plen + 1))
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(longer),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_decode_artifacts_lower_to_hlo():
+    from compile import aot
+    cfg = BASE_CONFIGS["gpt_nano"]
+    for art in aot.decode_artifacts(cfg):
+        specs = [s for (_, s) in art.inputs]
+        text = aot.to_hlo_text(jax.jit(art.fn).lower(*specs))
+        assert "HloModule" in text

@@ -14,11 +14,74 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use multilevel::coordinator::Trainer;
-use multilevel::runtime::{init_state, Runtime};
+use multilevel::runtime::{init_state, init_theta, Arg, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::json::{arr, num, obj, s, Json};
+use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
+
+/// Prefill + steady-state `decode_step` rows for one causal config
+/// (the serving path's tokens/sec). Sharded runtimes tag their rows with
+/// `suffix` (e.g. `@r4`) and skip the prefill row — the gate tracks the
+/// sharded decode step specifically.
+fn decode_bench_rows(
+    rt: &Runtime,
+    name: &str,
+    suffix: &str,
+    budget: Duration,
+    rows: &mut Vec<(String, bench::Stats)>,
+) -> Result<()> {
+    let cfg = rt.cfg(name)?.clone();
+    let theta = init_theta(&cfg, 1);
+    let prefill = rt.exe(&format!("prefill__{name}"))?;
+    let decode = rt.exe(&format!("decode_step__{name}"))?;
+    let (b, seq) = (cfg.batch, cfg.seq_len);
+    let plen = (seq / 2).max(1);
+    let corpus = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(7);
+    let mut tokens = Vec::with_capacity(b * seq);
+    for _ in 0..b {
+        tokens.extend(corpus.sequence(seq, &mut rng));
+    }
+    let pargs = [
+        Arg::F32(&theta, vec![theta.len()]),
+        Arg::I32(&tokens, vec![b, seq]),
+        Arg::Scalar(plen as f32),
+    ];
+    let recs = rt.call(&prefill, &pargs)?; // prepare + warm
+    if suffix.is_empty() {
+        let label = format!("prefill__{name}");
+        let stats = bench::run(&label, budget, || {
+            bench::black_box(rt.call(&prefill, &pargs).unwrap());
+        });
+        println!(
+            "    -> {:.0} prompt tokens/s ({b} requests x {plen} tokens per call)",
+            (b * plen) as f64 / stats.mean.as_secs_f64()
+        );
+        rows.push((label, stats));
+    }
+    // steady-state decode: one token for every request at a fixed
+    // mid-context cache length (O(len) attention, zero-alloc arena path)
+    let next: Vec<i32> = (0..b).map(|i| tokens[i * seq + plen - 1]).collect();
+    let dargs = [
+        Arg::F32(&theta, vec![theta.len()]),
+        Arg::Buf(&recs),
+        Arg::I32(&next, vec![b]),
+        Arg::Scalar(plen as f32),
+    ];
+    bench::black_box(rt.call(&decode, &dargs)?); // warm
+    let label = format!("decode_step__{name}{suffix}");
+    let stats = bench::run(&label, budget, || {
+        bench::black_box(rt.call(&decode, &dargs).unwrap());
+    });
+    println!(
+        "    -> {:.0} tokens/s ({b} requests per step)",
+        b as f64 / stats.mean.as_secs_f64()
+    );
+    rows.push((label, stats));
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args = Args::parse();
@@ -49,6 +112,17 @@ fn main() -> Result<()> {
             state = next;
         });
         rows.push((name.clone(), stats));
+    }
+
+    // serving path: prefill throughput + steady-state decode tokens/sec
+    let decode_configs: Vec<String> = args
+        .get_or("decode-configs", "gpt_base_sim")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    for name in &decode_configs {
+        decode_bench_rows(&rt, name, "", budget, &mut rows)?;
     }
 
     // sharded train step: the data-parallel grad → all-reduce → AdamW path
@@ -91,6 +165,11 @@ fn main() -> Result<()> {
                 trainer.eval(&srt, &state).unwrap();
             });
             rows.push((label, stats));
+        }
+        // sharded decode: requests split across replicas, records
+        // concatenated back in replica order (bit-identical to serial)
+        for name in &decode_configs {
+            decode_bench_rows(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
         }
     }
 

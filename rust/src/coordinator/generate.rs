@@ -1,0 +1,291 @@
+//! Serving-path generation: drives the `prefill__*` / `decode_step__*`
+//! artifacts through a [`Runtime`] to produce tokens for a batch of
+//! requests — the first genuinely serve-shaped workload of the system.
+//!
+//! One [`Generator::generate`] call prefills `batch` prompts in a single
+//! artifact call, then advances all requests one token per `decode_step`
+//! call. The decode record buffer (`[batch, logits + kv]`, see
+//! `ModelCfg::decode_rec_len`) is carried between steps as an opaque
+//! [`Buffer`](crate::runtime::Buffer) and never copied by the driver:
+//! sampling borrows the host storage in place (`Buffer::as_host_f32`) and
+//! reads only each request's logits slice. This requires a host-resident
+//! backend (reference / sharded) — a device backend would need a
+//! logits-only readback path before `generate` could drive it.
+//!
+//! Sampling is deterministic: greedy takes the first maximal logit, and
+//! temperature sampling draws from a seeded [`Rng`] stream in fixed
+//! request order — the same seed always reproduces the same output, on any
+//! thread count and any replica count.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime};
+use crate::util::rng::Rng;
+
+/// Token-selection rule applied to each request's next-token logits.
+pub enum Sampler {
+    /// Deterministic argmax (ties break toward the lowest token id).
+    Greedy,
+    /// Softmax sampling at a temperature, drawn from a seeded RNG stream.
+    Temperature { temperature: f32, rng: Rng },
+}
+
+impl Sampler {
+    /// Greedy decoding.
+    pub fn greedy() -> Sampler {
+        Sampler::Greedy
+    }
+
+    /// Temperature sampling with its own seeded stream. `temperature` must
+    /// be positive; higher flattens the distribution.
+    pub fn temperature(temperature: f32, seed: u64) -> Result<Sampler> {
+        if temperature <= 0.0 || !temperature.is_finite() {
+            bail!("sampling temperature must be positive and finite, got {temperature}");
+        }
+        Ok(Sampler::Temperature { temperature, rng: Rng::new(seed) })
+    }
+
+    /// Pick a token id from one request's logits.
+    fn pick(&mut self, logits: &[f32]) -> usize {
+        match self {
+            Sampler::Greedy => {
+                let mut best = (0usize, f32::NEG_INFINITY);
+                for (i, &x) in logits.iter().enumerate() {
+                    if x > best.1 {
+                        best = (i, x);
+                    }
+                }
+                best.0
+            }
+            Sampler::Temperature { temperature, rng } => {
+                // stable softmax at T, then an inverse-CDF draw. Two
+                // streaming passes (normalizer, then draw) recompute the
+                // weights instead of storing them — the decode loop stays
+                // allocation-free, and both passes are the same f64 math
+                // so the draw is exact.
+                let mut max = f32::NEG_INFINITY;
+                for &x in logits {
+                    if x > max {
+                        max = x;
+                    }
+                }
+                let t = *temperature;
+                let mut total = 0.0f64;
+                for &x in logits {
+                    total += f64::from((x - max) / t).exp();
+                }
+                let mut u = rng.f64() * total;
+                for (i, &x) in logits.iter().enumerate() {
+                    u -= f64::from((x - max) / t).exp();
+                    if u <= 0.0 {
+                        return i;
+                    }
+                }
+                logits.len() - 1 // numerical tail: last token
+            }
+        }
+    }
+}
+
+/// Result of one batched generation run.
+pub struct Generation {
+    /// Generated token ids, `gen` per request.
+    pub tokens: Vec<Vec<i32>>,
+    /// Wall time of the prefill call (seconds).
+    pub prefill_secs: f64,
+    /// Wall time of the decode loop, sampling included (seconds).
+    pub decode_secs: f64,
+    /// `decode_step` calls executed (`gen - 1`: the final sampled token is
+    /// never written back).
+    pub decode_steps: usize,
+}
+
+impl Generation {
+    /// Steady-state decode throughput in tokens per second across the
+    /// whole request batch (0 when no decode step ran).
+    pub fn tokens_per_sec(&self, batch: usize) -> f64 {
+        if self.decode_steps == 0 || self.decode_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.decode_steps * batch) as f64 / self.decode_secs
+    }
+}
+
+/// Prepared generation driver for one causal config.
+pub struct Generator {
+    cfg: ModelCfg,
+    prefill: Rc<Exe>,
+    decode: Rc<Exe>,
+}
+
+impl Generator {
+    /// Prepare the decode artifacts of `config`. Errors clearly for
+    /// non-causal (BERT / ViT) configs, which have no decode artifacts.
+    pub fn new(rt: &Runtime, config: &str) -> Result<Generator> {
+        let cfg = rt.cfg(config)?.clone();
+        if cfg.family != Family::Gpt {
+            bail!(
+                "generation requires a causal (gpt) config; '{}' is {:?}",
+                cfg.name,
+                cfg.family
+            );
+        }
+        let prefill = rt.exe(&format!("prefill__{config}"))?;
+        let decode = rt.exe(&format!("decode_step__{config}"))?;
+        Ok(Generator { cfg, prefill, decode })
+    }
+
+    /// The driven config.
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    /// Generate `gen` tokens for `cfg.batch` requests sharing one prompt
+    /// length. `prompts` is `[batch, prompt_len]` row-major token ids;
+    /// the learned positions bound the total: `prompt_len + gen - 1 <=
+    /// seq_len` (the final sampled token is never written back).
+    pub fn generate(
+        &self,
+        rt: &Runtime,
+        theta: &[f32],
+        prompts: &[i32],
+        prompt_len: usize,
+        gen: usize,
+        sampler: &mut Sampler,
+    ) -> Result<Generation> {
+        let (b, s, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
+        let rec = self.cfg.decode_rec_len();
+        if theta.len() != self.cfg.n_params {
+            bail!("theta has {} elements, config {} needs {}", theta.len(), self.cfg.name,
+                  self.cfg.n_params);
+        }
+        if prompt_len == 0 || prompt_len > s {
+            bail!("prompt length {prompt_len} outside 1..={s}");
+        }
+        if prompts.len() != b * prompt_len {
+            bail!("prompts carry {} tokens, want {b} x {prompt_len}", prompts.len());
+        }
+        if gen == 0 {
+            bail!("nothing to generate (gen = 0)");
+        }
+        let max_gen = s - prompt_len + 1;
+        if gen > max_gen {
+            bail!(
+                "can generate at most {max_gen} tokens from a length-{prompt_len} prompt \
+                 ({s} learned positions); asked for {gen}"
+            );
+        }
+
+        // pad the prompts into the artifact's fixed [batch, seq_len] shape
+        // (padding ids are never read past `prompt_len`, but must be valid)
+        let mut padded = vec![0i32; b * s];
+        for bi in 0..b {
+            padded[bi * s..bi * s + prompt_len]
+                .copy_from_slice(&prompts[bi * prompt_len..(bi + 1) * prompt_len]);
+        }
+        let t0 = Instant::now();
+        let mut recs = rt.call(
+            &self.prefill,
+            &[
+                Arg::F32(theta, vec![theta.len()]),
+                Arg::I32(&padded, vec![b, s]),
+                Arg::Scalar(prompt_len as f32),
+            ],
+        )?;
+        let prefill_secs = t0.elapsed().as_secs_f64();
+
+        let mut tokens: Vec<Vec<i32>> = vec![Vec::with_capacity(gen); b];
+        let mut next = vec![0i32; b];
+        let mut decode_steps = 0usize;
+        let t1 = Instant::now();
+        for gi in 0..gen {
+            {
+                let host = recs
+                    .as_host_f32()
+                    .context("generation needs a host-resident backend")?;
+                for bi in 0..b {
+                    let tok = sampler.pick(&host[bi * rec..bi * rec + v]) as i32;
+                    next[bi] = tok;
+                    tokens[bi].push(tok);
+                }
+            }
+            if gi + 1 == gen {
+                break;
+            }
+            let len = prompt_len + gi;
+            let stepped = rt.call(
+                &self.decode,
+                &[
+                    Arg::F32(theta, vec![theta.len()]),
+                    Arg::Buf(&recs),
+                    Arg::I32(&next, vec![b]),
+                    Arg::Scalar(len as f32),
+                ],
+            )?;
+            recs = stepped;
+            decode_steps += 1;
+        }
+        Ok(Generation {
+            tokens,
+            prefill_secs,
+            decode_secs: t1.elapsed().as_secs_f64(),
+            decode_steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_first_max_and_temperature_is_seeded() {
+        let mut g = Sampler::greedy();
+        assert_eq!(g.pick(&[0.0, 3.0, 3.0, 1.0]), 1);
+        let logits = [0.0f32, 5.0, -2.0, 1.0];
+        let mut a = Sampler::temperature(0.8, 42).unwrap();
+        let mut b = Sampler::temperature(0.8, 42).unwrap();
+        let xs: Vec<usize> = (0..32).map(|_| a.pick(&logits)).collect();
+        let ys: Vec<usize> = (0..32).map(|_| b.pick(&logits)).collect();
+        assert_eq!(xs, ys, "temperature sampling not seed-reproducible");
+        assert!(xs.iter().all(|&i| i < 4));
+        assert!(Sampler::temperature(0.0, 1).is_err());
+        assert!(Sampler::temperature(f32::NAN, 1).is_err());
+    }
+
+    #[test]
+    fn generator_rejects_non_causal_configs() {
+        let rt = Runtime::reference();
+        let err = Generator::new(&rt, "bert_nano").unwrap_err().to_string();
+        assert!(err.contains("causal"), "{err}");
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_respects_context_bounds() {
+        let rt = Runtime::reference();
+        let g = Generator::new(&rt, "gpt_nano").unwrap();
+        let cfg = g.cfg().clone();
+        let theta = crate::runtime::init_theta(&cfg, 7);
+        let p = 4usize;
+        let prompts: Vec<i32> =
+            (0..cfg.batch * p).map(|i| (i % cfg.vocab) as i32).collect();
+        let gen = cfg.seq_len - p + 1; // the maximum the positions allow
+        let mut s1 = Sampler::greedy();
+        let a = g.generate(&rt, &theta, &prompts, p, gen, &mut s1).unwrap();
+        let mut s2 = Sampler::greedy();
+        let b = g.generate(&rt, &theta, &prompts, p, gen, &mut s2).unwrap();
+        assert_eq!(a.tokens, b.tokens, "greedy generation not deterministic");
+        assert_eq!(a.tokens.len(), cfg.batch);
+        assert!(a.tokens.iter().all(|t| t.len() == gen));
+        assert_eq!(a.decode_steps, gen - 1);
+        // one more token would need a position beyond the learned context
+        let err = g
+            .generate(&rt, &theta, &prompts, p, gen + 1, &mut Sampler::greedy())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at most"), "{err}");
+    }
+}

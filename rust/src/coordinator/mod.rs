@@ -6,6 +6,7 @@
 pub mod distill;
 pub mod experiment;
 pub mod finetune;
+pub mod generate;
 pub mod lora;
 pub mod metrics;
 pub mod operators;
@@ -13,6 +14,7 @@ pub mod schedule;
 pub mod trainer;
 
 pub use experiment::{Harness, Method, Run, RunOpts};
+pub use generate::{Generation, Generator, Sampler};
 pub use metrics::{savings_vs_scratch, Curve, Point, Savings};
 pub use schedule::LrSchedule;
 pub use trainer::Trainer;

@@ -5,27 +5,37 @@
 //!   train  --config C --steps N  plain single-level training
 //!   vcycle --base C --steps N    the paper's V-cycle (Algorithm 1)
 //!   exp <id|all> [--steps N]     regenerate a paper table/figure (DESIGN §6)
+//!   generate --config C          KV-cache incremental decode (serving path)
 //!   bench-step --config C        per-step latency of the train hot loop
+//!   dump-plan                    canonical registry table (CI parity gate)
 //!   list                         available experiment ids
+
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use multilevel::coordinator::{Harness, LrSchedule, Method, RunOpts, Trainer};
+use multilevel::coordinator::{Generator, Harness, LrSchedule, Method, RunOpts, Sampler,
+                              Trainer};
 use multilevel::experiments;
 use multilevel::info;
-use multilevel::runtime::{init_state, Runtime};
+use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Manifest, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::logger;
+use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
-const USAGE: &str = "usage: multilevel <info|train|vcycle|exp|bench-step|list> [options]
+const USAGE: &str =
+    "usage: multilevel <info|train|vcycle|exp|generate|bench-step|dump-plan|list> [options]
   info                          show manifest summary
   list                          list experiment ids
   train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
   vcycle --base <name> --steps <n> [--levels <k>] [--alpha <f>]
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
+  generate --config <name> [--prompt-len <p>] [--gen <n>] [--temperature <t>]
+           [--seed <n>] [--ckpt <path>]   (t = 0 -> greedy)
   bench-step --config <name> [--steps <n>]
+  dump-plan                     print the canonical (config, artifact) table
   every command also accepts:
     --replicas <R>  data-parallel sharding (defaults to $PALLAS_REPLICAS,
                     1 = unsharded)
@@ -72,7 +82,14 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "vcycle" => cmd_vcycle(&args),
         "exp" => cmd_exp(&args),
+        "generate" => cmd_generate(&args),
         "bench-step" => cmd_bench_step(&args),
+        "dump-plan" => {
+            // the built-in registry, canonically rendered — CI diffs this
+            // against `python -m compile.aot --dump-plan`
+            print!("{}", plan::plan_dump(&Manifest::builtin()));
+            Ok(())
+        }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -151,6 +168,56 @@ fn cmd_exp(args: &Args) -> Result<()> {
     };
     let rt = runtime_of(args)?;
     experiments::run(&rt, id, args)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rt = runtime_of(args)?;
+    let config = args.get("config").unwrap_or("gpt_base_sim").to_string();
+    let cfg = rt.cfg(&config)?.clone();
+    let prompt_len = args.usize_or("prompt-len", (cfg.seq_len / 4).max(1));
+    if prompt_len > cfg.seq_len {
+        bail!("--prompt-len {prompt_len} exceeds {config}'s context of {}", cfg.seq_len);
+    }
+    let gen = args.usize_or("gen", cfg.seq_len - prompt_len + 1);
+    let seed = args.u64_or("seed", 42);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    let theta = match args.get("ckpt") {
+        Some(p) => load_checkpoint(Path::new(p), &cfg)?,
+        None => init_theta(&cfg, seed),
+    };
+    // prompts drawn from the synthetic training distribution, seeded
+    let corpus = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let mut prompts = Vec::with_capacity(cfg.batch * prompt_len);
+    for _ in 0..cfg.batch {
+        prompts.extend(corpus.sequence(prompt_len, &mut rng));
+    }
+    let mut sampler = if temperature > 0.0 {
+        Sampler::temperature(temperature, seed)?
+    } else {
+        Sampler::greedy()
+    };
+    let g = Generator::new(&rt, &config)?;
+    println!("device: {}", rt.device_info());
+    let out = g.generate(&rt, &theta, &prompts, prompt_len, gen, &mut sampler)?;
+    for (bi, toks) in out.tokens.iter().enumerate() {
+        let p: Vec<String> = prompts[bi * prompt_len..(bi + 1) * prompt_len]
+            .iter()
+            .map(i32::to_string)
+            .collect();
+        let t: Vec<String> = toks.iter().map(i32::to_string).collect();
+        println!("req {bi}: {} | {}", p.join(" "), t.join(" "));
+    }
+    println!(
+        "prefill {}x{prompt_len} tokens in {:.2} ms; {} decode steps in {:.2} ms \
+         ({:.0} tokens/s steady-state)",
+        cfg.batch,
+        out.prefill_secs * 1e3,
+        out.decode_steps,
+        out.decode_secs * 1e3,
+        out.tokens_per_sec(cfg.batch),
+    );
+    Ok(())
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {

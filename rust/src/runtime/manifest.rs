@@ -87,6 +87,22 @@ impl ModelCfg {
         3 * self.n_params + 1
     }
 
+    /// Elements of one request's K/V cache in the incremental-decode path:
+    /// layout `[n_layer][2][seq_len][d_model]` (slot 0 = K rows, slot 1 = V
+    /// rows, heads concatenated along the feature axis like the forward
+    /// activations).
+    pub fn kv_cache_len(&self) -> usize {
+        self.n_layer * 2 * self.seq_len * self.d_model
+    }
+
+    /// Elements of one request's *decode record* `[logits, kv]` — the
+    /// per-request unit the `prefill__*` / `decode_step__*` artifacts
+    /// produce: next-token logits (`vocab`) followed by the K/V cache
+    /// ([`ModelCfg::kv_cache_len`]).
+    pub fn decode_rec_len(&self) -> usize {
+        self.vocab + self.kv_cache_len()
+    }
+
     pub fn param(&self, name: &str) -> Option<&ParamEntry> {
         self.layout.iter().find(|p| p.name == name)
     }
@@ -317,6 +333,23 @@ impl Manifest {
             if let Some(cs) = &art.config_small {
                 if !self.configs.contains_key(cs) {
                     bail!("artifact {name}: unknown config_small {cs}");
+                }
+            }
+            // causal-decode kinds are only well-defined for causal models:
+            // a bidirectional (BERT) or non-sequence (ViT) config has no
+            // valid KV-cache mask, so reject it here instead of producing
+            // silently wrong attention downstream
+            if matches!(art.kind.as_str(), "prefill" | "decode_step") {
+                let fam = self.configs.get(&art.config).map(|c| c.family);
+                if fam != Some(Family::Gpt) {
+                    bail!(
+                        "artifact {name}: kind '{}' requires a causal (gpt) config, \
+                         but '{}' is {:?} — incremental KV-cache decode is undefined \
+                         for non-causal attention",
+                        art.kind,
+                        art.config,
+                        fam,
+                    );
                 }
             }
         }

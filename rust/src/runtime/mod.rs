@@ -35,6 +35,7 @@ pub mod manifest;
 pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod plan;
 pub mod reference;
 pub mod registry;
 pub mod sharded;

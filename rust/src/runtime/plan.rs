@@ -1,0 +1,147 @@
+//! Canonical plan dump: the `(config, artifact, shard-meta)` table that the
+//! Rust registry and the Python AOT planner both emit, line-identical, for
+//! the CI plan-parity gate.
+//!
+//! `python/compile/aot.py --dump-plan` and `multilevel dump-plan` must
+//! produce byte-identical output; the workflow job diffs them and fails the
+//! build on any drift, replacing the old hand-verified "N configs / M
+//! artifacts" claim. Keep the format in lockstep with `aot.py::dump_plan`:
+//!
+//! ```text
+//! config <name> family=<f> n_layer=<..> ... n_params=<..>
+//! artifact <name> kind=<k> config=<c> config_small=<c|-> meta=<k=v;..|-> inputs=<n:dtype[dxd],..>
+//! total <C> configs, <A> artifacts
+//! ```
+//!
+//! Configs and artifacts are sorted by name (both sides); meta keys are
+//! sorted; booleans print `true`/`false`; integral numbers print without a
+//! decimal point.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::manifest::{ArtifactSpec, Family, InputSpec, Manifest, ModelCfg};
+
+fn family_str(f: Family) -> &'static str {
+    match f {
+        Family::Gpt => "gpt",
+        Family::Bert => "bert",
+        Family::Vit => "vit",
+    }
+}
+
+/// Canonical scalar formatting for meta values: integral floats print as
+/// integers (the Python side emits `int`s where this side stores f64).
+fn meta_value(j: &Json) -> String {
+    match j {
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) if n.fract() == 0.0 => format!("{}", *n as i64),
+        Json::Num(n) => format!("{n}"),
+        Json::Str(s) => s.clone(),
+        other => format!("{other}"),
+    }
+}
+
+fn meta_str(meta: &Json) -> String {
+    match meta.as_obj() {
+        Some(o) if !o.is_empty() => {
+            // BTreeMap iterates key-sorted, matching Python's sorted()
+            o.iter()
+                .map(|(k, v)| format!("{k}={}", meta_value(v)))
+                .collect::<Vec<_>>()
+                .join(";")
+        }
+        _ => "-".to_string(),
+    }
+}
+
+fn inputs_str(inputs: &[InputSpec]) -> String {
+    inputs
+        .iter()
+        .map(|i| {
+            let dims =
+                i.shape.iter().map(usize::to_string).collect::<Vec<_>>().join("x");
+            format!("{}:{}[{dims}]", i.name, i.dtype)
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn config_line(out: &mut String, cfg: &ModelCfg) {
+    let _ = writeln!(
+        out,
+        "config {} family={} n_layer={} n_head={} head_dim={} d_model={} d_ff={} \
+         vocab={} seq_len={} batch={} image_size={} patch_size={} n_classes={} \
+         n_params={}",
+        cfg.name,
+        family_str(cfg.family),
+        cfg.n_layer,
+        cfg.n_head,
+        cfg.head_dim,
+        cfg.d_model,
+        cfg.d_ff,
+        cfg.vocab,
+        cfg.seq_len,
+        cfg.batch,
+        cfg.image_size,
+        cfg.patch_size,
+        cfg.n_classes,
+        cfg.n_params,
+    );
+}
+
+fn artifact_line(out: &mut String, art: &ArtifactSpec) {
+    let _ = writeln!(
+        out,
+        "artifact {} kind={} config={} config_small={} meta={} inputs={}",
+        art.name,
+        art.kind,
+        art.config,
+        art.config_small.as_deref().unwrap_or("-"),
+        meta_str(&art.meta),
+        inputs_str(&art.inputs),
+    );
+}
+
+/// Render the canonical plan table of a manifest (`BTreeMap` iteration is
+/// name-sorted on both maps, matching the Python side's `sorted()`).
+pub fn plan_dump(m: &Manifest) -> String {
+    let mut out = String::new();
+    for cfg in m.configs.values() {
+        config_line(&mut out, cfg);
+    }
+    for art in m.artifacts.values() {
+        artifact_line(&mut out, art);
+    }
+    let _ = writeln!(out, "total {} configs, {} artifacts", m.configs.len(), m.artifacts.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_is_sorted_and_covers_everything() {
+        let m = Manifest::builtin();
+        let dump = plan_dump(&m);
+        let lines: Vec<&str> = dump.lines().collect();
+        let configs: Vec<&str> =
+            lines.iter().filter(|l| l.starts_with("config ")).copied().collect();
+        let arts: Vec<&str> =
+            lines.iter().filter(|l| l.starts_with("artifact ")).copied().collect();
+        assert_eq!(configs.len(), m.configs.len());
+        assert_eq!(arts.len(), m.artifacts.len());
+        let mut sorted = arts.clone();
+        sorted.sort();
+        assert_eq!(arts, sorted, "artifact lines must come out name-sorted");
+        assert!(lines.last().unwrap().starts_with("total "));
+        // spot-check canonical formatting
+        assert!(dump.contains("artifact prefill__gpt_nano kind=prefill config=gpt_nano \
+                               config_small=- meta=shard=batch"));
+        assert!(dump.contains("inputs=state:float32["), "state inputs missing");
+        let ft = arts.iter().find(|l| l.contains("ft_grad__bert_nano")).unwrap();
+        assert!(ft.contains("meta=n_classes=4;n_ft="), "meta not canonical: {ft}");
+    }
+}

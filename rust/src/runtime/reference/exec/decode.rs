@@ -1,0 +1,459 @@
+//! Incremental-decode execution: the serving-path `prefill__*` and
+//! `decode_step__*` artifacts for the causal (GPT) families.
+//!
+//! # Decode record
+//!
+//! Both artifacts produce one flat f32 *decode record* per request:
+//!
+//! ```text
+//!   rec = [ logits (vocab) | kv (n_layer · 2 · seq_len · d_model) ]
+//! ```
+//!
+//! `logits` are the next-token logits of the request's last position; `kv`
+//! is the per-layer K/V cache, layout `[layer][k=0|v=1][position][d_model]`
+//! with heads concatenated along the feature axis exactly like the forward
+//! activations. Positions `>= len` are zero.
+//!
+//! * [`prefill_into`] runs the full causal forward over the first `len`
+//!   prompt positions (reusing [`backbone_fwd`], whose per-layer caches are
+//!   precisely the K/V rows) and emits the initial records.
+//! * [`decode_step_into`] advances every request by **one token**: it
+//!   computes Q/K/V for the new position only, appends K/V to the cache and
+//!   scores attention against cached positions `0..=len` — O(len) work in
+//!   the sequence length, never a full-sequence recompute.
+//!
+//! # Determinism and allocation
+//!
+//! All scratch comes from the caller's [`Workspace`]; a steady-state
+//! `decode_step_into` performs **zero** heap allocations (probed by the
+//! counting allocator in `tests/test_decode.rs`). Kernels follow the
+//! thread-pool determinism contract, so records are bit-identical across
+//! `PALLAS_REF_THREADS`; per-request math never reads other requests'
+//! rows, so a batch-of-requests shard is bit-identical to the same
+//! requests decoded serially (the sharded backend relies on this).
+
+use anyhow::{bail, Result};
+
+use super::backbone::backbone_fwd;
+use super::kernels::{add_bias, gelu, layernorm_fwd, matmul, matmul_acc};
+use super::layout::{Dims, Offsets};
+use super::workspace::Workspace;
+use crate::runtime::manifest::{Family, ModelCfg};
+use crate::util::threadpool::{parallel_for_min, SendPtr};
+
+/// Offset of layer `l`'s K (`kv = 0`) or V (`kv = 1`) row for position `p`
+/// inside one request's record (the cache block follows the logits).
+#[inline]
+fn kv_off(cfg: &ModelCfg, l: usize, kv: usize, p: usize) -> usize {
+    cfg.vocab + ((l * 2 + kv) * cfg.seq_len + p) * cfg.d_model
+}
+
+fn require_causal(cfg: &ModelCfg, what: &str) -> Result<()> {
+    if cfg.family != Family::Gpt {
+        bail!(
+            "{what} requires a causal (gpt) config; '{}' is {:?} — incremental \
+             KV-cache decode is undefined for non-causal attention",
+            cfg.name,
+            cfg.family,
+        );
+    }
+    Ok(())
+}
+
+fn check_tokens(cfg: &ModelCfg, tokens: &[i32]) -> Result<()> {
+    if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+        bail!("token id {t} outside vocab 0..{}", cfg.vocab);
+    }
+    Ok(())
+}
+
+/// Cache-aware single-position attention for one layer: `q` holds the new
+/// position's query rows `[b, d]`, `rec_buf` the records whose layer-`l`
+/// cache already contains K/V for positions `0..=len`. Writes the attended
+/// rows into `att` (`[b, d]`). Parallel over `(request, head)` tasks; each
+/// task owns its `att` column stripe and its score scratch slot, and only
+/// positions `0..=len` are scored.
+#[allow(clippy::too_many_arguments)]
+fn decode_attention(
+    q: &[f32],
+    rec_buf: &[f32],
+    cfg: &ModelCfg,
+    l: usize,
+    len: usize,
+    b: usize,
+    scores: &mut [f32],
+    att: &mut [f32],
+) {
+    let (d, s) = (cfg.d_model, cfg.seq_len);
+    let (nh, hd) = (cfg.n_head, cfg.head_dim);
+    let rec = cfg.decode_rec_len();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let tasks = b * nh;
+    debug_assert!(scores.len() >= tasks * s);
+    let patt = SendPtr(att.as_mut_ptr());
+    let pscr = SendPtr(scores.as_mut_ptr());
+    parallel_for_min(2 * tasks * (len + 1) * hd, tasks, |task| {
+        let bi = task / nh;
+        let h = task % nh;
+        let c0 = h * hd;
+        let qrow = &q[bi * d + c0..bi * d + c0 + hd];
+        let k0 = bi * rec + kv_off(cfg, l, 0, 0);
+        let v0 = bi * rec + kv_off(cfg, l, 1, 0);
+        // SAFETY: task (bi, h) exclusively owns score slot `task` and the
+        // att columns [c0, c0+hd) of row bi.
+        let sc = unsafe { pscr.slice_mut(task * s, len + 1) };
+        let mut max = f32::NEG_INFINITY;
+        for (t, stv) in sc.iter_mut().enumerate() {
+            let krow = &rec_buf[k0 + t * d + c0..k0 + t * d + c0 + hd];
+            let mut acc = 0.0f32;
+            for j in 0..hd {
+                acc += qrow[j] * krow[j];
+            }
+            *stv = acc * scale;
+            if *stv > max {
+                max = *stv;
+            }
+        }
+        let mut denom = 0.0f32;
+        for stv in sc.iter_mut() {
+            *stv = (*stv - max).exp();
+            denom += *stv;
+        }
+        let orow = unsafe { patt.slice_mut(bi * d + c0, hd) };
+        orow.fill(0.0);
+        for (t, &stv) in sc.iter().enumerate() {
+            let p = stv / denom;
+            let vrow = &rec_buf[v0 + t * d + c0..v0 + t * d + c0 + hd];
+            for j in 0..hd {
+                orow[j] += p * vrow[j];
+            }
+        }
+    });
+}
+
+/// The `prefill__*` artifact: padded prompt tokens `[b, seq_len]` plus the
+/// shared prompt length in, one decode record per request out. Runs the
+/// causal forward over the first `len` positions only (positions `>= len`
+/// are never touched) and emits logits for position `len - 1` — the
+/// next-token distribution of the prompt — plus the K/V cache rows.
+pub fn prefill_into(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    tokens: &[i32],
+    len: usize,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    require_causal(cfg, "prefill")?;
+    if theta.len() != cfg.n_params {
+        bail!("prefill theta has {} elements, config {} needs {}", theta.len(), cfg.name,
+              cfg.n_params);
+    }
+    let s = cfg.seq_len;
+    if s == 0 || tokens.len() % s != 0 {
+        bail!("prefill token batch of {} elements is not a multiple of {s}", tokens.len());
+    }
+    let b = tokens.len() / s;
+    if b == 0 {
+        bail!("prefill needs at least one request");
+    }
+    if len == 0 || len > s {
+        bail!("prefill prompt length {len} outside 1..={s}");
+    }
+    check_tokens(cfg, tokens)?;
+
+    let off = Offsets::resolve(cfg)?;
+    // geometry with the sequence axis shrunk to the prompt: the causal
+    // forward over `len` positions is exactly the full forward's prefix
+    let dm = Dims { s: len, ..Dims::with_batch(cfg, b) };
+    let (d, v) = (dm.d, dm.v);
+
+    // embed the prompt prefix out of the padded [b, s] token block
+    let mut x0 = ws.take(dm.rows() * d);
+    for bi in 0..b {
+        for si in 0..len {
+            let tok = tokens[bi * s + si] as usize;
+            let xrow = &mut x0[(bi * len + si) * d..(bi * len + si + 1) * d];
+            let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
+            let prow = &theta[off.pos + si * d..off.pos + (si + 1) * d];
+            for j in 0..d {
+                xrow[j] = erow[j] + prow[j];
+            }
+        }
+    }
+    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+
+    // logits of each request's last position only (the [b, d] tail rows)
+    let mut xl = ws.take(b * d);
+    for bi in 0..b {
+        xl[bi * d..(bi + 1) * d]
+            .copy_from_slice(&cache.xf[(bi * len + len - 1) * d..(bi * len + len) * d]);
+    }
+    let mut logits = ws.take(b * v);
+    matmul(&mut logits, &xl, &theta[off.head_w..off.head_w + d * v], b, d, v);
+    add_bias(&mut logits, &theta[off.head_b..off.head_b + v], b, v);
+
+    // assemble the records: logits, then each layer's K/V rows 0..len
+    // (positions >= len stay zero from the resize)
+    let rec = cfg.decode_rec_len();
+    out.clear();
+    out.resize(b * rec, 0.0);
+    for bi in 0..b {
+        let r0 = bi * rec;
+        out[r0..r0 + v].copy_from_slice(&logits[bi * v..(bi + 1) * v]);
+        for (l, lc) in cache.layers.iter().enumerate() {
+            for (kvi, src) in [(0usize, &lc.k), (1, &lc.v)] {
+                let dst = r0 + kv_off(cfg, l, kvi, 0);
+                out[dst..dst + len * d].copy_from_slice(&src[bi * len * d..(bi * len + len) * d]);
+            }
+        }
+    }
+    ws.give(logits);
+    ws.give(xl);
+    cache.recycle(ws);
+    Ok(())
+}
+
+/// [`prefill_into`] with a private scratch arena (test/utility entry).
+pub fn prefill(cfg: &ModelCfg, theta: &[f32], tokens: &[i32], len: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    prefill_into(cfg, theta, tokens, len, &mut Workspace::new(), &mut out)?;
+    Ok(out)
+}
+
+/// The `decode_step__*` artifact: one new token per request, the current
+/// records, and the cache length `len` in; updated records out. The new
+/// token occupies position `len` (so `len < seq_len`), its K/V rows are
+/// appended to the cache, and attention scores positions `0..=len` only —
+/// prior keys/values are **reused, never recomputed**.
+pub fn decode_step_into(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    cache_in: &[f32],
+    token: &[i32],
+    len: usize,
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    require_causal(cfg, "decode_step")?;
+    if theta.len() != cfg.n_params {
+        bail!("decode_step theta has {} elements, config {} needs {}", theta.len(), cfg.name,
+              cfg.n_params);
+    }
+    let rec = cfg.decode_rec_len();
+    if rec == 0 || cache_in.len() % rec != 0 {
+        bail!("decode_step cache of {} elements is not a multiple of the {rec}-element \
+               record", cache_in.len());
+    }
+    let b = cache_in.len() / rec;
+    if b == 0 || token.len() != b {
+        bail!("decode_step has {} records but {} tokens", b, token.len());
+    }
+    let s = cfg.seq_len;
+    if len >= s {
+        bail!("decode position {len} exceeds the learned context ({s} positions)");
+    }
+    check_tokens(cfg, token)?;
+
+    let off = Offsets::resolve(cfg)?;
+    let (d, dff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let nh = cfg.n_head;
+
+    // the output record starts as a copy of the input cache; the new
+    // position's K/V rows and the fresh logits are written over it
+    out.clear();
+    out.extend_from_slice(cache_in);
+
+    // embed the new token at position `len`
+    let mut h = ws.take(b * d);
+    for bi in 0..b {
+        let tok = token[bi] as usize;
+        let hrow = &mut h[bi * d..(bi + 1) * d];
+        let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
+        let prow = &theta[off.pos + len * d..off.pos + (len + 1) * d];
+        for j in 0..d {
+            hrow[j] = erow[j] + prow[j];
+        }
+    }
+
+    let mut xhat = ws.take(b * d);
+    let mut rstd = ws.take(b);
+    let mut x1 = ws.take(b * d);
+    let mut q = ws.take(b * d);
+    let mut k = ws.take(b * d);
+    let mut vv = ws.take(b * d);
+    let mut att = ws.take(b * d);
+    let mut u = ws.take(b * dff);
+    let mut g = ws.take(b * dff);
+    let mut scores = ws.take(b * nh * s);
+    for l in 0..cfg.n_layer {
+        let ln1_w = &theta[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
+        let ln1_b = &theta[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
+        layernorm_fwd(&h, ln1_w, ln1_b, b, d, &mut xhat, &mut rstd, &mut x1);
+
+        matmul(&mut q, &x1, &theta[off.wq + l * d * d..off.wq + (l + 1) * d * d], b, d, d);
+        matmul(&mut k, &x1, &theta[off.wk + l * d * d..off.wk + (l + 1) * d * d], b, d, d);
+        matmul(&mut vv, &x1, &theta[off.wv + l * d * d..off.wv + (l + 1) * d * d], b, d, d);
+        add_bias(&mut q, &theta[off.bq + l * d..off.bq + (l + 1) * d], b, d);
+        add_bias(&mut k, &theta[off.bk + l * d..off.bk + (l + 1) * d], b, d);
+        add_bias(&mut vv, &theta[off.bv + l * d..off.bv + (l + 1) * d], b, d);
+
+        // append the new position's K/V rows to each request's cache
+        for bi in 0..b {
+            let r0 = bi * rec;
+            let kd = r0 + kv_off(cfg, l, 0, len);
+            out[kd..kd + d].copy_from_slice(&k[bi * d..(bi + 1) * d]);
+            let vd = r0 + kv_off(cfg, l, 1, len);
+            out[vd..vd + d].copy_from_slice(&vv[bi * d..(bi + 1) * d]);
+        }
+
+        decode_attention(&q, out, cfg, l, len, b, &mut scores, &mut att);
+
+        // attention projection + residual, then the FFN half-block
+        matmul_acc(&mut h, &att, &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d], b, d, d);
+        add_bias(&mut h, &theta[off.bo + l * d..off.bo + (l + 1) * d], b, d);
+
+        let ln2_w = &theta[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
+        let ln2_b = &theta[off.ln2_b + l * d..off.ln2_b + (l + 1) * d];
+        layernorm_fwd(&h, ln2_w, ln2_b, b, d, &mut xhat, &mut rstd, &mut x1);
+        matmul(&mut u, &x1, &theta[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff], b,
+               d, dff);
+        add_bias(&mut u, &theta[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], b, dff);
+        for i in 0..b * dff {
+            g[i] = gelu(u[i]);
+        }
+        matmul_acc(&mut h, &g, &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d],
+                   b, dff, d);
+        add_bias(&mut h, &theta[off.fc2_b + l * d..off.fc2_b + (l + 1) * d], b, d);
+    }
+
+    // final LN + next-token logits into each record's logits slot
+    let lnf_w = &theta[off.lnf_w..off.lnf_w + d];
+    let lnf_b = &theta[off.lnf_b..off.lnf_b + d];
+    layernorm_fwd(&h, lnf_w, lnf_b, b, d, &mut xhat, &mut rstd, &mut x1);
+    let mut logits = ws.take(b * v);
+    matmul(&mut logits, &x1, &theta[off.head_w..off.head_w + d * v], b, d, v);
+    add_bias(&mut logits, &theta[off.head_b..off.head_b + v], b, v);
+    for bi in 0..b {
+        out[bi * rec..bi * rec + v].copy_from_slice(&logits[bi * v..(bi + 1) * v]);
+    }
+
+    ws.give(logits);
+    ws.give(scores);
+    ws.give(g);
+    ws.give(u);
+    ws.give(att);
+    ws.give(vv);
+    ws.give(k);
+    ws.give(q);
+    ws.give(x1);
+    ws.give(rstd);
+    ws.give(xhat);
+    ws.give(h);
+    Ok(())
+}
+
+/// [`decode_step_into`] with a private scratch arena (test/utility entry).
+pub fn decode_step(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    cache_in: &[f32],
+    token: &[i32],
+    len: usize,
+) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    decode_step_into(cfg, theta, cache_in, token, len, &mut Workspace::new(), &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::params::init_theta;
+    use crate::util::rng::Rng;
+
+    fn cfg(name: &str) -> ModelCfg {
+        Manifest::builtin().cfg(name).unwrap().clone()
+    }
+
+    fn toks(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+        let c = crate::data::Corpus::new(cfg.vocab, 0);
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for _ in 0..cfg.batch {
+            out.extend(c.sequence(cfg.seq_len, &mut rng));
+        }
+        out
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_longer_prefill() {
+        // prefill(len = k) + decode_step(token at k) must agree with
+        // prefill(len = k + 1) on both logits and cache, to f32 tolerance.
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 5);
+        let tokens = toks(&cfg, 11);
+        let s = cfg.seq_len;
+        let rec = cfg.decode_rec_len();
+        for plen in [1usize, 2, s - 1] {
+            let short = prefill(&cfg, &theta, &tokens, plen).unwrap();
+            let long = prefill(&cfg, &theta, &tokens, plen + 1).unwrap();
+            let next: Vec<i32> = (0..cfg.batch).map(|bi| tokens[bi * s + plen]).collect();
+            let stepped = decode_step(&cfg, &theta, &short, &next, plen).unwrap();
+            assert_eq!(stepped.len(), cfg.batch * rec);
+            let mut max = 0.0f32;
+            for i in 0..stepped.len() {
+                max = max.max((stepped[i] - long[i]).abs());
+            }
+            assert!(max < 2e-4, "prefill({plen})+decode vs prefill({}) off by {max}",
+                    plen + 1);
+        }
+    }
+
+    #[test]
+    fn prefill_ignores_padding_beyond_len() {
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 3);
+        let tokens = toks(&cfg, 7);
+        let plen = cfg.seq_len / 2;
+        let a = prefill(&cfg, &theta, &tokens, plen).unwrap();
+        let mut scrambled = tokens.clone();
+        for bi in 0..cfg.batch {
+            for si in plen..cfg.seq_len {
+                scrambled[bi * cfg.seq_len + si] = ((si * 7 + bi) % cfg.vocab) as i32;
+            }
+        }
+        let b = prefill(&cfg, &theta, &scrambled, plen).unwrap();
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "padding tokens leaked into the prefill records");
+    }
+
+    #[test]
+    fn decode_rejects_out_of_context_and_bad_tokens() {
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 1);
+        let tokens = toks(&cfg, 2);
+        let recs = prefill(&cfg, &theta, &tokens, 2).unwrap();
+        let next = vec![0i32; cfg.batch];
+        let err = decode_step(&cfg, &theta, &recs, &next, cfg.seq_len).unwrap_err();
+        assert!(err.to_string().contains("learned context"), "{err}");
+        let bad = vec![cfg.vocab as i32; cfg.batch];
+        let err = decode_step(&cfg, &theta, &recs, &bad, 2).unwrap_err();
+        assert!(err.to_string().contains("vocab"), "{err}");
+        let err = prefill(&cfg, &theta, &tokens, cfg.seq_len + 1).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn bidirectional_configs_are_rejected() {
+        let bert = cfg("bert_nano");
+        let theta = init_theta(&bert, 1);
+        let tokens = toks(&bert, 1);
+        let err = prefill(&bert, &theta, &tokens, 2).unwrap_err().to_string();
+        assert!(err.contains("causal"), "{err}");
+        let err = decode_step(&bert, &theta, &[0.0], &[0], 0).unwrap_err().to_string();
+        assert!(err.contains("causal"), "{err}");
+    }
+}

@@ -3,8 +3,9 @@
 //! (`train_step__*`, `train_grad__*`, `eval_loss__*`, `coalesce__A__B`,
 //! `refine__A__B`, `refine_fit__A__B`, `interp__*`, `distill_step__A__B`,
 //! `distill_grad__A__B`, `ft_step__*`, `ft_grad__*`, `ft_acc__*`,
-//! `lora_step__*`, `lora_eval__*`, `attn_maps__*`, `eval_acc__*`) executes
-//! directly on the host, no XLA device or artifact files required.
+//! `lora_step__*`, `lora_eval__*`, `attn_maps__*`, `eval_acc__*`,
+//! `prefill__*`, `decode_step__*`) executes directly on the host, no XLA
+//! device or artifact files required.
 //!
 //! Semantics match Algorithms 1–4 of the paper: width/depth coalescing as
 //! averaging maps, de-coalescing + α-interpolation as their right-inverse
@@ -74,7 +75,7 @@ impl<'a> View<'a> {
 }
 
 /// Artifact kinds the reference backend interprets.
-const KINDS: [&str; 15] = [
+const KINDS: [&str; 17] = [
     "train_step",
     "train_grad",
     "eval_loss",
@@ -90,7 +91,19 @@ const KINDS: [&str; 15] = [
     "ft_acc",
     "lora_step",
     "lora_eval",
+    "prefill",
+    "decode_step",
 ];
+
+/// Parse a decode-length scalar argument: the `len` input of the
+/// `prefill`/`decode_step` artifacts must be a nonnegative integer value
+/// (it arrives as an f32 scalar for artifact-signature uniformity).
+fn scalar_len(v: f32) -> Result<usize> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        bail!("decode length must be a nonnegative integer scalar, got {v}");
+    }
+    Ok(v as usize)
+}
 
 impl ReferenceBackend {
     /// Backend over a manifest's config registry (usually
@@ -186,7 +199,22 @@ impl Backend for ReferenceBackend {
         if !KINDS.contains(&spec.kind.as_str()) {
             bail!("reference backend cannot execute artifact kind '{}'", spec.kind);
         }
-        self.cfg_of(spec).map(|_| ())
+        let cfg = self.cfg_of(spec)?;
+        // the KV-cache decode path is only well-defined under a causal mask
+        if matches!(spec.kind.as_str(), "prefill" | "decode_step")
+            && cfg.family != Family::Gpt
+        {
+            bail!(
+                "artifact '{}': kind '{}' requires a causal (gpt) config, but '{}' \
+                 is {:?} — incremental KV-cache decode is undefined for non-causal \
+                 attention",
+                spec.name,
+                spec.kind,
+                cfg.name,
+                cfg.family,
+            );
+        }
+        Ok(())
     }
 
     fn execute(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Buffer> {
@@ -407,6 +435,31 @@ impl Backend for ReferenceBackend {
                                      &mut out)?;
                 let n = out.len();
                 Ok(Buffer::host_f32(out, vec![n]))
+            }
+            "prefill" => {
+                // serving path: padded prompt in, per-request decode
+                // records ([logits, kv]) out; the request count comes from
+                // the token buffer so shards prefill with the same kernels
+                let cfg = self.cfg_of(spec)?;
+                let theta = views[0].f32s()?;
+                let tokens = views[1].i32s()?;
+                let len = scalar_len(views[2].scalar()?)?;
+                let mut out = Vec::new();
+                exec::prefill_into(cfg, theta, tokens, len, ws, &mut out)?;
+                let b = out.len() / cfg.decode_rec_len().max(1);
+                Ok(Buffer::host_f32(out, vec![b, cfg.decode_rec_len()]))
+            }
+            "decode_step" => {
+                // one token per request + records + cache length in,
+                // updated records out — O(len) per token, no recompute
+                let cfg = self.cfg_of(spec)?;
+                let theta = views[0].f32s()?;
+                let cache = views[1].f32s()?;
+                let token = views[2].i32s()?;
+                let len = scalar_len(views[3].scalar()?)?;
+                let mut out = Vec::new();
+                exec::decode_step_into(cfg, theta, cache, token, len, ws, &mut out)?;
+                Ok(Buffer::host_f32(out, vec![token.len(), cfg.decode_rec_len()]))
             }
             "lora_eval" => {
                 let cfg = self.cfg_of(spec)?;

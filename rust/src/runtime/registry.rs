@@ -565,6 +565,58 @@ fn distill_artifacts(student: &ModelCfg, teacher: &ModelCfg) -> Vec<ArtifactSpec
     ]
 }
 
+/// Incremental-decode artifacts of a causal (GPT) config: `prefill__*`
+/// (padded prompt in, per-request decode records out) and `decode_step__*`
+/// (one token + records in, updated records out). The per-request record is
+/// `[logits (vocab), kv (L·2·S·d)]` — see `ModelCfg::decode_rec_len` — so a
+/// decode step costs O(len) in sequence length, not a full-sequence forward.
+fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
+    assert_eq!(cfg.family, Family::Gpt, "decode artifacts are causal-only");
+    let theta = InputSpec {
+        name: "theta".into(),
+        dtype: "float32".into(),
+        shape: vec![cfg.n_params],
+    };
+    let rec = cfg.decode_rec_len();
+    vec![
+        spec(
+            format!("prefill__{}", cfg.name),
+            "prefill",
+            &cfg.name,
+            None,
+            vec![
+                theta.clone(),
+                InputSpec {
+                    name: "tokens".into(),
+                    dtype: "int32".into(),
+                    shape: vec![cfg.batch, cfg.seq_len],
+                },
+                scalar_input("len"),
+            ],
+            vec![cfg.batch, rec],
+            shard_meta(),
+        ),
+        spec(
+            format!("decode_step__{}", cfg.name),
+            "decode_step",
+            &cfg.name,
+            None,
+            vec![
+                theta,
+                InputSpec {
+                    name: "cache".into(),
+                    dtype: "float32".into(),
+                    shape: vec![cfg.batch, rec],
+                },
+                InputSpec { name: "token".into(), dtype: "int32".into(), shape: vec![cfg.batch] },
+                scalar_input("len"),
+            ],
+            vec![cfg.batch, rec],
+            shard_meta(),
+        ),
+    ]
+}
+
 fn lora_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
     let rn = lora_n_params(cfg, LORA_RANK);
     let st = InputSpec {
@@ -734,10 +786,14 @@ pub fn builtin_manifest() -> Manifest {
     arts.extend(model_artifacts(&e2, false, false));
     arts.extend(op_artifacts(&e1, &e2, true, true, false));
 
-    // elementwise state interpolation for every config
+    // elementwise state interpolation for every config; the causal (GPT)
+    // configs additionally carry the incremental-decode serving pair
     let all: Vec<ModelCfg> = configs.values().cloned().collect();
     for c in &all {
         arts.push(interp_artifact(c));
+        if c.family == Family::Gpt {
+            arts.extend(decode_artifacts(c));
+        }
     }
 
     // de-dup by name (configs shared across experiments)
@@ -850,6 +906,50 @@ mod tests {
         let names: Vec<&str> = dg.inputs.iter().map(|i| i.name.as_str()).collect();
         assert_eq!(&names[3..], ["kd_w", "ce_count", "kl_rows"]);
         assert_eq!(dg.output_shape, vec![gpt.n_params + 1]);
+    }
+
+    #[test]
+    fn decode_artifacts_exist_for_causal_configs_only() {
+        let m = builtin_manifest();
+        let mut gpt_configs = 0usize;
+        for cfg in m.configs.values() {
+            let p = m.artifact(&format!("prefill__{}", cfg.name));
+            let d = m.artifact(&format!("decode_step__{}", cfg.name));
+            if cfg.family == Family::Gpt {
+                gpt_configs += 1;
+                let rec = cfg.decode_rec_len();
+                assert_eq!(rec, cfg.vocab + cfg.n_layer * 2 * cfg.seq_len * cfg.d_model);
+                let p = p.unwrap();
+                assert!(p.shard_batch());
+                assert_eq!(p.output_shape, vec![cfg.batch, rec]);
+                // only the prompt tokens shard — theta stays whole
+                assert_eq!(p.batch_input_indices(cfg.batch), vec![1]);
+                let d = d.unwrap();
+                assert!(d.shard_batch());
+                assert_eq!(d.output_shape, vec![cfg.batch, rec]);
+                // the record carry and the token batch both shard
+                assert_eq!(d.batch_input_indices(cfg.batch), vec![1, 2]);
+                assert_eq!(d.inputs[3].name, "len");
+            } else {
+                assert!(p.is_err(), "{} must not have a prefill artifact", cfg.name);
+                assert!(d.is_err(), "{} must not have a decode artifact", cfg.name);
+            }
+        }
+        assert!(gpt_configs >= 5, "only {gpt_configs} causal configs found");
+    }
+
+    #[test]
+    fn manifest_rejects_decode_artifact_on_bidirectional_config() {
+        let mut m = builtin_manifest();
+        // graft a causal-decode artifact onto a BERT config by hand (the
+        // registry never emits one; an on-disk manifest could)
+        let mut bad = m.artifact("prefill__gpt_nano").unwrap().clone();
+        bad.name = "prefill__bert_nano".into();
+        bad.config = "bert_nano".into();
+        m.artifacts.insert(bad.name.clone(), bad);
+        let err = m.validate().unwrap_err().to_string();
+        assert!(err.contains("causal"), "unexpected error: {err}");
+        assert!(err.contains("bert_nano"), "unexpected error: {err}");
     }
 
     #[test]

@@ -41,6 +41,14 @@
 //! sharded backend executes it on replica 0 over just the first shard,
 //! bit-identical to the full-batch probe at a fraction of the compute.
 //!
+//! **Incremental decode** (`prefill__*` / `decode_step__*`) treats the
+//! batch axis as a batch of serving requests: requests split across
+//! replicas exactly like `eval_loss` shards, every replica emits the
+//! decode records of its requests concurrently, and the records
+//! concatenate back in replica order. Per-request decode math never reads
+//! another request's rows, so the stitched result is **bit-identical** to
+//! decoding the full batch on a single replica.
+//!
 //! Reducing gradients *before* the optimizer keeps AdamW semantics exact
 //! rather than approximate: the sharded step is tolerance-equal to the
 //! single-replica fused step (identical up to f32 summation order), and for
@@ -492,6 +500,59 @@ impl ShardedBackend {
         Ok(Some(Buffer::host_f32(vec![loss], vec![])))
     }
 
+    /// Sharded incremental decode (`prefill__*` / `decode_step__*`): the
+    /// batch of requests splits across replicas like `eval_loss`, every
+    /// replica produces the decode records of its request shard, and the
+    /// shard records concatenate back in replica order. Per-request kernel
+    /// math never reads other requests' rows, so the stitched output is
+    /// **bit-identical** to decoding the whole batch on one replica.
+    /// `None` → fall back to replica 0.
+    fn try_decode(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
+        let Some(cfg) = self.configs.get(&spec.config) else {
+            return Ok(None);
+        };
+        let r_eff = self.r_eff(cfg);
+        if r_eff <= 1 {
+            return Ok(None);
+        }
+        let Some(pc) = parse_call(spec, cfg, args) else {
+            return Ok(None);
+        };
+        // exactly theta as the whole-tensor input, plus the `len` scalar
+        if pc.passthrough.len() != 1 || pc.state.is_some() {
+            return Ok(None);
+        }
+        let Some(len) = pc.scalar("len") else {
+            return Ok(None);
+        };
+        let theta = pc.passthrough[0];
+        let rec = cfg.decode_rec_len();
+        let bounds = Self::bounds(cfg.batch, r_eff);
+        let backends = &self.replicas;
+        let shard_outs: Vec<Result<Vec<f32>>> = threadpool::partitioned(r_eff, |r| {
+            let (r0, r1) = bounds[r];
+            let mut sargs: Vec<Arg<'_>> = Vec::with_capacity(2 + pc.batch.len());
+            sargs.push(Arg::F32(theta, vec![theta.len()]));
+            Self::push_shard_args(&mut sargs, &pc.batch, r0, r1);
+            sargs.push(Arg::Scalar(len));
+            let out = take_host_f32(backends[r].execute(spec, &sargs)?)?;
+            if out.len() != (r1 - r0) * rec {
+                bail!(
+                    "{} shard {r} returned {} elements, expected {}",
+                    spec.name,
+                    out.len(),
+                    (r1 - r0) * rec
+                );
+            }
+            Ok(out)
+        });
+        let mut full = Vec::with_capacity(cfg.batch * rec);
+        for o in shard_outs {
+            full.extend_from_slice(&o?);
+        }
+        Ok(Some(Buffer::host_f32(full, vec![cfg.batch, rec])))
+    }
+
     /// Sharded attention probe: the artifact reads only batch item 0 and
     /// per-row kernels are independent of the other rows, so executing the
     /// first shard alone is bit-identical to the full batch at `1/R` the
@@ -558,7 +619,10 @@ impl Backend for ShardedBackend {
                     r.prepare(g)?;
                 }
             }
-            if matches!(spec.kind.as_str(), "eval_loss" | "attn_maps") {
+            if matches!(
+                spec.kind.as_str(),
+                "eval_loss" | "attn_maps" | "prefill" | "decode_step"
+            ) {
                 for r in &self.replicas {
                     r.prepare(spec)?;
                 }
@@ -573,6 +637,7 @@ impl Backend for ShardedBackend {
                 "train_step" | "ft_step" | "distill_step" => self.try_opt_step(spec, args)?,
                 "eval_loss" => self.try_eval(spec, args)?,
                 "attn_maps" => self.try_attn(spec, args)?,
+                "prefill" | "decode_step" => self.try_decode(spec, args)?,
                 _ => None,
             };
             if let Some(out) = sharded {

@@ -1,0 +1,275 @@
+//! Decode-parity suite for the KV-cache serving path.
+//!
+//! Contracts pinned here:
+//! * **Forward parity** — prefill + N `decode_step`s produce logits (and
+//!   cache rows) tolerance-equal to a full-sequence forward at every
+//!   generated length, for gpt_nano and gpt_base_sim.
+//! * **Thread determinism** — the whole decode chain is bit-identical for
+//!   `PALLAS_REF_THREADS` ∈ {1, 2, 4}.
+//! * **Zero allocation** — steady-state `decode_step_into` performs zero
+//!   heap allocations (counting global allocator, pool pinned to 1 thread
+//!   like `test_workspace.rs`).
+//! * **Sharded decode** — a batch of requests split across replicas
+//!   concatenates to records bit-identical to replica-0 serial decode.
+//! * **Causal-only** — BERT configs are rejected with a clear error at
+//!   every layer (manifest validation, backend prepare, kernels).
+//!
+//! Tests share the process-global thread pool and one allocation counter,
+//! so they serialize on a local mutex.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::runtime::reference::exec::{decode_step, decode_step_into, prefill, Workspace};
+use multilevel::runtime::{
+    init_theta, Arg, Backend, Manifest, ModelCfg, ReferenceBackend, Runtime,
+};
+use multilevel::util::rng::Rng;
+use multilevel::util::threadpool;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn setup(name: &str) -> (ModelCfg, Vec<f32>, Vec<i32>) {
+    let m = Manifest::builtin();
+    let cfg = m.cfg(name).unwrap().clone();
+    let theta = init_theta(&cfg, 5);
+    let c = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(11);
+    let mut toks = Vec::new();
+    for _ in 0..cfg.batch {
+        toks.extend(c.sequence(cfg.seq_len, &mut rng));
+    }
+    (cfg, theta, toks)
+}
+
+/// The incremental chain's records at every length `p0+1 ..= max_len`,
+/// starting from a prefill of `p0` prompt tokens and feeding the original
+/// sequence's tokens back in.
+fn decode_chain(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    toks: &[i32],
+    p0: usize,
+    max_len: usize,
+) -> Vec<Vec<f32>> {
+    let s = cfg.seq_len;
+    let mut recs = prefill(cfg, theta, toks, p0).unwrap();
+    let mut chain = Vec::new();
+    for pos in p0..max_len {
+        let next: Vec<i32> = (0..cfg.batch).map(|bi| toks[bi * s + pos]).collect();
+        recs = decode_step(cfg, theta, &recs, &next, pos).unwrap();
+        chain.push(recs.clone());
+    }
+    chain
+}
+
+#[test]
+fn incremental_decode_matches_full_forward_at_every_length() {
+    let _g = lock();
+    for name in ["gpt_nano", "gpt_base_sim"] {
+        let (cfg, theta, toks) = setup(name);
+        let s = cfg.seq_len;
+        let rec = cfg.decode_rec_len();
+        let p0 = 2usize;
+        let chain = decode_chain(&cfg, &theta, &toks, p0, s);
+        for (i, got) in chain.iter().enumerate() {
+            // the oracle: a fresh full-sequence causal forward at this
+            // length (prefill *is* the batched forward — backbone_fwd —
+            // emitting last-position logits and all K/V rows)
+            let want = prefill(&cfg, &theta, &toks, p0 + i + 1).unwrap();
+            assert_eq!(got.len(), cfg.batch * rec);
+            let mut max = 0.0f32;
+            for j in 0..got.len() {
+                max = max.max((got[j] - want[j]).abs());
+            }
+            assert!(
+                max < 2e-4,
+                "{name}: incremental records at length {} deviate from the \
+                 full forward by {max}",
+                p0 + i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_chain_is_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let (cfg, theta, toks) = setup("gpt_base_sim");
+    let mut want: Option<Vec<Vec<u32>>> = None;
+    for threads in [1usize, 2, 4] {
+        threadpool::set_threads(threads);
+        let chain = decode_chain(&cfg, &theta, &toks, 3, cfg.seq_len.min(3 + 6));
+        let got: Vec<Vec<u32>> = chain.iter().map(|r| bits(r)).collect();
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(
+                &got, w,
+                "decode chain changed bits at {threads} kernel threads"
+            ),
+        }
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
+fn steady_state_decode_step_performs_zero_heap_allocations() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    threadpool::set_threads(1);
+
+    let (cfg, theta, toks) = setup("gpt_nano");
+    let plen = cfg.seq_len / 2;
+    let mut ws = Workspace::new();
+    let mut cur = Vec::new();
+    multilevel::runtime::reference::exec::prefill_into(
+        &cfg, &theta, &toks, plen, &mut ws, &mut cur,
+    )
+    .unwrap();
+    let next: Vec<i32> = (0..cfg.batch).map(|bi| toks[bi * cfg.seq_len + plen]).collect();
+    let mut out = Vec::new();
+    // warm-up: settle the arena pools and the ping-pong record buffers
+    for _ in 0..3 {
+        decode_step_into(&cfg, &theta, &cur, &next, plen, &mut ws, &mut out).unwrap();
+        std::mem::swap(&mut cur, &mut out);
+    }
+    let warm_misses = ws.alloc_misses();
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..5 {
+        decode_step_into(&cfg, &theta, &cur, &next, plen, &mut ws, &mut out).unwrap();
+        std::mem::swap(&mut cur, &mut out);
+    }
+    let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(delta, 0, "steady-state decode_step allocated {delta} times over 5 steps");
+    assert_eq!(ws.alloc_misses(), warm_misses, "decode arena kept missing after warm-up");
+
+    threadpool::set_threads(before_threads);
+}
+
+#[test]
+fn sharded_request_decode_is_bit_identical_to_serial() {
+    let _g = lock();
+    let (cfg, theta, toks) = setup("gpt_base_sim");
+    let (b, s) = (cfg.batch, cfg.seq_len);
+    let plen = 4usize;
+
+    let run = |rt: &Runtime| -> (Vec<f32>, Vec<f32>) {
+        let pf = rt.exe("prefill__gpt_base_sim").unwrap();
+        let dc = rt.exe("decode_step__gpt_base_sim").unwrap();
+        let recs = rt
+            .call(
+                &pf,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::I32(&toks, vec![b, s]),
+                    Arg::Scalar(plen as f32),
+                ],
+            )
+            .unwrap();
+        let next: Vec<i32> = (0..b).map(|bi| toks[bi * s + plen]).collect();
+        let stepped = rt
+            .call(
+                &dc,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::Buf(&recs),
+                    Arg::I32(&next, vec![b]),
+                    Arg::Scalar(plen as f32),
+                ],
+            )
+            .unwrap();
+        (rt.read_f32(&recs).unwrap(), rt.read_f32(&stepped).unwrap())
+    };
+
+    let serial = Runtime::reference();
+    let (want_pre, want_step) = run(&serial);
+    assert_eq!(want_pre.len(), b * cfg.decode_rec_len());
+    // R = 3 exercises uneven request shards (8 = 2 + 3 + 3)
+    for r in [2usize, 3, 4] {
+        let rt = Runtime::sharded(r);
+        let (got_pre, got_step) = run(&rt);
+        assert_eq!(
+            bits(&got_pre),
+            bits(&want_pre),
+            "sharded prefill (R={r}) diverged from serial decode"
+        );
+        assert_eq!(
+            bits(&got_step),
+            bits(&want_step),
+            "sharded decode_step (R={r}) diverged from serial decode"
+        );
+    }
+}
+
+#[test]
+fn generation_is_identical_across_replica_counts() {
+    let _g = lock();
+    use multilevel::coordinator::{Generator, Sampler};
+    let (cfg, theta, toks) = setup("gpt_nano");
+    let plen = 4usize;
+    let prompts: Vec<i32> = (0..cfg.batch)
+        .flat_map(|bi| toks[bi * cfg.seq_len..bi * cfg.seq_len + plen].to_vec())
+        .collect();
+    let gen = cfg.seq_len - plen;
+    let mut outs = Vec::new();
+    for r in [1usize, 2, 4] {
+        let rt = Runtime::sharded(r);
+        let g = Generator::new(&rt, "gpt_nano").unwrap();
+        let mut sampler = Sampler::temperature(0.7, 99).unwrap();
+        let out = g.generate(&rt, &theta, &prompts, plen, gen, &mut sampler).unwrap();
+        outs.push(out.tokens);
+    }
+    assert_eq!(outs[0], outs[1], "generation differs between R=1 and R=2");
+    assert_eq!(outs[0], outs[2], "generation differs between R=1 and R=4");
+    assert!(outs[0].iter().all(|t| t.len() == gen));
+}
+
+#[test]
+fn backend_rejects_decode_artifacts_for_bidirectional_configs() {
+    let _g = lock();
+    let m = Manifest::builtin();
+    let be = ReferenceBackend::new(&m);
+    // graft the causal artifact onto a BERT config (an on-disk manifest
+    // could claim this; the backend must refuse rather than mis-mask)
+    let mut bad = m.artifact("decode_step__gpt_nano").unwrap().clone();
+    bad.name = "decode_step__bert_nano".into();
+    bad.config = "bert_nano".into();
+    let err = be.prepare(&bad).unwrap_err().to_string();
+    assert!(err.contains("causal"), "unexpected prepare error: {err}");
+    assert!(err.contains("bert_nano"), "unexpected prepare error: {err}");
+}
