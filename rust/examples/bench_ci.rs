@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use multilevel::coordinator::Trainer;
-use multilevel::runtime::{init_state, init_theta, Arg, Runtime};
+use multilevel::runtime::{init_state, init_theta, Arg, Checkpoint, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::json::{arr, num, obj, s, Json};
@@ -112,6 +112,37 @@ fn main() -> Result<()> {
             state = next;
         });
         rows.push((name.clone(), stats));
+    }
+
+    // checkpoint save + load round trip on the full gpt_base_sim state:
+    // atomic write (tmp + fsync + rename), then parse + CRC verify — the
+    // fixed cost a kill-and-resume run pays at every snapshot cadence
+    {
+        let cfg = rt.cfg("gpt_base_sim")?.clone();
+        let host = init_state(&rt, &cfg, 1)?.to_host(&rt)?;
+        let dir = multilevel::util::tmp::TempDir::new("bench_ckpt");
+        let path = dir.file("bench.ckpt");
+        let ck = Checkpoint {
+            kind: "train".into(),
+            config: cfg.name.clone(),
+            n_params: cfg.n_params,
+            level: 1,
+            phase: 1,
+            step: 1,
+            flops: 0.0,
+            replicas: 1,
+            seed: 1,
+            stream_cursor: [1, 2, 3, 4],
+            extra: Json::Null,
+            vectors: vec![("state".into(), host)],
+        };
+        ck.save(&path)?; // warm (creates the file once)
+        let label = "ckpt_save_load__gpt_base_sim";
+        let stats = bench::run(label, budget, || {
+            ck.save(&path).unwrap();
+            bench::black_box(Checkpoint::load(&path).unwrap());
+        });
+        rows.push((label.to_string(), stats));
     }
 
     // serving path: prefill throughput + steady-state decode tokens/sec

@@ -1,0 +1,765 @@
+//! V-cycle-aware checkpoint/resume: the [`CheckpointManager`] cadence policy
+//! plus resumable drivers for plain training, the full V-cycle and the
+//! fine-tuning probes.
+//!
+//! The determinism contract (pinned by `tests/test_checkpoint.rs`): running
+//! `2N` steps equals running `N` steps, checkpointing, reloading and running
+//! `N` more — **bit-identical**, including mid-V-cycle across
+//! coalesce/refine boundaries and for any fixed replica count. Three things
+//! make that possible:
+//!
+//! 1. every RNG stream consumed by training (the batcher/vision/probe
+//!    generators) exposes its exact 256-bit cursor, saved per checkpoint;
+//! 2. the V-cycle driver here is an explicit phase table that mirrors
+//!    [`Harness::run_vcycle`] seed-for-seed (trainer for 1-based phase `p`
+//!    is seeded `opts.seed ^ ((p-1) << 8)`, schedules and budgets use the
+//!    same formulas), so a fresh resumable run reproduces the harness and a
+//!    resumed one reproduces the fresh run;
+//! 3. a checkpoint records the replica topology and the full run
+//!    configuration, and `resume` fails closed on any mismatch before
+//!    touching trainer state.
+//!
+//! [`Harness::run_vcycle`]: crate::coordinator::Harness
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::experiment::{level_cfg, RunOpts};
+use crate::coordinator::operators;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::Trainer;
+use crate::data::glue_sim::ProbeGen;
+use crate::info;
+use crate::runtime::checkpoint::{crc32, extra_obj, hex_u64, u64_hex, Checkpoint};
+use crate::runtime::{init_state, state_from_host, Arg, Runtime, State};
+use crate::util::json::{arr, num, s, Json};
+
+/// Cursor value meaning "phase not started — use a fresh trainer stream"
+/// (the all-zero state is not a valid xoshiro cursor, so it is unambiguous).
+const FRESH_STREAM: [u64; 4] = [0; 4];
+
+/// Snapshot policy + directory layout for one run.
+///
+/// `latest.ckpt` is always the most recent snapshot (written atomically, so
+/// it is valid even if the process dies mid-save); with history enabled each
+/// snapshot is also kept as `ckpt_p{phase}_s{step}.ckpt` for resuming from
+/// arbitrary points (the test suite resumes mid-level and at boundaries).
+#[derive(Debug, Clone)]
+pub struct CheckpointManager {
+    dir: PathBuf,
+    every: usize,
+    history: bool,
+}
+
+impl CheckpointManager {
+    /// Snapshot into `dir` every `every` steps (0 = only phase boundaries)
+    /// plus at every V-cycle level/phase boundary. Creates `dir`.
+    pub fn new(dir: impl Into<PathBuf>, every: usize) -> Result<CheckpointManager> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointManager { dir, every, history: false })
+    }
+
+    /// Also keep every snapshot as `ckpt_p{phase}_s{step}.ckpt`.
+    pub fn with_history(mut self, keep: bool) -> CheckpointManager {
+        self.history = keep;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The always-current snapshot `--resume` loads.
+    pub fn latest_path(&self) -> PathBuf {
+        self.dir.join("latest.ckpt")
+    }
+
+    /// Is an in-phase snapshot due after completing `step` (1-based)?
+    pub fn due(&self, step: usize) -> bool {
+        self.every > 0 && step % self.every == 0
+    }
+
+    /// Atomically write `latest.ckpt` (and the history copy when enabled).
+    pub fn save(&self, ck: &Checkpoint) -> Result<()> {
+        let latest = self.latest_path();
+        ck.save(&latest)?;
+        if self.history {
+            let name = format!("ckpt_p{:02}_s{:05}.ckpt", ck.phase, ck.step);
+            std::fs::copy(&latest, self.dir.join(&name))
+                .with_context(|| format!("copying history snapshot {name}"))?;
+        }
+        Ok(())
+    }
+
+    /// Load `latest.ckpt`. A missing file is `Ok(None)` (first run of a
+    /// kill-and-resume loop); a present-but-corrupt file is a hard error.
+    pub fn load_latest(&self) -> Result<Option<Checkpoint>> {
+        let p = self.latest_path();
+        if !p.exists() {
+            return Ok(None);
+        }
+        Checkpoint::load(&p).map(Some)
+    }
+
+    /// History snapshots, sorted by (phase, step) — the file-name order.
+    pub fn history_files(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with("ckpt_p") && name.ends_with(".ckpt") {
+                out.push(path);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+fn expect_field(extra: &Json, key: &str, want: f64) -> Result<()> {
+    let got = extra
+        .get(key)
+        .as_f64()
+        .with_context(|| format!("checkpoint is missing run field '{key}'"))?;
+    if got != want {
+        bail!("checkpoint run mismatch: '{key}' is {got} in the checkpoint, {want} in this run");
+    }
+    Ok(())
+}
+
+fn expect_replicas(rt: &Runtime, ck: &Checkpoint) -> Result<()> {
+    let here = rt.shard_topology().0;
+    if ck.replicas != here {
+        bail!(
+            "checkpoint was written with {} replica(s) but this runtime has {} — \
+             resume with --replicas {} (or PALLAS_REPLICAS={}) to reproduce the \
+             shard splits and all-reduce order",
+            ck.replicas,
+            here,
+            ck.replicas,
+            ck.replicas
+        );
+    }
+    Ok(())
+}
+
+fn host_state(rt: &Runtime, state: &State) -> Result<Vec<f32>> {
+    state.to_host(rt)
+}
+
+fn state_with_flops(rt: &Runtime, cfg_name: &str, host: &[f32], flops: f64) -> Result<State> {
+    let cfg = rt.cfg(cfg_name)?;
+    let mut st = state_from_host(rt, cfg, host)?;
+    st.flops = flops;
+    Ok(st)
+}
+
+// ---------------------------------------------------------------------------
+// Plain training
+// ---------------------------------------------------------------------------
+
+/// Resumable single-config training: `init_state(seed)`, trainer stream
+/// `seed ^ 1`, warmup `(steps/10).max(1)` — exactly the `train` subcommand's
+/// loop, so fresh runs match the historical CLI bit-for-bit.
+///
+/// With a manager, snapshots land every `every` steps and at completion;
+/// with a resume checkpoint, training continues from the recorded step with
+/// the recorded batch-stream cursor. Returns the final state and last loss.
+#[allow(clippy::too_many_arguments)]
+pub fn train_resumable(
+    rt: &Runtime,
+    cfg_name: &str,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+    domain: u64,
+    val_batches: usize,
+    mgr: Option<&CheckpointManager>,
+    resume: Option<Checkpoint>,
+) -> Result<(State, f32)> {
+    let cfg = rt.cfg(cfg_name)?.clone();
+    let sched = LrSchedule::new((steps / 10).max(1), lr, steps);
+    let mut trainer = Trainer::new(rt, cfg_name, domain, seed ^ 1, val_batches)?;
+
+    let (mut state, start) = match resume {
+        None => (init_state(rt, &cfg, seed)?, 0),
+        Some(ck) => {
+            if ck.kind != "train" {
+                bail!("checkpoint is a '{}' checkpoint, expected 'train'", ck.kind);
+            }
+            if ck.config != cfg.name || ck.n_params != cfg.n_params {
+                bail!(
+                    "checkpoint is for config '{}' ({} params), expected '{}' ({})",
+                    ck.config,
+                    ck.n_params,
+                    cfg.name,
+                    cfg.n_params
+                );
+            }
+            expect_replicas(rt, &ck)?;
+            if ck.seed != seed {
+                bail!("checkpoint seed {:#x} != run seed {seed:#x}", ck.seed);
+            }
+            expect_field(&ck.extra, "steps", steps as f64)?;
+            expect_field(&ck.extra, "lr", lr as f64)?;
+            if hex_u64(ck.extra.get("domain")).context("checkpoint 'domain'")? != domain {
+                bail!("checkpoint domain differs from this run's --domain");
+            }
+            if ck.step > steps {
+                bail!("checkpoint is at step {} of a {steps}-step run", ck.step);
+            }
+            let host = ck
+                .vector("state")
+                .with_context(|| "checkpoint has no 'state' vector".to_string())?;
+            let st = state_with_flops(rt, cfg_name, host, ck.flops)?;
+            if ck.stream_cursor != FRESH_STREAM {
+                trainer.set_stream_cursor(ck.stream_cursor);
+            }
+            info!("resumed {} at step {}/{steps}", cfg.name, ck.step);
+            (st, ck.step)
+        }
+    };
+
+    let mut last_loss = state.loss(rt)?;
+    for step in start + 1..=steps {
+        let (st, loss) = trainer.step(rt, &state, sched.lr(step), step)?;
+        state = st;
+        last_loss = loss;
+        if let Some(m) = mgr {
+            if m.due(step) || step == steps {
+                let ck = Checkpoint {
+                    kind: "train".into(),
+                    config: cfg.name.clone(),
+                    n_params: cfg.n_params,
+                    level: 1,
+                    phase: 1,
+                    step,
+                    flops: state.flops,
+                    replicas: rt.shard_topology().0,
+                    seed,
+                    stream_cursor: trainer.stream_cursor(),
+                    extra: extra_obj(vec![
+                        ("domain", u64_hex(domain)),
+                        ("lr", num(lr as f64)),
+                        ("steps", num(steps as f64)),
+                    ]),
+                    vectors: vec![("state".into(), host_state(rt, &state)?)],
+                };
+                m.save(&ck)?;
+            }
+        }
+    }
+    Ok((state, last_loss))
+}
+
+// ---------------------------------------------------------------------------
+// V-cycle
+// ---------------------------------------------------------------------------
+
+/// What happens to the state after a phase's training steps complete.
+enum Transition {
+    /// Descend: coalesce `from` → `to`, pushing the pre-coalesce state.
+    Coalesce { from: String, to: String },
+    /// Ascend: pop the saved `big` state and refine with the current `small`.
+    Refine { big: String, small: String },
+    /// Final phase: nothing follows.
+    Done,
+}
+
+struct PhaseSpec {
+    /// Config trained during this phase.
+    cfg: String,
+    /// V-cycle level of `cfg` (1 = finest).
+    level: usize,
+    steps: usize,
+    sched: LrSchedule,
+    after: Transition,
+}
+
+fn sched_of(opts: &RunOpts, steps: usize) -> LrSchedule {
+    LrSchedule::new(opts.warmup.min(steps / 2), opts.peak_lr, steps)
+}
+
+/// The explicit phase table of [`Harness::run_vcycle`]'s program: `levels-1`
+/// descend phases (E_a steps each, then coalesce), `levels-1` ascend phases
+/// (E_small steps each, then refine), one final phase on the base config.
+///
+/// [`Harness::run_vcycle`]: crate::coordinator::Harness
+fn vcycle_plan(opts: &RunOpts, levels: usize) -> Result<Vec<PhaseSpec>> {
+    if levels < 2 {
+        bail!("V-cycle needs >= 2 levels");
+    }
+    let base = &opts.base;
+    let e_a = opts.warmup;
+    let e_small = opts.e_small();
+    let mut plan = Vec::with_capacity(2 * levels - 1);
+    for l in 1..levels {
+        plan.push(PhaseSpec {
+            cfg: level_cfg(base, l),
+            level: l,
+            steps: e_a,
+            sched: sched_of(opts, opts.total_steps),
+            after: Transition::Coalesce {
+                from: level_cfg(base, l),
+                to: level_cfg(base, l + 1),
+            },
+        });
+    }
+    for l in (2..=levels).rev() {
+        plan.push(PhaseSpec {
+            cfg: level_cfg(base, l),
+            level: l,
+            steps: e_small,
+            sched: sched_of(opts, e_small),
+            after: Transition::Refine {
+                big: level_cfg(base, l - 1),
+                small: level_cfg(base, l),
+            },
+        });
+    }
+    let max = (opts.total_steps as f64 * opts.budget_mult) as usize;
+    let budget = max.saturating_sub(e_a * (levels - 1)).max(1);
+    plan.push(PhaseSpec {
+        cfg: base.clone(),
+        level: 1,
+        steps: budget,
+        sched: sched_of(opts, budget),
+        after: Transition::Done,
+    });
+    Ok(plan)
+}
+
+/// Saved-stack entries expected at a checkpoint in 1-based phase `p`.
+fn expected_saved(levels: usize, p: usize) -> usize {
+    if p < levels {
+        p - 1
+    } else {
+        2 * levels - 1 - p
+    }
+}
+
+fn vcycle_extra(opts: &RunOpts, levels: usize, saved: &[State]) -> Json {
+    extra_obj(vec![
+        ("alpha", num(opts.alpha as f64)),
+        ("base", s(&opts.base)),
+        ("budget_mult", num(opts.budget_mult)),
+        ("domain", u64_hex(opts.domain)),
+        ("levels", num(levels as f64)),
+        ("peak_lr", num(opts.peak_lr as f64)),
+        ("saved_flops", arr(saved.iter().map(|st| num(st.flops)).collect())),
+        ("total_steps", num(opts.total_steps as f64)),
+        ("warmup", num(opts.warmup as f64)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn vcycle_snapshot(
+    rt: &Runtime,
+    opts: &RunOpts,
+    levels: usize,
+    spec: &PhaseSpec,
+    phase: usize,
+    step: usize,
+    cursor: [u64; 4],
+    state: &State,
+    saved: &[State],
+    mgr: &CheckpointManager,
+) -> Result<()> {
+    let cfg = rt.cfg(&spec.cfg)?;
+    let mut vectors = vec![("state".to_string(), host_state(rt, state)?)];
+    for (j, st) in saved.iter().enumerate() {
+        vectors.push((format!("saved{j}"), host_state(rt, st)?));
+    }
+    mgr.save(&Checkpoint {
+        kind: "vcycle".into(),
+        config: cfg.name.clone(),
+        n_params: cfg.n_params,
+        level: spec.level,
+        phase,
+        step,
+        flops: state.flops,
+        replicas: rt.shard_topology().0,
+        seed: opts.seed,
+        stream_cursor: cursor,
+        extra: vcycle_extra(opts, levels, saved),
+        vectors,
+    })
+}
+
+/// Validate a V-cycle checkpoint against this run and rebuild the driver
+/// position: (1-based phase, completed steps, state, saved stack, cursor).
+fn vcycle_restore(
+    rt: &Runtime,
+    opts: &RunOpts,
+    levels: usize,
+    plan: &[PhaseSpec],
+    ck: Checkpoint,
+) -> Result<(usize, usize, State, Vec<State>, [u64; 4])> {
+    if ck.kind != "vcycle" {
+        bail!("checkpoint is a '{}' checkpoint, expected 'vcycle'", ck.kind);
+    }
+    expect_replicas(rt, &ck)?;
+    if ck.seed != opts.seed {
+        bail!("checkpoint seed {:#x} != run seed {:#x}", ck.seed, opts.seed);
+    }
+    let x = &ck.extra;
+    if x.get("base").as_str() != Some(opts.base.as_str()) {
+        bail!(
+            "checkpoint is a V-cycle over '{}', this run is over '{}'",
+            x.get("base").as_str().unwrap_or("?"),
+            opts.base
+        );
+    }
+    expect_field(x, "levels", levels as f64)?;
+    expect_field(x, "total_steps", opts.total_steps as f64)?;
+    expect_field(x, "warmup", opts.warmup as f64)?;
+    expect_field(x, "alpha", opts.alpha as f64)?;
+    expect_field(x, "peak_lr", opts.peak_lr as f64)?;
+    expect_field(x, "budget_mult", opts.budget_mult)?;
+    if hex_u64(x.get("domain")).context("checkpoint 'domain'")? != opts.domain {
+        bail!("checkpoint domain differs from this run's domain");
+    }
+    if ck.phase == 0 || ck.phase > plan.len() {
+        bail!("checkpoint phase {} outside plan of {} phases", ck.phase, plan.len());
+    }
+    let spec = &plan[ck.phase - 1];
+    if ck.config != spec.cfg {
+        bail!(
+            "checkpoint phase {} trains '{}' but plan expects '{}'",
+            ck.phase,
+            ck.config,
+            spec.cfg
+        );
+    }
+    if ck.step > spec.steps {
+        bail!("checkpoint is at step {} of a {}-step phase", ck.step, spec.steps);
+    }
+    let want_saved = expected_saved(levels, ck.phase);
+    let saved_flops = x.get("saved_flops").as_arr().unwrap_or(&[]).to_vec();
+    if saved_flops.len() != want_saved {
+        bail!(
+            "checkpoint carries {} saved level states, phase {} needs {}",
+            saved_flops.len(),
+            ck.phase,
+            want_saved
+        );
+    }
+    let cfg = rt.cfg(&spec.cfg)?;
+    let host = ck.vector("state").context("checkpoint has no 'state' vector")?;
+    if host.len() != cfg.state_len() {
+        bail!("checkpoint state has {} values, '{}' needs {}", host.len(), cfg.name, cfg.state_len());
+    }
+    let state = state_with_flops(rt, &spec.cfg, host, ck.flops)?;
+    let mut saved = Vec::with_capacity(want_saved);
+    for j in 0..want_saved {
+        let name = format!("saved{j}");
+        let cfg_j = level_cfg(&opts.base, j + 1);
+        let v = ck
+            .vector(&name)
+            .with_context(|| format!("checkpoint missing saved vector '{name}'"))?;
+        if v.len() != rt.cfg(&cfg_j)?.state_len() {
+            bail!("saved vector '{name}' has {} values, '{cfg_j}' needs {}", v.len(),
+                  rt.cfg(&cfg_j)?.state_len());
+        }
+        let flops = saved_flops[j].as_f64().context("bad saved_flops entry")?;
+        saved.push(state_with_flops(rt, &cfg_j, v, flops)?);
+    }
+    info!(
+        "resumed V-cycle over {} at phase {}/{} step {}/{}",
+        opts.base,
+        ck.phase,
+        plan.len(),
+        ck.step,
+        spec.steps
+    );
+    Ok((ck.phase, ck.step, state, saved, ck.stream_cursor))
+}
+
+/// Resumable V-cycle (Algorithm 1), bit-identical to
+/// [`Harness::run_vcycle`]'s `Method::VCycle { fit: false }` program: the
+/// same init seed (`opts.seed ^ 1`), per-phase trainer seeds, schedules,
+/// E_a/E_small split and final budget. With a manager it snapshots at the
+/// step cadence and after every coalesce/refine boundary; with a resume
+/// checkpoint it continues from the recorded phase/step.
+///
+/// [`Harness::run_vcycle`]: crate::coordinator::Harness
+pub fn run_vcycle_resumable(
+    rt: &Runtime,
+    opts: &RunOpts,
+    levels: usize,
+    mgr: Option<&CheckpointManager>,
+    resume: Option<Checkpoint>,
+) -> Result<State> {
+    let plan = vcycle_plan(opts, levels)?;
+    let (first_phase, done, mut state, mut saved, cursor) = match resume {
+        None => {
+            let st = init_state(rt, rt.cfg(&opts.base)?, opts.seed ^ 1)?;
+            (1, 0, st, Vec::new(), FRESH_STREAM)
+        }
+        Some(ck) => vcycle_restore(rt, opts, levels, &plan, ck)?,
+    };
+
+    for (idx, spec) in plan.iter().enumerate().skip(first_phase - 1) {
+        let phase = idx + 1; // 1-based, matching Run::phase after drive()
+        let mut trainer = Trainer::new(
+            rt,
+            &spec.cfg,
+            opts.domain,
+            opts.seed ^ ((phase as u64 - 1) << 8),
+            opts.val_batches,
+        )?;
+        // `done`/`cursor` position the run inside the phase we resumed into;
+        // every later phase starts from scratch with a fresh stream.
+        let start = if phase == first_phase { done } else { 0 };
+        if phase == first_phase && cursor != FRESH_STREAM {
+            trainer.set_stream_cursor(cursor);
+        }
+        for step in start + 1..=spec.steps {
+            let (st, loss) = trainer.step(rt, &state, spec.sched.lr(step), step)?;
+            state = st;
+            if step % opts.eval_every == 0 || step == spec.steps {
+                info!("phase {phase} [{}] step {step}/{} loss {loss:.4}", spec.cfg, spec.steps);
+            }
+            if let Some(m) = mgr {
+                if m.due(step) && step < spec.steps {
+                    vcycle_snapshot(
+                        rt, opts, levels, spec, phase, step,
+                        trainer.stream_cursor(), &state, &saved, m,
+                    )?;
+                }
+            }
+        }
+        match &spec.after {
+            Transition::Coalesce { from, to } => {
+                let st = operators::coalesce(rt, from, to, &state)?;
+                saved.push(std::mem::replace(&mut state, st));
+            }
+            Transition::Refine { big, small } => {
+                let big_state = saved.pop().expect("saved state per level");
+                state = operators::refine(rt, big, small, &big_state, &state, opts.alpha, false)?;
+            }
+            Transition::Done => {}
+        }
+        if let Some(m) = mgr {
+            // boundary snapshot: position = start of the next phase (or the
+            // completed final phase), with a fresh-stream cursor
+            if phase < plan.len() {
+                vcycle_snapshot(
+                    rt, opts, levels, &plan[phase], phase + 1, 0,
+                    FRESH_STREAM, &state, &saved, m,
+                )?;
+            } else {
+                vcycle_snapshot(
+                    rt, opts, levels, spec, phase, spec.steps,
+                    FRESH_STREAM, &state, &saved, m,
+                )?;
+            }
+        }
+    }
+    Ok(state)
+}
+
+// ---------------------------------------------------------------------------
+// Fine-tuning
+// ---------------------------------------------------------------------------
+
+/// Resumable fine-tune of a pretrained backbone on one probe task —
+/// [`finetune_once`] plus checkpointing of the grafted `[loss, θ‖head, m, v]`
+/// state and the probe stream cursor. The checkpoint records a CRC of the
+/// backbone theta, so resuming against a different backbone fails closed.
+/// Returns held-out probe accuracy (%).
+///
+/// [`finetune_once`]: crate::coordinator::finetune::finetune_once
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_resumable(
+    rt: &Runtime,
+    cfg_name: &str,
+    theta: &[f32],
+    task: usize,
+    seed: u64,
+    steps: usize,
+    lr: f32,
+    mgr: Option<&CheckpointManager>,
+    resume: Option<Checkpoint>,
+) -> Result<f64> {
+    let cfg = rt.cfg(cfg_name)?.clone();
+    let exe_step = rt.exe(&format!("ft_step__{cfg_name}"))?;
+    let exe_acc = rt.exe(&format!("ft_acc__{cfg_name}"))?;
+    let n_ft = exe_step
+        .spec
+        .meta
+        .get("n_ft")
+        .as_usize()
+        .context("ft artifact missing n_ft")?;
+    let n_classes = exe_step.spec.meta.get("n_classes").as_usize().unwrap_or(4);
+    let n = cfg.n_params;
+    if theta.len() != n {
+        bail!("backbone theta has {} values, config '{}' needs {n}", theta.len(), cfg.name);
+    }
+    let mut theta_bytes = Vec::with_capacity(4 * n);
+    for v in theta {
+        theta_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let theta_crc = crc32(&theta_bytes) as u64;
+
+    let mut gen = ProbeGen::new(&cfg, n_classes, task, seed);
+    let (mut state, start) = match resume {
+        None => {
+            // graft: [loss=0, theta, head(normal 0.02 / zero bias), m=0, v=0]
+            let mut host = vec![0f32; 3 * n_ft + 1];
+            host[1..1 + n].copy_from_slice(theta);
+            let mut rng = crate::util::rng::Rng::new(seed ^ 0xF7);
+            for i in 0..cfg.d_model * n_classes {
+                host[1 + n + i] = rng.normal() as f32 * 0.02;
+            }
+            let buf = rt.upload_f32(&host, &[3 * n_ft + 1])?;
+            (State { buf, n_params: n_ft, flops: 0.0 }, 0)
+        }
+        Some(ck) => {
+            if ck.kind != "finetune" {
+                bail!("checkpoint is a '{}' checkpoint, expected 'finetune'", ck.kind);
+            }
+            if ck.config != cfg.name || ck.n_params != n_ft {
+                bail!(
+                    "checkpoint fine-tunes '{}' ({} params), expected '{}' ({n_ft})",
+                    ck.config,
+                    ck.n_params,
+                    cfg.name
+                );
+            }
+            expect_replicas(rt, &ck)?;
+            if ck.seed != seed {
+                bail!("checkpoint seed {:#x} != run seed {seed:#x}", ck.seed);
+            }
+            expect_field(&ck.extra, "task", task as f64)?;
+            expect_field(&ck.extra, "steps", steps as f64)?;
+            expect_field(&ck.extra, "lr", lr as f64)?;
+            let ck_crc = hex_u64(ck.extra.get("theta_crc")).context("checkpoint 'theta_crc'")?;
+            if ck_crc != theta_crc {
+                bail!("checkpoint was fine-tuned from a different backbone theta");
+            }
+            if ck.step > steps {
+                bail!("checkpoint is at step {} of a {steps}-step fine-tune", ck.step);
+            }
+            let host = ck.vector("state").context("checkpoint has no 'state' vector")?;
+            if host.len() != 3 * n_ft + 1 {
+                bail!("checkpoint state has {} values, expected {}", host.len(), 3 * n_ft + 1);
+            }
+            let buf = rt.upload_f32(host, &[3 * n_ft + 1])?;
+            if ck.stream_cursor != FRESH_STREAM {
+                gen.set_cursor(ck.stream_cursor);
+            }
+            info!("resumed finetune of {} task {task} at step {}/{steps}", cfg.name, ck.step);
+            (State { buf, n_params: n_ft, flops: ck.flops }, ck.step)
+        }
+    };
+
+    let sched = LrSchedule::new((steps / 10).max(1), lr, steps);
+    for step in start + 1..=steps {
+        let batch = gen.next_batch();
+        let out = rt.call(
+            &exe_step,
+            &[
+                Arg::Buf(&state.buf),
+                Arg::I32(&batch.tokens, vec![batch.batch, batch.seq]),
+                Arg::I32(&batch.labels, vec![batch.batch]),
+                Arg::Scalar(sched.lr(step)),
+                Arg::Scalar(step as f32),
+            ],
+        )?;
+        state = State { buf: out, n_params: n_ft, flops: state.flops };
+        if let Some(m) = mgr {
+            if m.due(step) || step == steps {
+                m.save(&Checkpoint {
+                    kind: "finetune".into(),
+                    config: cfg.name.clone(),
+                    n_params: n_ft,
+                    level: 1,
+                    phase: 1,
+                    step,
+                    flops: state.flops,
+                    replicas: rt.shard_topology().0,
+                    seed,
+                    stream_cursor: gen.cursor(),
+                    extra: extra_obj(vec![
+                        ("lr", num(lr as f64)),
+                        ("steps", num(steps as f64)),
+                        ("task", num(task as f64)),
+                        ("theta_crc", u64_hex(theta_crc)),
+                    ]),
+                    vectors: vec![("state".into(), host_state(rt, &state)?)],
+                })?;
+            }
+        }
+    }
+
+    // held-out probe accuracy (fresh generator, disjoint seed)
+    let mut eval_gen = ProbeGen::new(&cfg, n_classes, task, seed ^ 0xE0E0E0);
+    let mut correct = 0.0f64;
+    let eval_batches = 8;
+    for _ in 0..eval_batches {
+        let batch = eval_gen.next_batch();
+        let out = rt.call(
+            &exe_acc,
+            &[
+                Arg::Buf(&state.buf),
+                Arg::I32(&batch.tokens, vec![batch.batch, batch.seq]),
+                Arg::I32(&batch.labels, vec![batch.batch]),
+            ],
+        )?;
+        correct += rt.read_scalar(&out)? as f64;
+    }
+    Ok(100.0 * correct / eval_batches as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn plan_mirrors_harness_shape() {
+        let opts = RunOpts::quick("bert_nano", 40);
+        let plan = vcycle_plan(&opts, 2).unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan[0].cfg, "bert_nano");
+        assert_eq!(plan[1].cfg, "bert_nano_lv2");
+        assert_eq!(plan[2].cfg, "bert_nano");
+        assert_eq!(plan[0].steps, opts.warmup);
+        assert_eq!(plan[1].steps, opts.e_small());
+        let max = (opts.total_steps as f64 * opts.budget_mult) as usize;
+        assert_eq!(plan[2].steps, max - opts.warmup);
+        assert!(vcycle_plan(&opts, 1).is_err());
+    }
+
+    #[test]
+    fn plan_three_levels() {
+        let opts = RunOpts::quick("bert_nano", 40);
+        let plan = vcycle_plan(&opts, 3).unwrap();
+        let cfgs: Vec<&str> = plan.iter().map(|p| p.cfg.as_str()).collect();
+        assert_eq!(
+            cfgs,
+            ["bert_nano", "bert_nano_lv2", "bert_nano_lv3", "bert_nano_lv2", "bert_nano"]
+        );
+        assert_eq!(expected_saved(3, 1), 0);
+        assert_eq!(expected_saved(3, 2), 1);
+        assert_eq!(expected_saved(3, 3), 2);
+        assert_eq!(expected_saved(3, 4), 1);
+        assert_eq!(expected_saved(3, 5), 0);
+    }
+
+    #[test]
+    fn manager_cadence_and_latest() {
+        let dir = TempDir::new("mgr");
+        let m = CheckpointManager::new(dir.file("ck"), 5).unwrap();
+        assert!(!m.due(4));
+        assert!(m.due(5));
+        assert!(m.due(10));
+        assert!(m.load_latest().unwrap().is_none());
+        let none = CheckpointManager::new(dir.file("ck2"), 0).unwrap();
+        assert!(!none.due(5));
+    }
+}

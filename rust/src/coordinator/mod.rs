@@ -3,6 +3,7 @@
 //! experiment harness, and supporting machinery (LR schedules, metrics,
 //! fine-tuning probes, distillation, LoRA).
 
+pub mod checkpoint;
 pub mod distill;
 pub mod experiment;
 pub mod finetune;
@@ -13,6 +14,8 @@ pub mod operators;
 pub mod schedule;
 pub mod trainer;
 
+pub use checkpoint::{finetune_resumable, run_vcycle_resumable, train_resumable,
+                     CheckpointManager};
 pub use experiment::{Harness, Method, Run, RunOpts};
 pub use generate::{Generation, Generator, Sampler};
 pub use metrics::{savings_vs_scratch, Curve, Point, Savings};

@@ -76,6 +76,23 @@ impl Trainer {
         Ok(Trainer { cfg, exe_train, exe_eval, stream, val })
     }
 
+    /// Cursor of the training batch stream — what a checkpoint records so a
+    /// resumed trainer continues the exact token/image sequence.
+    pub fn stream_cursor(&self) -> [u64; 4] {
+        match &self.stream {
+            Stream::Lang(b) => b.cursor(),
+            Stream::Vis(g) => g.cursor(),
+        }
+    }
+
+    /// Restore the training batch stream to a checkpointed cursor.
+    pub fn set_stream_cursor(&mut self, c: [u64; 4]) {
+        match &mut self.stream {
+            Stream::Lang(b) => b.set_cursor(c),
+            Stream::Vis(g) => g.set_cursor(c),
+        }
+    }
+
     /// One optimizer step; returns the new state and the training loss.
     /// `step` is 1-based within the phase (Adam bias correction).
     pub fn step(&mut self, rt: &Runtime, state: &State, lr: f32, step: usize) -> Result<(State, f32)> {

@@ -81,6 +81,19 @@ impl Batcher {
         let mut b = Batcher::new(cfg, corpus, VAL_SEED);
         (0..n).map(|_| b.next_batch()).collect()
     }
+
+    /// Stream cursor for checkpointing — the corpus is stateless, so the RNG
+    /// state is the whole position of this batch stream.
+    pub fn cursor(&self) -> [u64; 4] {
+        self.rng.cursor()
+    }
+
+    /// Rewind/advance the stream to an exact cursor captured by [`cursor`].
+    ///
+    /// [`cursor`]: Batcher::cursor
+    pub fn set_cursor(&mut self, c: [u64; 4]) {
+        self.rng = Rng::from_cursor(c);
+    }
 }
 
 /// Seed reserved for validation streams ("val_seed" in ASCII) — never used

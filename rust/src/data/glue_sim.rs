@@ -81,6 +81,16 @@ impl ProbeGen {
         }
         ProbeBatch { tokens, labels, batch: self.batch, seq: self.seq }
     }
+
+    /// Stream cursor for checkpointing (corpus and marker hash are stateless).
+    pub fn cursor(&self) -> [u64; 4] {
+        self.rng.cursor()
+    }
+
+    /// Restore the stream to an exact cursor captured by [`ProbeGen::cursor`].
+    pub fn set_cursor(&mut self, c: [u64; 4]) {
+        self.rng = Rng::from_cursor(c);
+    }
 }
 
 /// Hash salt separating probe-marker ids from corpus successor ids

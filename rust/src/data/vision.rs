@@ -105,6 +105,16 @@ impl VisionGen {
         }
         ImageBatch { images, labels, batch, size: self.size }
     }
+
+    /// Stream cursor for checkpointing (the renderer itself is stateless).
+    pub fn cursor(&self) -> [u64; 4] {
+        self.rng.cursor()
+    }
+
+    /// Restore the stream to an exact cursor captured by [`VisionGen::cursor`].
+    pub fn set_cursor(&mut self, c: [u64; 4]) {
+        self.rng = Rng::from_cursor(c);
+    }
 }
 
 #[cfg(test)]

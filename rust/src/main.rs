@@ -14,11 +14,13 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use multilevel::coordinator::{Generator, Harness, LrSchedule, Method, RunOpts, Sampler,
-                              Trainer};
+use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, train_resumable,
+                              CheckpointManager, Generator, Harness, Method, RunOpts,
+                              Sampler, Trainer};
 use multilevel::experiments;
 use multilevel::info;
-use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Manifest, Runtime};
+use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Checkpoint,
+                          Manifest, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::logger;
@@ -26,16 +28,24 @@ use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
 const USAGE: &str =
-    "usage: multilevel <info|train|vcycle|exp|generate|bench-step|dump-plan|list> [options]
+    "usage: multilevel <info|train|vcycle|finetune|exp|generate|bench-step|dump-plan|list> [options]
   info                          show manifest summary
   list                          list experiment ids
   train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
   vcycle --base <name> --steps <n> [--levels <k>] [--alpha <f>]
+  finetune --config <name> [--task <t>] [--steps <n>] [--lr <f>] [--seed <n>]
+           [--ckpt <backbone.ckpt>]   (probe fine-tune of a pretrained theta)
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
   generate --config <name> [--prompt-len <p>] [--gen <n>] [--temperature <t>]
            [--seed <n>] [--ckpt <path>]   (t = 0 -> greedy)
   bench-step --config <name> [--steps <n>]
   dump-plan                     print the canonical (config, artifact) table
+  train/vcycle/finetune also accept checkpoint/resume options:
+    --ckpt-dir <dir>   snapshot into <dir>/latest.ckpt (atomic, CRC-checked)
+    --ckpt-every <n>   also snapshot every n steps (default: phase
+                       boundaries and completion only)
+    --resume           continue from <dir>/latest.ckpt if it exists; a
+                       resumed run is bit-identical to an uninterrupted one
   every command also accepts:
     --replicas <R>  data-parallel sharding (defaults to $PALLAS_REPLICAS,
                     1 = unsharded)
@@ -63,6 +73,35 @@ fn apply_thread_opts(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--ckpt-dir/--ckpt-every/--resume` with the same strict contract as
+/// `--threads`: bad values and inconsistent combinations are CLI errors,
+/// never silent fallbacks. Returns the manager and the checkpoint to resume
+/// from (a missing `latest.ckpt` under `--resume` starts fresh with a log
+/// line; a corrupt one is a hard error).
+fn ckpt_opts(args: &Args) -> Result<(Option<CheckpointManager>, Option<Checkpoint>)> {
+    let every = args.usize_res("ckpt-every").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    let Some(dir) = args.get("ckpt-dir") else {
+        if every.is_some() {
+            bail!("--ckpt-every requires --ckpt-dir\n{USAGE}");
+        }
+        if args.flag("resume") {
+            bail!("--resume requires --ckpt-dir\n{USAGE}");
+        }
+        return Ok((None, None));
+    };
+    let mgr = CheckpointManager::new(dir, every.unwrap_or(0))?;
+    let resume = if args.flag("resume") {
+        let ck = mgr.load_latest()?;
+        if ck.is_none() {
+            info!("no checkpoint in {} yet — starting fresh", mgr.dir().display());
+        }
+        ck
+    } else {
+        None
+    };
+    Ok((Some(mgr), resume))
+}
+
 fn main() -> Result<()> {
     logger::init();
     let args = Args::parse();
@@ -81,6 +120,7 @@ fn main() -> Result<()> {
         }
         "train" => cmd_train(&args),
         "vcycle" => cmd_vcycle(&args),
+        "finetune" => cmd_finetune(&args),
         "exp" => cmd_exp(&args),
         "generate" => cmd_generate(&args),
         "bench-step" => cmd_bench_step(&args),
@@ -119,22 +159,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 100);
     let lr = args.f64_or("lr", 1e-3) as f32;
     let seed = args.u64_or("seed", 42);
+    let (mgr, resume) = ckpt_opts(args)?;
     let cfg = rt.cfg(&config)?.clone();
-    let mut state = init_state(&rt, &cfg, seed)?;
-    let mut trainer = Trainer::new(&rt, &config, 0, seed ^ 1, 4)?;
-    let sched = LrSchedule::new((steps / 10).max(1), lr, steps);
     let t0 = std::time::Instant::now();
-    for step in 1..=steps {
-        let (s, loss) = trainer.step(&rt, &state, sched.lr(step), step)?;
-        state = s;
-        if step % (steps / 10).max(1) == 0 {
-            let ev = trainer.eval(&rt, &state)?;
-            info!("step {step:>6}  train {loss:.4}  eval {ev:.4}");
-        }
-    }
+    let (state, loss) =
+        train_resumable(&rt, &config, steps, lr, seed, 0, 4, mgr.as_ref(), resume)?;
     let dt = t0.elapsed().as_secs_f64();
+    let trainer = Trainer::new(&rt, &config, 0, seed ^ 1, 4)?;
+    let ev = trainer.eval(&rt, &state)?;
     println!(
-        "trained {config} for {steps} steps in {dt:.1}s ({:.1} steps/s, {:.2} GFLOP/s)",
+        "trained {config} for {steps} steps in {dt:.1}s ({:.1} steps/s, {:.2} GFLOP/s) \
+         train {loss:.4} eval {ev:.4}",
         steps as f64 / dt,
         cfg.flops_train_step * steps as f64 / dt / 1e9
     );
@@ -149,6 +184,21 @@ fn cmd_vcycle(args: &Args) -> Result<()> {
     let mut opts = RunOpts::quick(&base, steps);
     opts.alpha = args.f64_or("alpha", 0.25) as f32;
     opts.seed = args.u64_or("seed", 17);
+    let (mgr, resume) = ckpt_opts(args)?;
+    if let Some(mgr) = mgr {
+        // checkpointed mode: run (or continue) one resumable V-cycle; the
+        // scratch-comparison rerun below would double the work of a long
+        // run, which is exactly what --ckpt-dir users are avoiding
+        let state = run_vcycle_resumable(&rt, &opts, levels, Some(&mgr), resume)?;
+        println!(
+            "vcycle K={levels} on {base}: final train loss {:.4} ({:.2} GFLOP), \
+             checkpoints in {}",
+            state.loss(&rt)?,
+            state.flops / 1e9,
+            mgr.dir().display()
+        );
+        return Ok(());
+    }
     let h = Harness::new(&rt, opts);
     let scratch = h.run_method(&Method::Scratch, None)?;
     let curve = h.run_method(&Method::VCycle { levels, fit: false }, None)?;
@@ -158,6 +208,35 @@ fn cmd_vcycle(args: &Args) -> Result<()> {
         s.target,
         s.flops * 100.0,
         s.wall * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let rt = runtime_of(args)?;
+    let config = args.get("config").unwrap_or("bert_nano").to_string();
+    let task = args.usize_or("task", 0);
+    let n_tasks = multilevel::data::glue_sim::TASKS.len();
+    if task >= n_tasks {
+        bail!("--task {task} out of range (have {n_tasks} probe tasks)");
+    }
+    let steps = args.usize_or("steps", 30);
+    let lr = args.f64_or("lr", 5e-4) as f32;
+    let seed = args.u64_or("seed", 100);
+    let (mgr, resume) = ckpt_opts(args)?;
+    let cfg = rt.cfg(&config)?.clone();
+    // backbone theta: a saved checkpoint, else a fresh (untrained) init —
+    // the latter gives the probe's chance-level baseline
+    let theta = match args.get("ckpt") {
+        Some(p) => load_checkpoint(Path::new(p), &cfg)?,
+        None => init_theta(&cfg, seed),
+    };
+    let acc = finetune_resumable(
+        &rt, &config, &theta, task, seed, steps, lr, mgr.as_ref(), resume,
+    )?;
+    println!(
+        "finetuned {config} on {} ({steps} steps): probe accuracy {acc:.1}%",
+        multilevel::data::glue_sim::TASKS[task]
     );
     Ok(())
 }

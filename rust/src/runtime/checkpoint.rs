@@ -1,0 +1,429 @@
+//! Versioned, checksummed checkpoint container — the on-disk format behind
+//! `train/vcycle/finetune --ckpt-dir` and `generate --ckpt`.
+//!
+//! Byte layout (all integers little-endian):
+//!
+//! ```text
+//!   magic       8  b"PLASCKPT"
+//!   version     4  u32 (currently 2; v1 was the legacy MLCKPT01 theta dump)
+//!   header_len  8  u64
+//!   header      …  UTF-8 JSON: kind, config, n_params, level/phase/step,
+//!                  flops, replicas, seed + RNG stream cursor (hex strings —
+//!                  JSON numbers are f64 and cannot hold u64 exactly),
+//!                  vector directory [{name, len}], free-form `extra`
+//!   payload     …  each directory vector as raw f32 LE, in directory order
+//!   crc         4  u32, CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! The CRC covers magic, version, header and payload — everything except
+//! itself — so any single corrupted byte fails `load` closed. Writes are
+//! atomic: the file is assembled in memory, written to `<path>.tmp`, synced,
+//! then renamed over `<path>`; a crash between write and rename leaves at
+//! worst a stale `.tmp` that no loader ever opens.
+//!
+//! Versioning policy: `VERSION` bumps on any layout or header-semantics
+//! change; loaders accept exactly the current version and reject others with
+//! the version named in the error (no silent migration).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// File magic for the versioned container format.
+pub const MAGIC: &[u8; 8] = b"PLASCKPT";
+
+/// Current container version (v1 = legacy `MLCKPT01` theta-only dump).
+pub const VERSION: u32 = 2;
+
+/// `replicas` value meaning "not bound to a replica topology" (e.g. the
+/// theta-only checkpoints written by `generate --ckpt` workflows).
+pub const REPLICAS_ANY: usize = 0;
+
+// CRC-32 (IEEE 802.3, poly 0xEDB88320), table-driven: one lookup per byte so
+// multi-MB states stay fast even in debug-mode tests.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// One checkpoint: header metadata plus named f32 vectors.
+///
+/// `kind` tags the producer (`"train"`, `"vcycle"`, `"finetune"`,
+/// `"theta"`); each resumable driver validates kind, config, `n_params`,
+/// `replicas` and its own `extra` fields before touching any trainer state,
+/// so a bad file can never leave a half-restored run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub kind: String,
+    pub config: String,
+    pub n_params: usize,
+    /// V-cycle level of the `state` vector's config (1 = finest; 0 = n/a).
+    pub level: usize,
+    /// Phase index in the resumable driver's phase table (0 = n/a).
+    pub phase: usize,
+    /// Completed steps within the current phase.
+    pub step: usize,
+    /// Analytic FLOPs of the `state` vector (exact f64 round-trip).
+    pub flops: f64,
+    /// Replica count the run was sharded over ([`REPLICAS_ANY`] = unbound).
+    pub replicas: usize,
+    /// The run's base seed (recorded so resume can reject a mismatched CLI).
+    pub seed: u64,
+    /// Training batch-stream RNG cursor at the checkpointed step.
+    pub stream_cursor: [u64; 4],
+    /// Free-form driver metadata (V-cycle plan parameters, finetune task, …).
+    pub extra: Json,
+    /// Named payload vectors; `"state"` or `"theta"` first by convention.
+    pub vectors: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    /// Look up a payload vector by name.
+    pub fn vector(&self, name: &str) -> Option<&[f32]> {
+        self.vectors.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+
+    fn header_json(&self) -> Json {
+        let dir: Vec<Json> = self
+            .vectors
+            .iter()
+            .map(|(name, v)| obj(vec![("len", num(v.len() as f64)), ("name", s(name))]))
+            .collect();
+        obj(vec![
+            ("config", s(&self.config)),
+            ("extra", self.extra.clone()),
+            ("flops", num(self.flops)),
+            ("kind", s(&self.kind)),
+            ("level", num(self.level as f64)),
+            ("n_params", num(self.n_params as f64)),
+            ("phase", num(self.phase as f64)),
+            ("replicas", num(self.replicas as f64)),
+            ("rng_stream", arr(self.stream_cursor.iter().map(|&w| u64_hex(w)).collect())),
+            ("seed", u64_hex(self.seed)),
+            ("step", num(self.step as f64)),
+            ("vectors", arr(dir)),
+        ])
+    }
+
+    /// Serialize to the full container byte image (including trailing CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = self.header_json().to_string();
+        let payload_len: usize = self.vectors.iter().map(|(_, v)| 4 * v.len()).sum();
+        let mut bytes =
+            Vec::with_capacity(8 + 4 + 8 + header.len() + payload_len + 4);
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for (_, v) in &self.vectors {
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        bytes
+    }
+
+    /// Atomic save: write `<path>.tmp`, fsync, rename over `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        let tmp = tmp_path(path);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    /// Parse a container byte image (the inverse of [`Checkpoint::to_bytes`]).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        // Minimum: magic + version + header_len + empty header + crc.
+        if bytes.len() < 8 + 4 + 8 + 4 {
+            bail!("truncated checkpoint: {} bytes is below the fixed header", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            if &bytes[..8] == b"MLCKPT01" {
+                bail!("bad checkpoint magic: legacy v1 (MLCKPT01) file — re-save with this build");
+            }
+            bail!("bad checkpoint magic: not a checkpoint file");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads version {VERSION})");
+        }
+        let header_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let header_end = 20usize
+            .checked_add(header_len)
+            .filter(|e| e.checked_add(4).is_some_and(|t| t <= bytes.len()))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "truncated checkpoint: header claims {header_len} bytes but file has {}",
+                    bytes.len()
+                )
+            })?;
+        let header = std::str::from_utf8(&bytes[20..header_end])
+            .context("checkpoint header is not UTF-8")?;
+        let h = Json::parse(header)
+            .map_err(|e| anyhow::anyhow!("checkpoint header is not valid JSON: {e}"))?;
+
+        let dir = h
+            .get("vectors")
+            .as_arr()
+            .context("checkpoint header missing 'vectors'")?
+            .to_vec();
+        let payload_len = dir
+            .iter()
+            .try_fold(0usize, |acc, d| {
+                d.get("len")
+                    .as_usize()
+                    .unwrap_or(0)
+                    .checked_mul(4)
+                    .and_then(|b| acc.checked_add(b))
+            })
+            .context("corrupt checkpoint: vector directory overflows")?;
+        let total = header_end
+            .checked_add(payload_len)
+            .and_then(|t| t.checked_add(4))
+            .context("corrupt checkpoint: vector directory overflows")?;
+        if bytes.len() < total {
+            bail!(
+                "truncated checkpoint: expected {total} bytes, file has {}",
+                bytes.len()
+            );
+        }
+        if bytes.len() > total {
+            bail!("corrupt checkpoint: {} trailing bytes", bytes.len() - total);
+        }
+        let stored = u32::from_le_bytes(bytes[total - 4..].try_into().unwrap());
+        let actual = crc32(&bytes[..total - 4]);
+        if stored != actual {
+            bail!("checkpoint crc mismatch: stored {stored:#010x}, computed {actual:#010x}");
+        }
+
+        let mut vectors = Vec::with_capacity(dir.len());
+        let mut off = header_end;
+        for d in &dir {
+            let name = d
+                .get("name")
+                .as_str()
+                .context("checkpoint vector entry missing 'name'")?
+                .to_string();
+            let len = d.get("len").as_usize().context("checkpoint vector entry missing 'len'")?;
+            let mut v = Vec::with_capacity(len);
+            for c in bytes[off..off + 4 * len].chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            off += 4 * len;
+            vectors.push((name, v));
+        }
+
+        let cursor_arr = h
+            .get("rng_stream")
+            .as_arr()
+            .context("checkpoint header missing 'rng_stream'")?;
+        if cursor_arr.len() != 4 {
+            bail!("checkpoint rng_stream has {} words, expected 4", cursor_arr.len());
+        }
+        let mut stream_cursor = [0u64; 4];
+        for (i, w) in cursor_arr.iter().enumerate() {
+            stream_cursor[i] = hex_u64(w).context("checkpoint rng_stream word")?;
+        }
+
+        Ok(Checkpoint {
+            kind: h.get("kind").as_str().context("checkpoint header missing 'kind'")?.into(),
+            config: h
+                .get("config")
+                .as_str()
+                .context("checkpoint header missing 'config'")?
+                .into(),
+            n_params: h.get("n_params").as_usize().context("checkpoint header missing 'n_params'")?,
+            level: h.get("level").as_usize().unwrap_or(0),
+            phase: h.get("phase").as_usize().unwrap_or(0),
+            step: h.get("step").as_usize().unwrap_or(0),
+            flops: h.get("flops").as_f64().unwrap_or(0.0),
+            replicas: h.get("replicas").as_usize().unwrap_or(REPLICAS_ANY),
+            seed: hex_u64(h.get("seed")).context("checkpoint header 'seed'")?,
+            stream_cursor,
+            extra: h.get("extra").clone(),
+            vectors,
+        })
+    }
+
+    /// Load and fully validate a container from disk.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+
+    /// [`Checkpoint::load`] plus a config-identity check: the stored config
+    /// name and parameter count must match `cfg` exactly.
+    pub fn load_for_config(path: &Path, cfg: &crate::runtime::ModelCfg) -> Result<Checkpoint> {
+        let ck = Self::load(path)?;
+        if ck.config != cfg.name {
+            bail!(
+                "checkpoint {} is for config '{}', expected '{}'",
+                path.display(),
+                ck.config,
+                cfg.name
+            );
+        }
+        if ck.n_params != cfg.n_params {
+            bail!(
+                "checkpoint {} has {} params, config '{}' needs {}",
+                path.display(),
+                ck.n_params,
+                cfg.name,
+                cfg.n_params
+            );
+        }
+        Ok(ck)
+    }
+}
+
+/// The temp file a [`Checkpoint::save`] stages into before the atomic rename.
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+/// u64 → 16-hex-digit JSON string (JSON numbers are f64: 53-bit mantissa).
+pub fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Parse a u64 stored as a hex JSON string by [`u64_hex`].
+pub fn hex_u64(j: &Json) -> Result<u64> {
+    let t = j.as_str().context("expected hex string")?;
+    u64::from_str_radix(t, 16).with_context(|| format!("bad hex u64 '{t}'"))
+}
+
+/// Build the sorted `extra` map used by the coordinator drivers.
+pub fn extra_obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            kind: "train".into(),
+            config: "gpt_nano".into(),
+            n_params: 3,
+            level: 1,
+            phase: 2,
+            step: 7,
+            flops: 123.5,
+            replicas: 2,
+            seed: u64::MAX - 1,
+            stream_cursor: [1, u64::MAX, 0x0123_4567_89AB_CDEF, 42],
+            extra: extra_obj(vec![("alpha", num(0.25))]),
+            vectors: vec![
+                ("state".into(), vec![0.5, -1.25, f32::MIN_POSITIVE, 3.0e-39, 7.0]),
+                ("saved0".into(), vec![1.0, 2.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn bytes_roundtrip_exact() {
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn u64_fields_survive_json() {
+        // f64 JSON numbers would silently round these; hex strings must not.
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 1);
+        assert_eq!(back.stream_cursor[1], u64::MAX);
+    }
+
+    #[test]
+    fn flipped_byte_fails_crc() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() - 12; // inside the payload
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().to_bytes();
+        for cut in [3, 10, 30, bytes.len() - 1] {
+            let err = Checkpoint::from_bytes(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut={cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn wrong_version_named_in_error() {
+        let mut bytes = sample().to_bytes();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn legacy_magic_named_in_error() {
+        let mut bytes = sample().to_bytes();
+        bytes[..8].copy_from_slice(b"MLCKPT01");
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("legacy"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes.extend_from_slice(&[0u8; 5]);
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+}

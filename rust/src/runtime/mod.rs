@@ -30,6 +30,7 @@
 //! ```
 
 pub mod backend;
+pub mod checkpoint;
 pub mod client;
 pub mod manifest;
 pub mod params;
@@ -41,6 +42,7 @@ pub mod registry;
 pub mod sharded;
 
 pub use backend::{Arg, Backend, Buffer, HostData};
+pub use checkpoint::Checkpoint;
 pub use client::{Exe, Runtime};
 pub use manifest::{ArtifactSpec, Family, InitKind, InputSpec, Manifest, ModelCfg, ParamEntry};
 pub use params::{init_state, init_theta, load_checkpoint, save_checkpoint, state_from_host,

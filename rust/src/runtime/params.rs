@@ -10,12 +10,12 @@
 //!   state[1+2N .. 1+3N] Adam second moment
 //! ```
 
-use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::backend::Buffer;
+use super::checkpoint::{Checkpoint, REPLICAS_ANY};
 use super::client::Runtime;
 use super::manifest::{InitKind, ModelCfg};
 use crate::util::rng::Rng;
@@ -108,64 +108,54 @@ pub fn state_from_host(rt: &Runtime, cfg: &ModelCfg, host: &[f32]) -> Result<Sta
 }
 
 // ---------------------------------------------------------------------------
-// Checkpointing (App. C: resume overhead is parameter I/O)
+// Theta checkpointing (App. C: resume overhead is parameter I/O)
 // ---------------------------------------------------------------------------
 
-const MAGIC: &[u8; 8] = b"MLCKPT01";
-
 /// Save theta (not the Adam moments — the paper re-inits the optimizer on
-/// resume) to a binary checkpoint: magic, config-name, N, raw f32 LE.
+/// resume) as a `kind = "theta"` checkpoint in the versioned container
+/// format (see [`checkpoint`]): config-bound, CRC-protected, written
+/// atomically.
+///
+/// [`checkpoint`]: crate::runtime::checkpoint
 pub fn save_checkpoint(path: &Path, cfg: &ModelCfg, theta: &[f32]) -> Result<()> {
     if theta.len() != cfg.n_params {
-        bail!("theta len mismatch");
+        bail!("theta len {} != n_params {}", theta.len(), cfg.n_params);
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    let name = cfg.name.as_bytes();
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name)?;
-    f.write_all(&(theta.len() as u64).to_le_bytes())?;
-    // SAFETY-free path: serialize via to_le_bytes in chunks.
-    let mut bytes = Vec::with_capacity(theta.len() * 4);
-    for v in theta {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    f.write_all(&bytes)?;
-    Ok(())
+    let ck = Checkpoint {
+        kind: "theta".into(),
+        config: cfg.name.clone(),
+        n_params: cfg.n_params,
+        level: 0,
+        phase: 0,
+        step: 0,
+        flops: 0.0,
+        replicas: REPLICAS_ANY,
+        seed: 0,
+        stream_cursor: [0; 4],
+        extra: crate::util::json::Json::Null,
+        vectors: vec![("theta".into(), theta.to_vec())],
+    };
+    ck.save(path)
 }
 
-/// Load a checkpoint; verifies the config name and parameter count.
+/// Load a theta checkpoint; verifies magic/version/CRC plus the config name
+/// and parameter count, and that the file actually carries a theta vector.
 pub fn load_checkpoint(path: &Path, cfg: &ModelCfg) -> Result<Vec<f32>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("bad checkpoint magic");
+    let ck = Checkpoint::load_for_config(path, cfg)?;
+    match ck.vector("theta") {
+        Some(theta) if theta.len() == cfg.n_params => Ok(theta.to_vec()),
+        Some(theta) => bail!(
+            "checkpoint {} theta has {} values, expected {}",
+            path.display(),
+            theta.len(),
+            cfg.n_params
+        ),
+        None => bail!(
+            "checkpoint {} is a '{}' checkpoint without a theta vector",
+            path.display(),
+            ck.kind
+        ),
     }
-    let mut len4 = [0u8; 4];
-    f.read_exact(&mut len4)?;
-    let name_len = u32::from_le_bytes(len4) as usize;
-    let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
-    let name = String::from_utf8(name)?;
-    if name != cfg.name {
-        bail!("checkpoint is for config '{name}', expected '{}'", cfg.name);
-    }
-    let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
-    let n = u64::from_le_bytes(len8) as usize;
-    if n != cfg.n_params {
-        bail!("checkpoint has {n} params, expected {}", cfg.n_params);
-    }
-    let mut bytes = vec![0u8; n * 4];
-    f.read_exact(&mut bytes)?;
-    let mut theta = Vec::with_capacity(n);
-    for c in bytes.chunks_exact(4) {
-        theta.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
-    Ok(theta)
 }
 
 #[cfg(test)]
@@ -222,13 +212,11 @@ mod tests {
     fn checkpoint_roundtrip() {
         let cfg = dummy_cfg();
         let theta = init_theta(&cfg, 3);
-        let dir = std::env::temp_dir().join(format!("mlckpt_test_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.ckpt");
+        let dir = crate::util::tmp::TempDir::new("theta_ckpt");
+        let path = dir.file("t.ckpt");
         save_checkpoint(&path, &cfg, &theta).unwrap();
         let back = load_checkpoint(&path, &cfg).unwrap();
         assert_eq!(theta, back);
-        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -237,11 +225,10 @@ mod tests {
         let mut other = dummy_cfg();
         other.name = "other".into();
         let theta = init_theta(&cfg, 3);
-        let dir = std::env::temp_dir().join(format!("mlckpt_test2_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.ckpt");
+        let dir = crate::util::tmp::TempDir::new("theta_ckpt");
+        let path = dir.file("t.ckpt");
         save_checkpoint(&path, &cfg, &theta).unwrap();
-        assert!(load_checkpoint(&path, &other).is_err());
-        std::fs::remove_dir_all(&dir).ok();
+        let err = load_checkpoint(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("dummy") && err.contains("other"), "{err}");
     }
 }

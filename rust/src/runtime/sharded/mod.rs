@@ -59,7 +59,21 @@
 //! the `--replicas` CLI flag; [`Backend::set_replica_cap`] lets the V-cycle
 //! schedule cap the fan-out at the active level's batch size.
 //!
+//! # Checkpoint/resume
+//!
+//! Because the step is a pure function of (state, batch, R) — shard bounds
+//! `⌊r·B/R⌋` and the all-reduce tree depend only on the replica count —
+//! resuming a checkpointed run reproduces the same shard splits and
+//! all-reduce order, and therefore the same bits, whenever R matches.
+//! Checkpoints record R ([`runtime::checkpoint`]); the resumable drivers in
+//! [`coordinator::checkpoint`] refuse a mismatched topology with guidance to
+//! rerun under `--replicas R`, instead of continuing with a subtly different
+//! summation order. Thread count stays a free parameter on resume, exactly
+//! as within a run.
+//!
 //! [`ReferenceBackend`]: super::ReferenceBackend
+//! [`runtime::checkpoint`]: super::checkpoint
+//! [`coordinator::checkpoint`]: crate::coordinator::checkpoint
 
 pub mod allreduce;
 

@@ -9,3 +9,4 @@ pub mod prop;
 pub mod rng;
 pub mod table;
 pub mod threadpool;
+pub mod tmp;

@@ -28,6 +28,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The full 256-bit generator state — the "stream cursor" a checkpoint
+    /// records so a resumed run continues the sequence without replay.
+    pub fn cursor(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact cursor captured by [`Rng::cursor`].
+    pub fn from_cursor(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

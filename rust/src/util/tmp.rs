@@ -1,0 +1,63 @@
+//! Self-cleaning scratch directories for tests and benches (the offline
+//! registry has no `tempfile`). Each [`TempDir`] gets a unique path under the
+//! system temp dir and removes itself on drop, so parallel test binaries and
+//! repeated runs never collide or leak.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+
+/// RAII scratch directory: created unique on construction, deleted on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<system tmp>/pallas_<tag>_<pid>_<n>`; `tag` names the caller
+    /// so leftover dirs from a killed process are attributable.
+    pub fn new(tag: &str) -> TempDir {
+        let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "pallas_{tag}_{}_{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)
+            .unwrap_or_else(|e| panic!("creating temp dir {}: {e}", path.display()));
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path of a file inside the directory.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_created_and_cleaned() {
+        let a = TempDir::new("t");
+        let b = TempDir::new("t");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        std::fs::write(a.file("x.bin"), b"hi").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists());
+        assert!(b.path().is_dir());
+    }
+}

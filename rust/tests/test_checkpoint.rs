@@ -1,0 +1,346 @@
+//! The checkpoint/resume determinism contract and fault-injection suite.
+//!
+//! Headline guarantee: running 2N steps equals running N steps,
+//! checkpointing, reloading and running N more — **bit-identical** — for
+//! plain training, mid-V-cycle (including across coalesce/refine
+//! boundaries) and sharded runs. Every fault-injection case (truncation,
+//! bit flip, wrong version, mismatched config, mismatched topology) must
+//! fail closed with a descriptive error.
+//!
+//! The V-cycle tests run on [`Runtime::load_default`], so the `rust-sharded`
+//! CI cell (`PALLAS_REPLICAS=2`) exercises mid-V-cycle resume under R=2.
+
+use multilevel::coordinator::{run_vcycle_resumable, train_resumable, CheckpointManager,
+                              Harness, Method, RunOpts};
+use multilevel::runtime::checkpoint::tmp_path;
+use multilevel::runtime::{Checkpoint, Manifest, Runtime, State};
+use multilevel::util::json::Json;
+use multilevel::util::tmp::TempDir;
+use multilevel::util::{prop, rng::Rng};
+
+const LR: f32 = 1e-3;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn state_bits(rt: &Runtime, st: &State) -> Vec<u32> {
+    bits(&st.to_host(rt).unwrap())
+}
+
+fn train_gpt_nano(
+    rt: &Runtime,
+    steps: usize,
+    mgr: Option<&CheckpointManager>,
+    resume: Option<Checkpoint>,
+) -> (Vec<u32>, f32) {
+    let (st, loss) = train_resumable(rt, "gpt_nano", steps, LR, 42, 0, 2, mgr, resume).unwrap();
+    (state_bits(rt, &st), loss)
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identical resume: plain training
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plain_train_resume_bit_identical() {
+    let rt = Runtime::reference();
+    let (full, full_loss) = train_gpt_nano(&rt, 12, None, None);
+
+    let dir = TempDir::new("ckpt_plain");
+    let mgr = CheckpointManager::new(dir.file("ck"), 6).unwrap().with_history(true);
+    train_gpt_nano(&rt, 12, Some(&mgr), None);
+
+    // "kill at N": resume the 2N-step run from its mid-run snapshot
+    let snap = Checkpoint::load(&mgr.dir().join("ckpt_p01_s00006.ckpt")).unwrap();
+    assert_eq!((snap.kind.as_str(), snap.step), ("train", 6));
+    assert_ne!(snap.stream_cursor, [0; 4], "mid-run snapshot must carry the stream cursor");
+    let (resumed, resumed_loss) = train_gpt_nano(&rt, 12, None, Some(snap));
+    assert_eq!(full, resumed, "resumed run diverged from the uninterrupted one");
+    assert_eq!(full_loss.to_bits(), resumed_loss.to_bits());
+}
+
+#[test]
+fn resume_at_completion_is_a_noop() {
+    let rt = Runtime::reference();
+    let dir = TempDir::new("ckpt_done");
+    let mgr = CheckpointManager::new(dir.file("ck"), 0).unwrap();
+    let (full, _) = train_gpt_nano(&rt, 5, Some(&mgr), None);
+    let done = mgr.load_latest().unwrap().unwrap();
+    assert_eq!(done.step, 5);
+    let (again, _) = train_gpt_nano(&rt, 5, None, Some(done));
+    assert_eq!(full, again);
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identical resume: mid-V-cycle and at level boundaries
+// ---------------------------------------------------------------------------
+
+fn vopts() -> RunOpts {
+    let mut o = RunOpts::quick("bert_nano", 40);
+    o.alpha = 0.5; // paper: α = 0.5 for BERT
+    o.eval_every = 10;
+    o.val_batches = 2;
+    o.budget_mult = 1.0;
+    o
+}
+
+#[test]
+fn vcycle_resumable_matches_harness_bitwise() {
+    // the resumable driver must mirror Harness::run_vcycle seed-for-seed —
+    // otherwise "resume reproduces the run" guards the wrong program
+    let rt = Runtime::load_default().unwrap();
+    let ours = run_vcycle_resumable(&rt, &vopts(), 2, None, None).unwrap();
+    let h = Harness::new(&rt, vopts());
+    let harness = h.run_method_state(&Method::VCycle { levels: 2, fit: false }).unwrap();
+    assert_eq!(
+        state_bits(&rt, &ours),
+        state_bits(&rt, &harness),
+        "resumable V-cycle diverged from the harness program"
+    );
+    assert_eq!(ours.flops.to_bits(), harness.flops.to_bits());
+}
+
+#[test]
+fn vcycle_resume_mid_level_and_at_boundaries_bit_identical() {
+    let rt = Runtime::load_default().unwrap();
+    let opts = vopts();
+    let full = run_vcycle_resumable(&rt, &opts, 2, None, None).unwrap();
+    let full_bits = state_bits(&rt, &full);
+
+    let dir = TempDir::new("ckpt_vcycle");
+    let mgr = CheckpointManager::new(dir.file("ck"), 7).unwrap().with_history(true);
+    run_vcycle_resumable(&rt, &opts, 2, Some(&mgr), None).unwrap();
+
+    // mid-level: inside the coarse (bert_nano_lv2) phase
+    let mid = Checkpoint::load(&mgr.dir().join("ckpt_p02_s00007.ckpt")).unwrap();
+    assert_eq!(mid.config, "bert_nano_lv2");
+    assert!(mid.step > 0 && mid.step < opts.e_small());
+    let resumed = run_vcycle_resumable(&rt, &opts, 2, None, Some(mid)).unwrap();
+    assert_eq!(state_bits(&rt, &resumed), full_bits, "mid-level resume diverged");
+
+    // boundaries: right after coalesce (p2 s0) and right after refine (p3 s0)
+    for name in ["ckpt_p02_s00000.ckpt", "ckpt_p03_s00000.ckpt"] {
+        let snap = Checkpoint::load(&mgr.dir().join(name)).unwrap();
+        assert_eq!(snap.step, 0);
+        let resumed = run_vcycle_resumable(&rt, &opts, 2, None, Some(snap)).unwrap();
+        assert_eq!(state_bits(&rt, &resumed), full_bits, "boundary resume diverged ({name})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identical resume: sharded R ∈ {2, 3}
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_resume_parity_r2_r3() {
+    for r in [2usize, 3] {
+        let rt = Runtime::sharded(r);
+        assert_eq!(rt.shard_topology().0, r);
+        let (full, _) = train_gpt_nano(&rt, 10, None, None);
+
+        let dir = TempDir::new("ckpt_sharded");
+        let mgr = CheckpointManager::new(dir.file("ck"), 5).unwrap().with_history(true);
+        train_gpt_nano(&rt, 10, Some(&mgr), None);
+        let snap = Checkpoint::load(&mgr.dir().join("ckpt_p01_s00005.ckpt")).unwrap();
+        assert_eq!(snap.replicas, r);
+        let (resumed, _) = train_gpt_nano(&rt, 10, None, Some(snap));
+        assert_eq!(full, resumed, "R={r}: sharded resume diverged");
+    }
+}
+
+#[test]
+fn replica_topology_mismatch_fails_closed() {
+    let rt2 = Runtime::sharded(2);
+    let dir = TempDir::new("ckpt_topo");
+    let mgr = CheckpointManager::new(dir.file("ck"), 0).unwrap();
+    train_gpt_nano(&rt2, 4, Some(&mgr), None);
+    let snap = mgr.load_latest().unwrap().unwrap();
+    let rt3 = Runtime::sharded(3);
+    let err = train_resumable(&rt3, "gpt_nano", 4, LR, 42, 0, 2, None, Some(snap))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--replicas 2"), "no topology guidance in: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: every corruption fails closed, descriptively
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_injection_fails_closed() {
+    let rt = Runtime::reference();
+    let dir = TempDir::new("ckpt_fault");
+    let mgr = CheckpointManager::new(dir.file("ck"), 0).unwrap();
+    train_gpt_nano(&rt, 3, Some(&mgr), None);
+    let good = std::fs::read(mgr.latest_path()).unwrap();
+
+    // truncated file
+    let p = dir.file("trunc.ckpt");
+    std::fs::write(&p, &good[..good.len() / 2]).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+    assert!(err.contains("truncated"), "{err}");
+
+    // flipped payload byte -> CRC mismatch
+    let p = dir.file("flip.ckpt");
+    let mut bad = good.clone();
+    let mid = bad.len() - 10;
+    bad[mid] ^= 0x01;
+    std::fs::write(&p, bad).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+    assert!(err.contains("crc"), "{err}");
+
+    // wrong version, named in the error
+    let p = dir.file("ver.ckpt");
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+    std::fs::write(&p, bad).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+    assert!(err.contains("version 9"), "{err}");
+
+    // mismatched config: both names in the error, trainer never built
+    let snap = mgr.load_latest().unwrap().unwrap();
+    let err = format!(
+        "{:#}",
+        train_resumable(&rt, "bert_nano", 3, LR, 42, 0, 2, None, Some(snap.clone()))
+            .unwrap_err()
+    );
+    assert!(err.contains("gpt_nano") && err.contains("bert_nano"), "{err}");
+
+    // mismatched run parameters fail closed too
+    let err = format!(
+        "{:#}",
+        train_resumable(&rt, "gpt_nano", 99, LR, 42, 0, 2, None, Some(snap.clone()))
+            .unwrap_err()
+    );
+    assert!(err.contains("steps"), "{err}");
+    let err = format!(
+        "{:#}",
+        train_resumable(&rt, "gpt_nano", 3, LR, 7, 0, 2, None, Some(snap)).unwrap_err()
+    );
+    assert!(err.contains("seed"), "{err}");
+
+    // after all those failures, a fresh run is still exactly reproducible —
+    // failed loads leave no state behind
+    let (a, _) = train_gpt_nano(&rt, 3, None, None);
+    let (b, _) = train_gpt_nano(&rt, 3, None, None);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn atomic_write_no_torn_checkpoint() {
+    let rt = Runtime::reference();
+    let dir = TempDir::new("ckpt_atomic");
+    let mgr = CheckpointManager::new(dir.file("ck"), 0).unwrap();
+    let tmp = tmp_path(&mgr.latest_path());
+
+    // crash before the first rename: only a torn tmp exists, which the
+    // loader never consults — the run simply starts fresh
+    std::fs::write(&tmp, b"partial garbage from a dead process").unwrap();
+    assert!(mgr.load_latest().unwrap().is_none());
+
+    // a completed save lands atomically and clears the tmp
+    train_gpt_nano(&rt, 2, Some(&mgr), None);
+    assert!(!tmp.exists(), "save left its temp file behind");
+    let ck = mgr.load_latest().unwrap().unwrap();
+    assert_eq!(ck.step, 2);
+
+    // crash of a *later* save between temp-write and rename: the stale tmp
+    // must not shadow the last complete checkpoint
+    std::fs::write(&tmp, b"crashed mid-write").unwrap();
+    assert_eq!(mgr.load_latest().unwrap().unwrap(), ck);
+}
+
+// ---------------------------------------------------------------------------
+// Property: round-trip across every registry config
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_roundtrip_every_registry_config() {
+    let manifest = Manifest::builtin();
+    let dir = TempDir::new("ckpt_prop");
+    assert!(!manifest.configs.is_empty());
+    for (name, cfg) in &manifest.configs {
+        // big configs round-trip a truncated state (the full-size path is
+        // pinned separately below) — the header/cursor/payload machinery
+        // under test is identical either way
+        let state_len = cfg.state_len().min(4096);
+        let path = dir.file(&format!("{name}.ckpt"));
+        prop::check(
+            &format!("ckpt-roundtrip-{name}"),
+            0xC0FFEE,
+            3,
+            |r: &mut Rng| {
+                (
+                    r.next_u64(),
+                    [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+                    r.below(10_000),
+                    r.below(50),
+                    r.f64() * 1e12,
+                    r.next_u64() as u32,
+                )
+            },
+            prop::no_shrink,
+            |&(seed, cursor, step, phase, flops, pat)| {
+                let state: Vec<f32> = (0..state_len)
+                    .map(|i| f32::from_bits(((i as u32).wrapping_mul(2_654_435_761) ^ pat) >> 2))
+                    .collect();
+                let ck = Checkpoint {
+                    kind: "vcycle".into(),
+                    config: name.clone(),
+                    n_params: cfg.n_params,
+                    level: 1,
+                    phase,
+                    step,
+                    flops,
+                    replicas: 3,
+                    seed,
+                    stream_cursor: cursor,
+                    extra: Json::Null,
+                    vectors: vec![("state".into(), state.clone())],
+                };
+                ck.save(&path).map_err(|e| format!("{e:#}"))?;
+                let back = Checkpoint::load(&path).map_err(|e| format!("{e:#}"))?;
+                if bits(back.vector("state").unwrap()) != bits(&state) {
+                    return Err(format!("{name}: state vector changed across save/load"));
+                }
+                if back != ck {
+                    return Err(format!("{name}: header changed across save/load"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn full_state_roundtrip_gpt_base_sim_exact() {
+    // the bench row's config, at full state size, bit-exact
+    let manifest = Manifest::builtin();
+    let cfg = manifest.cfg("gpt_base_sim").unwrap();
+    let state: Vec<f32> = (0..cfg.state_len())
+        .map(|i| f32::from_bits((i as u32).wrapping_mul(2_654_435_761) >> 2))
+        .collect();
+    let ck = Checkpoint {
+        kind: "train".into(),
+        config: cfg.name.clone(),
+        n_params: cfg.n_params,
+        level: 1,
+        phase: 1,
+        step: 123,
+        flops: 4.5e9,
+        replicas: 1,
+        seed: u64::MAX,
+        stream_cursor: [u64::MAX, 1, 2, 3],
+        extra: Json::Null,
+        vectors: vec![("state".into(), state.clone())],
+    };
+    let dir = TempDir::new("ckpt_full");
+    let path = dir.file("full.ckpt");
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(bits(back.vector("state").unwrap()), bits(&state));
+    assert_eq!(back.seed, u64::MAX);
+    assert_eq!(back.stream_cursor[0], u64::MAX);
+    assert_eq!(back, ck);
+}
