@@ -209,22 +209,26 @@ def distill_artifacts(student: ModelConfig, teacher: ModelConfig) -> List[Artifa
 
 def decode_artifacts(cfg: ModelConfig) -> List[Artifact]:
     """Incremental-decode serving pair of a causal config: ``prefill__*``
-    (padded prompt in, per-request decode records out) and
+    (padded prompts in, per-request decode records out) and
     ``decode_step__*`` (one token + records in, updated records out).
-    Mirrors ``decode_artifacts`` in rust/src/runtime/registry.rs."""
+    Both carry a per-request length vector ``lens`` (``[B]``, int32) so
+    mixed-length requests batch together; its leading batch extent makes
+    it shard with the other batch inputs. Mirrors ``decode_artifacts`` in
+    rust/src/runtime/registry.rs."""
     assert cfg.family == "gpt"
     rec = M.decode_rec_len(cfg)
     theta = ("theta", _spec((M.n_params(cfg),)))
+    lens = ("lens", _spec((cfg.batch,), jnp.int32))
     return [
         Artifact(f"prefill__{cfg.name}", "prefill", M.make_prefill(cfg),
                  [theta,
                   ("tokens", _spec((cfg.batch, cfg.seq_len), jnp.int32)),
-                  scalar("len")],
+                  lens],
                  {"config": cfg.name}, meta={"shard": "batch"}),
         Artifact(f"decode_step__{cfg.name}", "decode_step",
                  M.make_decode_step(cfg),
                  [theta, ("cache", _spec((cfg.batch, rec))),
-                  ("token", _spec((cfg.batch,), jnp.int32)), scalar("len")],
+                  ("token", _spec((cfg.batch,), jnp.int32)), lens],
                  {"config": cfg.name}, meta={"shard": "batch"}),
     ]
 

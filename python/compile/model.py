@@ -436,20 +436,22 @@ def decode_rec_len(cfg: ModelConfig) -> int:
 
 
 def make_prefill(cfg: ModelConfig):
-    """(theta[N], tokens[B,S], len) -> decode records [B, V + L*2*S*d].
+    """(theta[N], tokens[B,S], lens[B]) -> decode records [B, V + L*2*S*d].
 
     Record layout per request: last-prompt-position logits (``vocab``)
-    followed by the K/V cache ``[L][2][S][d]``; cache rows at positions
-    ``>= len`` are zeroed. The forward is causal, so the padded positions
-    beyond ``len`` never influence the emitted rows — the Rust reference
-    interpreter simply computes positions ``0..len`` (semantically
-    identical, cheaper).
+    followed by the K/V cache ``[L][2][S][d]``. ``lens`` carries each
+    request's own prompt length, so mixed-length prompts prefill in one
+    batch; request ``b``'s logits come from its position ``lens[b] - 1``
+    and its cache rows at positions ``>= lens[b]`` are zeroed. The forward
+    is causal, so padded positions beyond a request's own length never
+    influence its emitted rows — the Rust reference interpreter computes
+    positions ``0..max(lens)`` only (semantically identical, cheaper).
     """
     assert cfg.family == "gpt", "prefill is causal-only"
     unravel = unravel_fn(cfg)
     L, S = cfg.n_layer, cfg.seq_len
 
-    def prefill(theta, tokens, plen):
+    def prefill(theta, tokens, lens):
         params = unravel(theta)
         blks = {k[len("blk."):]: v for k, v in params.items()
                 if k.startswith("blk.")}
@@ -462,11 +464,12 @@ def make_prefill(cfg: ModelConfig):
             vs.append(v_rows)
         h = ref.layernorm(h, params["lnf_w"], params["lnf_b"])
         logits = h @ params["head_w"] + params["head_b"]  # [B, S, V]
-        p = plen.astype(jnp.int32)
-        logits_last = jnp.take(logits, p - 1, axis=1)  # [B, V]
+        p = lens.astype(jnp.int32)  # [B]
+        logits_last = jnp.take_along_axis(
+            logits, (p - 1)[:, None, None], axis=1)[:, 0]  # [B, V]
         kv = jnp.stack([jnp.stack([kl, vl]) for kl, vl in zip(ks, vs)])
-        # [L, 2, B, S, d] -> zero the unwritten positions -> [B, L*2*S*d]
-        mask = (jnp.arange(S) < p)[None, None, None, :, None]
+        # [L, 2, B, S, d] -> zero each request's unwritten positions
+        mask = (jnp.arange(S)[None, :] < p[:, None])[None, None, :, :, None]
         kv = jnp.where(mask, kv, 0.0)
         kv = kv.transpose(2, 0, 1, 3, 4).reshape(tokens.shape[0], -1)
         return jnp.concatenate([logits_last, kv], axis=1)
@@ -475,12 +478,14 @@ def make_prefill(cfg: ModelConfig):
 
 
 def make_decode_step(cfg: ModelConfig):
-    """(theta[N], cache[B, rec], token[B], len) -> updated records.
+    """(theta[N], cache[B, rec], token[B], lens[B]) -> updated records.
 
-    Advances every request by one token: the new token occupies position
-    ``len`` (``len < seq_len``), its K/V rows are appended to the cache,
-    and attention masks to positions ``<= len`` — prior keys/values are
-    reused, never recomputed, so one step is O(len) in sequence length.
+    Advances every request by one token at its own depth: request ``b``'s
+    new token occupies its position ``lens[b]`` (``lens[b] < seq_len``),
+    its K/V rows are appended to its cache, and its attention masks to
+    positions ``<= lens[b]`` — prior keys/values are reused, never
+    recomputed, so one step is O(len) in sequence length and requests of
+    different lengths coexist in the batch.
     """
     assert cfg.family == "gpt", "decode_step is causal-only"
     unravel = unravel_fn(cfg)
@@ -488,30 +493,31 @@ def make_decode_step(cfg: ModelConfig):
     nh, hd = cfg.n_head, cfg.head_dim
     ln = ref.layernorm  # handles the [B, d] decode activations
 
-    def decode_step(theta, cache, token, plen):
+    def decode_step(theta, cache, token, lens):
         b = cache.shape[0]
         params = unravel(theta)
         blks = {k[len("blk."):]: v for k, v in params.items()
                 if k.startswith("blk.")}
-        p = plen.astype(jnp.int32)
+        p = lens.astype(jnp.int32)  # [B]
         kv = cache[:, V:].reshape(b, L, 2, S, d)
         h = params["emb"][token] + jnp.take(params["pos"], p, axis=0)  # [B,d]
+        # each request writes its own row: one-hot over the position axis
+        write = (jnp.arange(S)[None, :] == p[:, None])[:, :, None]  # [B,S,1]
         for l in range(L):
             blk = {k: v[l] for k, v in blks.items()}
             x1 = ln(h, blk["ln1_w"], blk["ln1_b"])
             q = x1 @ blk["wq"] + blk["bq"]
             kn = x1 @ blk["wk"] + blk["bk"]
             vn = x1 @ blk["wv"] + blk["bv"]
-            kv = jax.lax.dynamic_update_slice(
-                kv, kn[:, None, None, None, :], (0, l, 0, p, 0))
-            kv = jax.lax.dynamic_update_slice(
-                kv, vn[:, None, None, None, :], (0, l, 1, p, 0))
-            kl = kv[:, l, 0].reshape(b, S, nh, hd)
-            vl = kv[:, l, 1].reshape(b, S, nh, hd)
+            kl = jnp.where(write, kn[:, None, :], kv[:, l, 0])  # [B,S,d]
+            vl = jnp.where(write, vn[:, None, :], kv[:, l, 1])
+            kv = kv.at[:, l, 0].set(kl).at[:, l, 1].set(vl)
+            kl = kl.reshape(b, S, nh, hd)
+            vl = vl.reshape(b, S, nh, hd)
             qh = q.reshape(b, nh, hd)
             scores = jnp.einsum("bhd,bshd->bhs", qh, kl)
             scores = scores / jnp.sqrt(jnp.float32(hd))
-            mask = (jnp.arange(S) <= p)[None, None, :]
+            mask = (jnp.arange(S)[None, None, :] <= p[:, None, None])
             scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
             probs = jax.nn.softmax(scores, axis=-1)
             att = jnp.einsum("bhs,bshd->bhd", probs, vl).reshape(b, d)

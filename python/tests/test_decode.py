@@ -2,6 +2,11 @@
 full-sequence forward at every generated position, and the decode record
 must be exactly what a longer prefill would have produced.
 
+Both artifacts carry a per-request length vector ``lens`` (``[B]``,
+int32), so these tests exercise the uniform case (every request at the
+same depth — the pre-ragged call shape) and the ragged case (each request
+at its own depth in one batch).
+
 These are the JAX-side twins of rust/tests/test_decode.rs — the artifact
 *plan* parity is CI-gated (aot --dump-plan vs `multilevel dump-plan`);
 these tests pin the *semantics* of the Python mirror.
@@ -27,6 +32,11 @@ def gpt_setup():
     return cfg, params, theta, tokens
 
 
+def uni(cfg, plen):
+    """Uniform length vector — the pre-ragged single-`len` call shape."""
+    return jnp.full((cfg.batch,), plen, jnp.int32)
+
+
 def test_record_geometry():
     cfg = BASE_CONFIGS["gpt_nano"]
     assert M.kv_cache_len(cfg) == cfg.n_layer * 2 * cfg.seq_len * cfg.d_model
@@ -38,21 +48,39 @@ def test_prefill_matches_full_forward(gpt_setup):
     prefill = jax.jit(M.make_prefill(cfg))
     logits_full = M.logits_fn(params, tokens, cfg, False)
     for plen in (1, 3, cfg.seq_len):
-        rec = prefill(theta, tokens, jnp.float32(plen))
+        rec = prefill(theta, tokens, uni(cfg, plen))
         assert rec.shape == (cfg.batch, M.decode_rec_len(cfg))
         np.testing.assert_allclose(
             np.asarray(rec[:, :cfg.vocab]),
             np.asarray(logits_full[:, plen - 1]), rtol=1e-4, atol=1e-5)
 
 
-def test_prefill_zeroes_cache_beyond_len(gpt_setup):
+def test_ragged_prefill_matches_full_forward_per_request(gpt_setup):
+    cfg, params, theta, tokens = gpt_setup
+    prefill = jax.jit(M.make_prefill(cfg))
+    logits_full = M.logits_fn(params, tokens, cfg, False)
+    lens = jnp.asarray(
+        [1 + i % cfg.seq_len for i in range(cfg.batch)], jnp.int32)
+    rec = prefill(theta, tokens, lens)
+    for b in range(cfg.batch):
+        np.testing.assert_allclose(
+            np.asarray(rec[b, :cfg.vocab]),
+            np.asarray(logits_full[b, int(lens[b]) - 1]),
+            rtol=1e-4, atol=1e-5,
+            err_msg=f"request {b} (len {int(lens[b])}) logits diverged")
+
+
+def test_prefill_zeroes_cache_beyond_each_len(gpt_setup):
     cfg, _, theta, tokens = gpt_setup
-    plen = 3
-    rec = jax.jit(M.make_prefill(cfg))(theta, tokens, jnp.float32(plen))
+    lens = jnp.asarray(
+        [1 + i % cfg.seq_len for i in range(cfg.batch)], jnp.int32)
+    rec = jax.jit(M.make_prefill(cfg))(theta, tokens, lens)
     kv = np.asarray(rec[:, cfg.vocab:]).reshape(
         cfg.batch, cfg.n_layer, 2, cfg.seq_len, cfg.d_model)
-    assert np.all(kv[:, :, :, plen:] == 0.0)
-    assert np.any(kv[:, :, :, :plen] != 0.0)
+    for b in range(cfg.batch):
+        plen = int(lens[b])
+        assert np.all(kv[b, :, :, plen:] == 0.0)
+        assert np.any(kv[b, :, :, :plen] != 0.0)
 
 
 def test_decode_chain_matches_full_forward(gpt_setup):
@@ -61,13 +89,32 @@ def test_decode_chain_matches_full_forward(gpt_setup):
     decode = jax.jit(M.make_decode_step(cfg))
     logits_full = M.logits_fn(params, tokens, cfg, False)
     plen = 2
-    rec = prefill(theta, tokens, jnp.float32(plen))
+    rec = prefill(theta, tokens, uni(cfg, plen))
     for pos in range(plen, cfg.seq_len):
-        rec = decode(theta, rec, tokens[:, pos], jnp.float32(pos))
+        rec = decode(theta, rec, tokens[:, pos], uni(cfg, pos))
         np.testing.assert_allclose(
             np.asarray(rec[:, :cfg.vocab]), np.asarray(logits_full[:, pos]),
             rtol=1e-3, atol=1e-4,
             err_msg=f"decode logits diverged at position {pos}")
+
+
+def test_ragged_decode_step_advances_each_request(gpt_setup):
+    # one mixed-depth step must match each request's own full-forward row
+    cfg, params, theta, tokens = gpt_setup
+    prefill = jax.jit(M.make_prefill(cfg))
+    decode = jax.jit(M.make_decode_step(cfg))
+    logits_full = M.logits_fn(params, tokens, cfg, False)
+    lens = jnp.asarray(
+        [1 + i % (cfg.seq_len - 1) for i in range(cfg.batch)], jnp.int32)
+    rec = prefill(theta, tokens, lens)
+    next_tok = jnp.take_along_axis(tokens, lens[:, None], axis=1)[:, 0]
+    rec = decode(theta, rec, next_tok, lens)
+    for b in range(cfg.batch):
+        pos = int(lens[b])
+        np.testing.assert_allclose(
+            np.asarray(rec[b, :cfg.vocab]), np.asarray(logits_full[b, pos]),
+            rtol=1e-3, atol=1e-4,
+            err_msg=f"request {b} diverged after its step at position {pos}")
 
 
 def test_decode_record_equals_longer_prefill(gpt_setup):
@@ -75,9 +122,9 @@ def test_decode_record_equals_longer_prefill(gpt_setup):
     prefill = jax.jit(M.make_prefill(cfg))
     decode = jax.jit(M.make_decode_step(cfg))
     plen = 4
-    stepped = decode(theta, prefill(theta, tokens, jnp.float32(plen)),
-                     tokens[:, plen], jnp.float32(plen))
-    longer = prefill(theta, tokens, jnp.float32(plen + 1))
+    stepped = decode(theta, prefill(theta, tokens, uni(cfg, plen)),
+                     tokens[:, plen], uni(cfg, plen))
+    longer = prefill(theta, tokens, uni(cfg, plen + 1))
     np.testing.assert_allclose(np.asarray(stepped), np.asarray(longer),
                                rtol=1e-3, atol=1e-5)
 
@@ -86,6 +133,10 @@ def test_decode_artifacts_lower_to_hlo():
     from compile import aot
     cfg = BASE_CONFIGS["gpt_nano"]
     for art in aot.decode_artifacts(cfg):
+        name, spec = art.inputs[-1]
+        assert name == "lens"
+        assert spec.dtype == jnp.int32
+        assert spec.shape == (cfg.batch,)
         specs = [s for (_, s) in art.inputs]
         text = aot.to_hlo_text(jax.jit(art.fn).lower(*specs))
         assert "HloModule" in text

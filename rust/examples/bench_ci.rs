@@ -13,7 +13,7 @@
 use std::time::Duration;
 
 use anyhow::{Context, Result};
-use multilevel::coordinator::Trainer;
+use multilevel::coordinator::{synthetic_trace, ServeEngine, ServeOpts, Trainer, TrafficSpec};
 use multilevel::runtime::{init_state, init_theta, Arg, Checkpoint, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
@@ -44,10 +44,11 @@ fn decode_bench_rows(
     for _ in 0..b {
         tokens.extend(corpus.sequence(seq, &mut rng));
     }
+    let lens: Vec<i32> = vec![plen as i32; b];
     let pargs = [
         Arg::F32(&theta, vec![theta.len()]),
         Arg::I32(&tokens, vec![b, seq]),
-        Arg::Scalar(plen as f32),
+        Arg::I32(&lens, vec![b]),
     ];
     let recs = rt.call(&prefill, &pargs)?; // prepare + warm
     if suffix.is_empty() {
@@ -68,7 +69,7 @@ fn decode_bench_rows(
         Arg::F32(&theta, vec![theta.len()]),
         Arg::Buf(&recs),
         Arg::I32(&next, vec![b]),
-        Arg::Scalar(plen as f32),
+        Arg::I32(&lens, vec![b]),
     ];
     bench::black_box(rt.call(&decode, &dargs)?); // warm
     let label = format!("decode_step__{name}{suffix}");
@@ -78,6 +79,47 @@ fn decode_bench_rows(
     println!(
         "    -> {:.0} tokens/s ({b} requests per step)",
         b as f64 / stats.mean.as_secs_f64()
+    );
+    rows.push((label, stats));
+    Ok(())
+}
+
+/// One full continuous-batching serve of a small fixed mixed-length
+/// trace: queueing, slot churn, ragged prefill and ragged decode sweeps —
+/// the engine-level serving cost rather than a single artifact call.
+/// Deterministic by construction, so every iteration does identical work.
+fn serve_bench_row(
+    rt: &Runtime,
+    name: &str,
+    suffix: &str,
+    budget: Duration,
+    rows: &mut Vec<(String, bench::Stats)>,
+) -> Result<()> {
+    let cfg = rt.cfg(name)?.clone();
+    let theta = init_theta(&cfg, 1);
+    let spec = TrafficSpec {
+        seed: 11,
+        requests: 6,
+        mean_interarrival: 1.5,
+        prompt_lens: (1, cfg.seq_len / 2),
+        gen_tokens: (1, 6),
+    };
+    let trace = synthetic_trace(&cfg, &spec)?;
+    let eng = ServeEngine::new(
+        rt,
+        name,
+        ServeOpts { max_queue: spec.requests, ..ServeOpts::default() },
+    )?;
+    let warm = eng.run(rt, &theta, &trace)?; // prepare + warm
+    let label = format!("serve__{name}{suffix}");
+    let stats = bench::run(&label, budget, || {
+        bench::black_box(eng.run(rt, &theta, &trace).unwrap());
+    });
+    println!(
+        "    -> {} requests, {} tokens over {} engine steps per serve",
+        trace.len(),
+        warm.generated_tokens,
+        warm.steps
     );
     rows.push((label, stats));
     Ok(())
@@ -154,6 +196,7 @@ fn main() -> Result<()> {
         .collect();
     for name in &decode_configs {
         decode_bench_rows(&rt, name, "", budget, &mut rows)?;
+        serve_bench_row(&rt, name, "", budget, &mut rows)?;
     }
 
     // sharded train step: the data-parallel grad → all-reduce → AdamW path
@@ -201,6 +244,7 @@ fn main() -> Result<()> {
         // concatenated back in replica order (bit-identical to serial)
         for name in &decode_configs {
             decode_bench_rows(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
+            serve_bench_row(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
         }
     }
 

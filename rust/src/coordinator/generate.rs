@@ -2,9 +2,11 @@
 //! artifacts through a [`Runtime`] to produce tokens for a batch of
 //! requests — the first genuinely serve-shaped workload of the system.
 //!
-//! One [`Generator::generate`] call prefills `batch` prompts in a single
-//! artifact call, then advances all requests one token per `decode_step`
-//! call. The decode record buffer (`[batch, logits + kv]`, see
+//! One [`Generator::generate`] call takes a [`GenerateRequest`] (prompt
+//! tokens, length, token budget, sampler — built builder-style so
+//! per-request fields extend without breaking callers), prefills `batch`
+//! prompts in a single artifact call, then advances all requests one token
+//! per `decode_step` call. The decode record buffer (`[batch, logits + kv]`, see
 //! `ModelCfg::decode_rec_len`) is carried between steps as an opaque
 //! [`Buffer`](crate::runtime::Buffer) and never copied by the driver:
 //! sampling borrows the host storage in place (`Buffer::as_host_f32`) and
@@ -90,27 +92,65 @@ impl Sampler {
     }
 }
 
+/// One batched generation request: `batch` prompts sharing a prompt
+/// length, a new-token budget, and the sampler. Built builder-style —
+/// [`GenerateRequest::new`] plus chained setters — so per-request fields
+/// can grow without breaking existing callers.
+pub struct GenerateRequest<'a> {
+    /// `[batch, prompt_len]` row-major prompt token ids.
+    prompts: &'a [i32],
+    /// Shared prompt length (tokens per request).
+    prompt_len: usize,
+    /// Tokens to generate per request.
+    max_new_tokens: usize,
+    /// Token-selection rule (owned: sampling mutates its RNG stream).
+    sampler: Sampler,
+}
+
+impl<'a> GenerateRequest<'a> {
+    /// Request over `[batch, prompt_len]` prompt tokens; defaults to one
+    /// new token under greedy decoding.
+    pub fn new(prompts: &'a [i32], prompt_len: usize) -> GenerateRequest<'a> {
+        GenerateRequest { prompts, prompt_len, max_new_tokens: 1, sampler: Sampler::greedy() }
+    }
+
+    /// Set the per-request new-token budget.
+    pub fn max_new_tokens(mut self, n: usize) -> GenerateRequest<'a> {
+        self.max_new_tokens = n;
+        self
+    }
+
+    /// Replace the default greedy sampler.
+    pub fn sampler(mut self, sampler: Sampler) -> GenerateRequest<'a> {
+        self.sampler = sampler;
+        self
+    }
+}
+
 /// Result of one batched generation run.
 pub struct Generation {
-    /// Generated token ids, `gen` per request.
+    /// Generated token ids, `max_new_tokens` per request.
     pub tokens: Vec<Vec<i32>>,
+    /// Requests decoded together (recorded so throughput needs no
+    /// caller-supplied batch size).
+    pub batch: usize,
     /// Wall time of the prefill call (seconds).
     pub prefill_secs: f64,
     /// Wall time of the decode loop, sampling included (seconds).
     pub decode_secs: f64,
-    /// `decode_step` calls executed (`gen - 1`: the final sampled token is
-    /// never written back).
+    /// `decode_step` calls executed (`max_new_tokens - 1`: the final
+    /// sampled token is never written back).
     pub decode_steps: usize,
 }
 
 impl Generation {
     /// Steady-state decode throughput in tokens per second across the
     /// whole request batch (0 when no decode step ran).
-    pub fn tokens_per_sec(&self, batch: usize) -> f64 {
+    pub fn tokens_per_sec(&self) -> f64 {
         if self.decode_steps == 0 || self.decode_secs <= 0.0 {
             return 0.0;
         }
-        (self.decode_steps * batch) as f64 / self.decode_secs
+        (self.decode_steps * self.batch) as f64 / self.decode_secs
     }
 }
 
@@ -143,19 +183,16 @@ impl Generator {
         &self.cfg
     }
 
-    /// Generate `gen` tokens for `cfg.batch` requests sharing one prompt
-    /// length. `prompts` is `[batch, prompt_len]` row-major token ids;
-    /// the learned positions bound the total: `prompt_len + gen - 1 <=
-    /// seq_len` (the final sampled token is never written back).
+    /// Run one batched generation request. The learned positions bound the
+    /// total: `prompt_len + max_new_tokens - 1 <= seq_len` (the final
+    /// sampled token is never written back).
     pub fn generate(
         &self,
         rt: &Runtime,
         theta: &[f32],
-        prompts: &[i32],
-        prompt_len: usize,
-        gen: usize,
-        sampler: &mut Sampler,
+        req: GenerateRequest<'_>,
     ) -> Result<Generation> {
+        let GenerateRequest { prompts, prompt_len, max_new_tokens: gen, mut sampler } = req;
         let (b, s, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
         let rec = self.cfg.decode_rec_len();
         if theta.len() != self.cfg.n_params {
@@ -169,7 +206,7 @@ impl Generator {
             bail!("prompts carry {} tokens, want {b} x {prompt_len}", prompts.len());
         }
         if gen == 0 {
-            bail!("nothing to generate (gen = 0)");
+            bail!("nothing to generate (max_new_tokens = 0)");
         }
         let max_gen = s - prompt_len + 1;
         if gen > max_gen {
@@ -186,13 +223,14 @@ impl Generator {
             padded[bi * s..bi * s + prompt_len]
                 .copy_from_slice(&prompts[bi * prompt_len..(bi + 1) * prompt_len]);
         }
+        let mut lens = vec![prompt_len as i32; b];
         let t0 = Instant::now();
         let mut recs = rt.call(
             &self.prefill,
             &[
                 Arg::F32(theta, vec![theta.len()]),
                 Arg::I32(&padded, vec![b, s]),
-                Arg::Scalar(prompt_len as f32),
+                Arg::I32(&lens, vec![b]),
             ],
         )?;
         let prefill_secs = t0.elapsed().as_secs_f64();
@@ -215,14 +253,14 @@ impl Generator {
             if gi + 1 == gen {
                 break;
             }
-            let len = prompt_len + gi;
+            lens.fill((prompt_len + gi) as i32);
             let stepped = rt.call(
                 &self.decode,
                 &[
                     Arg::F32(theta, vec![theta.len()]),
                     Arg::Buf(&recs),
                     Arg::I32(&next, vec![b]),
-                    Arg::Scalar(len as f32),
+                    Arg::I32(&lens, vec![b]),
                 ],
             )?;
             recs = stepped;
@@ -230,6 +268,7 @@ impl Generator {
         }
         Ok(Generation {
             tokens,
+            batch: b,
             prefill_secs,
             decode_secs: t1.elapsed().as_secs_f64(),
             decode_steps,
@@ -273,19 +312,29 @@ mod tests {
         let prompts: Vec<i32> =
             (0..cfg.batch * p).map(|i| (i % cfg.vocab) as i32).collect();
         let gen = cfg.seq_len - p + 1; // the maximum the positions allow
-        let mut s1 = Sampler::greedy();
-        let a = g.generate(&rt, &theta, &prompts, p, gen, &mut s1).unwrap();
-        let mut s2 = Sampler::greedy();
-        let b = g.generate(&rt, &theta, &prompts, p, gen, &mut s2).unwrap();
+        let req = || GenerateRequest::new(&prompts, p).max_new_tokens(gen);
+        let a = g.generate(&rt, &theta, req()).unwrap();
+        let b = g.generate(&rt, &theta, req()).unwrap();
         assert_eq!(a.tokens, b.tokens, "greedy generation not deterministic");
         assert_eq!(a.tokens.len(), cfg.batch);
+        assert_eq!(a.batch, cfg.batch, "Generation must record its batch");
         assert!(a.tokens.iter().all(|t| t.len() == gen));
         assert_eq!(a.decode_steps, gen - 1);
         // one more token would need a position beyond the learned context
         let err = g
-            .generate(&rt, &theta, &prompts, p, gen + 1, &mut Sampler::greedy())
+            .generate(&rt, &theta, req().max_new_tokens(gen + 1))
             .unwrap_err()
             .to_string();
         assert!(err.contains("at most"), "{err}");
+        // the sampler rides the request: a seeded temperature stream is
+        // reproducible run to run
+        let t = |seed| {
+            GenerateRequest::new(&prompts, p)
+                .max_new_tokens(3)
+                .sampler(Sampler::temperature(0.7, seed).unwrap())
+        };
+        let x = g.generate(&rt, &theta, t(9)).unwrap();
+        let y = g.generate(&rt, &theta, t(9)).unwrap();
+        assert_eq!(x.tokens, y.tokens, "seeded sampling not reproducible");
     }
 }

@@ -12,12 +12,14 @@ pub mod lora;
 pub mod metrics;
 pub mod operators;
 pub mod schedule;
+pub mod serve;
 pub mod trainer;
 
 pub use checkpoint::{finetune_resumable, run_vcycle_resumable, train_resumable,
                      CheckpointManager};
 pub use experiment::{Harness, Method, Run, RunOpts};
-pub use generate::{Generation, Generator, Sampler};
+pub use generate::{GenerateRequest, Generation, Generator, Sampler};
+pub use serve::{synthetic_trace, ServeEngine, ServeOpts, ServeReport, TrafficSpec};
 pub use metrics::{savings_vs_scratch, Curve, Point, Savings};
 pub use schedule::LrSchedule;
 pub use trainer::Trainer;

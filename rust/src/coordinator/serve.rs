@@ -1,0 +1,595 @@
+//! Continuous-batching serving engine over the `prefill__*` /
+//! `decode_step__*` artifacts: a FIFO request queue with admission
+//! control, a slot-based pool of decode records that requests join and
+//! leave mid-decode, and a deterministic synthetic-traffic driver for
+//! benchmarking the serving path under load.
+//!
+//! Unlike [`Generator`](super::generate::Generator) — which runs one
+//! batch of same-length prompts in lockstep — the engine keeps the
+//! batch *ragged*: every occupied slot sits at its own cache depth
+//! (`lens[i]`), new requests prefill into freed slots while older ones
+//! are still decoding, and each `decode_step` call advances all active
+//! slots by one token in a single artifact call.
+//!
+//! # Determinism contract
+//!
+//! Slot assignment and batch membership are a pure function of the
+//! arrival trace: time advances in *engine steps* (one decode sweep per
+//! step), arrivals are indexed by step, the queue is strictly FIFO, and
+//! free slots fill in ascending slot order. Sampling draws from a
+//! per-request seeded stream (`seed ^ request id`), so a request's
+//! tokens do not depend on which other requests share its batch.
+//! Replaying the same trace therefore produces bit-identical tokens,
+//! finish steps, and rejections on any `PALLAS_REF_THREADS` and any
+//! `PALLAS_REPLICAS` — pinned by `tests/test_serve.rs`. Wall-clock
+//! latencies are *measured* per request but never feed back into
+//! scheduling.
+//!
+//! # Admission control
+//!
+//! At most `max_batch` slots decode together and at most `max_queue`
+//! requests wait. An arrival that finds the queue full is rejected
+//! outright (fail closed) and reported in
+//! [`ServeReport::rejected`] — it is never admitted late, so a replay
+//! sees the same rejections.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Corpus;
+use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime};
+use crate::util::rng::Rng;
+
+use super::generate::Sampler;
+
+/// Parameters of the synthetic-traffic driver: seeded Poisson arrivals
+/// (exponential inter-arrival gaps in engine steps) with uniformly drawn
+/// prompt and generation lengths, prompts drawn from the synthetic
+/// [`Corpus`]. The same spec always yields the same trace.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    /// Seed of the whole trace (arrival times, lengths, prompt tokens).
+    pub seed: u64,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Mean gap between arrivals, in engine steps (Poisson process).
+    pub mean_interarrival: f64,
+    /// Inclusive prompt-length range (clamped to the config's context).
+    pub prompt_lens: (usize, usize),
+    /// Inclusive new-token budget range (clamped so every request fits
+    /// the learned positions: `prompt + gen - 1 <= seq_len`).
+    pub gen_tokens: (usize, usize),
+}
+
+impl TrafficSpec {
+    /// A small mixed-length load: bursty enough to exercise queueing,
+    /// ragged enough that no two requests stay in lockstep.
+    pub fn quick(seed: u64, requests: usize) -> TrafficSpec {
+        TrafficSpec {
+            seed,
+            requests,
+            mean_interarrival: 1.5,
+            prompt_lens: (1, usize::MAX),
+            gen_tokens: (1, usize::MAX),
+        }
+    }
+}
+
+/// One request of an arrival trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Stable request id (arrival order within the trace).
+    pub id: usize,
+    /// Engine step at which the request arrives.
+    pub arrival_step: usize,
+    /// Prompt token ids (the request's own length).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub max_new: usize,
+}
+
+/// Generate a deterministic arrival trace for `cfg` from a spec.
+/// Arrival steps are non-decreasing; every request individually fits the
+/// learned context (`prompt + max_new - 1 <= seq_len`).
+pub fn synthetic_trace(cfg: &ModelCfg, spec: &TrafficSpec) -> Result<Vec<TraceRequest>> {
+    let s = cfg.seq_len;
+    if spec.requests == 0 {
+        bail!("traffic spec generates no requests");
+    }
+    if !(spec.mean_interarrival > 0.0) || !spec.mean_interarrival.is_finite() {
+        bail!("mean inter-arrival must be a positive finite step count, got {}",
+              spec.mean_interarrival);
+    }
+    let (plo, phi) = (spec.prompt_lens.0.max(1), spec.prompt_lens.1.min(s));
+    if plo > phi {
+        bail!("prompt length range {:?} is empty within context {s}", spec.prompt_lens);
+    }
+    let glo = spec.gen_tokens.0.max(1);
+    if glo > spec.gen_tokens.1 || glo > s - plo + 1 {
+        bail!("gen-token range {:?} is empty under context {s}", spec.gen_tokens);
+    }
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut trace = Vec::with_capacity(spec.requests);
+    for id in 0..spec.requests {
+        if id > 0 {
+            // exponential inter-arrival gap -> Poisson arrivals
+            t += -spec.mean_interarrival * (1.0 - rng.f64()).ln();
+        }
+        // a prompt length that leaves room for at least `glo` tokens
+        let pcap = phi.min(s - glo + 1);
+        let plen = plo + rng.below(pcap - plo + 1);
+        let gcap = spec.gen_tokens.1.min(s - plen + 1);
+        let max_new = glo + rng.below(gcap - glo + 1);
+        trace.push(TraceRequest {
+            id,
+            arrival_step: t as usize,
+            prompt: corpus.sequence(plen, &mut rng),
+            max_new,
+        });
+    }
+    Ok(trace)
+}
+
+/// Engine limits and sampling rule.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Slots decoding together (clamped to the artifact batch).
+    pub max_batch: usize,
+    /// Requests allowed to wait; arrivals beyond this are rejected.
+    pub max_queue: usize,
+    /// Per-request sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Base sampler seed; request `id` draws from `seed ^ id`.
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { max_batch: usize::MAX, max_queue: 16, temperature: 0.0, seed: 1 }
+    }
+}
+
+/// One completed request, in completion order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Served {
+    pub id: usize,
+    pub arrival_step: usize,
+    /// Engine step at which the final token was sampled.
+    pub finish_step: usize,
+    /// Wall time from arrival processing to completion (measured only —
+    /// never an input to scheduling).
+    pub latency_secs: f64,
+    pub tokens: Vec<i32>,
+}
+
+/// Outcome of serving one trace.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Completed requests in completion order (step, then slot order).
+    pub served: Vec<Served>,
+    /// Ids rejected at admission (queue full — fail closed).
+    pub rejected: Vec<usize>,
+    /// Engine steps executed.
+    pub steps: usize,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    /// Total tokens sampled across all served requests.
+    pub generated_tokens: usize,
+    /// Wall time of the whole run.
+    pub wall_secs: f64,
+}
+
+impl ServeReport {
+    /// Nearest-rank latency percentile in milliseconds (0 when nothing
+    /// was served). `p` in (0, 100].
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        if self.served.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<f64> = self.served.iter().map(|r| r.latency_secs).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * lat.len() as f64).ceil() as usize;
+        lat[rank.clamp(1, lat.len()) - 1] * 1e3
+    }
+
+    /// Median request latency (ms).
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_percentile_ms(50.0)
+    }
+
+    /// Tail request latency (ms).
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_percentile_ms(99.0)
+    }
+
+    /// Generated tokens per wall-second across the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall_secs
+    }
+}
+
+/// A request waiting in the FIFO queue.
+struct Pending {
+    id: usize,
+    arrival_step: usize,
+    enqueued: Instant,
+    prompt: Vec<i32>,
+    max_new: usize,
+}
+
+/// One occupied slot of the record pool.
+struct Slot {
+    id: usize,
+    arrival_step: usize,
+    enqueued: Instant,
+    /// Cache positions currently held (the request's own depth).
+    len: usize,
+    /// Tokens still to sample.
+    remaining: usize,
+    /// Sampled-but-unconsumed token — the next `decode_step` input.
+    next: i32,
+    tokens: Vec<i32>,
+    sampler: Sampler,
+    /// The slot's decode record (`[logits | kv]`), scattered back after
+    /// every batched call.
+    rec: Vec<f32>,
+}
+
+/// Prepared continuous-batching engine for one causal config.
+pub struct ServeEngine {
+    cfg: ModelCfg,
+    prefill: Rc<Exe>,
+    decode: Rc<Exe>,
+    opts: ServeOpts,
+}
+
+impl ServeEngine {
+    /// Prepare the decode artifacts of `config` with the given limits.
+    /// `max_batch` is clamped to the artifact batch; both limits must be
+    /// nonzero. Errors clearly for non-causal configs.
+    pub fn new(rt: &Runtime, config: &str, opts: ServeOpts) -> Result<ServeEngine> {
+        let cfg = rt.cfg(config)?.clone();
+        if cfg.family != Family::Gpt {
+            bail!("serving requires a causal (gpt) config; '{}' is {:?}", cfg.name, cfg.family);
+        }
+        if opts.max_batch == 0 || opts.max_queue == 0 {
+            bail!("serve limits must be nonzero (max_batch {}, max_queue {})",
+                  opts.max_batch, opts.max_queue);
+        }
+        if opts.temperature < 0.0 || !opts.temperature.is_finite() {
+            bail!("sampling temperature must be finite and >= 0, got {}", opts.temperature);
+        }
+        let mut opts = opts;
+        opts.max_batch = opts.max_batch.min(cfg.batch);
+        let prefill = rt.exe(&format!("prefill__{config}"))?;
+        let decode = rt.exe(&format!("decode_step__{config}"))?;
+        Ok(ServeEngine { cfg, prefill, decode, opts })
+    }
+
+    /// The driven config.
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    /// The effective limits (after clamping to the artifact batch).
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    fn sampler_for(&self, id: usize) -> Result<Sampler> {
+        if self.opts.temperature > 0.0 {
+            Sampler::temperature(self.opts.temperature, self.opts.seed ^ id as u64)
+        } else {
+            Ok(Sampler::greedy())
+        }
+    }
+
+    /// Sample one token into a slot; true when the request just finished.
+    fn sample(slot: &mut Slot, logits: &[f32]) -> bool {
+        let tok = slot.sampler.pick(logits) as i32;
+        slot.tokens.push(tok);
+        slot.next = tok;
+        slot.remaining -= 1;
+        slot.remaining == 0
+    }
+
+    /// Serve one arrival trace to completion. Each engine step runs, in
+    /// order: (a) arrivals whose step has come enter the queue (or are
+    /// rejected when it is full), (b) one ragged `decode_step` over every
+    /// occupied slot, (c) freed slots admit from the queue head and the
+    /// newly admitted requests prefill together in one ragged call,
+    /// sampling their first token. Steps with nothing active fast-forward
+    /// to the next arrival.
+    pub fn run(&self, rt: &Runtime, theta: &[f32], trace: &[TraceRequest]) -> Result<ServeReport> {
+        let (s, v) = (self.cfg.seq_len, self.cfg.vocab);
+        let rec = self.cfg.decode_rec_len();
+        if theta.len() != self.cfg.n_params {
+            bail!("theta has {} elements, config {} needs {}", theta.len(), self.cfg.name,
+                  self.cfg.n_params);
+        }
+        for (i, r) in trace.iter().enumerate() {
+            if i > 0 && r.arrival_step < trace[i - 1].arrival_step {
+                bail!("trace arrival steps must be non-decreasing (request {} at step {} \
+                       after step {})", r.id, r.arrival_step, trace[i - 1].arrival_step);
+            }
+            let plen = r.prompt.len();
+            if plen == 0 || plen > s {
+                bail!("request {}: prompt length {plen} outside 1..={s}", r.id);
+            }
+            if r.max_new == 0 || plen + r.max_new - 1 > s {
+                bail!("request {}: {} prompt + {} new tokens exceeds the learned context \
+                       ({s} positions)", r.id, plen, r.max_new);
+            }
+        }
+
+        let mut report = ServeReport::default();
+        let mut queue: VecDeque<Pending> = VecDeque::new();
+        let mut slots: Vec<Option<Slot>> = (0..self.opts.max_batch).map(|_| None).collect();
+        let mut next_arrival = 0usize;
+        let mut step = 0usize;
+        let t0 = Instant::now();
+
+        loop {
+            let idle = queue.is_empty() && slots.iter().all(Option::is_none);
+            if next_arrival == trace.len() && idle {
+                break;
+            }
+            if idle {
+                // nothing to decode and nothing queued: jump to the next
+                // arrival (pure bookkeeping — replays identically)
+                step = step.max(trace[next_arrival].arrival_step);
+            }
+
+            // (a) arrivals: FIFO admission queue, full queue fails closed
+            while next_arrival < trace.len() && trace[next_arrival].arrival_step <= step {
+                let r = &trace[next_arrival];
+                next_arrival += 1;
+                if queue.len() == self.opts.max_queue {
+                    report.rejected.push(r.id);
+                    continue;
+                }
+                queue.push_back(Pending {
+                    id: r.id,
+                    arrival_step: r.arrival_step,
+                    enqueued: Instant::now(),
+                    prompt: r.prompt.clone(),
+                    max_new: r.max_new,
+                });
+            }
+
+            // (b) one ragged decode sweep over every occupied slot
+            let active: Vec<usize> = (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
+            if !active.is_empty() {
+                let n = active.len();
+                let mut cache = Vec::with_capacity(n * rec);
+                let mut toks = Vec::with_capacity(n);
+                let mut lens = Vec::with_capacity(n);
+                for &si in &active {
+                    let sl = slots[si].as_ref().unwrap();
+                    cache.extend_from_slice(&sl.rec);
+                    toks.push(sl.next);
+                    lens.push(sl.len as i32);
+                }
+                let out = rt.call(
+                    &self.decode,
+                    &[
+                        Arg::F32(theta, vec![theta.len()]),
+                        Arg::F32(&cache, vec![n, rec]),
+                        Arg::I32(&toks, vec![n]),
+                        Arg::I32(&lens, vec![n]),
+                    ],
+                )?;
+                report.decode_calls += 1;
+                let host = out.as_host_f32().context("serving needs a host-resident backend")?;
+                for (row, &si) in active.iter().enumerate() {
+                    let sl = slots[si].as_mut().unwrap();
+                    sl.rec.copy_from_slice(&host[row * rec..(row + 1) * rec]);
+                    sl.len += 1;
+                    report.generated_tokens += 1;
+                    if Self::sample(sl, &host[row * rec..row * rec + v]) {
+                        let sl = slots[si].take().unwrap();
+                        report.served.push(Served {
+                            id: sl.id,
+                            arrival_step: sl.arrival_step,
+                            finish_step: step,
+                            latency_secs: sl.enqueued.elapsed().as_secs_f64(),
+                            tokens: sl.tokens,
+                        });
+                    }
+                }
+            }
+
+            // (c) admission: freed slots fill from the queue head in
+            // ascending slot order; the new requests prefill together
+            let mut admitted = Vec::new();
+            for si in 0..slots.len() {
+                if queue.is_empty() {
+                    break;
+                }
+                if slots[si].is_none() {
+                    let p = queue.pop_front().unwrap();
+                    let plen = p.prompt.len();
+                    slots[si] = Some(Slot {
+                        id: p.id,
+                        arrival_step: p.arrival_step,
+                        enqueued: p.enqueued,
+                        len: plen,
+                        remaining: p.max_new,
+                        next: 0,
+                        tokens: Vec::with_capacity(p.max_new),
+                        sampler: self.sampler_for(p.id)?,
+                        rec: vec![0.0; rec],
+                    });
+                    // the prompt rides along only until the prefill below
+                    admitted.push((si, p.prompt));
+                }
+            }
+            if !admitted.is_empty() {
+                let n = admitted.len();
+                let mut tokens = vec![0i32; n * s];
+                let mut lens = Vec::with_capacity(n);
+                for (row, (_, prompt)) in admitted.iter().enumerate() {
+                    tokens[row * s..row * s + prompt.len()].copy_from_slice(prompt);
+                    lens.push(prompt.len() as i32);
+                }
+                let out = rt.call(
+                    &self.prefill,
+                    &[
+                        Arg::F32(theta, vec![theta.len()]),
+                        Arg::I32(&tokens, vec![n, s]),
+                        Arg::I32(&lens, vec![n]),
+                    ],
+                )?;
+                report.prefill_calls += 1;
+                let host = out.as_host_f32().context("serving needs a host-resident backend")?;
+                for (row, &(si, _)) in admitted.iter().enumerate() {
+                    let sl = slots[si].as_mut().unwrap();
+                    sl.rec.copy_from_slice(&host[row * rec..(row + 1) * rec]);
+                    report.generated_tokens += 1;
+                    if Self::sample(sl, &host[row * rec..row * rec + v]) {
+                        let sl = slots[si].take().unwrap();
+                        report.served.push(Served {
+                            id: sl.id,
+                            arrival_step: sl.arrival_step,
+                            finish_step: step,
+                            latency_secs: sl.enqueued.elapsed().as_secs_f64(),
+                            tokens: sl.tokens,
+                        });
+                    }
+                }
+            }
+
+            step += 1;
+            report.steps = step;
+        }
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::init_theta;
+
+    fn spec(seed: u64, n: usize) -> TrafficSpec {
+        TrafficSpec::quick(seed, n)
+    }
+
+    #[test]
+    fn synthetic_trace_is_seeded_and_fits_the_context() {
+        let rt = Runtime::reference();
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let a = synthetic_trace(&cfg, &spec(3, 12)).unwrap();
+        let b = synthetic_trace(&cfg, &spec(3, 12)).unwrap();
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.arrival_step, &x.prompt, x.max_new),
+                       (y.arrival_step, &y.prompt, y.max_new));
+        }
+        let c = synthetic_trace(&cfg, &spec(4, 12)).unwrap();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt),
+                "different seeds should differ");
+        let mut last = 0;
+        let mut lens = std::collections::BTreeSet::new();
+        for r in &a {
+            assert!(r.arrival_step >= last, "arrivals must be non-decreasing");
+            last = r.arrival_step;
+            assert!(!r.prompt.is_empty() && r.prompt.len() <= cfg.seq_len);
+            assert!(r.max_new >= 1);
+            assert!(r.prompt.len() + r.max_new - 1 <= cfg.seq_len, "request overflows context");
+            lens.insert(r.prompt.len());
+        }
+        assert!(lens.len() > 1, "trace should be ragged, got lengths {lens:?}");
+    }
+
+    #[test]
+    fn engine_serves_every_request_with_its_own_budget() {
+        let rt = Runtime::reference();
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let theta = init_theta(&cfg, 5);
+        let trace = synthetic_trace(&cfg, &spec(7, 9)).unwrap();
+        let eng = ServeEngine::new(&rt, "gpt_nano",
+                                   ServeOpts { max_queue: 9, ..ServeOpts::default() })
+            .unwrap();
+        assert_eq!(eng.opts().max_batch, cfg.batch, "max_batch clamps to the artifact batch");
+        let rep = eng.run(&rt, &theta, &trace).unwrap();
+        assert!(rep.rejected.is_empty(), "queue sized for the trace: {:?}", rep.rejected);
+        assert_eq!(rep.served.len(), trace.len());
+        let total: usize = trace.iter().map(|r| r.max_new).sum();
+        assert_eq!(rep.generated_tokens, total);
+        for r in &rep.served {
+            let want = trace[r.id].max_new;
+            assert_eq!(r.tokens.len(), want, "request {} budget", r.id);
+            assert!(r.tokens.iter().all(|&t| (t as usize) < cfg.vocab));
+            assert!(r.finish_step >= r.arrival_step);
+        }
+        assert!(rep.decode_calls > 0 && rep.prefill_calls > 0);
+        assert!(rep.p50_ms() <= rep.p99_ms());
+    }
+
+    #[test]
+    fn full_queue_rejects_fail_closed_in_arrival_order() {
+        let rt = Runtime::reference();
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let theta = init_theta(&cfg, 5);
+        // everyone arrives at step 0, before any slot frees: the queue
+        // holds 2, so every later arrival rejects outright
+        let trace: Vec<TraceRequest> = (0..6)
+            .map(|id| TraceRequest {
+                id,
+                arrival_step: 0,
+                prompt: vec![0, 1, 2],
+                max_new: 2,
+            })
+            .collect();
+        let eng = ServeEngine::new(
+            &rt,
+            "gpt_nano",
+            ServeOpts { max_batch: 1, max_queue: 2, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let rep = eng.run(&rt, &theta, &trace).unwrap();
+        assert_eq!(rep.rejected, vec![2, 3, 4, 5], "full queue rejects, never admits late");
+        let ids: Vec<usize> = rep.served.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1], "FIFO completion under a single slot");
+        assert_eq!(ids.len() + rep.rejected.len(), trace.len());
+    }
+
+    #[test]
+    fn engine_rejects_bad_traces_and_configs() {
+        let rt = Runtime::reference();
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let theta = init_theta(&cfg, 5);
+        let err = ServeEngine::new(&rt, "bert_nano", ServeOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("causal"), "{err}");
+        let eng = ServeEngine::new(&rt, "gpt_nano", ServeOpts::default()).unwrap();
+        let too_long = vec![TraceRequest {
+            id: 0,
+            arrival_step: 0,
+            prompt: vec![0; cfg.seq_len],
+            max_new: 2,
+        }];
+        let err = eng.run(&rt, &theta, &too_long).unwrap_err().to_string();
+        assert!(err.contains("learned context"), "{err}");
+        let unsorted = vec![
+            TraceRequest { id: 0, arrival_step: 5, prompt: vec![0], max_new: 1 },
+            TraceRequest { id: 1, arrival_step: 2, prompt: vec![0], max_new: 1 },
+        ];
+        let err = eng.run(&rt, &theta, &unsorted).unwrap_err().to_string();
+        assert!(err.contains("non-decreasing"), "{err}");
+        assert!(ServeEngine::new(&rt, "gpt_nano",
+                                 ServeOpts { max_batch: 0, ..ServeOpts::default() })
+            .is_err());
+    }
+}

@@ -6,6 +6,7 @@
 //!   vcycle --base C --steps N    the paper's V-cycle (Algorithm 1)
 //!   exp <id|all> [--steps N]     regenerate a paper table/figure (DESIGN §6)
 //!   generate --config C          KV-cache incremental decode (serving path)
+//!   serve --config C             continuous-batching engine under load
 //!   bench-step --config C        per-step latency of the train hot loop
 //!   dump-plan                    canonical registry table (CI parity gate)
 //!   list                         available experiment ids
@@ -14,21 +15,23 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, train_resumable,
-                              CheckpointManager, Generator, Harness, Method, RunOpts,
-                              Sampler, Trainer};
+use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, synthetic_trace,
+                              train_resumable, CheckpointManager, GenerateRequest, Generator,
+                              Harness, Method, RunOpts, Sampler, ServeEngine, ServeOpts,
+                              Trainer, TrafficSpec};
 use multilevel::experiments;
 use multilevel::info;
 use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Checkpoint,
                           Manifest, Runtime};
 use multilevel::util::bench;
-use multilevel::util::cli::Args;
+use multilevel::util::cli::{Args, CommonArgs};
 use multilevel::util::logger;
 use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
 const USAGE: &str =
-    "usage: multilevel <info|train|vcycle|finetune|exp|generate|bench-step|dump-plan|list> [options]
+    "usage: multilevel <info|train|vcycle|finetune|exp|generate|serve|bench-step|dump-plan|list> \
+[options]
   info                          show manifest summary
   list                          list experiment ids
   train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
@@ -38,6 +41,10 @@ const USAGE: &str =
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
   generate --config <name> [--prompt-len <p>] [--gen <n>] [--temperature <t>]
            [--seed <n>] [--ckpt <path>]   (t = 0 -> greedy)
+  serve  --config <name> [--requests <n>] [--interarrival <steps>]
+         [--max-batch <b>] [--max-queue <q>] [--temperature <t>]
+         [--seed <n>] [--ckpt <path>]   (continuous batching under a
+         seeded synthetic trace; replays are bit-identical)
   bench-step --config <name> [--steps <n>]
   dump-plan                     print the canonical (config, artifact) table
   train/vcycle/finetune also accept checkpoint/resume options:
@@ -55,8 +62,8 @@ const USAGE: &str =
 /// Runtime honoring `--replicas` (overriding `PALLAS_REPLICAS`; a
 /// compiled-in device backend still wins, since sharding wraps only the
 /// host reference backend).
-fn runtime_of(args: &Args) -> Result<Runtime> {
-    match args.usize_res("replicas").map_err(|e| anyhow!("{e}\n{USAGE}"))? {
+fn runtime_of(common: &CommonArgs) -> Result<Runtime> {
+    match common.replicas {
         Some(r) => Runtime::load_default_sharded(r),
         None => Runtime::load_default(),
     }
@@ -65,32 +72,25 @@ fn runtime_of(args: &Args) -> Result<Runtime> {
 /// Resolve the kernel-thread count before any pool use: surface an
 /// unparsable `PALLAS_REF_THREADS` as a proper CLI error (never a silent
 /// fallback), then let an explicit `--threads` flag override it.
-fn apply_thread_opts(args: &Args) -> Result<()> {
+fn apply_thread_opts(common: &CommonArgs) -> Result<()> {
     threadpool::env_threads().map_err(|e| anyhow!("{e}\n{USAGE}"))?;
-    if let Some(t) = args.usize_res("threads").map_err(|e| anyhow!("{e}\n{USAGE}"))? {
+    if let Some(t) = common.threads {
         threadpool::set_threads(t);
     }
     Ok(())
 }
 
-/// Parse `--ckpt-dir/--ckpt-every/--resume` with the same strict contract as
-/// `--threads`: bad values and inconsistent combinations are CLI errors,
-/// never silent fallbacks. Returns the manager and the checkpoint to resume
-/// from (a missing `latest.ckpt` under `--resume` starts fresh with a log
-/// line; a corrupt one is a hard error).
-fn ckpt_opts(args: &Args) -> Result<(Option<CheckpointManager>, Option<Checkpoint>)> {
-    let every = args.usize_res("ckpt-every").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
-    let Some(dir) = args.get("ckpt-dir") else {
-        if every.is_some() {
-            bail!("--ckpt-every requires --ckpt-dir\n{USAGE}");
-        }
-        if args.flag("resume") {
-            bail!("--resume requires --ckpt-dir\n{USAGE}");
-        }
+/// Build the checkpoint machinery from the already-validated shared
+/// flags ([`CommonArgs::from_args`] enforced the `--ckpt-every`/`--resume`
+/// ⇒ `--ckpt-dir` dependencies). Returns the manager and the checkpoint
+/// to resume from (a missing `latest.ckpt` under `--resume` starts fresh
+/// with a log line; a corrupt one is a hard error).
+fn ckpt_opts(common: &CommonArgs) -> Result<(Option<CheckpointManager>, Option<Checkpoint>)> {
+    let Some(dir) = &common.ckpt_dir else {
         return Ok((None, None));
     };
-    let mgr = CheckpointManager::new(dir, every.unwrap_or(0))?;
-    let resume = if args.flag("resume") {
+    let mgr = CheckpointManager::new(dir, common.ckpt_every.unwrap_or(0))?;
+    let resume = if common.resume {
         let ck = mgr.load_latest()?;
         if ck.is_none() {
             info!("no checkpoint in {} yet — starting fresh", mgr.dir().display());
@@ -109,21 +109,25 @@ fn main() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    apply_thread_opts(&args)?;
+    // one strict pass over the shared flags; every subcommand sees the
+    // same typed view and the same error messages
+    let common = CommonArgs::from_args(&args).map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    apply_thread_opts(&common)?;
     match cmd {
-        "info" => cmd_info(&args),
+        "info" => cmd_info(&common),
         "list" => {
             for (id, desc) in experiments::REGISTRY {
                 println!("{id:8} {desc}");
             }
             Ok(())
         }
-        "train" => cmd_train(&args),
-        "vcycle" => cmd_vcycle(&args),
-        "finetune" => cmd_finetune(&args),
-        "exp" => cmd_exp(&args),
-        "generate" => cmd_generate(&args),
-        "bench-step" => cmd_bench_step(&args),
+        "train" => cmd_train(&args, &common),
+        "vcycle" => cmd_vcycle(&args, &common),
+        "finetune" => cmd_finetune(&args, &common),
+        "exp" => cmd_exp(&args, &common),
+        "generate" => cmd_generate(&args, &common),
+        "serve" => cmd_serve(&args, &common),
+        "bench-step" => cmd_bench_step(&args, &common),
         "dump-plan" => {
             // the built-in registry, canonically rendered — CI diffs this
             // against `python -m compile.aot --dump-plan`
@@ -134,8 +138,8 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_info(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_info(common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let (replicas, threads_per) = rt.shard_topology();
     println!("platform: {}", rt.platform_name());
     println!("device:   {}", rt.device_info());
@@ -153,13 +157,13 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_train(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let config = args.get("config").unwrap_or("gpt_nano").to_string();
     let steps = args.usize_or("steps", 100);
     let lr = args.f64_or("lr", 1e-3) as f32;
     let seed = args.u64_or("seed", 42);
-    let (mgr, resume) = ckpt_opts(args)?;
+    let (mgr, resume) = ckpt_opts(common)?;
     let cfg = rt.cfg(&config)?.clone();
     let t0 = std::time::Instant::now();
     let (state, loss) =
@@ -176,15 +180,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_vcycle(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_vcycle(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let base = args.get("base").unwrap_or("gpt_nano").to_string();
     let steps = args.usize_or("steps", 200);
     let levels = args.usize_or("levels", 2);
     let mut opts = RunOpts::quick(&base, steps);
     opts.alpha = args.f64_or("alpha", 0.25) as f32;
     opts.seed = args.u64_or("seed", 17);
-    let (mgr, resume) = ckpt_opts(args)?;
+    let (mgr, resume) = ckpt_opts(common)?;
     if let Some(mgr) = mgr {
         // checkpointed mode: run (or continue) one resumable V-cycle; the
         // scratch-comparison rerun below would double the work of a long
@@ -212,8 +216,8 @@ fn cmd_vcycle(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_finetune(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_finetune(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let config = args.get("config").unwrap_or("bert_nano").to_string();
     let task = args.usize_or("task", 0);
     let n_tasks = multilevel::data::glue_sim::TASKS.len();
@@ -223,7 +227,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 30);
     let lr = args.f64_or("lr", 5e-4) as f32;
     let seed = args.u64_or("seed", 100);
-    let (mgr, resume) = ckpt_opts(args)?;
+    let (mgr, resume) = ckpt_opts(common)?;
     let cfg = rt.cfg(&config)?.clone();
     // backbone theta: a saved checkpoint, else a fresh (untrained) init —
     // the latter gives the probe's chance-level baseline
@@ -241,16 +245,16 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_exp(args: &Args) -> Result<()> {
+fn cmd_exp(args: &Args, common: &CommonArgs) -> Result<()> {
     let Some(id) = args.positional.get(1) else {
         bail!("exp needs an id (or 'all'); see `multilevel list`");
     };
-    let rt = runtime_of(args)?;
+    let rt = runtime_of(common)?;
     experiments::run(&rt, id, args)
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_generate(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let config = args.get("config").unwrap_or("gpt_base_sim").to_string();
     let cfg = rt.cfg(&config)?.clone();
     let prompt_len = args.usize_or("prompt-len", (cfg.seq_len / 4).max(1));
@@ -271,14 +275,17 @@ fn cmd_generate(args: &Args) -> Result<()> {
     for _ in 0..cfg.batch {
         prompts.extend(corpus.sequence(prompt_len, &mut rng));
     }
-    let mut sampler = if temperature > 0.0 {
+    let sampler = if temperature > 0.0 {
         Sampler::temperature(temperature, seed)?
     } else {
         Sampler::greedy()
     };
     let g = Generator::new(&rt, &config)?;
     println!("device: {}", rt.device_info());
-    let out = g.generate(&rt, &theta, &prompts, prompt_len, gen, &mut sampler)?;
+    let req = GenerateRequest::new(&prompts, prompt_len)
+        .max_new_tokens(gen)
+        .sampler(sampler);
+    let out = g.generate(&rt, &theta, req)?;
     for (bi, toks) in out.tokens.iter().enumerate() {
         let p: Vec<String> = prompts[bi * prompt_len..(bi + 1) * prompt_len]
             .iter()
@@ -294,13 +301,64 @@ fn cmd_generate(args: &Args) -> Result<()> {
         out.prefill_secs * 1e3,
         out.decode_steps,
         out.decode_secs * 1e3,
-        out.tokens_per_sec(cfg.batch),
+        out.tokens_per_sec(),
     );
     Ok(())
 }
 
-fn cmd_bench_step(args: &Args) -> Result<()> {
-    let rt = runtime_of(args)?;
+fn cmd_serve(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
+    let config = args.get("config").unwrap_or("gpt_base_sim").to_string();
+    let cfg = rt.cfg(&config)?.clone();
+    let seed = args.u64_or("seed", 42);
+    let theta = match args.get("ckpt") {
+        Some(p) => load_checkpoint(Path::new(p), &cfg)?,
+        None => init_theta(&cfg, seed),
+    };
+    let spec = TrafficSpec {
+        mean_interarrival: args.f64_or("interarrival", 1.5),
+        ..TrafficSpec::quick(seed, args.usize_or("requests", 32))
+    };
+    let trace = synthetic_trace(&cfg, &spec)?;
+    let opts = ServeOpts {
+        max_batch: args.usize_or("max-batch", cfg.batch),
+        max_queue: args.usize_or("max-queue", 2 * cfg.batch),
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        seed,
+    };
+    let eng = ServeEngine::new(&rt, &config, opts)?;
+    println!("device: {}", rt.device_info());
+    println!(
+        "trace: {} requests, mean inter-arrival {:.1} steps; slots {} queue {}",
+        trace.len(),
+        spec.mean_interarrival,
+        eng.opts().max_batch,
+        eng.opts().max_queue,
+    );
+    let rep = eng.run(&rt, &theta, &trace)?;
+    println!(
+        "served {}/{} requests ({} rejected) in {} engine steps \
+         ({} prefill + {} decode calls)",
+        rep.served.len(),
+        trace.len(),
+        rep.rejected.len(),
+        rep.steps,
+        rep.prefill_calls,
+        rep.decode_calls,
+    );
+    println!(
+        "{} tokens in {:.2} s -> {:.0} tokens/s; latency p50 {:.2} ms p99 {:.2} ms",
+        rep.generated_tokens,
+        rep.wall_secs,
+        rep.tokens_per_sec(),
+        rep.p50_ms(),
+        rep.p99_ms(),
+    );
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args, common: &CommonArgs) -> Result<()> {
+    let rt = runtime_of(common)?;
     let (replicas, threads_per) = rt.shard_topology();
     println!("device: {}", rt.device_info());
     println!("topology: {replicas} replicas x {threads_per} threads-per-replica");

@@ -141,6 +141,11 @@ mod tests {
         assert!(dump.contains("artifact prefill__gpt_nano kind=prefill config=gpt_nano \
                                config_small=- meta=shard=batch"));
         assert!(dump.contains("inputs=state:float32["), "state inputs missing");
+        // the decode pair carries the per-request length vector, not a scalar
+        let p = arts.iter().find(|l| l.contains("prefill__gpt_nano ")).unwrap();
+        assert!(p.ends_with("lens:int32[4]"), "prefill lens not canonical: {p}");
+        let d = arts.iter().find(|l| l.contains("decode_step__gpt_nano ")).unwrap();
+        assert!(d.ends_with("lens:int32[4]"), "decode_step lens not canonical: {d}");
         let ft = arts.iter().find(|l| l.contains("ft_grad__bert_nano")).unwrap();
         assert!(ft.contains("meta=n_classes=4;n_ft="), "meta not canonical: {ft}");
     }

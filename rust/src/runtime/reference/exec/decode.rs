@@ -12,15 +12,22 @@
 //! `logits` are the next-token logits of the request's last position; `kv`
 //! is the per-layer K/V cache, layout `[layer][k=0|v=1][position][d_model]`
 //! with heads concatenated along the feature axis exactly like the forward
-//! activations. Positions `>= len` are zero.
+//! activations. Positions `>= lens[bi]` are zero.
 //!
-//! * [`prefill_into`] runs the full causal forward over the first `len`
-//!   prompt positions (reusing [`backbone_fwd`], whose per-layer caches are
-//!   precisely the K/V rows) and emits the initial records.
+//! Both artifacts are **ragged**: every request carries its own length in
+//! the `lens` vector (`[b]`, int32), so prompts and generations of
+//! different lengths coexist in one batch — the contract the
+//! continuous-batching serve loop (`coordinator::serve`) is built on.
+//!
+//! * [`prefill_into`] runs one causal forward over `max(lens)` positions
+//!   (reusing [`backbone_fwd`], whose per-layer caches are precisely the
+//!   K/V rows) and extracts each request's own prefix: logits at row
+//!   `lens[bi] - 1`, cache rows `0..lens[bi]`.
 //! * [`decode_step_into`] advances every request by **one token**: it
-//!   computes Q/K/V for the new position only, appends K/V to the cache and
-//!   scores attention against cached positions `0..=len` — O(len) work in
-//!   the sequence length, never a full-sequence recompute.
+//!   computes Q/K/V for request `bi`'s position `lens[bi]` only, appends
+//!   K/V to that request's cache and scores attention against its cached
+//!   positions `0..=lens[bi]` — O(len) work in the sequence length, never
+//!   a full-sequence recompute.
 //!
 //! # Determinism and allocation
 //!
@@ -28,9 +35,11 @@
 //! `decode_step_into` performs **zero** heap allocations (probed by the
 //! counting allocator in `tests/test_decode.rs`). Kernels follow the
 //! thread-pool determinism contract, so records are bit-identical across
-//! `PALLAS_REF_THREADS`; per-request math never reads other requests'
-//! rows, so a batch-of-requests shard is bit-identical to the same
-//! requests decoded serially (the sharded backend relies on this).
+//! `PALLAS_REF_THREADS`. Per-request math never reads other requests'
+//! rows, and every per-row kernel accumulates in a row-local fixed order,
+//! so each record is bit-identical to running that request alone at its
+//! own length — the property that makes ragged batches, the sharded
+//! request split, and mid-decode join/leave all bitwise-stable.
 
 use anyhow::{bail, Result};
 
@@ -67,19 +76,34 @@ fn check_tokens(cfg: &ModelCfg, tokens: &[i32]) -> Result<()> {
     Ok(())
 }
 
+/// Validate a per-request length vector: one entry per request, each inside
+/// `lo..=hi` (prefill needs `1..=seq_len`; decode positions `0..seq_len-1`).
+fn check_lens(what: &str, lens: &[i32], b: usize, lo: i32, hi: i32) -> Result<()> {
+    if lens.len() != b {
+        bail!("{what} has {b} requests but {} lengths", lens.len());
+    }
+    for (bi, &l) in lens.iter().enumerate() {
+        if l < lo || l > hi {
+            bail!("{what} length {l} for request {bi} outside {lo}..={hi}");
+        }
+    }
+    Ok(())
+}
+
 /// Cache-aware single-position attention for one layer: `q` holds the new
 /// position's query rows `[b, d]`, `rec_buf` the records whose layer-`l`
-/// cache already contains K/V for positions `0..=len`. Writes the attended
-/// rows into `att` (`[b, d]`). Parallel over `(request, head)` tasks; each
-/// task owns its `att` column stripe and its score scratch slot, and only
-/// positions `0..=len` are scored.
+/// cache already contains K/V for request `bi`'s positions `0..=lens[bi]`.
+/// Writes the attended rows into `att` (`[b, d]`). Parallel over
+/// `(request, head)` tasks; each task owns its `att` column stripe and its
+/// score scratch slot, and scores only its own request's `0..=lens[bi]`
+/// positions — the ragged bound that keeps mixed-length batches exact.
 #[allow(clippy::too_many_arguments)]
 fn decode_attention(
     q: &[f32],
     rec_buf: &[f32],
     cfg: &ModelCfg,
     l: usize,
-    len: usize,
+    lens: &[i32],
     b: usize,
     scores: &mut [f32],
     att: &mut [f32],
@@ -90,11 +114,13 @@ fn decode_attention(
     let scale = 1.0 / (hd as f32).sqrt();
     let tasks = b * nh;
     debug_assert!(scores.len() >= tasks * s);
+    let scored: usize = lens.iter().map(|&l| l as usize + 1).sum();
     let patt = SendPtr(att.as_mut_ptr());
     let pscr = SendPtr(scores.as_mut_ptr());
-    parallel_for_min(2 * tasks * (len + 1) * hd, tasks, |task| {
+    parallel_for_min(2 * nh * scored * hd, tasks, |task| {
         let bi = task / nh;
         let h = task % nh;
+        let len = lens[bi] as usize;
         let c0 = h * hd;
         let qrow = &q[bi * d + c0..bi * d + c0 + hd];
         let k0 = bi * rec + kv_off(cfg, l, 0, 0);
@@ -132,15 +158,19 @@ fn decode_attention(
 }
 
 /// The `prefill__*` artifact: padded prompt tokens `[b, seq_len]` plus the
-/// shared prompt length in, one decode record per request out. Runs the
-/// causal forward over the first `len` positions only (positions `>= len`
-/// are never touched) and emits logits for position `len - 1` — the
-/// next-token distribution of the prompt — plus the K/V cache rows.
+/// per-request prompt lengths `lens` (`[b]`) in, one decode record per
+/// request out. Runs one causal forward over `max(lens)` positions and
+/// extracts each request's own prefix: logits for position `lens[bi] - 1`
+/// — the next-token distribution of that prompt — plus cache rows
+/// `0..lens[bi]`. Rows at or beyond a request's own length never reach its
+/// record: causal attention keeps row `p` a function of rows `0..=p` only,
+/// and every per-row kernel is bitwise independent of the other rows, so
+/// each record equals a solo prefill of that request at its own length.
 pub fn prefill_into(
     cfg: &ModelCfg,
     theta: &[f32],
     tokens: &[i32],
-    len: usize,
+    lens: &[i32],
     ws: &mut Workspace,
     out: &mut Vec<f32>,
 ) -> Result<()> {
@@ -157,23 +187,23 @@ pub fn prefill_into(
     if b == 0 {
         bail!("prefill needs at least one request");
     }
-    if len == 0 || len > s {
-        bail!("prefill prompt length {len} outside 1..={s}");
-    }
+    check_lens("prefill prompt", lens, b, 1, s as i32)?;
     check_tokens(cfg, tokens)?;
 
     let off = Offsets::resolve(cfg)?;
-    // geometry with the sequence axis shrunk to the prompt: the causal
-    // forward over `len` positions is exactly the full forward's prefix
-    let dm = Dims { s: len, ..Dims::with_batch(cfg, b) };
+    // geometry with the sequence axis shrunk to the longest prompt: the
+    // causal forward over `lmax` positions contains every request's own
+    // prefix bit-for-bit (row-prefix stability)
+    let lmax = lens.iter().map(|&l| l as usize).max().unwrap_or(1);
+    let dm = Dims { s: lmax, ..Dims::with_batch(cfg, b) };
     let (d, v) = (dm.d, dm.v);
 
-    // embed the prompt prefix out of the padded [b, s] token block
+    // embed the first lmax positions out of the padded [b, s] token block
     let mut x0 = ws.take(dm.rows() * d);
     for bi in 0..b {
-        for si in 0..len {
+        for si in 0..lmax {
             let tok = tokens[bi * s + si] as usize;
-            let xrow = &mut x0[(bi * len + si) * d..(bi * len + si + 1) * d];
+            let xrow = &mut x0[(bi * lmax + si) * d..(bi * lmax + si + 1) * d];
             let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
             let prow = &theta[off.pos + si * d..off.pos + (si + 1) * d];
             for j in 0..d {
@@ -183,28 +213,31 @@ pub fn prefill_into(
     }
     let cache = backbone_fwd(theta, &off, &dm, x0, ws);
 
-    // logits of each request's last position only (the [b, d] tail rows)
+    // logits of each request's own last position (row lens[bi] - 1)
     let mut xl = ws.take(b * d);
     for bi in 0..b {
+        let len = lens[bi] as usize;
         xl[bi * d..(bi + 1) * d]
-            .copy_from_slice(&cache.xf[(bi * len + len - 1) * d..(bi * len + len) * d]);
+            .copy_from_slice(&cache.xf[(bi * lmax + len - 1) * d..(bi * lmax + len) * d]);
     }
     let mut logits = ws.take(b * v);
     matmul(&mut logits, &xl, &theta[off.head_w..off.head_w + d * v], b, d, v);
     add_bias(&mut logits, &theta[off.head_b..off.head_b + v], b, v);
 
-    // assemble the records: logits, then each layer's K/V rows 0..len
-    // (positions >= len stay zero from the resize)
+    // assemble the records: logits, then each layer's K/V rows 0..lens[bi]
+    // (positions >= lens[bi] stay zero from the resize)
     let rec = cfg.decode_rec_len();
     out.clear();
     out.resize(b * rec, 0.0);
     for bi in 0..b {
+        let len = lens[bi] as usize;
         let r0 = bi * rec;
         out[r0..r0 + v].copy_from_slice(&logits[bi * v..(bi + 1) * v]);
         for (l, lc) in cache.layers.iter().enumerate() {
             for (kvi, src) in [(0usize, &lc.k), (1, &lc.v)] {
                 let dst = r0 + kv_off(cfg, l, kvi, 0);
-                out[dst..dst + len * d].copy_from_slice(&src[bi * len * d..(bi * len + len) * d]);
+                out[dst..dst + len * d]
+                    .copy_from_slice(&src[bi * lmax * d..(bi * lmax + len) * d]);
             }
         }
     }
@@ -215,23 +248,25 @@ pub fn prefill_into(
 }
 
 /// [`prefill_into`] with a private scratch arena (test/utility entry).
-pub fn prefill(cfg: &ModelCfg, theta: &[f32], tokens: &[i32], len: usize) -> Result<Vec<f32>> {
+pub fn prefill(cfg: &ModelCfg, theta: &[f32], tokens: &[i32], lens: &[i32]) -> Result<Vec<f32>> {
     let mut out = Vec::new();
-    prefill_into(cfg, theta, tokens, len, &mut Workspace::new(), &mut out)?;
+    prefill_into(cfg, theta, tokens, lens, &mut Workspace::new(), &mut out)?;
     Ok(out)
 }
 
 /// The `decode_step__*` artifact: one new token per request, the current
-/// records, and the cache length `len` in; updated records out. The new
-/// token occupies position `len` (so `len < seq_len`), its K/V rows are
-/// appended to the cache, and attention scores positions `0..=len` only —
-/// prior keys/values are **reused, never recomputed**.
+/// records, and the per-request cache lengths `lens` (`[b]`) in; updated
+/// records out. Request `bi`'s new token occupies its own position
+/// `lens[bi]` (so every `lens[bi] < seq_len`), its K/V rows are appended
+/// to its cache, and attention scores its positions `0..=lens[bi]` only —
+/// prior keys/values are **reused, never recomputed**, and requests at
+/// different depths advance side by side in one batch.
 pub fn decode_step_into(
     cfg: &ModelCfg,
     theta: &[f32],
     cache_in: &[f32],
     token: &[i32],
-    len: usize,
+    lens: &[i32],
     ws: &mut Workspace,
     out: &mut Vec<f32>,
 ) -> Result<()> {
@@ -250,8 +285,12 @@ pub fn decode_step_into(
         bail!("decode_step has {} records but {} tokens", b, token.len());
     }
     let s = cfg.seq_len;
-    if len >= s {
-        bail!("decode position {len} exceeds the learned context ({s} positions)");
+    if lens.len() != b {
+        bail!("decode_step has {b} records but {} lengths", lens.len());
+    }
+    if let Some((bi, &l)) = lens.iter().enumerate().find(|&(_, &l)| l < 0 || l as usize >= s) {
+        bail!("decode position {l} for request {bi} exceeds the learned context \
+               ({s} positions)");
     }
     check_tokens(cfg, token)?;
 
@@ -264,13 +303,14 @@ pub fn decode_step_into(
     out.clear();
     out.extend_from_slice(cache_in);
 
-    // embed the new token at position `len`
+    // embed each request's new token at its own position `lens[bi]`
     let mut h = ws.take(b * d);
     for bi in 0..b {
         let tok = token[bi] as usize;
+        let pos = lens[bi] as usize;
         let hrow = &mut h[bi * d..(bi + 1) * d];
         let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
-        let prow = &theta[off.pos + len * d..off.pos + (len + 1) * d];
+        let prow = &theta[off.pos + pos * d..off.pos + (pos + 1) * d];
         for j in 0..d {
             hrow[j] = erow[j] + prow[j];
         }
@@ -298,16 +338,17 @@ pub fn decode_step_into(
         add_bias(&mut k, &theta[off.bk + l * d..off.bk + (l + 1) * d], b, d);
         add_bias(&mut vv, &theta[off.bv + l * d..off.bv + (l + 1) * d], b, d);
 
-        // append the new position's K/V rows to each request's cache
+        // append each request's new K/V rows at its own position
         for bi in 0..b {
             let r0 = bi * rec;
-            let kd = r0 + kv_off(cfg, l, 0, len);
+            let pos = lens[bi] as usize;
+            let kd = r0 + kv_off(cfg, l, 0, pos);
             out[kd..kd + d].copy_from_slice(&k[bi * d..(bi + 1) * d]);
-            let vd = r0 + kv_off(cfg, l, 1, len);
+            let vd = r0 + kv_off(cfg, l, 1, pos);
             out[vd..vd + d].copy_from_slice(&vv[bi * d..(bi + 1) * d]);
         }
 
-        decode_attention(&q, out, cfg, l, len, b, &mut scores, &mut att);
+        decode_attention(&q, out, cfg, l, lens, b, &mut scores, &mut att);
 
         // attention projection + residual, then the FFN half-block
         matmul_acc(&mut h, &att, &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d], b, d, d);
@@ -359,10 +400,10 @@ pub fn decode_step(
     theta: &[f32],
     cache_in: &[f32],
     token: &[i32],
-    len: usize,
+    lens: &[i32],
 ) -> Result<Vec<f32>> {
     let mut out = Vec::new();
-    decode_step_into(cfg, theta, cache_in, token, len, &mut Workspace::new(), &mut out)?;
+    decode_step_into(cfg, theta, cache_in, token, lens, &mut Workspace::new(), &mut out)?;
     Ok(out)
 }
 
@@ -387,6 +428,11 @@ mod tests {
         out
     }
 
+    /// Uniform length vector — the pre-ragged single-`len` call shape.
+    fn uni(b: usize, len: usize) -> Vec<i32> {
+        vec![len as i32; b]
+    }
+
     #[test]
     fn prefill_then_decode_matches_longer_prefill() {
         // prefill(len = k) + decode_step(token at k) must agree with
@@ -397,10 +443,11 @@ mod tests {
         let s = cfg.seq_len;
         let rec = cfg.decode_rec_len();
         for plen in [1usize, 2, s - 1] {
-            let short = prefill(&cfg, &theta, &tokens, plen).unwrap();
-            let long = prefill(&cfg, &theta, &tokens, plen + 1).unwrap();
+            let short = prefill(&cfg, &theta, &tokens, &uni(cfg.batch, plen)).unwrap();
+            let long = prefill(&cfg, &theta, &tokens, &uni(cfg.batch, plen + 1)).unwrap();
             let next: Vec<i32> = (0..cfg.batch).map(|bi| tokens[bi * s + plen]).collect();
-            let stepped = decode_step(&cfg, &theta, &short, &next, plen).unwrap();
+            let stepped =
+                decode_step(&cfg, &theta, &short, &next, &uni(cfg.batch, plen)).unwrap();
             assert_eq!(stepped.len(), cfg.batch * rec);
             let mut max = 0.0f32;
             for i in 0..stepped.len() {
@@ -412,22 +459,71 @@ mod tests {
     }
 
     #[test]
-    fn prefill_ignores_padding_beyond_len() {
+    fn prefill_ignores_padding_beyond_each_request_len() {
+        // ragged lens: scrambling every token at or beyond a request's own
+        // length must leave all records bitwise unchanged
         let cfg = cfg("gpt_nano");
         let theta = init_theta(&cfg, 3);
         let tokens = toks(&cfg, 7);
-        let plen = cfg.seq_len / 2;
-        let a = prefill(&cfg, &theta, &tokens, plen).unwrap();
+        let lens: Vec<i32> =
+            (0..cfg.batch).map(|bi| (1 + bi % cfg.seq_len) as i32).collect();
+        let a = prefill(&cfg, &theta, &tokens, &lens).unwrap();
         let mut scrambled = tokens.clone();
         for bi in 0..cfg.batch {
-            for si in plen..cfg.seq_len {
+            for si in lens[bi] as usize..cfg.seq_len {
                 scrambled[bi * cfg.seq_len + si] = ((si * 7 + bi) % cfg.vocab) as i32;
             }
         }
-        let b = prefill(&cfg, &theta, &scrambled, plen).unwrap();
+        let b = prefill(&cfg, &theta, &scrambled, &lens).unwrap();
         let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
         let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
         assert_eq!(ab, bb, "padding tokens leaked into the prefill records");
+    }
+
+    #[test]
+    fn ragged_prefill_matches_solo_prefill_bitwise() {
+        // each record of a mixed-length batch must equal prefilling that
+        // request alone at its own length, bit for bit
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 9);
+        let tokens = toks(&cfg, 13);
+        let s = cfg.seq_len;
+        let rec = cfg.decode_rec_len();
+        let lens: Vec<i32> = (0..cfg.batch).map(|bi| (1 + (bi * 3) % s) as i32).collect();
+        let batch = prefill(&cfg, &theta, &tokens, &lens).unwrap();
+        for bi in 0..cfg.batch {
+            let solo =
+                prefill(&cfg, &theta, &tokens[bi * s..(bi + 1) * s], &lens[bi..bi + 1])
+                    .unwrap();
+            let got: Vec<u32> =
+                batch[bi * rec..(bi + 1) * rec].iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = solo.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "request {bi} (len {}) diverged in the batch", lens[bi]);
+        }
+    }
+
+    #[test]
+    fn ragged_decode_advances_each_request_at_its_own_position() {
+        // a mixed-depth decode step must match each request stepped solo
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 4);
+        let tokens = toks(&cfg, 17);
+        let s = cfg.seq_len;
+        let rec = cfg.decode_rec_len();
+        let lens: Vec<i32> = (0..cfg.batch).map(|bi| (1 + bi % (s - 1)) as i32).collect();
+        let recs = prefill(&cfg, &theta, &tokens, &lens).unwrap();
+        let next: Vec<i32> =
+            (0..cfg.batch).map(|bi| tokens[bi * s + lens[bi] as usize]).collect();
+        let batch = decode_step(&cfg, &theta, &recs, &next, &lens).unwrap();
+        for bi in 0..cfg.batch {
+            let solo = decode_step(&cfg, &theta, &recs[bi * rec..(bi + 1) * rec],
+                                   &next[bi..bi + 1], &lens[bi..bi + 1])
+                .unwrap();
+            let got: Vec<u32> =
+                batch[bi * rec..(bi + 1) * rec].iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = solo.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "request {bi} (pos {}) diverged in the batch", lens[bi]);
+        }
     }
 
     #[test]
@@ -435,14 +531,22 @@ mod tests {
         let cfg = cfg("gpt_nano");
         let theta = init_theta(&cfg, 1);
         let tokens = toks(&cfg, 2);
-        let recs = prefill(&cfg, &theta, &tokens, 2).unwrap();
+        let recs = prefill(&cfg, &theta, &tokens, &uni(cfg.batch, 2)).unwrap();
         let next = vec![0i32; cfg.batch];
-        let err = decode_step(&cfg, &theta, &recs, &next, cfg.seq_len).unwrap_err();
+        let err =
+            decode_step(&cfg, &theta, &recs, &next, &uni(cfg.batch, cfg.seq_len)).unwrap_err();
         assert!(err.to_string().contains("learned context"), "{err}");
         let bad = vec![cfg.vocab as i32; cfg.batch];
-        let err = decode_step(&cfg, &theta, &recs, &bad, 2).unwrap_err();
+        let err = decode_step(&cfg, &theta, &recs, &bad, &uni(cfg.batch, 2)).unwrap_err();
         assert!(err.to_string().contains("vocab"), "{err}");
-        let err = prefill(&cfg, &theta, &tokens, cfg.seq_len + 1).unwrap_err();
+        let err = prefill(&cfg, &theta, &tokens, &uni(cfg.batch, cfg.seq_len + 1)).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+        // one bad entry in an otherwise fine vector must also fail closed
+        let mut lens = uni(cfg.batch, 2);
+        lens[cfg.batch - 1] = -1;
+        let err = decode_step(&cfg, &theta, &recs, &next, &lens).unwrap_err();
+        assert!(err.to_string().contains("learned context"), "{err}");
+        let err = prefill(&cfg, &theta, &tokens, &lens).unwrap_err();
         assert!(err.to_string().contains("outside"), "{err}");
     }
 
@@ -451,9 +555,9 @@ mod tests {
         let bert = cfg("bert_nano");
         let theta = init_theta(&bert, 1);
         let tokens = toks(&bert, 1);
-        let err = prefill(&bert, &theta, &tokens, 2).unwrap_err().to_string();
+        let err = prefill(&bert, &theta, &tokens, &uni(bert.batch, 2)).unwrap_err().to_string();
         assert!(err.contains("causal"), "{err}");
-        let err = decode_step(&bert, &theta, &[0.0], &[0], 0).unwrap_err().to_string();
+        let err = decode_step(&bert, &theta, &[0.0], &[0], &[0]).unwrap_err().to_string();
         assert!(err.contains("causal"), "{err}");
     }
 }

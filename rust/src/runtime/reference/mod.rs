@@ -95,16 +95,6 @@ const KINDS: [&str; 17] = [
     "decode_step",
 ];
 
-/// Parse a decode-length scalar argument: the `len` input of the
-/// `prefill`/`decode_step` artifacts must be a nonnegative integer value
-/// (it arrives as an f32 scalar for artifact-signature uniformity).
-fn scalar_len(v: f32) -> Result<usize> {
-    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
-        bail!("decode length must be a nonnegative integer scalar, got {v}");
-    }
-    Ok(v as usize)
-}
-
 impl ReferenceBackend {
     /// Backend over a manifest's config registry (usually
     /// [`Manifest::builtin`]). Thread count comes from the shared pool
@@ -437,28 +427,30 @@ impl Backend for ReferenceBackend {
                 Ok(Buffer::host_f32(out, vec![n]))
             }
             "prefill" => {
-                // serving path: padded prompt in, per-request decode
-                // records ([logits, kv]) out; the request count comes from
-                // the token buffer so shards prefill with the same kernels
+                // serving path: padded prompts + per-request lengths in,
+                // per-request decode records ([logits, kv]) out; the
+                // request count comes from the token buffer so shards and
+                // partial serve batches prefill with the same kernels
                 let cfg = self.cfg_of(spec)?;
                 let theta = views[0].f32s()?;
                 let tokens = views[1].i32s()?;
-                let len = scalar_len(views[2].scalar()?)?;
+                let lens = views[2].i32s()?;
                 let mut out = Vec::new();
-                exec::prefill_into(cfg, theta, tokens, len, ws, &mut out)?;
+                exec::prefill_into(cfg, theta, tokens, lens, ws, &mut out)?;
                 let b = out.len() / cfg.decode_rec_len().max(1);
                 Ok(Buffer::host_f32(out, vec![b, cfg.decode_rec_len()]))
             }
             "decode_step" => {
-                // one token per request + records + cache length in,
-                // updated records out — O(len) per token, no recompute
+                // one token per request + records + per-request cache
+                // lengths in, updated records out — O(len) per token, no
+                // recompute; requests may sit at different depths
                 let cfg = self.cfg_of(spec)?;
                 let theta = views[0].f32s()?;
                 let cache = views[1].f32s()?;
                 let token = views[2].i32s()?;
-                let len = scalar_len(views[3].scalar()?)?;
+                let lens = views[3].i32s()?;
                 let mut out = Vec::new();
-                exec::decode_step_into(cfg, theta, cache, token, len, ws, &mut out)?;
+                exec::decode_step_into(cfg, theta, cache, token, lens, ws, &mut out)?;
                 Ok(Buffer::host_f32(out, vec![token.len(), cfg.decode_rec_len()]))
             }
             "lora_eval" => {

@@ -566,10 +566,14 @@ fn distill_artifacts(student: &ModelCfg, teacher: &ModelCfg) -> Vec<ArtifactSpec
 }
 
 /// Incremental-decode artifacts of a causal (GPT) config: `prefill__*`
-/// (padded prompt in, per-request decode records out) and `decode_step__*`
-/// (one token + records in, updated records out). The per-request record is
-/// `[logits (vocab), kv (L·2·S·d)]` — see `ModelCfg::decode_rec_len` — so a
-/// decode step costs O(len) in sequence length, not a full-sequence forward.
+/// (padded prompts in, per-request decode records out) and `decode_step__*`
+/// (one token + records in, updated records out). Both carry a per-request
+/// length vector `lens` (`[B]`, int32) instead of one shared scalar, so
+/// requests of different lengths coexist in a batch — `lens` has a leading
+/// batch extent and therefore shards across replicas with the other batch
+/// inputs. The per-request record is `[logits (vocab), kv (L·2·S·d)]` —
+/// see `ModelCfg::decode_rec_len` — so a decode step costs O(len) in
+/// sequence length, not a full-sequence forward.
 fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
     assert_eq!(cfg.family, Family::Gpt, "decode artifacts are causal-only");
     let theta = InputSpec {
@@ -577,6 +581,7 @@ fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
         dtype: "float32".into(),
         shape: vec![cfg.n_params],
     };
+    let lens = InputSpec { name: "lens".into(), dtype: "int32".into(), shape: vec![cfg.batch] };
     let rec = cfg.decode_rec_len();
     vec![
         spec(
@@ -591,7 +596,7 @@ fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
                     dtype: "int32".into(),
                     shape: vec![cfg.batch, cfg.seq_len],
                 },
-                scalar_input("len"),
+                lens.clone(),
             ],
             vec![cfg.batch, rec],
             shard_meta(),
@@ -609,7 +614,7 @@ fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
                     shape: vec![cfg.batch, rec],
                 },
                 InputSpec { name: "token".into(), dtype: "int32".into(), shape: vec![cfg.batch] },
-                scalar_input("len"),
+                lens,
             ],
             vec![cfg.batch, rec],
             shard_meta(),
@@ -922,14 +927,19 @@ mod tests {
                 let p = p.unwrap();
                 assert!(p.shard_batch());
                 assert_eq!(p.output_shape, vec![cfg.batch, rec]);
-                // only the prompt tokens shard — theta stays whole
-                assert_eq!(p.batch_input_indices(cfg.batch), vec![1]);
+                // the prompt tokens and length vector shard — theta stays
+                // whole
+                assert_eq!(p.batch_input_indices(cfg.batch), vec![1, 2]);
+                assert_eq!(p.inputs[2].name, "lens");
+                assert_eq!(p.inputs[2].dtype, "int32");
+                assert_eq!(p.inputs[2].shape, vec![cfg.batch]);
                 let d = d.unwrap();
                 assert!(d.shard_batch());
                 assert_eq!(d.output_shape, vec![cfg.batch, rec]);
-                // the record carry and the token batch both shard
-                assert_eq!(d.batch_input_indices(cfg.batch), vec![1, 2]);
-                assert_eq!(d.inputs[3].name, "len");
+                // the record carry, token batch and length vector all shard
+                assert_eq!(d.batch_input_indices(cfg.batch), vec![1, 2, 3]);
+                assert_eq!(d.inputs[3].name, "lens");
+                assert_eq!(d.inputs[3].shape, vec![cfg.batch]);
             } else {
                 assert!(p.is_err(), "{} must not have a prefill artifact", cfg.name);
                 assert!(d.is_err(), "{} must not have a decode artifact", cfg.name);

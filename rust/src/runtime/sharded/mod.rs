@@ -515,12 +515,14 @@ impl ShardedBackend {
     }
 
     /// Sharded incremental decode (`prefill__*` / `decode_step__*`): the
-    /// batch of requests splits across replicas like `eval_loss`, every
-    /// replica produces the decode records of its request shard, and the
-    /// shard records concatenate back in replica order. Per-request kernel
-    /// math never reads other requests' rows, so the stitched output is
-    /// **bit-identical** to decoding the whole batch on one replica.
-    /// `None` → fall back to replica 0.
+    /// batch of requests splits across replicas like `eval_loss` — the
+    /// per-request `lens` vector shards with the other batch inputs, so
+    /// each replica sees its own requests' lengths — every replica
+    /// produces the decode records of its request shard, and the shard
+    /// records concatenate back in replica order. Per-request kernel math
+    /// never reads other requests' rows, so the stitched output is
+    /// **bit-identical** to decoding the whole (possibly mixed-length)
+    /// batch on one replica. `None` → fall back to replica 0.
     fn try_decode(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
         let Some(cfg) = self.configs.get(&spec.config) else {
             return Ok(None);
@@ -532,23 +534,20 @@ impl ShardedBackend {
         let Some(pc) = parse_call(spec, cfg, args) else {
             return Ok(None);
         };
-        // exactly theta as the whole-tensor input, plus the `len` scalar
-        if pc.passthrough.len() != 1 || pc.state.is_some() {
+        // exactly theta as the whole-tensor input; everything else (tokens
+        // or cache+token, plus lens) rides the batch axis
+        if pc.passthrough.len() != 1 || pc.state.is_some() || !pc.scalars.is_empty() {
             return Ok(None);
         }
-        let Some(len) = pc.scalar("len") else {
-            return Ok(None);
-        };
         let theta = pc.passthrough[0];
         let rec = cfg.decode_rec_len();
         let bounds = Self::bounds(cfg.batch, r_eff);
         let backends = &self.replicas;
         let shard_outs: Vec<Result<Vec<f32>>> = threadpool::partitioned(r_eff, |r| {
             let (r0, r1) = bounds[r];
-            let mut sargs: Vec<Arg<'_>> = Vec::with_capacity(2 + pc.batch.len());
+            let mut sargs: Vec<Arg<'_>> = Vec::with_capacity(1 + pc.batch.len());
             sargs.push(Arg::F32(theta, vec![theta.len()]));
             Self::push_shard_args(&mut sargs, &pc.batch, r0, r1);
-            sargs.push(Arg::Scalar(len));
             let out = take_host_f32(backends[r].execute(spec, &sargs)?)?;
             if out.len() != (r1 - r0) * rec {
                 bail!(

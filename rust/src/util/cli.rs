@@ -91,6 +91,49 @@ impl Args {
     }
 }
 
+/// Flags every `multilevel` subcommand shares: the runtime topology pair
+/// (`--threads`, `--replicas`) and the checkpoint trio (`--ckpt-dir`,
+/// `--ckpt-every`, `--resume`), parsed through one strict path so every
+/// subcommand — and every future one — rejects bad values and
+/// inconsistent combinations identically instead of re-implementing the
+/// checks per command.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CommonArgs {
+    /// `--threads N`: kernel threads, overriding `PALLAS_REF_THREADS`.
+    pub threads: Option<usize>,
+    /// `--replicas R`: data-parallel replicas, overriding `PALLAS_REPLICAS`.
+    pub replicas: Option<usize>,
+    /// `--ckpt-dir DIR`: snapshot directory.
+    pub ckpt_dir: Option<String>,
+    /// `--ckpt-every N`: snapshot cadence in steps (requires `--ckpt-dir`).
+    pub ckpt_every: Option<usize>,
+    /// `--resume`: continue from `<ckpt-dir>/latest.ckpt` (requires
+    /// `--ckpt-dir`).
+    pub resume: bool,
+}
+
+impl CommonArgs {
+    /// Strict parse: a non-positive or unparsable count and a checkpoint
+    /// flag without its directory are `Err` with a caller-printable
+    /// message — never a panic or a silent fallback.
+    pub fn from_args(args: &Args) -> Result<CommonArgs, String> {
+        let threads = args.usize_res("threads")?;
+        let replicas = args.usize_res("replicas")?;
+        let ckpt_every = args.usize_res("ckpt-every")?;
+        let ckpt_dir = args.get("ckpt-dir").map(str::to_string);
+        let resume = args.flag("resume");
+        if ckpt_dir.is_none() {
+            if ckpt_every.is_some() {
+                return Err("--ckpt-every requires --ckpt-dir".to_string());
+            }
+            if resume {
+                return Err("--resume requires --ckpt-dir".to_string());
+            }
+        }
+        Ok(CommonArgs { threads, replicas, ckpt_dir, ckpt_every, resume })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +175,39 @@ mod tests {
         let a = Args::parse_from(&argv("--dry-run --steps 10"));
         assert!(a.flag("dry-run"));
         assert_eq!(a.usize_or("steps", 0), 10);
+    }
+
+    #[test]
+    fn common_args_parse_the_shared_flags() {
+        let a = Args::parse_from(&argv(
+            "train --threads 3 --replicas 2 --ckpt-dir /tmp/ck --ckpt-every 5 --resume",
+        ));
+        let c = CommonArgs::from_args(&a).unwrap();
+        assert_eq!(
+            c,
+            CommonArgs {
+                threads: Some(3),
+                replicas: Some(2),
+                ckpt_dir: Some("/tmp/ck".into()),
+                ckpt_every: Some(5),
+                resume: true,
+            }
+        );
+        // all-absent is the well-formed default
+        let none = CommonArgs::from_args(&Args::parse_from(&argv("info"))).unwrap();
+        assert_eq!(none, CommonArgs::default());
+    }
+
+    #[test]
+    fn common_args_reject_inconsistent_combinations() {
+        let bad = CommonArgs::from_args(&Args::parse_from(&argv("train --threads zero")))
+            .unwrap_err();
+        assert!(bad.contains("--threads"), "{bad}");
+        let every = CommonArgs::from_args(&Args::parse_from(&argv("train --ckpt-every 5")))
+            .unwrap_err();
+        assert!(every.contains("requires --ckpt-dir"), "{every}");
+        let resume = CommonArgs::from_args(&Args::parse_from(&argv("train --resume")))
+            .unwrap_err();
+        assert!(resume.contains("requires --ckpt-dir"), "{resume}");
     }
 }

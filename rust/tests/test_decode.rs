@@ -10,7 +10,9 @@
 //!   heap allocations (counting global allocator, pool pinned to 1 thread
 //!   like `test_workspace.rs`).
 //! * **Sharded decode** — a batch of requests split across replicas
-//!   concatenates to records bit-identical to replica-0 serial decode.
+//!   concatenates to records bit-identical to replica-0 serial decode,
+//!   with every request at a *uniform* depth and at *ragged* per-request
+//!   depths (the `lens [B]` vector both artifacts now carry).
 //! * **Causal-only** — BERT configs are rejected with a clear error at
 //!   every layer (manifest validation, backend prepare, kernels).
 //!
@@ -63,6 +65,18 @@ fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
+/// Uniform length vector — every request at the same depth (the
+/// pre-ragged single-`len` call shape).
+fn uni(cfg: &ModelCfg, len: usize) -> Vec<i32> {
+    vec![len as i32; cfg.batch]
+}
+
+/// Ragged per-request depths covering 1..seq_len, no two alike when the
+/// batch allows it.
+fn ragged(cfg: &ModelCfg) -> Vec<i32> {
+    (0..cfg.batch).map(|bi| (1 + (bi * 3) % (cfg.seq_len - 1)) as i32).collect()
+}
+
 fn setup(name: &str) -> (ModelCfg, Vec<f32>, Vec<i32>) {
     let m = Manifest::builtin();
     let cfg = m.cfg(name).unwrap().clone();
@@ -87,11 +101,11 @@ fn decode_chain(
     max_len: usize,
 ) -> Vec<Vec<f32>> {
     let s = cfg.seq_len;
-    let mut recs = prefill(cfg, theta, toks, p0).unwrap();
+    let mut recs = prefill(cfg, theta, toks, &uni(cfg, p0)).unwrap();
     let mut chain = Vec::new();
     for pos in p0..max_len {
         let next: Vec<i32> = (0..cfg.batch).map(|bi| toks[bi * s + pos]).collect();
-        recs = decode_step(cfg, theta, &recs, &next, pos).unwrap();
+        recs = decode_step(cfg, theta, &recs, &next, &uni(cfg, pos)).unwrap();
         chain.push(recs.clone());
     }
     chain
@@ -110,7 +124,7 @@ fn incremental_decode_matches_full_forward_at_every_length() {
             // the oracle: a fresh full-sequence causal forward at this
             // length (prefill *is* the batched forward — backbone_fwd —
             // emitting last-position logits and all K/V rows)
-            let want = prefill(&cfg, &theta, &toks, p0 + i + 1).unwrap();
+            let want = prefill(&cfg, &theta, &toks, &uni(&cfg, p0 + i + 1)).unwrap();
             assert_eq!(got.len(), cfg.batch * rec);
             let mut max = 0.0f32;
             for j in 0..got.len() {
@@ -148,6 +162,31 @@ fn decode_chain_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn ragged_decode_is_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let before = threadpool::threads();
+    let (cfg, theta, toks) = setup("gpt_base_sim");
+    let lens = ragged(&cfg);
+    let next: Vec<i32> =
+        (0..cfg.batch).map(|bi| toks[bi * cfg.seq_len + lens[bi] as usize]).collect();
+    let mut want: Option<(Vec<u32>, Vec<u32>)> = None;
+    for threads in [1usize, 2, 4] {
+        threadpool::set_threads(threads);
+        let recs = prefill(&cfg, &theta, &toks, &lens).unwrap();
+        let stepped = decode_step(&cfg, &theta, &recs, &next, &lens).unwrap();
+        let got = (bits(&recs), bits(&stepped));
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(
+                &got, w,
+                "ragged prefill/decode changed bits at {threads} kernel threads"
+            ),
+        }
+    }
+    threadpool::set_threads(before);
+}
+
+#[test]
 fn steady_state_decode_step_performs_zero_heap_allocations() {
     let _g = lock();
     let before_threads = threadpool::threads();
@@ -155,23 +194,24 @@ fn steady_state_decode_step_performs_zero_heap_allocations() {
 
     let (cfg, theta, toks) = setup("gpt_nano");
     let plen = cfg.seq_len / 2;
+    let lens = uni(&cfg, plen);
     let mut ws = Workspace::new();
     let mut cur = Vec::new();
     multilevel::runtime::reference::exec::prefill_into(
-        &cfg, &theta, &toks, plen, &mut ws, &mut cur,
+        &cfg, &theta, &toks, &lens, &mut ws, &mut cur,
     )
     .unwrap();
     let next: Vec<i32> = (0..cfg.batch).map(|bi| toks[bi * cfg.seq_len + plen]).collect();
     let mut out = Vec::new();
     // warm-up: settle the arena pools and the ping-pong record buffers
     for _ in 0..3 {
-        decode_step_into(&cfg, &theta, &cur, &next, plen, &mut ws, &mut out).unwrap();
+        decode_step_into(&cfg, &theta, &cur, &next, &lens, &mut ws, &mut out).unwrap();
         std::mem::swap(&mut cur, &mut out);
     }
     let warm_misses = ws.alloc_misses();
     let before = ALLOCATIONS.load(Ordering::Relaxed);
     for _ in 0..5 {
-        decode_step_into(&cfg, &theta, &cur, &next, plen, &mut ws, &mut out).unwrap();
+        decode_step_into(&cfg, &theta, &cur, &next, &lens, &mut ws, &mut out).unwrap();
         std::mem::swap(&mut cur, &mut out);
     }
     let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
@@ -187,6 +227,7 @@ fn sharded_request_decode_is_bit_identical_to_serial() {
     let (cfg, theta, toks) = setup("gpt_base_sim");
     let (b, s) = (cfg.batch, cfg.seq_len);
     let plen = 4usize;
+    let lens = uni(&cfg, plen);
 
     let run = |rt: &Runtime| -> (Vec<f32>, Vec<f32>) {
         let pf = rt.exe("prefill__gpt_base_sim").unwrap();
@@ -197,7 +238,7 @@ fn sharded_request_decode_is_bit_identical_to_serial() {
                 &[
                     Arg::F32(&theta, vec![theta.len()]),
                     Arg::I32(&toks, vec![b, s]),
-                    Arg::Scalar(plen as f32),
+                    Arg::I32(&lens, vec![b]),
                 ],
             )
             .unwrap();
@@ -209,7 +250,7 @@ fn sharded_request_decode_is_bit_identical_to_serial() {
                     Arg::F32(&theta, vec![theta.len()]),
                     Arg::Buf(&recs),
                     Arg::I32(&next, vec![b]),
-                    Arg::Scalar(plen as f32),
+                    Arg::I32(&lens, vec![b]),
                 ],
             )
             .unwrap();
@@ -237,9 +278,65 @@ fn sharded_request_decode_is_bit_identical_to_serial() {
 }
 
 #[test]
+fn sharded_ragged_decode_is_bit_identical_to_serial() {
+    // mixed per-request depths shard with their requests: each replica
+    // sees its own slice of `lens`, and the concatenated records must
+    // equal the serial ragged run bit for bit
+    let _g = lock();
+    let (cfg, theta, toks) = setup("gpt_base_sim");
+    let (b, s) = (cfg.batch, cfg.seq_len);
+    let lens = ragged(&cfg);
+    let next: Vec<i32> = (0..b).map(|bi| toks[bi * s + lens[bi] as usize]).collect();
+
+    let run = |rt: &Runtime| -> (Vec<f32>, Vec<f32>) {
+        let pf = rt.exe("prefill__gpt_base_sim").unwrap();
+        let dc = rt.exe("decode_step__gpt_base_sim").unwrap();
+        let recs = rt
+            .call(
+                &pf,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::I32(&toks, vec![b, s]),
+                    Arg::I32(&lens, vec![b]),
+                ],
+            )
+            .unwrap();
+        let stepped = rt
+            .call(
+                &dc,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::Buf(&recs),
+                    Arg::I32(&next, vec![b]),
+                    Arg::I32(&lens, vec![b]),
+                ],
+            )
+            .unwrap();
+        (rt.read_f32(&recs).unwrap(), rt.read_f32(&stepped).unwrap())
+    };
+
+    let serial = Runtime::reference();
+    let (want_pre, want_step) = run(&serial);
+    for r in [2usize, 3, 4] {
+        let rt = Runtime::sharded(r);
+        let (got_pre, got_step) = run(&rt);
+        assert_eq!(
+            bits(&got_pre),
+            bits(&want_pre),
+            "sharded ragged prefill (R={r}) diverged from serial"
+        );
+        assert_eq!(
+            bits(&got_step),
+            bits(&want_step),
+            "sharded ragged decode_step (R={r}) diverged from serial"
+        );
+    }
+}
+
+#[test]
 fn generation_is_identical_across_replica_counts() {
     let _g = lock();
-    use multilevel::coordinator::{Generator, Sampler};
+    use multilevel::coordinator::{GenerateRequest, Generator, Sampler};
     let (cfg, theta, toks) = setup("gpt_nano");
     let plen = 4usize;
     let prompts: Vec<i32> = (0..cfg.batch)
@@ -250,8 +347,11 @@ fn generation_is_identical_across_replica_counts() {
     for r in [1usize, 2, 4] {
         let rt = Runtime::sharded(r);
         let g = Generator::new(&rt, "gpt_nano").unwrap();
-        let mut sampler = Sampler::temperature(0.7, 99).unwrap();
-        let out = g.generate(&rt, &theta, &prompts, plen, gen, &mut sampler).unwrap();
+        let req = GenerateRequest::new(&prompts, plen)
+            .max_new_tokens(gen)
+            .sampler(Sampler::temperature(0.7, 99).unwrap());
+        let out = g.generate(&rt, &theta, req).unwrap();
+        assert_eq!(out.batch, cfg.batch);
         outs.push(out.tokens);
     }
     assert_eq!(outs[0], outs[1], "generation differs between R=1 and R=2");
