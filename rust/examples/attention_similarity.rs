@@ -21,7 +21,7 @@ fn cosine(a: &[f32], b: &[f32]) -> f64 {
 }
 
 fn main() -> Result<()> {
-    multilevel::util::logger::init();
+    multilevel::util::logger::init().map_err(anyhow::Error::msg)?;
     let args = Args::parse();
     let steps = args.usize_or("steps", 120);
     let rt = Runtime::load_default()?;

@@ -14,6 +14,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use multilevel::coordinator::{synthetic_trace, ServeEngine, ServeOpts, Trainer, TrafficSpec};
+use multilevel::obs;
 use multilevel::runtime::{init_state, init_theta, Arg, Checkpoint, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
@@ -154,6 +155,44 @@ fn main() -> Result<()> {
             state = next;
         });
         rows.push((name.clone(), stats));
+    }
+
+    // tracing overhead: the same gpt_base_sim train step once with obs
+    // disabled (gated — the disabled path must stay within the plain
+    // train-step ceiling, pinning "zero overhead when off") and once with
+    // tracing + metrics enabled (printed for the log, never gated)
+    {
+        let name = "gpt_base_sim";
+        let mut state = init_state(&rt, rt.cfg(name)?, 1)?;
+        let mut trainer = Trainer::new(&rt, name, 0, 2, 1)?;
+        let (warm, _) = trainer.step(&rt, &state, 1e-3, 1)?; // prepare + warm
+        state = warm;
+        let mut step = 1usize;
+        let label = format!("trace_overhead__{name}");
+        let stats = bench::run(&label, budget, || {
+            step += 1;
+            let (next, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            state = next;
+        });
+        let disabled_ms = stats.mean.as_secs_f64() * 1e3;
+        rows.push((label, stats));
+        obs::set_tracing(true);
+        obs::set_metrics(true);
+        let on = bench::run(&format!("trace_overhead__{name} (enabled)"), budget, || {
+            step += 1;
+            let (next, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            state = next;
+        });
+        obs::set_tracing(false);
+        obs::set_metrics(false);
+        obs::tracer::reset_spans();
+        obs::metrics::reset_metrics();
+        let enabled_ms = on.mean.as_secs_f64() * 1e3;
+        println!(
+            "    -> tracing enabled: {enabled_ms:.2} ms vs {disabled_ms:.2} ms disabled \
+             ({:+.1}% — informational, not gated)",
+            (enabled_ms / disabled_ms.max(1e-9) - 1.0) * 100.0
+        );
     }
 
     // checkpoint save + load round trip on the full gpt_base_sim state:

@@ -13,7 +13,7 @@ use multilevel::coordinator::{savings_vs_scratch, Harness, Method, RunOpts};
 use multilevel::util::cli::Args;
 
 fn main() -> Result<()> {
-    multilevel::util::logger::init();
+    multilevel::util::logger::init().map_err(anyhow::Error::msg)?;
     let args = Args::parse();
     let steps = args.usize_or("steps", 240);
     let rt = multilevel::runtime::Runtime::load_default()?;

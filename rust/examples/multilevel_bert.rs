@@ -12,7 +12,7 @@ use multilevel::util::cli::Args;
 use multilevel::util::table::mean_std;
 
 fn main() -> Result<()> {
-    multilevel::util::logger::init();
+    multilevel::util::logger::init().map_err(anyhow::Error::msg)?;
     let args = Args::parse();
     let steps = args.usize_or("steps", 160);
     let rt = Runtime::load_default()?;

@@ -84,6 +84,7 @@ impl CheckpointManager {
 
     /// Atomically write `latest.ckpt` (and the history copy when enabled).
     pub fn save(&self, ck: &Checkpoint) -> Result<()> {
+        let _sp = crate::obs::span(crate::obs::SpanKind::CkptSave);
         let latest = self.latest_path();
         ck.save(&latest)?;
         if self.history {
@@ -101,6 +102,7 @@ impl CheckpointManager {
         if !p.exists() {
             return Ok(None);
         }
+        let _sp = crate::obs::span(crate::obs::SpanKind::CkptLoad);
         Checkpoint::load(&p).map(Some)
     }
 
@@ -225,9 +227,24 @@ pub fn train_resumable(
 
     let mut last_loss = state.loss(rt)?;
     for step in start + 1..=steps {
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let flops0 = state.flops;
         let (st, loss) = trainer.step(rt, &state, sched.lr(step), step)?;
         state = st;
         last_loss = loss;
+        if let Some(t0) = t0 {
+            crate::obs::metrics::emit_step_row(
+                &crate::obs::metrics::StepObs {
+                    config: &cfg.name,
+                    phase: 1,
+                    step,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    loss: loss as f64,
+                    flops_step: state.flops - flops0,
+                },
+                None,
+            );
+        }
         if let Some(m) = mgr {
             if m.due(step) || step == steps {
                 let ck = Checkpoint {
@@ -518,8 +535,23 @@ pub fn run_vcycle_resumable(
             trainer.set_stream_cursor(cursor);
         }
         for step in start + 1..=spec.steps {
+            let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+            let flops0 = state.flops;
             let (st, loss) = trainer.step(rt, &state, spec.sched.lr(step), step)?;
             state = st;
+            if let Some(t0) = t0 {
+                crate::obs::metrics::emit_step_row(
+                    &crate::obs::metrics::StepObs {
+                        config: &spec.cfg,
+                        phase,
+                        step,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                        loss: loss as f64,
+                        flops_step: state.flops - flops0,
+                    },
+                    None,
+                );
+            }
             if step % opts.eval_every == 0 || step == spec.steps {
                 info!("phase {phase} [{}] step {step}/{} loss {loss:.4}", spec.cfg, spec.steps);
             }

@@ -138,11 +138,41 @@ pub struct Run {
 pub struct Harness<'a> {
     pub rt: &'a Runtime,
     pub opts: RunOpts,
+    /// Optional per-trial metrics journal. When set (and metrics are
+    /// enabled), every step row this harness emits is appended here in
+    /// addition to the global `--metrics` journal.
+    trial_journal: std::cell::RefCell<Option<crate::obs::metrics::Journal>>,
 }
 
 impl<'a> Harness<'a> {
     pub fn new(rt: &'a Runtime, opts: RunOpts) -> Harness<'a> {
-        Harness { rt, opts }
+        Harness { rt, opts, trial_journal: std::cell::RefCell::new(None) }
+    }
+
+    /// Attach a per-trial metrics journal (observe-only; no effect on the
+    /// run). Call before the method runs; the file is truncated.
+    pub fn set_trial_journal(&self, journal: crate::obs::metrics::Journal) {
+        *self.trial_journal.borrow_mut() = Some(journal);
+    }
+
+    /// Emit one step row (global + per-trial journal) when metrics are on.
+    fn emit_step(&self, cfg_name: &str, phase: usize, step: usize, wall_s: f64, loss: f64,
+                 flops_step: f64) {
+        if !crate::obs::metrics_enabled() {
+            return;
+        }
+        let mut j = self.trial_journal.borrow_mut();
+        crate::obs::metrics::emit_step_row(
+            &crate::obs::metrics::StepObs {
+                config: cfg_name,
+                phase,
+                step,
+                wall_s,
+                loss,
+                flops_step,
+            },
+            j.as_mut(),
+        );
     }
 
     fn new_run(&self, method: &str, cfg_name: &str, seed_tag: u64) -> Result<Run> {
@@ -193,8 +223,10 @@ impl<'a> Harness<'a> {
             let t0 = Instant::now();
             let (state, loss) = trainer.step(self.rt, &run.state, lr, step)?;
             run.state = state;
-            run.wall += t0.elapsed().as_secs_f64();
+            let step_wall = t0.elapsed().as_secs_f64();
+            run.wall += step_wall;
             run.flops += flops_per_step;
+            self.emit_step(&run.cfg_name, run.phase, step, step_wall, loss as f64, flops_per_step);
             let want_eval = step % self.opts.eval_every == 0 || step == steps;
             let eval_loss = if want_eval {
                 let t1 = Instant::now();
@@ -539,8 +571,11 @@ impl<'a> Harness<'a> {
                 let t0 = Instant::now();
                 let (st, loss) = trainer.step(self.rt, &run.state, lr, step)?;
                 run.state = st;
-                run.wall += t0.elapsed().as_secs_f64();
+                let step_wall = t0.elapsed().as_secs_f64();
+                run.wall += step_wall;
                 run.flops += trainer.cfg.flops_train_step;
+                self.emit_step(&small, run.phase, step, step_wall, loss as f64,
+                               trainer.cfg.flops_train_step);
                 let eval_loss = if step % self.opts.eval_every == 0 {
                     Some(trainer.eval(self.rt, &run.state)?)
                 } else {
@@ -597,8 +632,11 @@ impl<'a> Harness<'a> {
             let t0 = Instant::now();
             let (st, loss) = dist_trainer.step(self.rt, &run.state, 0.5, lr, step)?;
             run.state = st;
-            run.wall += t0.elapsed().as_secs_f64();
-            run.flops += self.rt.cfg(&base)?.flops_train_step + teacher_fwd;
+            let step_wall = t0.elapsed().as_secs_f64();
+            run.wall += step_wall;
+            let step_flops = self.rt.cfg(&base)?.flops_train_step + teacher_fwd;
+            run.flops += step_flops;
+            self.emit_step(&base, run.phase, step, step_wall, loss as f64, step_flops);
             let eval_loss = if step % self.opts.eval_every == 0 {
                 Some(dist_trainer.eval(self.rt, &run.state)?)
             } else {

@@ -40,6 +40,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::data::Corpus;
+use crate::obs;
 use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime};
 use crate::util::rng::Rng;
 
@@ -354,6 +355,9 @@ impl ServeEngine {
                 next_arrival += 1;
                 if queue.len() == self.opts.max_queue {
                     report.rejected.push(r.id);
+                    if obs::active() {
+                        obs::metrics::serve_reject();
+                    }
                     continue;
                 }
                 queue.push_back(Pending {
@@ -368,6 +372,7 @@ impl ServeEngine {
             // (b) one ragged decode sweep over every occupied slot
             let active: Vec<usize> = (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
             if !active.is_empty() {
+                let _sweep = obs::span(obs::SpanKind::ServeSweep);
                 let n = active.len();
                 let mut cache = Vec::with_capacity(n * rec);
                 let mut toks = Vec::with_capacity(n);
@@ -416,6 +421,8 @@ impl ServeEngine {
                 }
                 if slots[si].is_none() {
                     let p = queue.pop_front().unwrap();
+                    // observe-only: queue-wait interval ends at admission
+                    obs::record_since(obs::SpanKind::ServeQueueWait, p.enqueued);
                     let plen = p.prompt.len();
                     slots[si] = Some(Slot {
                         id: p.id,
@@ -433,6 +440,7 @@ impl ServeEngine {
                 }
             }
             if !admitted.is_empty() {
+                let _pf = obs::span(obs::SpanKind::ServePrefill);
                 let n = admitted.len();
                 let mut tokens = vec![0i32; n * s];
                 let mut lens = Vec::with_capacity(n);
@@ -469,10 +477,53 @@ impl ServeEngine {
 
             step += 1;
             report.steps = step;
+            if obs::metrics_enabled() {
+                let busy = slots.iter().filter(|s| s.is_some()).count();
+                obs::metrics::serve_gauges(queue.len(), busy);
+                if step % SERVE_TICK_EVERY == 0 {
+                    emit_serve_tick(&report, step, queue.len(), busy, t0);
+                }
+            }
         }
         report.wall_secs = t0.elapsed().as_secs_f64();
+        if obs::metrics_enabled() {
+            obs::metrics::serve_gauges(0, 0);
+            emit_serve_tick(&report, step, 0, 0, t0);
+        }
         Ok(report)
     }
+}
+
+/// Engine steps between `row:"serve"` journal ticks (plus one final tick).
+const SERVE_TICK_EVERY: usize = 16;
+
+/// Compose and emit one serve journal row from the running report. Latency
+/// figures cover requests completed so far; wall time is measured from the
+/// run start (observe-only — never an input to scheduling).
+fn emit_serve_tick(
+    report: &ServeReport,
+    step: usize,
+    queue_depth: usize,
+    slots_busy: usize,
+    t0: Instant,
+) {
+    let mut lat_hist = [0u64; obs::metrics::LAT_BUCKETS];
+    for r in &report.served {
+        lat_hist[obs::metrics::lat_bucket(r.latency_secs * 1e3)] += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    obs::metrics::emit_serve_row(&obs::metrics::ServeTickObs {
+        step,
+        queue_depth,
+        slots_busy,
+        served: report.served.len(),
+        rejected: report.rejected.len(),
+        generated_tokens: report.generated_tokens,
+        p50_ms: report.p50_ms(),
+        p99_ms: report.p99_ms(),
+        tokens_per_sec: if wall > 0.0 { report.generated_tokens as f64 / wall } else { 0.0 },
+        lat_hist,
+    });
 }
 
 #[cfg(test)]

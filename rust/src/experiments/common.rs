@@ -41,6 +41,26 @@ pub fn save_curve(id: &str, curve: &Curve) -> Result<()> {
     curve.write_csv(&results_dir().join("curves").join(format!("{id}__{name}.csv")))
 }
 
+/// File-name slug for a method label (matches the curve CSV naming).
+fn method_slug(label: &str) -> String {
+    label.to_lowercase().replace(|c: char| !c.is_ascii_alphanumeric(), "_")
+}
+
+/// When metrics are enabled, attach a per-trial journal at
+/// `results/trials/{id}/{method}/metrics.jsonl` to the harness so each
+/// method run journals its own step rows alongside the global `--metrics`
+/// file. Journal failures are logged, never fatal (observe-only).
+fn attach_trial_journal(h: &Harness, id: &str, label: &str) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    let path = results_dir().join("trials").join(id).join(method_slug(label)).join("metrics.jsonl");
+    match crate::obs::metrics::Journal::create(&path) {
+        Ok(j) => h.set_trial_journal(j),
+        Err(e) => info!("trial journal {} unavailable: {e}", path.display()),
+    }
+}
+
 /// The method roster of the main comparison tables (Tables 1–3).
 pub fn table_methods() -> Vec<Method> {
     vec![
@@ -73,6 +93,7 @@ pub fn run_comparison(
     id: &str,
 ) -> Result<Comparison> {
     let h = Harness::new(rt, opts.clone());
+    attach_trial_journal(&h, id, &Method::Scratch.label());
     let (scratch, scratch_state) = h.run_method_full(&Method::Scratch)?;
     save_curve(id, &scratch)?;
     let target = scratch.final_eval(&opts.base, 3);
@@ -82,6 +103,7 @@ pub fn run_comparison(
         if *m == Method::Scratch {
             continue;
         }
+        attach_trial_journal(&h, id, &m.label());
         let (curve, state) = h.run_method_full(m)?;
         save_curve(id, &curve)?;
         let s = savings_vs_scratch(&scratch, &curve, &opts.base);

@@ -66,5 +66,6 @@
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod obs;
 pub mod runtime;
 pub mod util;

@@ -8,6 +8,7 @@
 //!   generate --config C          KV-cache incremental decode (serving path)
 //!   serve --config C             continuous-batching engine under load
 //!   bench-step --config C        per-step latency of the train hot loop
+//!   report <metrics.jsonl>       summarize a --metrics journal into tables
 //!   dump-plan                    canonical registry table (CI parity gate)
 //!   list                         available experiment ids
 
@@ -21,6 +22,7 @@ use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, syntheti
                               Trainer, TrafficSpec};
 use multilevel::experiments;
 use multilevel::info;
+use multilevel::obs;
 use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Checkpoint,
                           Manifest, Runtime};
 use multilevel::util::bench;
@@ -30,8 +32,8 @@ use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
 const USAGE: &str =
-    "usage: multilevel <info|train|vcycle|finetune|exp|generate|serve|bench-step|dump-plan|list> \
-[options]
+    "usage: multilevel <info|train|vcycle|finetune|exp|generate|serve|bench-step|report|\
+dump-plan|list> [options]
   info                          show manifest summary
   list                          list experiment ids
   train  --config <name> --steps <n> [--lr <f>] [--seed <n>]
@@ -46,6 +48,8 @@ const USAGE: &str =
          [--seed <n>] [--ckpt <path>]   (continuous batching under a
          seeded synthetic trace; replays are bit-identical)
   bench-step --config <name> [--steps <n>]
+  report <metrics.jsonl>        summarize a --metrics journal (top spans,
+                                MFU per phase, straggler skew, serve latency)
   dump-plan                     print the canonical (config, artifact) table
   train/vcycle/finetune also accept checkpoint/resume options:
     --ckpt-dir <dir>   snapshot into <dir>/latest.ckpt (atomic, CRC-checked)
@@ -57,7 +61,12 @@ const USAGE: &str =
     --replicas <R>  data-parallel sharding (defaults to $PALLAS_REPLICAS,
                     1 = unsharded)
     --threads <N>   kernel threads (defaults to $PALLAS_REF_THREADS, else
-                    the machine's available parallelism)";
+                    the machine's available parallelism)
+    --trace <file>    record spans, write a Chrome trace-event JSON at exit
+                      (open in Perfetto / chrome://tracing)
+    --metrics <file>  journal one JSONL metrics row per train/V-cycle step
+                      and per serve tick (summarize with `multilevel report`)
+  both are observe-only: a traced run is bit-identical to an untraced one";
 
 /// Runtime honoring `--replicas` (overriding `PALLAS_REPLICAS`; a
 /// compiled-in device backend still wins, since sharding wraps only the
@@ -102,8 +111,42 @@ fn ckpt_opts(common: &CommonArgs) -> Result<(Option<CheckpointManager>, Option<C
     Ok((Some(mgr), resume))
 }
 
+/// Enable tracing/metrics from the shared `--trace` / `--metrics` flags.
+/// Observe-only: flipping these changes no numeric or scheduling behavior
+/// (pinned by `tests/test_obs.rs`).
+fn init_obs(common: &CommonArgs) -> Result<()> {
+    if common.trace.is_some() {
+        obs::set_tracing(true);
+    }
+    if let Some(path) = &common.metrics {
+        obs::metrics::open_global_journal(Path::new(path))
+            .map_err(|e| anyhow!("cannot open --metrics {path}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Flush the observability outputs after the subcommand finished: drain the
+/// span rings into the Chrome trace and close the metrics journal.
+fn finish_obs(common: &CommonArgs) -> Result<()> {
+    if let Some(path) = &common.trace {
+        let sum = obs::chrome::write_chrome_trace(Path::new(path))
+            .map_err(|e| anyhow!("cannot write --trace {path}: {e}"))?;
+        let dropped = if sum.dropped > 0 {
+            format!(" ({} oldest spans dropped by ring wraparound)", sum.dropped)
+        } else {
+            String::new()
+        };
+        println!("trace: {} spans on {} tracks -> {path}{dropped}", sum.events, sum.tracks);
+    }
+    if let Some(path) = &common.metrics {
+        obs::metrics::close_global_journal();
+        println!("metrics journal -> {path}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
-    logger::init();
+    logger::init().map_err(|e| anyhow!("{e}"))?;
     let args = Args::parse();
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         println!("{USAGE}");
@@ -113,7 +156,8 @@ fn main() -> Result<()> {
     // same typed view and the same error messages
     let common = CommonArgs::from_args(&args).map_err(|e| anyhow!("{e}\n{USAGE}"))?;
     apply_thread_opts(&common)?;
-    match cmd {
+    init_obs(&common)?;
+    let result = match cmd {
         "info" => cmd_info(&common),
         "list" => {
             for (id, desc) in experiments::REGISTRY {
@@ -128,6 +172,7 @@ fn main() -> Result<()> {
         "generate" => cmd_generate(&args, &common),
         "serve" => cmd_serve(&args, &common),
         "bench-step" => cmd_bench_step(&args, &common),
+        "report" => cmd_report(&args),
         "dump-plan" => {
             // the built-in registry, canonically rendered — CI diffs this
             // against `python -m compile.aot --dump-plan`
@@ -135,7 +180,21 @@ fn main() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
+    };
+    // flush even after a failed command (a partial trace still helps debug),
+    // but never let the flush mask the command's own error
+    let flushed = finish_obs(&common);
+    result.and(flushed)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("report needs a metrics journal path (written by --metrics)\n{USAGE}");
+    };
+    for t in obs::report::summarize(Path::new(path))? {
+        println!("{}", t.render());
     }
+    Ok(())
 }
 
 fn cmd_info(common: &CommonArgs) -> Result<()> {

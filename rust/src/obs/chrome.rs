@@ -1,0 +1,162 @@
+//! Chrome trace-event JSON exporter (Perfetto / `chrome://tracing`).
+//!
+//! Drains every span ring and writes the trace-event "JSON object format":
+//! one complete-event (`ph:"X"`) per span plus `thread_name` metadata so the
+//! UI shows one labelled track per pool worker, per replica driver, and for
+//! the main thread. Events are grouped by final track and stably sorted by
+//! start time, so per-track timestamps are non-decreasing (pinned by
+//! `tests/test_obs.rs`).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+use super::tracer::{self, SpanKind, SpanRec, NO_NAME, NO_TRACK};
+
+/// What a trace export wrote, for logging and tests.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSummary {
+    /// Span events written (excluding metadata events).
+    pub events: usize,
+    /// Distinct tracks (tids) in the file.
+    pub tracks: usize,
+    /// Spans lost to ring wraparound before the drain.
+    pub dropped: u64,
+}
+
+/// Drain all rings and write a Chrome trace to `path`.
+pub fn write_chrome_trace(path: &Path) -> io::Result<TraceSummary> {
+    let rings = tracer::drain_rings();
+    let names = tracer::interned_names();
+
+    // Route each span to its final track: the recording thread's ring label,
+    // or "replica-{r}" when the span was attributed to a replica driver.
+    // Track order (== tid order) is first-seen, which puts the main thread
+    // and pool workers ahead of the replica tracks.
+    let mut order: Vec<String> = Vec::new();
+    let mut index: BTreeMap<String, usize> = BTreeMap::new();
+    let mut tracks: Vec<Vec<SpanRec>> = Vec::new();
+    let mut dropped = 0u64;
+    for ring in &rings {
+        dropped += ring.dropped;
+        for rec in &ring.spans {
+            let label = if rec.track == NO_TRACK {
+                ring.label.clone()
+            } else {
+                format!("replica-{}", rec.track)
+            };
+            let t = *index.entry(label.clone()).or_insert_with(|| {
+                order.push(label);
+                tracks.push(Vec::new());
+                tracks.len() - 1
+            });
+            tracks[t].push(*rec);
+        }
+    }
+    for spans in tracks.iter_mut() {
+        spans.sort_by_key(|s| s.start_ns);
+    }
+
+    let mut w = BufWriter::new(File::create(path)?);
+    write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    let mut first = true;
+    let mut sep = |w: &mut BufWriter<File>| -> io::Result<()> {
+        if first {
+            first = false;
+            Ok(())
+        } else {
+            write!(w, ",")
+        }
+    };
+    for (t, label) in order.iter().enumerate() {
+        let meta = json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num((t + 1) as f64)),
+            ("args", json::obj(vec![("name", json::s(label))])),
+        ]);
+        sep(&mut w)?;
+        write!(w, "{meta}")?;
+    }
+    let mut events = 0usize;
+    for (t, spans) in tracks.iter().enumerate() {
+        for rec in spans {
+            let cat = SpanKind::from_u8(rec.kind).map(SpanKind::label).unwrap_or("span");
+            let name = if rec.name != NO_NAME {
+                names.get(rec.name as usize).map(String::as_str).unwrap_or(cat)
+            } else {
+                cat
+            };
+            let ev = json::obj(vec![
+                ("name", json::s(name)),
+                ("cat", json::s(cat)),
+                ("ph", json::s("X")),
+                ("ts", json::num(rec.start_ns as f64 / 1e3)),
+                ("dur", json::num(rec.dur_ns as f64 / 1e3)),
+                ("pid", json::num(1.0)),
+                ("tid", json::num((t + 1) as f64)),
+            ]);
+            sep(&mut w)?;
+            write!(w, "{ev}")?;
+            events += 1;
+        }
+    }
+    // A summary metadata event so the drop count survives into the file.
+    let summary = json::obj(vec![
+        ("name", json::s("trace_summary")),
+        ("ph", json::s("M")),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(0.0)),
+        (
+            "args",
+            json::obj(vec![
+                ("events", json::num(events as f64)),
+                ("tracks", json::num(order.len() as f64)),
+                ("dropped_spans", json::num(dropped as f64)),
+            ]),
+        ),
+    ]);
+    sep(&mut w)?;
+    write!(w, "{summary}")?;
+    write!(w, "]}}")?;
+    w.flush()?;
+    Ok(TraceSummary { events, tracks: order.len(), dropped })
+}
+
+/// Parse an exported trace and return `(track label, ts, dur, name, cat)`
+/// tuples for span events — used by tests and kept here so the file format
+/// knowledge stays in one module.
+pub fn parse_trace_events(text: &str) -> Result<Vec<(String, f64, f64, String, String)>, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let events = v.get("traceEvents").as_arr().ok_or("missing traceEvents")?;
+    let mut track_names: BTreeMap<i64, String> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").as_str() == Some("M") && ev.get("name").as_str() == Some("thread_name") {
+            let tid = ev.get("tid").as_i64().ok_or("metadata without tid")?;
+            let name = ev.get("args").get("name").as_str().ok_or("thread_name without name")?;
+            track_names.insert(tid, name.to_string());
+        }
+    }
+    let mut out = Vec::new();
+    for ev in events {
+        if ev.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let tid = ev.get("tid").as_i64().ok_or("event without tid")?;
+        let label = track_names.get(&tid).cloned().unwrap_or_else(|| format!("tid-{tid}"));
+        out.push((
+            label,
+            ev.get("ts").as_f64().ok_or("event without ts")?,
+            ev.get("dur").as_f64().unwrap_or(0.0),
+            ev.get("name").as_str().unwrap_or("").to_string(),
+            ev.get("cat").as_str().unwrap_or("").to_string(),
+        ));
+    }
+    Ok(out)
+}
+// Export behavior is pinned in `tests/test_obs.rs`, which serializes all
+// tracing-enabled tests behind one lock.

@@ -1,0 +1,417 @@
+//! Metrics registry: utilization counters/gauges, an analytic-FLOPs roofline
+//! (MFU) model, and JSONL journals with one row per train/V-cycle step and
+//! per serve report tick.
+//!
+//! Everything here is observe-only. Updates are relaxed atomics on values
+//! that never feed back into execution; journal rows are composed from
+//! snapshots taken after the step's numeric work is done.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+use crate::util::threadpool;
+
+use super::tracer::{kind_stats, MAX_WORKERS};
+
+// ---------------------------------------------------------------------------
+// Counters and gauges
+// ---------------------------------------------------------------------------
+
+static WORKER_BUSY_NS: [AtomicU64; MAX_WORKERS] = [const { AtomicU64::new(0) }; MAX_WORKERS];
+
+/// Bill `dur_ns` of busy time to pool worker `slot` (called by span drops).
+pub(super) fn worker_busy_add(slot: usize, dur_ns: u64) {
+    WORKER_BUSY_NS[slot.min(MAX_WORKERS - 1)].fetch_add(dur_ns, Ordering::Relaxed);
+}
+
+/// Cumulative busy nanoseconds for workers `0..n`.
+pub fn worker_busy_ns(n: usize) -> Vec<u64> {
+    (0..n.min(MAX_WORKERS)).map(|i| WORKER_BUSY_NS[i].load(Ordering::Relaxed)).collect()
+}
+
+// Workspace arena occupancy (bytes), refreshed after each artifact execution.
+static ARENA_POOLED_BYTES: AtomicU64 = AtomicU64::new(0);
+static ARENA_HWM_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Refresh the arena gauges: `pooled` = bytes parked in the free pools,
+/// `out_hwm` = the workspace's high-water mark of checked-out bytes.
+pub fn arena_update(pooled: u64, out_hwm: u64) {
+    ARENA_POOLED_BYTES.store(pooled, Ordering::Relaxed);
+    ARENA_HWM_BYTES.fetch_max(out_hwm, Ordering::Relaxed);
+}
+
+// All-reduce straggler accounting (from `sharded/allreduce.rs`).
+static AR_SKEW_NS: AtomicU64 = AtomicU64::new(0);
+static AR_SKEW_MAX_NS: AtomicU64 = AtomicU64::new(0);
+static AR_WAIT_NS: AtomicU64 = AtomicU64::new(0);
+static AR_STEPS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one all-reduce: `skew_ns` = slowest − fastest replica produce time,
+/// `wait_ns` = total time the non-slowest replicas spent finished-and-waiting.
+pub fn allreduce_record(skew_ns: u64, wait_ns: u64) {
+    AR_SKEW_NS.store(skew_ns, Ordering::Relaxed);
+    AR_SKEW_MAX_NS.fetch_max(skew_ns, Ordering::Relaxed);
+    AR_WAIT_NS.fetch_add(wait_ns, Ordering::Relaxed);
+    AR_STEPS.fetch_add(1, Ordering::Relaxed);
+}
+
+// Serve engine gauges/counters.
+static SERVE_QUEUE_DEPTH: AtomicU64 = AtomicU64::new(0);
+static SERVE_SLOTS_BUSY: AtomicU64 = AtomicU64::new(0);
+static SERVE_REJECTS: AtomicU64 = AtomicU64::new(0);
+
+/// Refresh the serve gauges after an engine step.
+pub fn serve_gauges(queue_depth: usize, slots_busy: usize) {
+    SERVE_QUEUE_DEPTH.store(queue_depth as u64, Ordering::Relaxed);
+    SERVE_SLOTS_BUSY.store(slots_busy as u64, Ordering::Relaxed);
+}
+
+/// Count one fail-closed admission reject.
+pub fn serve_reject() {
+    SERVE_REJECTS.fetch_add(1, Ordering::Relaxed);
+}
+
+// Cumulative analytic FLOPs journaled so far (integral, so a u64 suffices).
+static FLOPS_CUM: AtomicU64 = AtomicU64::new(0);
+
+/// Zero every counter/gauge (test-time isolation).
+pub fn reset_metrics() {
+    for w in WORKER_BUSY_NS.iter() {
+        w.store(0, Ordering::SeqCst);
+    }
+    for g in [
+        &ARENA_POOLED_BYTES,
+        &ARENA_HWM_BYTES,
+        &AR_SKEW_NS,
+        &AR_SKEW_MAX_NS,
+        &AR_WAIT_NS,
+        &AR_STEPS,
+        &SERVE_QUEUE_DEPTH,
+        &SERVE_SLOTS_BUSY,
+        &SERVE_REJECTS,
+        &FLOPS_CUM,
+    ] {
+        g.store(0, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Roofline / MFU
+// ---------------------------------------------------------------------------
+
+static ROOFLINE: OnceLock<f64> = OnceLock::new();
+
+/// Per-host compute roofline in FLOP/s: a once-per-process timed scalar-FMA
+/// calibration (8 independent f32 accumulators, ~10ms) scaled by the pool
+/// width. MFU = achieved FLOP/s ÷ this. It is a *scalar* roofline on
+/// purpose: the kernels are scalar today, so MFU ≈ 1.0 means "as fast as
+/// scalar code can go" and the gap to hardware peak is the SIMD headroom
+/// tracked in ROADMAP.md.
+pub fn roofline_flops() -> f64 {
+    *ROOFLINE.get_or_init(|| calibrate_core_flops() * threadpool::threads() as f64)
+}
+
+fn calibrate_core_flops() -> f64 {
+    let mut acc = [1.0f32, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.7];
+    let x = 1.000_001f32;
+    let y = 1e-7f32;
+    let t0 = Instant::now();
+    let mut iters: u64 = 0;
+    loop {
+        for _ in 0..100_000 {
+            for a in acc.iter_mut() {
+                *a = *a * x + y;
+            }
+        }
+        iters += 100_000;
+        if t0.elapsed() >= Duration::from_millis(10) {
+            break;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    // 8 accumulators × (mul + add) per iteration.
+    iters as f64 * 16.0 / secs
+}
+
+// ---------------------------------------------------------------------------
+// JSONL journals
+// ---------------------------------------------------------------------------
+
+/// A line-buffered JSONL journal (one `Json` row per line, flushed per row so
+/// killed runs keep their tail).
+pub struct Journal {
+    w: BufWriter<File>,
+}
+
+impl Journal {
+    /// Create (truncate) a journal at `path`, creating parent directories.
+    pub fn create(path: &Path) -> io::Result<Journal> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(Journal { w: BufWriter::new(File::create(path)?) })
+    }
+
+    /// Append one row.
+    pub fn row(&mut self, row: &Json) -> io::Result<()> {
+        writeln!(self.w, "{row}")?;
+        self.w.flush()
+    }
+}
+
+static GLOBAL_JOURNAL: Mutex<Option<Journal>> = Mutex::new(None);
+
+/// Open the process-wide metrics journal (`--metrics PATH`) and enable
+/// metrics collection.
+pub fn open_global_journal(path: &Path) -> io::Result<()> {
+    let j = Journal::create(path)?;
+    *GLOBAL_JOURNAL.lock().unwrap() = Some(j);
+    super::set_metrics(true);
+    Ok(())
+}
+
+/// Append a row to the global journal, if one is open.
+pub fn global_row(row: &Json) {
+    if let Some(j) = GLOBAL_JOURNAL.lock().unwrap().as_mut() {
+        let _ = j.row(row);
+    }
+}
+
+/// Close the global journal (flushes on drop).
+pub fn close_global_journal() {
+    *GLOBAL_JOURNAL.lock().unwrap() = None;
+}
+
+// ---------------------------------------------------------------------------
+// Row builders
+// ---------------------------------------------------------------------------
+
+/// Per-step observations supplied by the training drivers.
+pub struct StepObs<'a> {
+    /// Model config name for this phase (V-cycle phases switch configs).
+    pub config: &'a str,
+    /// 1-based phase number within the run (1 for flat training).
+    pub phase: usize,
+    /// 1-based step within the phase schedule.
+    pub step: usize,
+    /// Wall-clock seconds for this step.
+    pub wall_s: f64,
+    /// Training loss after the step.
+    pub loss: f64,
+    /// Analytic FLOPs for one step of this phase's config.
+    pub flops_step: f64,
+}
+
+fn spans_json() -> Json {
+    Json::Obj(
+        kind_stats()
+            .into_iter()
+            .map(|s| {
+                (
+                    s.kind.label().to_string(),
+                    json::obj(vec![
+                        ("count", json::num(s.count as f64)),
+                        ("total_ms", json::num(s.total_ns as f64 / 1e6)),
+                        ("self_ms", json::num(s.self_ns as f64 / 1e6)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Build one `row:"step"` journal row (also advances the cumulative FLOPs
+/// counter). Span/busy fields are cumulative since process start.
+pub fn step_row(o: &StepObs) -> Json {
+    let cum = FLOPS_CUM.fetch_add(o.flops_step as u64, Ordering::Relaxed) + o.flops_step as u64;
+    let roofline = roofline_flops();
+    let achieved = o.flops_step / o.wall_s.max(1e-12);
+    let nthreads = threadpool::threads();
+    let busy = worker_busy_ns(nthreads);
+    json::obj(vec![
+        ("row", json::s("step")),
+        ("config", json::s(o.config)),
+        ("phase", json::num(o.phase as f64)),
+        ("step", json::num(o.step as f64)),
+        ("wall_ms", json::num(o.wall_s * 1e3)),
+        ("loss", json::num(o.loss)),
+        ("flops_step", json::num(o.flops_step)),
+        ("flops_cum", json::num(cum as f64)),
+        ("achieved_gflops", json::num(achieved / 1e9)),
+        ("roofline_gflops", json::num(roofline / 1e9)),
+        ("mfu", json::num(achieved / roofline)),
+        (
+            "worker_busy_ms",
+            json::arr(busy.iter().map(|&ns| json::num(ns as f64 / 1e6)).collect()),
+        ),
+        ("arena_pooled_bytes", json::num(ARENA_POOLED_BYTES.load(Ordering::Relaxed) as f64)),
+        ("arena_hwm_bytes", json::num(ARENA_HWM_BYTES.load(Ordering::Relaxed) as f64)),
+        ("ar_skew_us", json::num(AR_SKEW_NS.load(Ordering::Relaxed) as f64 / 1e3)),
+        ("ar_skew_max_us", json::num(AR_SKEW_MAX_NS.load(Ordering::Relaxed) as f64 / 1e3)),
+        ("ar_wait_ms", json::num(AR_WAIT_NS.load(Ordering::Relaxed) as f64 / 1e6)),
+        ("ar_steps", json::num(AR_STEPS.load(Ordering::Relaxed) as f64)),
+        ("spans", spans_json()),
+    ])
+}
+
+/// Emit a step row to the global journal and optionally a per-trial journal.
+/// No-op when metrics are disabled.
+pub fn emit_step_row(o: &StepObs, trial: Option<&mut Journal>) {
+    if !super::metrics_enabled() {
+        return;
+    }
+    let row = step_row(o);
+    global_row(&row);
+    if let Some(j) = trial {
+        let _ = j.row(&row);
+    }
+}
+
+/// Number of log2-millisecond serve latency buckets.
+pub const LAT_BUCKETS: usize = 16;
+
+/// Bucket a request latency: bucket 0 is `< 1ms`, bucket i is
+/// `[2^(i-1), 2^i) ms`, the last bucket absorbs the tail.
+pub fn lat_bucket(ms: f64) -> usize {
+    if ms < 1.0 {
+        return 0;
+    }
+    let b = ms.log2().floor() as usize + 1;
+    b.min(LAT_BUCKETS - 1)
+}
+
+/// Per-tick observations supplied by the serve engine.
+pub struct ServeTickObs {
+    /// Engine step at which the tick was taken.
+    pub step: usize,
+    /// Requests waiting in the FIFO queue.
+    pub queue_depth: usize,
+    /// Occupied decode slots.
+    pub slots_busy: usize,
+    /// Completed requests so far.
+    pub served: usize,
+    /// Admission rejects so far.
+    pub rejected: usize,
+    /// Generated tokens so far.
+    pub generated_tokens: usize,
+    /// Latency percentiles over completed requests (ms).
+    pub p50_ms: f64,
+    /// 99th percentile latency (ms).
+    pub p99_ms: f64,
+    /// Generated tokens per wall-clock second so far.
+    pub tokens_per_sec: f64,
+    /// log2-ms completed-request latency histogram (see `lat_bucket`).
+    pub lat_hist: [u64; LAT_BUCKETS],
+}
+
+/// Build one `row:"serve"` journal row.
+pub fn serve_row(o: &ServeTickObs) -> Json {
+    json::obj(vec![
+        ("row", json::s("serve")),
+        ("step", json::num(o.step as f64)),
+        ("queue_depth", json::num(o.queue_depth as f64)),
+        ("slots_busy", json::num(o.slots_busy as f64)),
+        ("served", json::num(o.served as f64)),
+        ("rejected", json::num(o.rejected as f64)),
+        ("generated_tokens", json::num(o.generated_tokens as f64)),
+        ("p50_ms", json::num(o.p50_ms)),
+        ("p99_ms", json::num(o.p99_ms)),
+        ("tokens_per_sec", json::num(o.tokens_per_sec)),
+        (
+            "lat_hist_log2ms",
+            json::arr(o.lat_hist.iter().map(|&c| json::num(c as f64)).collect()),
+        ),
+        ("spans", spans_json()),
+    ])
+}
+
+/// Emit a serve tick row to the global journal. No-op when metrics are
+/// disabled.
+pub fn emit_serve_row(o: &ServeTickObs) {
+    if !super::metrics_enabled() {
+        return;
+    }
+    global_row(&serve_row(o));
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lat_buckets_cover_the_range() {
+        assert_eq!(lat_bucket(0.0), 0);
+        assert_eq!(lat_bucket(0.9), 0);
+        assert_eq!(lat_bucket(1.0), 1);
+        assert_eq!(lat_bucket(1.9), 1);
+        assert_eq!(lat_bucket(2.0), 2);
+        assert_eq!(lat_bucket(3.9), 2);
+        assert_eq!(lat_bucket(4.0), 3);
+        assert_eq!(lat_bucket(1e9), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn roofline_is_positive_and_cached() {
+        let a = roofline_flops();
+        let b = roofline_flops();
+        assert!(a > 0.0);
+        assert_eq!(a, b, "roofline is calibrated once");
+    }
+
+    #[test]
+    fn step_row_has_mfu_fields() {
+        let _g = test_lock();
+        reset_metrics();
+        let row = step_row(&StepObs {
+            config: "gpt_nano",
+            phase: 1,
+            step: 3,
+            wall_s: 0.010,
+            loss: 4.5,
+            flops_step: 1e9,
+        });
+        assert_eq!(row.get("row").as_str(), Some("step"));
+        assert_eq!(row.get("config").as_str(), Some("gpt_nano"));
+        assert_eq!(row.get("flops_cum").as_f64(), Some(1e9));
+        let mfu = row.get("mfu").as_f64().unwrap();
+        assert!(mfu > 0.0);
+        let achieved = row.get("achieved_gflops").as_f64().unwrap();
+        let roof = row.get("roofline_gflops").as_f64().unwrap();
+        assert!((mfu - achieved / roof).abs() < 1e-9);
+        // Round-trips through the JSON parser.
+        let re = Json::parse(&row.to_string()).unwrap();
+        assert_eq!(re.get("step").as_usize(), Some(3));
+        reset_metrics();
+    }
+
+    #[test]
+    fn journal_writes_parseable_lines() {
+        let _g = test_lock();
+        let dir = crate::util::tmp::TempDir::new("obs-journal");
+        let path = dir.path().join("m.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.row(&json::obj(vec![("row", json::s("step")), ("step", json::num(1.0))])).unwrap();
+        j.row(&json::obj(vec![("row", json::s("serve")), ("step", json::num(2.0))])).unwrap();
+        drop(j);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("row").as_str(), Some("step"));
+        assert_eq!(rows[1].get("step").as_usize(), Some(2));
+    }
+}

@@ -1,0 +1,120 @@
+//! Observability: zero-overhead span tracing, metrics journals and reports.
+//!
+//! The subsystem is strictly **observe-only**: nothing in here feeds back into
+//! scheduling, kernel selection or numerics, so a traced run is bitwise
+//! identical to an untraced one (pinned by `tests/test_obs.rs`). When both
+//! tracing and metrics are disabled — the default — every instrumentation
+//! point collapses to a single relaxed atomic load ([`active`]) and returns an
+//! inert guard without reading the clock.
+//!
+//! Layout:
+//!
+//! - [`tracer`] — typed spans recorded into per-thread preallocated ring
+//!   buffers (zero steady-state heap allocation; overflow overwrites the
+//!   oldest spans and reports the drop count on drain).
+//! - [`chrome`] — drains the rings into a Chrome trace-event JSON file
+//!   loadable in Perfetto / `chrome://tracing`, one track per pool worker and
+//!   per replica driver.
+//! - [`metrics`] — counters/gauges (worker busy time, arena bytes, all-reduce
+//!   skew, serve queue state), an analytic-FLOPs/roofline MFU model, and JSONL
+//!   step/serve journals (`--metrics out.jsonl`).
+//! - [`report`] — summarizes a metrics journal into `util::table` tables
+//!   (the `multilevel report` subcommand).
+
+pub mod chrome;
+pub mod metrics;
+pub mod report;
+pub mod tracer;
+
+pub use tracer::{
+    artifact_span, pool_task_span, record_since, set_pool_ctx, span, span_named,
+    span_on_replica, SpanKind, CTX_NONE,
+};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static METRICS: AtomicBool = AtomicBool::new(false);
+// ACTIVE == TRACING || METRICS, denormalized so the common disabled path is
+// one relaxed load instead of two.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// True when any observability sink is enabled. This is the only check on the
+/// disabled fast path; instrumentation points must bail out before touching
+/// the clock, thread-locals or any shared state when it returns false.
+#[inline(always)]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// True when span tracing (`--trace`) is enabled.
+#[inline]
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// True when metrics journaling (`--metrics`) is enabled.
+#[inline]
+pub fn metrics_enabled() -> bool {
+    METRICS.load(Ordering::Relaxed)
+}
+
+/// Enable/disable span tracing. The CLI treats the flag as sealed — set once
+/// before the run, never flipped mid-run — but tests toggle it to compare
+/// traced and untraced executions inside one process.
+pub fn set_tracing(on: bool) {
+    if on {
+        init_epoch();
+    }
+    TRACING.store(on, Ordering::SeqCst);
+    recompute_active();
+}
+
+/// Enable/disable metrics collection (see [`set_tracing`] for the sealing
+/// contract).
+pub fn set_metrics(on: bool) {
+    if on {
+        init_epoch();
+    }
+    METRICS.store(on, Ordering::SeqCst);
+    recompute_active();
+}
+
+fn recompute_active() {
+    ACTIVE.store(
+        TRACING.load(Ordering::SeqCst) || METRICS.load(Ordering::SeqCst),
+        Ordering::SeqCst,
+    );
+}
+
+// All span timestamps are nanoseconds since a process-wide epoch pinned the
+// first time observability is enabled, so every thread's clock shares one
+// origin and Chrome-trace `ts` values are directly comparable across tracks.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn init_epoch() {
+    EPOCH.get_or_init(Instant::now);
+}
+
+/// Nanoseconds since the observability epoch.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// Flag-toggling behavior tests live in `tests/test_obs.rs`, where a file-wide
+// lock serializes them; unit tests here must not flip the global flags (other
+// lib tests run concurrently through instrumented paths).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,313 @@
+//! `multilevel report <metrics.jsonl>` — summarize a metrics journal into
+//! markdown tables: top spans by self time, MFU per phase, all-reduce
+//! straggler skew, and serve latency.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::{pct, Table};
+
+use super::metrics::LAT_BUCKETS;
+
+/// Parse a JSONL metrics journal and build the summary tables. Fails with a
+/// line-numbered error on malformed rows.
+pub fn summarize(path: &Path) -> Result<Vec<Table>> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading metrics journal {}", path.display()))?;
+    let mut rows: Vec<Json> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{} line {}: {e}", path.display(), i + 1))?;
+        rows.push(v);
+    }
+    if rows.is_empty() {
+        bail!("metrics journal {} has no rows", path.display());
+    }
+    let mut tables = Vec::new();
+    if let Some(t) = spans_table(&rows) {
+        tables.push(t);
+    }
+    if let Some(t) = mfu_table(&rows) {
+        tables.push(t);
+    }
+    if let Some(t) = straggler_table(&rows) {
+        tables.push(t);
+    }
+    tables.extend(serve_tables(&rows));
+    if tables.is_empty() {
+        bail!("metrics journal {} has no step or serve rows to summarize", path.display());
+    }
+    Ok(tables)
+}
+
+/// Span aggregates are cumulative, so the last row carrying them is the
+/// run-total picture.
+fn spans_table(rows: &[Json]) -> Option<Table> {
+    let spans = rows.iter().rev().find_map(|r| r.get("spans").as_obj())?;
+    let mut entries: Vec<(String, f64, f64, f64)> = spans
+        .iter()
+        .map(|(k, v)| {
+            (
+                k.clone(),
+                v.get("count").as_f64().unwrap_or(0.0),
+                v.get("total_ms").as_f64().unwrap_or(0.0),
+                v.get("self_ms").as_f64().unwrap_or(0.0),
+            )
+        })
+        .collect();
+    entries.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap_or(std::cmp::Ordering::Equal));
+    let total_self: f64 = entries.iter().map(|e| e.3).sum();
+    let mut t = Table::new(
+        "Top spans by self time",
+        &["span", "count", "total_ms", "self_ms", "self_share"],
+    );
+    for (kind, count, total, selfms) in entries {
+        let share = if total_self > 0.0 { selfms / total_self } else { 0.0 };
+        t.row(vec![
+            kind,
+            format!("{count:.0}"),
+            format!("{total:.1}"),
+            format!("{selfms:.1}"),
+            pct(share),
+        ]);
+    }
+    Some(t)
+}
+
+fn mfu_table(rows: &[Json]) -> Option<Table> {
+    struct Agg {
+        config: String,
+        phase: usize,
+        steps: usize,
+        wall_ms: f64,
+        flops: f64,
+        roofline_gflops: f64,
+        skew_max_us: f64,
+    }
+    let mut phases: Vec<Agg> = Vec::new();
+    for r in rows {
+        if r.get("row").as_str() != Some("step") {
+            continue;
+        }
+        let config = r.get("config").as_str().unwrap_or("?").to_string();
+        let phase = r.get("phase").as_usize().unwrap_or(0);
+        let idx = match phases.iter().position(|a| a.config == config && a.phase == phase) {
+            Some(i) => i,
+            None => {
+                phases.push(Agg {
+                    config,
+                    phase,
+                    steps: 0,
+                    wall_ms: 0.0,
+                    flops: 0.0,
+                    roofline_gflops: 0.0,
+                    skew_max_us: 0.0,
+                });
+                phases.len() - 1
+            }
+        };
+        let agg = &mut phases[idx];
+        agg.steps += 1;
+        agg.wall_ms += r.get("wall_ms").as_f64().unwrap_or(0.0);
+        agg.flops += r.get("flops_step").as_f64().unwrap_or(0.0);
+        agg.roofline_gflops = r.get("roofline_gflops").as_f64().unwrap_or(agg.roofline_gflops);
+        agg.skew_max_us = agg.skew_max_us.max(r.get("ar_skew_us").as_f64().unwrap_or(0.0));
+    }
+    if phases.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        "MFU per phase",
+        &["phase", "config", "steps", "wall_ms/step", "GFLOP/s", "MFU", "ar_skew_max_us"],
+    );
+    for a in &phases {
+        let wall_s = a.wall_ms / 1e3;
+        let gflops = if wall_s > 0.0 { a.flops / wall_s / 1e9 } else { 0.0 };
+        let mfu = if a.roofline_gflops > 0.0 { gflops / a.roofline_gflops } else { 0.0 };
+        t.row(vec![
+            a.phase.to_string(),
+            a.config.clone(),
+            a.steps.to_string(),
+            format!("{:.1}", a.wall_ms / a.steps.max(1) as f64),
+            format!("{gflops:.2}"),
+            pct(mfu),
+            format!("{:.1}", a.skew_max_us),
+        ]);
+    }
+    Some(t)
+}
+
+/// All-reduce counters are cumulative; summarize from the last step row that
+/// saw any all-reduce activity.
+fn straggler_table(rows: &[Json]) -> Option<Table> {
+    let last = rows
+        .iter()
+        .rev()
+        .find(|r| r.get("row").as_str() == Some("step") && r.get("ar_steps").as_f64() > Some(0.0))?;
+    let mut t = Table::new("All-reduce straggler skew", &["metric", "value"]);
+    t.row(vec![
+        "all-reduce steps".into(),
+        format!("{:.0}", last.get("ar_steps").as_f64().unwrap_or(0.0)),
+    ]);
+    t.row(vec![
+        "skew last (us)".into(),
+        format!("{:.1}", last.get("ar_skew_us").as_f64().unwrap_or(0.0)),
+    ]);
+    t.row(vec![
+        "skew max (us)".into(),
+        format!("{:.1}", last.get("ar_skew_max_us").as_f64().unwrap_or(0.0)),
+    ]);
+    t.row(vec![
+        "cumulative straggler wait (ms)".into(),
+        format!("{:.1}", last.get("ar_wait_ms").as_f64().unwrap_or(0.0)),
+    ]);
+    Some(t)
+}
+
+fn bucket_label(i: usize) -> String {
+    if i == 0 {
+        "<1ms".to_string()
+    } else if i == LAT_BUCKETS - 1 {
+        format!(">={}ms", 1u64 << (LAT_BUCKETS - 2))
+    } else {
+        format!("{}-{}ms", 1u64 << (i - 1), 1u64 << i)
+    }
+}
+
+fn serve_tables(rows: &[Json]) -> Vec<Table> {
+    let Some(last) = rows.iter().rev().find(|r| r.get("row").as_str() == Some("serve")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut t = Table::new("Serve summary", &["metric", "value"]);
+    for (key, label) in [
+        ("step", "engine steps"),
+        ("served", "requests served"),
+        ("rejected", "admission rejects"),
+        ("generated_tokens", "tokens generated"),
+        ("queue_depth", "final queue depth"),
+        ("slots_busy", "final slots busy"),
+    ] {
+        t.row(vec![label.into(), format!("{:.0}", last.get(key).as_f64().unwrap_or(0.0))]);
+    }
+    for (key, label) in [
+        ("p50_ms", "p50 latency (ms)"),
+        ("p99_ms", "p99 latency (ms)"),
+        ("tokens_per_sec", "tokens/sec"),
+    ] {
+        t.row(vec![label.into(), format!("{:.2}", last.get(key).as_f64().unwrap_or(0.0))]);
+    }
+    out.push(t);
+    if let Some(hist) = last.get("lat_hist_log2ms").as_arr() {
+        let mut h = Table::new("Serve latency histogram", &["bucket", "requests"]);
+        for (i, c) in hist.iter().enumerate() {
+            let c = c.as_f64().unwrap_or(0.0);
+            if c > 0.0 {
+                h.row(vec![bucket_label(i), format!("{c:.0}")]);
+            }
+        }
+        if !h.rows.is_empty() {
+            out.push(h);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+
+    fn write_journal(lines: &[Json]) -> (crate::util::tmp::TempDir, std::path::PathBuf) {
+        let dir = crate::util::tmp::TempDir::new("obs-report");
+        let path = dir.file("m.jsonl");
+        let text: String = lines.iter().map(|l| format!("{l}\n")).collect();
+        std::fs::write(&path, text).unwrap();
+        (dir, path)
+    }
+
+    fn step(phase: f64, step: f64, wall_ms: f64, skew_us: f64) -> Json {
+        json::obj(vec![
+            ("row", json::s("step")),
+            ("config", json::s("bert_nano")),
+            ("phase", json::num(phase)),
+            ("step", json::num(step)),
+            ("wall_ms", json::num(wall_ms)),
+            ("flops_step", json::num(2e9)),
+            ("roofline_gflops", json::num(100.0)),
+            ("ar_steps", json::num(1.0)),
+            ("ar_skew_us", json::num(skew_us)),
+            ("ar_skew_max_us", json::num(skew_us)),
+            ("ar_wait_ms", json::num(0.5)),
+            (
+                "spans",
+                json::obj(vec![(
+                    "gemm",
+                    json::obj(vec![
+                        ("count", json::num(8.0)),
+                        ("total_ms", json::num(12.0)),
+                        ("self_ms", json::num(12.0)),
+                    ]),
+                )]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn summarizes_step_rows() {
+        let (_d, path) = write_journal(&[step(1.0, 1.0, 20.0, 100.0), step(2.0, 1.0, 10.0, 50.0)]);
+        let tables = summarize(&path).unwrap();
+        let joined: String = tables.iter().map(|t| t.render()).collect();
+        assert!(joined.contains("MFU per phase"), "{joined}");
+        assert!(joined.contains("Top spans by self time"));
+        assert!(joined.contains("All-reduce straggler skew"));
+        assert!(joined.contains("gemm"));
+        // Phase 1: 2e9 flops / 20ms = 100 GFLOP/s = 100% of the 100 GFLOP/s
+        // roofline; phase 2 runs at 200%.
+        assert!(joined.contains("100.0%"), "{joined}");
+        assert!(joined.contains("200.0%"), "{joined}");
+    }
+
+    #[test]
+    fn summarizes_serve_rows() {
+        let mut hist = vec![json::num(0.0); LAT_BUCKETS];
+        hist[0] = json::num(3.0);
+        hist[4] = json::num(1.0);
+        let row = json::obj(vec![
+            ("row", json::s("serve")),
+            ("step", json::num(40.0)),
+            ("queue_depth", json::num(2.0)),
+            ("slots_busy", json::num(4.0)),
+            ("served", json::num(4.0)),
+            ("rejected", json::num(1.0)),
+            ("generated_tokens", json::num(64.0)),
+            ("p50_ms", json::num(1.5)),
+            ("p99_ms", json::num(9.0)),
+            ("tokens_per_sec", json::num(123.0)),
+            ("lat_hist_log2ms", Json::Arr(hist)),
+        ]);
+        let (_d, path) = write_journal(&[row]);
+        let tables = summarize(&path).unwrap();
+        let joined: String = tables.iter().map(|t| t.render()).collect();
+        assert!(joined.contains("Serve summary"));
+        assert!(joined.contains("Serve latency histogram"));
+        assert!(joined.contains("<1ms"));
+        assert!(joined.contains("8-16ms"));
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let dir = crate::util::tmp::TempDir::new("obs-report-bad");
+        let path = dir.file("bad.jsonl");
+        std::fs::write(&path, "{\"row\":\"step\"}\nnot json\n").unwrap();
+        let err = summarize(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+}

@@ -1,0 +1,540 @@
+//! Typed spans in per-thread preallocated ring buffers.
+//!
+//! Every instrumentation point is a guard constructor (`span`, `span_named`,
+//! `pool_task_span`, ...) that returns an **inert** guard — no clock read, no
+//! thread-local traffic — when `crate::obs::active()` is false. When active,
+//! the guard records its duration on drop into (a) per-kind aggregate
+//! counters (always, for metrics rows) and (b) the calling thread's ring
+//! buffer (only when tracing is enabled, for the Chrome-trace export).
+//!
+//! Ring buffers are preallocated at `RING_CAP` records and overwrite the
+//! oldest span on overflow; `drain_rings` returns the surviving spans
+//! oldest-first together with the number overwritten. The only heap activity
+//! after a thread's first traced span is the drain itself.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::metrics;
+
+/// Spans each ring buffer can hold before overwriting the oldest.
+pub const RING_CAP: usize = 16384;
+/// Number of span kinds (== `SpanKind::ALL.len()`).
+pub const N_KINDS: usize = 12;
+/// Span nesting levels tracked for self-time accounting; deeper spans still
+/// record but no longer subtract from their ancestors.
+const MAX_DEPTH: usize = 32;
+/// Worker slots tracked for busy-time accounting (indexes past this clamp).
+pub const MAX_WORKERS: usize = 64;
+
+/// Sentinel: span belongs to the recording thread's own track.
+pub const NO_TRACK: u32 = u32::MAX;
+/// Sentinel: span has no interned name (the kind label is used).
+pub const NO_NAME: u32 = u32::MAX;
+/// Sentinel pool-context byte: no kernel context set.
+pub const CTX_NONE: u8 = u8::MAX;
+
+/// The span taxonomy. Discriminants are stable — they index the aggregate
+/// counter arrays and appear as `cat` in the Chrome trace.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One `Runtime::call` artifact execution (named with the artifact).
+    Artifact = 0,
+    /// GEMM work executed on a pool worker (or inline by the dispatcher).
+    Gemm = 1,
+    /// Attention forward/backward work executed on a pool worker.
+    Attention = 2,
+    /// Pool batch with no specific kernel context.
+    PoolTask = 3,
+    /// One replica's gradient production inside the overlapped all-reduce.
+    AllreduceProduce = 4,
+    /// One pairwise merge in the all-reduce tree.
+    AllreduceMerge = 5,
+    /// Straggler wait: the gap between one replica finishing gradient
+    /// production and the slowest replica finishing (synthesized per step).
+    AllreduceWait = 6,
+    /// Checkpoint serialization + atomic rename.
+    CkptSave = 7,
+    /// Checkpoint load + state restore.
+    CkptLoad = 8,
+    /// One ragged decode sweep over the serve slot pool.
+    ServeSweep = 9,
+    /// One ragged prefill call admitting queued requests.
+    ServePrefill = 10,
+    /// Time a request spent queued before admission (recorded at admission).
+    ServeQueueWait = 11,
+}
+
+impl SpanKind {
+    /// All kinds, in discriminant order.
+    pub const ALL: [SpanKind; N_KINDS] = [
+        SpanKind::Artifact,
+        SpanKind::Gemm,
+        SpanKind::Attention,
+        SpanKind::PoolTask,
+        SpanKind::AllreduceProduce,
+        SpanKind::AllreduceMerge,
+        SpanKind::AllreduceWait,
+        SpanKind::CkptSave,
+        SpanKind::CkptLoad,
+        SpanKind::ServeSweep,
+        SpanKind::ServePrefill,
+        SpanKind::ServeQueueWait,
+    ];
+
+    /// Stable snake_case label (Chrome `cat`, metrics keys, report rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Artifact => "artifact",
+            SpanKind::Gemm => "gemm",
+            SpanKind::Attention => "attention",
+            SpanKind::PoolTask => "pool_task",
+            SpanKind::AllreduceProduce => "allreduce_produce",
+            SpanKind::AllreduceMerge => "allreduce_merge",
+            SpanKind::AllreduceWait => "allreduce_wait",
+            SpanKind::CkptSave => "ckpt_save",
+            SpanKind::CkptLoad => "ckpt_load",
+            SpanKind::ServeSweep => "serve_sweep",
+            SpanKind::ServePrefill => "serve_prefill",
+            SpanKind::ServeQueueWait => "serve_queue_wait",
+        }
+    }
+
+    /// Inverse of the discriminant cast; `None` for out-of-range bytes.
+    pub fn from_u8(k: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(k as usize).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Name interning (warmup-only allocation)
+// ---------------------------------------------------------------------------
+
+static NAMES: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Intern a span name, returning its stable index. The table only grows —
+/// after the first occurrence of each distinct name (e.g. each artifact in
+/// the plan), interning is an allocation-free linear scan.
+pub fn intern(name: &str) -> u32 {
+    let mut names = NAMES.lock().unwrap();
+    if let Some(i) = names.iter().position(|n| n == name) {
+        return i as u32;
+    }
+    names.push(name.to_string());
+    (names.len() - 1) as u32
+}
+
+/// Snapshot of the intern table (index -> name), for exporters.
+pub fn interned_names() -> Vec<String> {
+    NAMES.lock().unwrap().clone()
+}
+
+// ---------------------------------------------------------------------------
+// Ring buffers
+// ---------------------------------------------------------------------------
+
+/// One recorded span. 24 bytes; rings hold `RING_CAP` of these.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    /// Nanoseconds since the observability epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// `SpanKind` discriminant.
+    pub kind: u8,
+    /// Explicit track (replica index) or `NO_TRACK` for the thread's own.
+    pub track: u32,
+    /// Interned name index or `NO_NAME`.
+    pub name: u32,
+}
+
+struct Ring {
+    label: String,
+    spans: Vec<SpanRec>,
+    pushed: u64,
+}
+
+impl Ring {
+    fn new(label: String) -> Ring {
+        Ring { label, spans: Vec::with_capacity(RING_CAP), pushed: 0 }
+    }
+
+    fn push(&mut self, rec: SpanRec) {
+        if self.spans.len() < RING_CAP {
+            self.spans.push(rec);
+        } else {
+            // Overwrite the oldest slot; `pushed % RING_CAP` is where the
+            // next logical write lands once the buffer has wrapped.
+            let i = (self.pushed % RING_CAP as u64) as usize;
+            self.spans[i] = rec;
+        }
+        self.pushed += 1;
+    }
+}
+
+type RingHandle = Arc<Mutex<Ring>>;
+
+static RINGS: Mutex<Vec<RingHandle>> = Mutex::new(Vec::new());
+
+/// The spans drained from one thread's ring buffer.
+pub struct DrainedRing {
+    /// Recording thread's name (pool workers are `pallas-ref-{i}`).
+    pub label: String,
+    /// Surviving spans, oldest first.
+    pub spans: Vec<SpanRec>,
+    /// Spans overwritten by ring wraparound since the last drain.
+    pub dropped: u64,
+}
+
+/// Drain every registered ring buffer (oldest spans first), resetting them
+/// for further recording. Rings stay registered for the threads that own
+/// them; only the recorded spans are taken.
+pub fn drain_rings() -> Vec<DrainedRing> {
+    let rings = RINGS.lock().unwrap();
+    let mut out = Vec::new();
+    for handle in rings.iter() {
+        let mut r = handle.lock().unwrap();
+        let len = r.spans.len();
+        let dropped = r.pushed - len as u64;
+        let start = (r.pushed % RING_CAP as u64) as usize;
+        let mut spans = Vec::with_capacity(len);
+        if len == RING_CAP && start != 0 {
+            spans.extend_from_slice(&r.spans[start..]);
+            spans.extend_from_slice(&r.spans[..start]);
+        } else {
+            spans.extend_from_slice(&r.spans);
+        }
+        r.spans.clear();
+        r.pushed = 0;
+        if !spans.is_empty() || dropped > 0 {
+            out.push(DrainedRing { label: r.label.clone(), spans, dropped });
+        }
+    }
+    out
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<RingHandle>> = const { RefCell::new(None) };
+}
+
+fn push_span(rec: SpanRec) {
+    LOCAL_RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            // First traced span on this thread: allocate + register its ring.
+            let seq = RINGS.lock().unwrap().len();
+            let label = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{seq}"));
+            let ring = Arc::new(Mutex::new(Ring::new(label)));
+            RINGS.lock().unwrap().push(ring.clone());
+            *slot = Some(ring);
+        }
+        slot.as_ref().unwrap().lock().unwrap().push(rec);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-kind aggregates + self-time nesting
+// ---------------------------------------------------------------------------
+
+static KIND_COUNT: [AtomicU64; N_KINDS] = [const { AtomicU64::new(0) }; N_KINDS];
+static KIND_TOTAL_NS: [AtomicU64; N_KINDS] = [const { AtomicU64::new(0) }; N_KINDS];
+static KIND_SELF_NS: [AtomicU64; N_KINDS] = [const { AtomicU64::new(0) }; N_KINDS];
+
+/// Aggregate counters for one span kind since the last reset.
+#[derive(Clone, Copy, Debug)]
+pub struct KindStat {
+    pub kind: SpanKind,
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+/// Snapshot the per-kind aggregates (kinds with zero spans are skipped).
+pub fn kind_stats() -> Vec<KindStat> {
+    SpanKind::ALL
+        .iter()
+        .filter_map(|&kind| {
+            let k = kind as usize;
+            let count = KIND_COUNT[k].load(Ordering::Relaxed);
+            if count == 0 {
+                return None;
+            }
+            Some(KindStat {
+                kind,
+                count,
+                total_ns: KIND_TOTAL_NS[k].load(Ordering::Relaxed),
+                self_ns: KIND_SELF_NS[k].load(Ordering::Relaxed),
+            })
+        })
+        .collect()
+}
+
+/// Zero all span state (aggregates + drained rings). Test-time isolation;
+/// production runs drain once at exit instead.
+pub fn reset_spans() {
+    for k in 0..N_KINDS {
+        KIND_COUNT[k].store(0, Ordering::SeqCst);
+        KIND_TOTAL_NS[k].store(0, Ordering::SeqCst);
+        KIND_SELF_NS[k].store(0, Ordering::SeqCst);
+    }
+    drain_rings();
+}
+
+struct NestStack {
+    depth: usize,
+    child_ns: [u64; MAX_DEPTH],
+}
+
+thread_local! {
+    static NEST: RefCell<NestStack> =
+        const { RefCell::new(NestStack { depth: 0, child_ns: [0; MAX_DEPTH] }) };
+}
+
+// ---------------------------------------------------------------------------
+// Span guards
+// ---------------------------------------------------------------------------
+
+const NO_SLOT: u8 = u8::MAX;
+
+/// RAII span guard; records on drop. Construct via `span` / `span_named` /
+/// `span_on_replica` / `pool_task_span` / `artifact_span`.
+pub struct Span {
+    start_ns: u64,
+    kind: u8,
+    track: u32,
+    name: u32,
+    busy_slot: u8,
+    live: bool,
+}
+
+const INERT: Span =
+    Span { start_ns: 0, kind: 0, track: NO_TRACK, name: NO_NAME, busy_slot: NO_SLOT, live: false };
+
+/// Open an anonymous span of `kind` on the current thread's track.
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    if !super::active() {
+        return INERT;
+    }
+    span_live(kind as u8, NO_TRACK, NO_NAME, NO_SLOT)
+}
+
+/// Open a named span (the name is interned once; e.g. artifact names).
+#[inline]
+pub fn span_named(kind: SpanKind, name: &str) -> Span {
+    if !super::active() {
+        return INERT;
+    }
+    let n = intern(name);
+    span_live(kind as u8, NO_TRACK, n, NO_SLOT)
+}
+
+/// Open a span attributed to replica `r`'s track regardless of which thread
+/// records it (replica drivers run on unnamed scoped threads).
+#[inline]
+pub fn span_on_replica(kind: SpanKind, r: usize) -> Span {
+    if !super::active() {
+        return INERT;
+    }
+    span_live(kind as u8, r as u32, NO_NAME, NO_SLOT)
+}
+
+/// Open a span for one `Runtime::call` artifact execution.
+#[inline]
+pub fn artifact_span(name: &str) -> Span {
+    span_named(SpanKind::Artifact, name)
+}
+
+/// Open a span for one pool batch execution. `ctx` is the kernel-context
+/// byte the dispatcher captured (`CTX_NONE` maps to `PoolTask`); `worker`
+/// additionally bills the duration to that worker's busy counter.
+#[inline]
+pub fn pool_task_span(ctx: u8, worker: Option<usize>) -> Span {
+    if !super::active() {
+        return INERT;
+    }
+    let kind = if ctx == CTX_NONE { SpanKind::PoolTask as u8 } else { ctx };
+    let slot = match worker {
+        Some(w) => w.min(MAX_WORKERS - 1) as u8,
+        None => NO_SLOT,
+    };
+    span_live(kind, NO_TRACK, NO_NAME, slot)
+}
+
+fn span_live(kind: u8, track: u32, name: u32, busy_slot: u8) -> Span {
+    NEST.with(|n| {
+        let mut st = n.borrow_mut();
+        if st.depth < MAX_DEPTH {
+            st.child_ns[st.depth] = 0;
+        }
+        st.depth += 1;
+    });
+    Span { start_ns: super::now_ns(), kind, track, name, busy_slot, live: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let dur = super::now_ns().saturating_sub(self.start_ns);
+        let child = NEST.with(|n| {
+            let mut st = n.borrow_mut();
+            st.depth -= 1;
+            let lvl = st.depth;
+            let child = if lvl < MAX_DEPTH { st.child_ns[lvl] } else { 0 };
+            if lvl > 0 && lvl - 1 < MAX_DEPTH {
+                st.child_ns[lvl - 1] += dur;
+            }
+            child
+        });
+        let k = self.kind as usize;
+        KIND_COUNT[k].fetch_add(1, Ordering::Relaxed);
+        KIND_TOTAL_NS[k].fetch_add(dur, Ordering::Relaxed);
+        KIND_SELF_NS[k].fetch_add(dur.saturating_sub(child), Ordering::Relaxed);
+        if self.busy_slot != NO_SLOT {
+            metrics::worker_busy_add(self.busy_slot as usize, dur);
+        }
+        if super::tracing_enabled() {
+            push_span(SpanRec {
+                start_ns: self.start_ns,
+                dur_ns: dur,
+                kind: self.kind,
+                track: self.track,
+                name: self.name,
+            });
+        }
+    }
+}
+
+/// Record a span retroactively from a caller-held start `Instant` (used for
+/// serve queue-wait, where the interval starts at enqueue time and ends at
+/// admission). Skips the nesting stack: the interval is not a child of the
+/// recording span.
+pub fn record_since(kind: SpanKind, started: Instant) {
+    if !super::active() {
+        return;
+    }
+    let dur = started.elapsed().as_nanos() as u64;
+    let end = super::now_ns();
+    let k = kind as usize;
+    KIND_COUNT[k].fetch_add(1, Ordering::Relaxed);
+    KIND_TOTAL_NS[k].fetch_add(dur, Ordering::Relaxed);
+    KIND_SELF_NS[k].fetch_add(dur, Ordering::Relaxed);
+    if super::tracing_enabled() {
+        push_span(SpanRec {
+            start_ns: end.saturating_sub(dur),
+            dur_ns: dur,
+            kind: kind as u8,
+            track: NO_TRACK,
+            name: NO_NAME,
+        });
+    }
+}
+
+/// Record a fully specified span (explicit start/duration/track). Used by
+/// instrumentation that synthesizes intervals it measured out-of-band, e.g.
+/// the per-replica straggler-wait spans the all-reduce emits after the fact.
+/// Skips the nesting stack: synthesized intervals are not children of the
+/// recording span.
+pub fn record_span(kind: SpanKind, track: u32, start_ns: u64, dur_ns: u64) {
+    if !super::active() {
+        return;
+    }
+    let k = kind as usize;
+    KIND_COUNT[k].fetch_add(1, Ordering::Relaxed);
+    KIND_TOTAL_NS[k].fetch_add(dur_ns, Ordering::Relaxed);
+    KIND_SELF_NS[k].fetch_add(dur_ns, Ordering::Relaxed);
+    if super::tracing_enabled() {
+        push_span(SpanRec { start_ns, dur_ns, kind: kind as u8, track, name: NO_NAME });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool kernel context
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static POOL_CTX: Cell<u8> = const { Cell::new(CTX_NONE) };
+}
+
+/// RAII guard restoring the previous pool kernel context.
+pub struct CtxGuard {
+    prev: u8,
+    live: bool,
+}
+
+/// Mark pool batches dispatched by the current thread as belonging to `kind`
+/// (set at `gemm` / attention entry). The dispatcher copies the context byte
+/// into each batch so worker-side spans carry the kernel label even when
+/// several replica drivers share the pool concurrently.
+#[inline]
+pub fn set_pool_ctx(kind: SpanKind) -> CtxGuard {
+    if !super::active() {
+        return CtxGuard { prev: CTX_NONE, live: false };
+    }
+    let prev = POOL_CTX.with(|c| c.replace(kind as u8));
+    CtxGuard { prev, live: true }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        if self.live {
+            POOL_CTX.with(|c| c.set(self.prev));
+        }
+    }
+}
+
+/// The current thread's kernel-context byte (`CTX_NONE` when unset).
+#[inline]
+pub fn current_pool_ctx() -> u8 {
+    POOL_CTX.with(|c| c.get())
+}
+
+// Behavior tests that enable tracing/metrics live in `tests/test_obs.rs`
+// (serialized by a file-wide lock); unit tests here stick to pure logic so
+// they cannot race other lib tests through instrumented paths.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_keeps_newest() {
+        let mut r = Ring::new("t".to_string());
+        let n = RING_CAP as u64 + 100;
+        for i in 0..n {
+            r.push(SpanRec { start_ns: i, dur_ns: 1, kind: 0, track: NO_TRACK, name: NO_NAME });
+        }
+        assert_eq!(r.pushed, n);
+        assert_eq!(r.spans.len(), RING_CAP);
+        // Oldest surviving span is n - RING_CAP, at slot pushed % cap.
+        let start = (r.pushed % RING_CAP as u64) as usize;
+        assert_eq!(r.spans[start].start_ns, n - RING_CAP as u64);
+        assert_eq!(r.spans[(start + RING_CAP - 1) % RING_CAP].start_ns, n - 1);
+    }
+
+    #[test]
+    fn interning_is_stable() {
+        let a = intern("obs-test-name-a");
+        let b = intern("obs-test-name-b");
+        assert_ne!(a, b);
+        assert_eq!(intern("obs-test-name-a"), a);
+        let names = interned_names();
+        assert_eq!(names[a as usize], "obs-test-name-a");
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(*k as usize, i);
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+        }
+        assert_eq!(SpanKind::from_u8(N_KINDS as u8), None);
+    }
+}

@@ -216,6 +216,9 @@ impl Runtime {
                 }
             }
         }
+        // Observe-only: when tracing/metrics are off this is one relaxed
+        // atomic load and an inert guard.
+        let _span = crate::obs::artifact_span(&exe.spec.name);
         self.backend.execute(&exe.spec, args)
     }
 

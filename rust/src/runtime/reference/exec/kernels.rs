@@ -319,6 +319,7 @@ pub(crate) fn attention_fwd(
     assert_eq!(probs.len(), dm.b * dm.nh * s * s);
     assert_eq!(att.len(), dm.rows() * d);
     let tasks = dm.b * dm.nh;
+    let _ctx = crate::obs::set_pool_ctx(crate::obs::SpanKind::Attention);
     let mut scratch = ws.take(tasks * s);
     let pprobs = SendPtr(probs.as_mut_ptr());
     let patt = SendPtr(att.as_mut_ptr());
@@ -393,6 +394,7 @@ pub(crate) fn attention_bwd(
     assert_eq!(dk.len(), dm.rows() * d);
     assert_eq!(dv.len(), dm.rows() * d);
     let tasks = dm.b * dm.nh;
+    let _ctx = crate::obs::set_pool_ctx(crate::obs::SpanKind::Attention);
     let mut scratch = ws.take(tasks * 2 * s);
     let pdq = SendPtr(dq.as_mut_ptr());
     let pdk = SendPtr(dk.as_mut_ptr());

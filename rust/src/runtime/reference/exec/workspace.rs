@@ -52,6 +52,10 @@ pub struct Workspace {
     layer_stash: Vec<Vec<LayerCache>>,
     /// Pool misses — the number of times a checkout had to allocate.
     misses: usize,
+    /// Bytes currently checked out of the f32/f64 pools (observability).
+    out_bytes: usize,
+    /// High-water mark of `out_bytes`.
+    hwm_bytes: usize,
 }
 
 impl Workspace {
@@ -71,11 +75,14 @@ impl Workspace {
         };
         v.clear();
         v.resize(n, 0.0);
+        self.out_bytes += 4 * n;
+        self.hwm_bytes = self.hwm_bytes.max(self.out_bytes);
         v
     }
 
     /// Return an f32 buffer to the pool (no-op for empty buffers).
     pub fn give(&mut self, v: Vec<f32>) {
+        self.out_bytes = self.out_bytes.saturating_sub(4 * v.len());
         if v.capacity() > 0 {
             self.pool.entry(v.len().max(1)).or_default().push(v);
         }
@@ -92,11 +99,14 @@ impl Workspace {
         };
         v.clear();
         v.resize(n, 0.0);
+        self.out_bytes += 8 * n;
+        self.hwm_bytes = self.hwm_bytes.max(self.out_bytes);
         v
     }
 
     /// Return an f64 buffer to the pool.
     pub fn give64(&mut self, v: Vec<f64>) {
+        self.out_bytes = self.out_bytes.saturating_sub(8 * v.len());
         if v.capacity() > 0 {
             self.pool64.entry(v.len().max(1)).or_default().push(v);
         }
@@ -146,6 +156,22 @@ impl Workspace {
         self.pool.values().map(Vec::len).sum::<usize>()
             + self.pool64.values().map(Vec::len).sum::<usize>()
     }
+
+    /// Bytes parked in the pools (observability gauge).
+    pub fn pooled_bytes(&self) -> usize {
+        self.pool.values().flatten().map(|v| v.len() * 4).sum::<usize>()
+            + self.pool64.values().flatten().map(|v| v.len() * 8).sum::<usize>()
+    }
+
+    /// Bytes currently checked out (f32 + f64 buffers).
+    pub fn bytes_out(&self) -> usize {
+        self.out_bytes
+    }
+
+    /// High-water mark of checked-out bytes.
+    pub fn bytes_hwm(&self) -> usize {
+        self.hwm_bytes
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +215,21 @@ mod tests {
         let q = ws.take64(16);
         assert_eq!(ws.alloc_misses(), sizes.len() + 1);
         ws.give64(q);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_checkouts() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        let b = ws.take64(10);
+        assert_eq!(ws.bytes_out(), 400 + 80);
+        assert_eq!(ws.bytes_hwm(), 480);
+        ws.give(a);
+        assert_eq!(ws.bytes_out(), 80);
+        ws.give64(b);
+        assert_eq!(ws.bytes_out(), 0);
+        assert_eq!(ws.bytes_hwm(), 480, "high-water mark persists");
+        assert_eq!(ws.pooled_bytes(), 480);
     }
 
     #[test]

@@ -81,6 +81,9 @@ pub fn gemm(
         }
         return;
     }
+    // Label pool batches dispatched below as GEMM work (inert when
+    // observability is off).
+    let _ctx = crate::obs::set_pool_ctx(crate::obs::SpanKind::Gemm);
     let blocks = m.div_ceil(MC);
     let cbase = SendPtr(out.as_mut_ptr());
     PACK_B.with(|cell| {

@@ -245,7 +245,7 @@ impl Backend for ReferenceBackend {
         let ws = &mut *guard;
 
         let scalar_out = |v: f32| Buffer::host_f32(vec![v], vec![]);
-        match spec.kind.as_str() {
+        let result = match spec.kind.as_str() {
             "train_step" => {
                 let cfg = self.cfg_of(spec)?;
                 let state = views[0].f32s()?;
@@ -462,7 +462,16 @@ impl Backend for ReferenceBackend {
                 Ok(scalar_out(exec::lora_eval_ws(cfg, rank, state, theta_base, &batch, ws)?))
             }
             other => bail!("artifact '{}': unknown kind '{other}'", spec.name),
+        };
+        // Observe-only arena gauges, refreshed while the workspace lock is
+        // still held (skipped entirely when observability is off).
+        if crate::obs::active() {
+            crate::obs::metrics::arena_update(
+                ws.pooled_bytes() as u64,
+                ws.bytes_hwm() as u64,
+            );
         }
+        result
     }
 
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {

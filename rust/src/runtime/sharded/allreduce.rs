@@ -20,11 +20,12 @@
 //!
 //! [`ShardedBackend`]: super::ShardedBackend
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::obs;
 use crate::runtime::reference::{exec, ops};
 use crate::util::threadpool;
 
@@ -141,13 +142,25 @@ where
         });
     };
 
+    // Observe-only: when observability is on, note when each replica's
+    // produce finished so the straggler skew/wait can be derived afterwards.
+    // Nothing here feeds back into the merge order or the values.
+    let produce_end: Vec<AtomicU64> =
+        if obs::active() { (0..r).map(|_| AtomicU64::new(0)).collect() } else { Vec::new() };
+
     threadpool::partitioned(r, |i| {
-        let part = produce(i).map(|mut v| {
-            if weights[i] != 1.0 {
-                ops::scale_in_place(&mut v, weights[i]);
-            }
-            v
-        });
+        let part = {
+            let _sp = obs::span_on_replica(obs::SpanKind::AllreduceProduce, i);
+            produce(i).map(|mut v| {
+                if weights[i] != 1.0 {
+                    ops::scale_in_place(&mut v, weights[i]);
+                }
+                v
+            })
+        };
+        if let Some(end) = produce_end.get(i) {
+            end.store(obs::now_ns(), Ordering::Relaxed);
+        }
         *slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(part);
         // cascade up the tournament tree: at each node the second arriver
         // merges and continues; the first arriver's driver retires
@@ -169,12 +182,31 @@ where
             if order == 0 {
                 return; // partner still running; it will perform the merge
             }
-            merge(left, stride);
+            {
+                let _sp = obs::span_on_replica(obs::SpanKind::AllreduceMerge, left);
+                merge(left, stride);
+            }
             idx = left;
             stride *= 2;
             level += 1;
         }
     });
+
+    if !produce_end.is_empty() {
+        // Derive straggler skew (max - min finish time) and cumulative wait
+        // (Σ over replicas of slack behind the slowest) and synthesize one
+        // wait span per non-slowest replica so the trace shows the gap.
+        let ends: Vec<u64> = produce_end.iter().map(|e| e.load(Ordering::Relaxed)).collect();
+        let max = ends.iter().copied().max().unwrap_or(0);
+        let min = ends.iter().copied().min().unwrap_or(0);
+        let wait: u64 = ends.iter().map(|&e| max - e).sum();
+        obs::metrics::allreduce_record(max - min, wait);
+        for (i, &e) in ends.iter().enumerate() {
+            if max > e {
+                obs::tracer::record_span(obs::SpanKind::AllreduceWait, i as u32, e, max - e);
+            }
+        }
+    }
 
     slots
         .into_iter()

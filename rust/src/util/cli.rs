@@ -110,6 +110,10 @@ pub struct CommonArgs {
     /// `--resume`: continue from `<ckpt-dir>/latest.ckpt` (requires
     /// `--ckpt-dir`).
     pub resume: bool,
+    /// `--trace FILE`: record spans and write a Chrome trace-event JSON.
+    pub trace: Option<String>,
+    /// `--metrics FILE`: journal one JSONL metrics row per step/tick.
+    pub metrics: Option<String>,
 }
 
 impl CommonArgs {
@@ -130,7 +134,15 @@ impl CommonArgs {
                 return Err("--resume requires --ckpt-dir".to_string());
             }
         }
-        Ok(CommonArgs { threads, replicas, ckpt_dir, ckpt_every, resume })
+        // an output flag without its file is a mistake, not a default
+        for key in ["trace", "metrics"] {
+            if args.flag(key) {
+                return Err(format!("--{key} expects an output file path"));
+            }
+        }
+        let trace = args.get("trace").map(str::to_string);
+        let metrics = args.get("metrics").map(str::to_string);
+        Ok(CommonArgs { threads, replicas, ckpt_dir, ckpt_every, resume, trace, metrics })
     }
 }
 
@@ -180,7 +192,8 @@ mod tests {
     #[test]
     fn common_args_parse_the_shared_flags() {
         let a = Args::parse_from(&argv(
-            "train --threads 3 --replicas 2 --ckpt-dir /tmp/ck --ckpt-every 5 --resume",
+            "train --threads 3 --replicas 2 --ckpt-dir /tmp/ck --ckpt-every 5 \
+             --trace /tmp/t.json --metrics /tmp/m.jsonl --resume",
         ));
         let c = CommonArgs::from_args(&a).unwrap();
         assert_eq!(
@@ -191,6 +204,8 @@ mod tests {
                 ckpt_dir: Some("/tmp/ck".into()),
                 ckpt_every: Some(5),
                 resume: true,
+                trace: Some("/tmp/t.json".into()),
+                metrics: Some("/tmp/m.jsonl".into()),
             }
         );
         // all-absent is the well-formed default
@@ -209,5 +224,9 @@ mod tests {
         let resume = CommonArgs::from_args(&Args::parse_from(&argv("train --resume")))
             .unwrap_err();
         assert!(resume.contains("requires --ckpt-dir"), "{resume}");
+        // a bare `--trace` (no file) parses as a flag — reject it clearly
+        let trace = CommonArgs::from_args(&Args::parse_from(&argv("train --steps 5 --trace")))
+            .unwrap_err();
+        assert!(trace.contains("--trace"), "{trace}");
     }
 }

@@ -1,8 +1,10 @@
 //! Leveled stderr logger (env_logger is unavailable offline).
 //!
-//! Level comes from `ML_LOG` (error|warn|info|debug|trace), default `info`.
+//! Level comes from `PALLAS_LOG` (error|warn|info|debug|trace), default
+//! `info`. The pre-rename `ML_LOG` still works as a deprecated fallback
+//! (with a one-time warning) so existing scripts keep their verbosity.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
@@ -28,17 +30,43 @@ fn start() -> &'static Instant {
     START.get_or_init(Instant::now)
 }
 
-/// Install the level from `ML_LOG`; call once at startup (idempotent).
-pub fn init() {
-    let lvl = match std::env::var("ML_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+static ML_LOG_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Install the level from `PALLAS_LOG` (falling back to the deprecated
+/// `ML_LOG`); call once at startup (idempotent). An unrecognized level
+/// string is an error, so a typo'd `PALLAS_LOG=inf` surfaces instead of
+/// silently running at the default verbosity.
+pub fn init() -> Result<(), String> {
+    let (var, raw) = match std::env::var("PALLAS_LOG") {
+        Ok(v) => ("PALLAS_LOG", Some(v)),
+        Err(_) => ("ML_LOG", std::env::var("ML_LOG").ok()),
+    };
+    let lvl = match raw.as_deref() {
+        None => Level::Info,
+        Some(s) => parse_level(s).ok_or_else(|| {
+            format!("{var}='{s}' is not a log level (expected error|warn|info|debug|trace)")
+        })?,
     };
     LEVEL.store(lvl as u8, Ordering::Relaxed);
     let _ = start();
+    if var == "ML_LOG" && raw.is_some() && !ML_LOG_WARNED.swap(true, Ordering::Relaxed) {
+        log(
+            Level::Warn,
+            format_args!("ML_LOG is deprecated; set PALLAS_LOG instead (same levels)"),
+        );
+    }
+    Ok(())
 }
 
 pub fn set_level(lvl: Level) {
@@ -85,6 +113,18 @@ macro_rules! debugln {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parses_known_levels_and_rejects_typos() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("inf"), None);
+        assert_eq!(parse_level("INFO"), None, "levels are lowercase");
+        assert_eq!(parse_level(""), None);
+    }
 
     #[test]
     fn level_ordering() {

@@ -85,6 +85,11 @@ struct Batch {
     panic_payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
     lock: Mutex<()>,
     cv: Condvar,
+    /// Observability kernel-context byte captured from the dispatching
+    /// thread (`obs::CTX_NONE` when observability is off), so worker-side
+    /// spans carry the right kernel label even when several replica drivers
+    /// share the pool concurrently.
+    ctx: u8,
     /// The caller's closure, lifetime-erased to a raw pointer (raw so the
     /// batch may outlive the referent without holding a dangling reference:
     /// workers keep the `Arc` briefly after completion). `dispatch` blocks
@@ -202,7 +207,11 @@ fn spawn_worker(idx: usize) -> Sender<Arc<Batch>> {
         .spawn(move || {
             IN_POOL.with(|c| c.set(true));
             while let Ok(batch) = rx.recv() {
-                if let Err(p) = catch_unwind(AssertUnwindSafe(|| batch.run())) {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
+                    // Observe-only: inert guard unless tracing/metrics is on.
+                    let _span = crate::obs::pool_task_span(batch.ctx, Some(idx));
+                    batch.run()
+                })) {
                     batch.poisoned.store(true, Ordering::Release);
                     let mut slot = batch.panic_payload.lock().unwrap();
                     if slot.is_none() {
@@ -221,6 +230,11 @@ fn dispatch(n: usize, workers: usize, first: usize, body: &(dyn Fn(usize) + Sync
     // `wait()` observing `pending == 0` below; this frame (which the real
     // lifetime outlives) blocks until then.
     let body: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+    let ctx = if crate::obs::active() {
+        crate::obs::tracer::current_pool_ctx()
+    } else {
+        crate::obs::CTX_NONE
+    };
     let batch = Arc::new(Batch {
         next: AtomicUsize::new(0),
         n,
@@ -229,6 +243,7 @@ fn dispatch(n: usize, workers: usize, first: usize, body: &(dyn Fn(usize) + Sync
         panic_payload: Mutex::new(None),
         lock: Mutex::new(()),
         cv: Condvar::new(),
+        ctx,
         body: body as *const (dyn Fn(usize) + Sync),
     });
     {
@@ -251,6 +266,9 @@ fn dispatch(n: usize, workers: usize, first: usize, body: &(dyn Fn(usize) + Sync
     let guard = WaitGuard(&batch);
     let inline = catch_unwind(AssertUnwindSafe(|| {
         IN_POOL.with(|c| c.set(true));
+        // The caller's inline participation: span only, no worker busy slot
+        // (its time is already inside the enclosing step/artifact span).
+        let _span = crate::obs::pool_task_span(batch.ctx, None);
         batch.run();
     }));
     IN_POOL.with(|c| c.set(false));

@@ -1,0 +1,369 @@
+//! The observability contract (`obs/`): tracing and metrics are
+//! **observe-only**.
+//!
+//! Pinned here:
+//! * **Bitwise parity** — a traced+journaled run is bit-identical to an
+//!   untraced one for plain training, a 2-level `bert_nano` V-cycle and a
+//!   serve trace replay, across `PALLAS_REF_THREADS` ∈ {1, 2, 4} and
+//!   `PALLAS_REPLICAS` ∈ {1, 2}. Spans and journal rows never feed back
+//!   into scheduling or numerics.
+//! * **Ring buffers** — wraparound keeps the newest `RING_CAP` spans and
+//!   reports exactly how many older spans were overwritten.
+//! * **Chrome export** — the trace file is valid JSON and every track's
+//!   timestamps are non-decreasing, so Perfetto renders it directly.
+//! * **Journals** — metrics JSONL rows round-trip through `util/json.rs`
+//!   and feed `multilevel report`.
+//! * **Flags and guards** — `active()` composes the two flags; disabled
+//!   guards record nothing; nesting subtracts child time from self time;
+//!   pool kernel context restores on drop.
+//!
+//! The obs flags and span rings are process-global, so every test
+//! serializes on a local mutex and restores a clean (disabled, drained)
+//! state on both entry and exit.
+
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::coordinator::{run_vcycle_resumable, synthetic_trace, train_resumable,
+                              RunOpts, ServeEngine, ServeOpts, TrafficSpec};
+use multilevel::obs;
+use multilevel::obs::tracer::{self, SpanKind, NO_TRACK, RING_CAP};
+use multilevel::runtime::{init_theta, Runtime, State};
+use multilevel::util::json::Json;
+use multilevel::util::threadpool;
+use multilevel::util::tmp::TempDir;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disable both flags and drop all recorded state — called on entry *and*
+/// exit of every test so a panicking test cannot poison the next one.
+fn clean() {
+    obs::set_tracing(false);
+    obs::metrics::close_global_journal();
+    obs::set_metrics(false); // closing the journal does not clear the flag
+    tracer::reset_spans();
+    obs::metrics::reset_metrics();
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn state_bits(rt: &Runtime, st: &State) -> Vec<u32> {
+    bits(&st.to_host(rt).unwrap())
+}
+
+fn runtime_for(replicas: usize) -> Runtime {
+    if replicas == 1 {
+        Runtime::reference()
+    } else {
+        Runtime::sharded(replicas)
+    }
+}
+
+/// Run `f` twice per (threads, replicas) combination — once untraced,
+/// once with tracing + a metrics journal — and assert the projections are
+/// identical. The traced run also exercises the Chrome export.
+fn assert_parity<T, F>(tag: &str, dir: &TempDir, mut f: F)
+where
+    T: PartialEq + std::fmt::Debug,
+    F: FnMut(&Runtime) -> T,
+{
+    let before = threadpool::threads();
+    for threads in [1usize, 2, 4] {
+        threadpool::set_threads(threads);
+        for replicas in [1usize, 2] {
+            let rt = runtime_for(replicas);
+            clean();
+            let plain = f(&rt);
+
+            let journal = dir.file(&format!("{tag}_{threads}x{replicas}.jsonl"));
+            obs::set_tracing(true);
+            obs::metrics::open_global_journal(&journal).unwrap();
+            let traced = f(&rt);
+            let trace = dir.file(&format!("{tag}_{threads}x{replicas}.trace.json"));
+            obs::chrome::write_chrome_trace(&trace).unwrap();
+            obs::metrics::close_global_journal();
+            clean();
+
+            assert_eq!(
+                traced, plain,
+                "{tag}: traced run diverged at {threads} threads, {replicas} replicas"
+            );
+            assert!(journal.exists() && trace.exists());
+        }
+    }
+    threadpool::set_threads(before);
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise parity: train, V-cycle, serve
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_train_step_is_bit_identical_to_untraced() {
+    let _g = lock();
+    let dir = TempDir::new("obs_train");
+    assert_parity("train", &dir, |rt| {
+        let (st, loss) =
+            train_resumable(rt, "gpt_nano", 6, 1e-3, 42, 0, 2, None, None).unwrap();
+        (state_bits(rt, &st), loss.to_bits())
+    });
+    clean();
+}
+
+#[test]
+fn traced_vcycle_is_bit_identical_to_untraced() {
+    let _g = lock();
+    let dir = TempDir::new("obs_vcycle");
+    let mut opts = RunOpts::quick("bert_nano", 16);
+    opts.alpha = 0.5;
+    opts.eval_every = 8;
+    opts.val_batches = 1;
+    opts.budget_mult = 1.0;
+    assert_parity("vcycle", &dir, |rt| {
+        let st = run_vcycle_resumable(rt, &opts, 2, None, None).unwrap();
+        state_bits(rt, &st)
+    });
+    clean();
+}
+
+#[test]
+fn traced_serve_replay_is_bit_identical_to_untraced() {
+    let _g = lock();
+    let dir = TempDir::new("obs_serve");
+    let rt0 = Runtime::reference();
+    let cfg = rt0.cfg("gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 5);
+    let trace = synthetic_trace(&cfg, &TrafficSpec::quick(21, 10)).unwrap();
+    let opts = ServeOpts { max_batch: 2, max_queue: 10, temperature: 0.7, seed: 9 };
+    assert_parity("serve", &dir, |rt| {
+        let eng = ServeEngine::new(rt, "gpt_nano", opts.clone()).unwrap();
+        let rep = eng.run(rt, &theta, &trace).unwrap();
+        // the replay-relevant outcome: everything except wall-clock
+        let mut v: Vec<(usize, usize, Vec<i32>)> =
+            rep.served.iter().map(|r| (r.id, r.finish_step, r.tokens.clone())).collect();
+        v.push((usize::MAX, rep.steps, rep.rejected.iter().map(|&i| i as i32).collect()));
+        v
+    });
+    clean();
+}
+
+// ---------------------------------------------------------------------------
+// Ring buffers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_wraparound_keeps_newest_spans_and_reports_drop_count() {
+    let _g = lock();
+    clean();
+    obs::set_tracing(true);
+    let extra = 100u64;
+    let total = RING_CAP as u64 + extra;
+    for i in 0..total {
+        // synthesized spans land in this thread's ring in push order
+        tracer::record_span(SpanKind::Gemm, NO_TRACK, i, 1);
+    }
+    obs::set_tracing(false);
+    // `clean()` drained every ring, so the only non-empty one is ours
+    let rings = tracer::drain_rings();
+    assert_eq!(rings.len(), 1, "exactly one thread recorded spans");
+    let ring = &rings[0];
+    assert_eq!(ring.dropped, extra, "drop count must equal the overwritten spans");
+    assert_eq!(ring.spans.len(), RING_CAP);
+    // oldest-first drain of exactly the newest RING_CAP spans
+    for (j, rec) in ring.spans.iter().enumerate() {
+        assert_eq!(rec.start_ns, extra + j as u64);
+    }
+    clean();
+}
+
+// ---------------------------------------------------------------------------
+// Chrome export
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_is_valid_json_with_non_decreasing_track_timestamps() {
+    let _g = lock();
+    clean();
+    let before = threadpool::threads();
+    threadpool::set_threads(2);
+    obs::set_tracing(true);
+    // a real sharded run: artifact spans on the drivers, kernel spans on
+    // the pool workers, produce/merge/wait spans on the replica tracks
+    let rt = Runtime::sharded(2);
+    train_resumable(&rt, "gpt_nano", 3, 1e-3, 42, 0, 2, None, None).unwrap();
+    obs::set_tracing(false);
+    threadpool::set_threads(before);
+
+    let dir = TempDir::new("obs_chrome");
+    let path = dir.file("t.trace.json");
+    let sum = obs::chrome::write_chrome_trace(&path).unwrap();
+    assert!(sum.events > 0 && sum.tracks > 0, "empty trace from a traced run");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = Json::parse(&text).expect("trace must be valid JSON");
+    assert_eq!(v.get("displayTimeUnit").as_str(), Some("ms"));
+    let events = obs::chrome::parse_trace_events(&text).unwrap();
+    assert_eq!(events.len(), sum.events, "summary event count must match the file");
+
+    // per-track timestamps are non-decreasing (Perfetto renders directly)
+    let mut last: std::collections::BTreeMap<&str, f64> = Default::default();
+    for (track, ts, dur, _name, _cat) in &events {
+        assert!(*ts >= 0.0 && *dur >= 0.0);
+        let prev = last.entry(track.as_str()).or_insert(0.0);
+        assert!(*ts >= *prev, "track '{track}' went backwards: {ts} < {prev}");
+        *prev = *ts;
+    }
+
+    let cats: std::collections::BTreeSet<&str> =
+        events.iter().map(|(_, _, _, _, c)| c.as_str()).collect();
+    assert!(cats.contains("artifact"), "no artifact spans in {cats:?}");
+    assert!(cats.contains("allreduce_produce"), "no replica spans in {cats:?}");
+    let tracks: std::collections::BTreeSet<&str> =
+        events.iter().map(|(t, _, _, _, _)| t.as_str()).collect();
+    assert!(tracks.iter().any(|t| t.starts_with("replica-")),
+            "no replica track in {tracks:?}");
+    clean();
+}
+
+// ---------------------------------------------------------------------------
+// Metrics journals
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_journal_rows_round_trip_through_json() {
+    let _g = lock();
+    clean();
+    let dir = TempDir::new("obs_journal");
+    let path = dir.file("m.jsonl");
+    obs::metrics::open_global_journal(&path).unwrap();
+    assert!(obs::metrics_enabled(), "opening the journal must enable metrics");
+
+    let rt = Runtime::reference();
+    train_resumable(&rt, "gpt_nano", 3, 1e-3, 42, 0, 2, None, None).unwrap();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 5);
+    let trace = synthetic_trace(&cfg, &TrafficSpec::quick(7, 6)).unwrap();
+    let eng = ServeEngine::new(&rt, "gpt_nano",
+                               ServeOpts { max_queue: 6, ..ServeOpts::default() })
+        .unwrap();
+    eng.run(&rt, &theta, &trace).unwrap();
+    obs::metrics::close_global_journal();
+    clean();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut steps = 0usize;
+    let mut serves = 0usize;
+    for line in text.lines() {
+        let row = Json::parse(line).expect("every journal line must be one JSON object");
+        // round-trip: render and re-parse to the identical value
+        assert_eq!(Json::parse(&row.to_string()).unwrap(), row);
+        match row.get("row").as_str() {
+            Some("step") => {
+                steps += 1;
+                assert_eq!(row.get("config").as_str(), Some("gpt_nano"));
+                assert!(row.get("mfu").as_f64().unwrap() >= 0.0);
+                assert!(row.get("flops_cum").as_f64().unwrap()
+                            >= row.get("flops_step").as_f64().unwrap());
+                assert!(row.get("roofline_gflops").as_f64().unwrap() > 0.0);
+                assert!(row.get("ar_wait_ms").as_f64().is_some());
+            }
+            Some("serve") => {
+                serves += 1;
+                assert!(row.get("queue_depth").as_usize().is_some());
+                let hist = row.get("lat_hist_log2ms").as_arr().unwrap();
+                assert_eq!(hist.len(), obs::metrics::LAT_BUCKETS);
+            }
+            other => panic!("unknown row type {other:?} in {line}"),
+        }
+    }
+    assert_eq!(steps, 3, "one step row per training step");
+    assert!(serves >= 1, "the serve run must emit at least its final tick");
+
+    // the same journal drives `multilevel report`
+    let tables = obs::report::summarize(&path).unwrap();
+    let rendered: String = tables.iter().map(|t| t.render()).collect();
+    assert!(rendered.contains("MFU per phase"), "no MFU table in:\n{rendered}");
+    assert!(rendered.contains("gpt_nano"));
+}
+
+// ---------------------------------------------------------------------------
+// Flags, guards, nesting, pool context
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flags_compose_and_disabled_guards_record_nothing() {
+    let _g = lock();
+    clean();
+    assert!(!obs::active());
+    obs::set_metrics(true);
+    assert!(obs::active() && obs::metrics_enabled() && !obs::tracing_enabled());
+    obs::set_metrics(false);
+    obs::set_tracing(true);
+    assert!(obs::active() && obs::tracing_enabled() && !obs::metrics_enabled());
+    obs::set_tracing(false);
+    assert!(!obs::active());
+
+    // disabled guards are inert: no aggregates, no ring contents
+    {
+        let _a = obs::span(SpanKind::CkptSave);
+        let _b = obs::span_named(SpanKind::Gemm, "gemm_64");
+        let _c = obs::artifact_span("train_step__gpt_nano");
+        obs::record_since(SpanKind::ServeQueueWait, std::time::Instant::now());
+        tracer::record_span(SpanKind::AllreduceWait, 1, 0, 10);
+    }
+    assert!(tracer::kind_stats().is_empty(), "disabled spans must not aggregate");
+    assert!(tracer::drain_rings().is_empty(), "disabled spans must not hit the rings");
+    clean();
+}
+
+#[test]
+fn nested_spans_subtract_child_time_from_self_time() {
+    let _g = lock();
+    clean();
+    obs::set_tracing(true);
+    {
+        let _outer = obs::span(SpanKind::Artifact);
+        {
+            let _inner = obs::span(SpanKind::Gemm);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    obs::set_tracing(false);
+    let stats = tracer::kind_stats();
+    let get = |k: SpanKind| stats.iter().find(|s| s.kind == k).copied().unwrap();
+    let outer = get(SpanKind::Artifact);
+    let inner = get(SpanKind::Gemm);
+    assert_eq!((outer.count, inner.count), (1, 1));
+    assert!(inner.total_ns >= 2_000_000, "inner span must cover the sleep");
+    assert!(outer.total_ns >= inner.total_ns, "outer encloses inner");
+    assert!(
+        outer.self_ns <= outer.total_ns - inner.total_ns,
+        "outer self time ({}) must exclude the nested child ({} of {})",
+        outer.self_ns, inner.total_ns, outer.total_ns
+    );
+    assert_eq!(inner.self_ns, inner.total_ns, "leaf self time equals total");
+    clean();
+}
+
+#[test]
+fn pool_kernel_context_restores_on_drop() {
+    let _g = lock();
+    clean();
+    assert_eq!(obs::tracer::current_pool_ctx(), obs::CTX_NONE);
+    {
+        let _g1 = obs::set_pool_ctx(SpanKind::Gemm);
+        assert_eq!(obs::tracer::current_pool_ctx(), SpanKind::Gemm as u8);
+        {
+            let _g2 = obs::set_pool_ctx(SpanKind::Attention);
+            assert_eq!(obs::tracer::current_pool_ctx(), SpanKind::Attention as u8);
+        }
+        assert_eq!(obs::tracer::current_pool_ctx(), SpanKind::Gemm as u8);
+    }
+    assert_eq!(obs::tracer::current_pool_ctx(), obs::CTX_NONE);
+    clean();
+}
