@@ -15,12 +15,17 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 use multilevel::coordinator::{synthetic_trace, ServeEngine, ServeOpts, Trainer, TrafficSpec};
 use multilevel::obs;
+use multilevel::runtime::reference::simd;
 use multilevel::runtime::{init_state, init_theta, Arg, Checkpoint, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
 use multilevel::util::json::{arr, num, obj, s, Json};
 use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
+
+/// One report entry: row label, timing stats, and — where the analytic
+/// model covers the loop — FLOPs per iteration (for GFLOP/s + MFU).
+type Row = (String, bench::Stats, Option<f64>);
 
 /// Prefill + steady-state `decode_step` rows for one causal config
 /// (the serving path's tokens/sec). Sharded runtimes tag their rows with
@@ -31,7 +36,7 @@ fn decode_bench_rows(
     name: &str,
     suffix: &str,
     budget: Duration,
-    rows: &mut Vec<(String, bench::Stats)>,
+    rows: &mut Vec<Row>,
 ) -> Result<()> {
     let cfg = rt.cfg(name)?.clone();
     let theta = init_theta(&cfg, 1);
@@ -61,7 +66,7 @@ fn decode_bench_rows(
             "    -> {:.0} prompt tokens/s ({b} requests x {plen} tokens per call)",
             (b * plen) as f64 / stats.mean.as_secs_f64()
         );
-        rows.push((label, stats));
+        rows.push((label, stats, None));
     }
     // steady-state decode: one token for every request at a fixed
     // mid-context cache length (O(len) attention, zero-alloc arena path)
@@ -81,7 +86,7 @@ fn decode_bench_rows(
         "    -> {:.0} tokens/s ({b} requests per step)",
         b as f64 / stats.mean.as_secs_f64()
     );
-    rows.push((label, stats));
+    rows.push((label, stats, None));
     Ok(())
 }
 
@@ -94,7 +99,7 @@ fn serve_bench_row(
     name: &str,
     suffix: &str,
     budget: Duration,
-    rows: &mut Vec<(String, bench::Stats)>,
+    rows: &mut Vec<Row>,
 ) -> Result<()> {
     let cfg = rt.cfg(name)?.clone();
     let theta = init_theta(&cfg, 1);
@@ -122,7 +127,7 @@ fn serve_bench_row(
         warm.generated_tokens,
         warm.steps
     );
-    rows.push((label, stats));
+    rows.push((label, stats, None));
     Ok(())
 }
 
@@ -140,8 +145,11 @@ fn main() -> Result<()> {
 
     let rt = Runtime::reference();
     println!("== bench_ci on {} ==", rt.device_info());
+    // Calibrate the roofline under the startup kernel tier before any
+    // tier flip below — it is cached once per process.
+    let roofline = obs::metrics::roofline_flops();
 
-    let mut rows = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for name in &configs {
         let cfg = rt.cfg(name)?.clone();
         let mut state = init_state(&rt, &cfg, 1)?;
@@ -154,7 +162,43 @@ fn main() -> Result<()> {
             let (next, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
             state = next;
         });
-        rows.push((name.clone(), stats));
+        rows.push((name.clone(), stats, Some(cfg.flops_train_step)));
+    }
+
+    // same-run scalar-tier rerun of the GEMM-bound gpt_base_sim train step,
+    // so the SIMD speedup in the log is measured, never assumed (the row is
+    // recorded in the report but has no baseline entry, hence never gated)
+    let tier0 = simd::tier();
+    if tier0 != simd::Tier::Scalar {
+        let simd_ms = rows
+            .iter()
+            .find(|(n, _, _)| n == "gpt_base_sim")
+            .map(|(_, st, _)| st.mean.as_secs_f64() * 1e3);
+        simd::set_tier(simd::Tier::Scalar).expect("scalar tier is always supported");
+        let name = "gpt_base_sim";
+        let cfg = rt.cfg(name)?.clone();
+        let mut state = init_state(&rt, &cfg, 1)?;
+        let mut trainer = Trainer::new(&rt, name, 0, 2, 1)?;
+        let (warm, _) = trainer.step(&rt, &state, 1e-3, 1)?; // prepare + warm
+        state = warm;
+        let mut step = 1usize;
+        let label = "scalar__gpt_base_sim";
+        let stats = bench::run(label, budget, || {
+            step += 1;
+            let (next, _) = trainer.step(&rt, &state, 1e-3, step).unwrap();
+            state = next;
+        });
+        simd::set_tier(tier0).expect("restoring the startup tier");
+        let scalar_ms = stats.mean.as_secs_f64() * 1e3;
+        if let Some(simd_ms) = simd_ms {
+            println!(
+                "    -> {} tier {simd_ms:.2} ms vs scalar {scalar_ms:.2} ms per step: \
+                 {:.2}x speedup in this run",
+                tier0.name(),
+                scalar_ms / simd_ms.max(1e-9)
+            );
+        }
+        rows.push((label.to_string(), stats, Some(cfg.flops_train_step)));
     }
 
     // tracing overhead: the same gpt_base_sim train step once with obs
@@ -175,7 +219,7 @@ fn main() -> Result<()> {
             state = next;
         });
         let disabled_ms = stats.mean.as_secs_f64() * 1e3;
-        rows.push((label, stats));
+        rows.push((label, stats, Some(rt.cfg(name)?.flops_train_step)));
         obs::set_tracing(true);
         obs::set_metrics(true);
         let on = bench::run(&format!("trace_overhead__{name} (enabled)"), budget, || {
@@ -223,7 +267,7 @@ fn main() -> Result<()> {
             ck.save(&path).unwrap();
             bench::black_box(Checkpoint::load(&path).unwrap());
         });
-        rows.push((label.to_string(), stats));
+        rows.push((label.to_string(), stats, None));
     }
 
     // serving path: prefill throughput + steady-state decode tokens/sec
@@ -251,6 +295,7 @@ fn main() -> Result<()> {
         let srt = Runtime::sharded(replicas);
         println!("-- sharded: {} --", srt.device_info());
         for name in &sharded_configs {
+            let flops = srt.cfg(name)?.flops_train_step;
             let mut state = init_state(&srt, srt.cfg(name)?, 1)?;
             let mut trainer = Trainer::new(&srt, name, 0, 2, 1)?;
             let (warm, _) = trainer.step(&srt, &state, 1e-3, 1)?;
@@ -262,7 +307,7 @@ fn main() -> Result<()> {
                 let (next, _) = trainer.step(&srt, &state, 1e-3, step).unwrap();
                 state = next;
             });
-            rows.push((label, stats));
+            rows.push((label, stats, Some(flops)));
         }
         // sharded forward-only eval throughput (the data-parallel
         // eval_loss path: per-shard losses + weighted fixed-order combine)
@@ -277,7 +322,7 @@ fn main() -> Result<()> {
             let stats = bench::run(&label, budget, || {
                 trainer.eval(&srt, &state).unwrap();
             });
-            rows.push((label, stats));
+            rows.push((label, stats, None));
         }
         // sharded decode: requests split across replicas, records
         // concatenated back in replica order (bit-identical to serial)
@@ -287,26 +332,57 @@ fn main() -> Result<()> {
         }
     }
 
+    // roofline-normalized per-row summary: ms plus achieved GFLOP/s and MFU
+    // for every row the analytic FLOPs model covers
+    println!(
+        "-- rows ({} kernel tier, {:.2} GFLOP/s calibrated roofline) --",
+        simd::tier().name(),
+        roofline / 1e9
+    );
+    for (name, st, flops) in &rows {
+        let ms = st.mean.as_secs_f64() * 1e3;
+        match flops {
+            Some(f) => {
+                let achieved = f / st.mean.as_secs_f64();
+                println!(
+                    "  {name:32} {ms:10.2} ms  {:8.2} GFLOP/s  mfu {:.3}",
+                    achieved / 1e9,
+                    achieved / roofline
+                );
+            }
+            None => println!("  {name:32} {ms:10.2} ms"),
+        }
+    }
+
     let report = obj(vec![
         ("schema", num(1.0)),
         ("device", s(&rt.device_info())),
         ("threads", num(threadpool::threads() as f64)),
+        ("kernel", s(simd::tier().name())),
+        ("roofline_gflops", num(roofline / 1e9)),
         (
             "results",
             arr(rows
                 .iter()
-                .map(|(name, st)| {
-                    obj(vec![
+                .map(|(name, st, flops)| {
+                    let ms = st.mean.as_secs_f64() * 1e3;
+                    let mut fields = vec![
                         ("config", s(name)),
                         // generic per-entry mean (entries now cover eval
                         // loops too); "train_step_ms" kept as an alias so
                         // older tooling reading the report keeps working
-                        ("ms", num(st.mean.as_secs_f64() * 1e3)),
-                        ("train_step_ms", num(st.mean.as_secs_f64() * 1e3)),
+                        ("ms", num(ms)),
+                        ("train_step_ms", num(ms)),
                         ("p50_ms", num(st.p50.as_secs_f64() * 1e3)),
                         ("min_ms", num(st.min.as_secs_f64() * 1e3)),
                         ("iters", num(st.iters as f64)),
-                    ])
+                    ];
+                    if let Some(f) = flops {
+                        let achieved = f / st.mean.as_secs_f64();
+                        fields.push(("gflops", num(achieved / 1e9)));
+                        fields.push(("mfu", num(achieved / roofline)));
+                    }
+                    obj(fields)
                 })
                 .collect()),
         ),
@@ -324,7 +400,7 @@ fn main() -> Result<()> {
     let baseline_rows = base.get("results").as_arr().unwrap_or(empty);
     println!("-- gate: max allowed regression +{:.0}% over {bp} --", max_regress * 100.0);
     let mut failures = Vec::new();
-    for (name, st) in &rows {
+    for (name, st, _) in &rows {
         let got_ms = st.mean.as_secs_f64() * 1e3;
         let base_ms = baseline_rows
             .iter()

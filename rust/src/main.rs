@@ -23,6 +23,7 @@ use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, syntheti
 use multilevel::experiments;
 use multilevel::info;
 use multilevel::obs;
+use multilevel::runtime::reference::simd;
 use multilevel::runtime::{init_state, init_theta, load_checkpoint, plan, Checkpoint,
                           Manifest, Runtime};
 use multilevel::util::bench;
@@ -62,6 +63,9 @@ dump-plan|list> [options]
                     1 = unsharded)
     --threads <N>   kernel threads (defaults to $PALLAS_REF_THREADS, else
                     the machine's available parallelism)
+    $PALLAS_REF_SIMD  kernel tier: auto (default, best detected), off
+                    (scalar fallback), avx2, neon; strict parse, and a
+                    tier the host cannot run is a startup error
     --trace <file>    record spans, write a Chrome trace-event JSON at exit
                       (open in Perfetto / chrome://tracing)
     --metrics <file>  journal one JSONL metrics row per train/V-cycle step
@@ -78,11 +82,13 @@ fn runtime_of(common: &CommonArgs) -> Result<Runtime> {
     }
 }
 
-/// Resolve the kernel-thread count before any pool use: surface an
-/// unparsable `PALLAS_REF_THREADS` as a proper CLI error (never a silent
-/// fallback), then let an explicit `--threads` flag override it.
+/// Resolve the kernel-thread count and SIMD kernel tier before any kernel
+/// runs: surface an unparsable `PALLAS_REF_THREADS` or `PALLAS_REF_SIMD`
+/// as a proper CLI error (never a silent fallback), then let an explicit
+/// `--threads` flag override the thread count.
 fn apply_thread_opts(common: &CommonArgs) -> Result<()> {
     threadpool::env_threads().map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    simd::env_tier().map_err(|e| anyhow!("{e}\n{USAGE}"))?;
     if let Some(t) = common.threads {
         threadpool::set_threads(t);
     }
@@ -438,10 +444,15 @@ fn cmd_bench_step(args: &Args, common: &CommonArgs) -> Result<()> {
             state = s;
         },
     );
+    let achieved = cfg.flops_train_step / stats.mean.as_secs_f64();
+    let roofline = obs::metrics::roofline_flops();
     println!(
-        "analytic {:.2} GFLOP/step -> {:.2} GFLOP/s",
+        "analytic {:.2} GFLOP/step -> {:.2} GFLOP/s ({:.1}% MFU of the {:.2} GFLOP/s \
+         calibrated roofline)",
         cfg.flops_train_step / 1e9,
-        cfg.flops_train_step / stats.mean.as_secs_f64() / 1e9
+        achieved / 1e9,
+        100.0 * achieved / roofline,
+        roofline / 1e9,
     );
     Ok(())
 }

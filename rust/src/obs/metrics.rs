@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::runtime::reference::simd;
 use crate::util::json::{self, Json};
 use crate::util::threadpool;
 
@@ -108,12 +109,17 @@ static ROOFLINE: OnceLock<f64> = OnceLock::new();
 
 /// Per-host compute roofline in FLOP/s: a once-per-process timed scalar-FMA
 /// calibration (8 independent f32 accumulators, ~10ms) scaled by the pool
-/// width. MFU = achieved FLOP/s ÷ this. It is a *scalar* roofline on
-/// purpose: the kernels are scalar today, so MFU ≈ 1.0 means "as fast as
-/// scalar code can go" and the gap to hardware peak is the SIMD headroom
-/// tracked in ROADMAP.md.
+/// width and by the selected kernel tier's SIMD lane count. MFU = achieved
+/// FLOP/s ÷ this — "as fast as the selected tier's FMA issue rate can go":
+/// the scalar tier keeps the old scalar-roofline semantics, a vector tier
+/// raises the bar by its lane count, so MFU stays comparable across tiers.
+/// Calibrated once per process; the kernel tier must be selected (env var
+/// or `simd::set_tier`) before the first call.
 pub fn roofline_flops() -> f64 {
-    *ROOFLINE.get_or_init(|| calibrate_core_flops() * threadpool::threads() as f64)
+    *ROOFLINE.get_or_init(|| {
+        let lanes = simd::width(simd::tier()) as f64;
+        calibrate_core_flops() * threadpool::threads() as f64 * lanes
+    })
 }
 
 fn calibrate_core_flops() -> f64 {
@@ -239,6 +245,7 @@ pub fn step_row(o: &StepObs) -> Json {
     json::obj(vec![
         ("row", json::s("step")),
         ("config", json::s(o.config)),
+        ("kernel", json::s(simd::tier().name())),
         ("phase", json::num(o.phase as f64)),
         ("step", json::num(o.step as f64)),
         ("wall_ms", json::num(o.wall_s * 1e3)),
@@ -386,6 +393,8 @@ mod tests {
         });
         assert_eq!(row.get("row").as_str(), Some("step"));
         assert_eq!(row.get("config").as_str(), Some("gpt_nano"));
+        let kernel = row.get("kernel").as_str().unwrap();
+        assert_eq!(kernel, crate::runtime::reference::simd::tier().name());
         assert_eq!(row.get("flops_cum").as_f64(), Some(1e9));
         let mfu = row.get("mfu").as_f64().unwrap();
         assert!(mfu > 0.0);

@@ -5,11 +5,12 @@
 //! a pass ends, so steady-state passes allocate nothing.
 
 use super::kernels::{
-    add_bias, attention_bwd, attention_fwd, col_sums_acc, gelu, gelu_grad, layernorm_bwd,
+    add_bias, attention_bwd, attention_fwd, attention_fwd_fused, col_sums_acc, layernorm_bwd,
     layernorm_fwd, matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc,
 };
 use super::layout::{Dims, Offsets};
 use super::workspace::Workspace;
+use crate::runtime::reference::simd;
 use crate::util::threadpool::{par_chunks_mut, ELEM_CHUNK};
 
 /// Per-layer forward caches (all buffers checked out of the workspace).
@@ -72,6 +73,7 @@ impl Cache {
 
 /// Backbone forward from the embedding output `x0` through the final LN.
 /// Takes ownership of `x0` (it becomes the first layer's `h_in` cache).
+/// Caches the `[B,nh,S,S]` attention probabilities for the backward pass.
 pub(crate) fn backbone_fwd(
     theta: &[f32],
     off: &Offsets,
@@ -79,8 +81,35 @@ pub(crate) fn backbone_fwd(
     x0: Vec<f32>,
     ws: &mut Workspace,
 ) -> Cache {
+    backbone_fwd_impl(theta, off, dm, x0, true, ws)
+}
+
+/// Inference-only forward: bit-identical outputs to [`backbone_fwd`] within
+/// any kernel tier (the fused attention path computes the same `p = e /
+/// denom` weights in the same order), but the `[B,nh,S,S]` probability
+/// tensor is never materialized — each layer's `probs` cache comes back
+/// empty, so the result cannot feed [`backbone_bwd`] or attention maps.
+pub(crate) fn backbone_fwd_infer(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    x0: Vec<f32>,
+    ws: &mut Workspace,
+) -> Cache {
+    backbone_fwd_impl(theta, off, dm, x0, false, ws)
+}
+
+fn backbone_fwd_impl(
+    theta: &[f32],
+    off: &Offsets,
+    dm: &Dims,
+    x0: Vec<f32>,
+    keep_probs: bool,
+    ws: &mut Workspace,
+) -> Cache {
     let t = dm.rows();
     let (d, dff) = (dm.d, dm.dff);
+    let st = simd::tier();
     let mut layers = ws.take_layers(dm.l);
     let mut h = x0;
     for l in 0..dm.l {
@@ -104,9 +133,16 @@ pub(crate) fn backbone_fwd(
         add_bias(&mut k, &theta[off.bk + l * d..off.bk + (l + 1) * d], t, d);
         add_bias(&mut v, &theta[off.bv + l * d..off.bv + (l + 1) * d], t, d);
 
-        let mut probs = ws.take(dm.b * dm.nh * dm.s * dm.s);
-        let mut att = ws.take(t * d);
-        attention_fwd(&q, &k, &v, dm, &mut probs, &mut att, ws);
+        let (probs, att) = if keep_probs {
+            let mut probs = ws.take(dm.b * dm.nh * dm.s * dm.s);
+            let mut att = ws.take(t * d);
+            attention_fwd(&q, &k, &v, dm, &mut probs, &mut att, ws);
+            (probs, att)
+        } else {
+            let mut att = ws.take(t * d);
+            attention_fwd_fused(&q, &k, &v, dm, &mut att, ws);
+            (Vec::new(), att)
+        };
 
         let wo = &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d];
         let mut h_mid = ws.take(t * d);
@@ -131,9 +167,7 @@ pub(crate) fn backbone_fwd(
             // tanh is ~10 flops per element
             par_chunks_mut(10 * t * dff, &mut g, ELEM_CHUNK, |ci, chunk| {
                 let o = ci * ELEM_CHUNK;
-                for (i, gv) in chunk.iter_mut().enumerate() {
-                    *gv = gelu(u[o + i]);
-                }
+                simd::gelu_map(st, &u[o..o + chunk.len()], chunk);
             });
         }
         let fc2_w = &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d];
@@ -184,6 +218,7 @@ pub(crate) fn backbone_bwd(
 ) -> Vec<f32> {
     let t = dm.rows();
     let (d, dff) = (dm.d, dm.dff);
+    let st = simd::tier();
 
     // final LN
     let mut dh = ws.take(t * d);
@@ -193,10 +228,8 @@ pub(crate) fn backbone_bwd(
         let mut db = ws.take(d);
         layernorm_bwd(dxf, &cache.xhatf, &cache.rstdf, lnf_w, t, d, &mut dh, &mut dw, &mut db,
                       ws);
-        for j in 0..d {
-            grad[off.lnf_w + j] += dw[j];
-            grad[off.lnf_b + j] += db[j];
-        }
+        simd::add_assign(st, &mut grad[off.lnf_w..off.lnf_w + d], &dw);
+        simd::add_assign(st, &mut grad[off.lnf_b..off.lnf_b + d], &db);
         ws.give(dw);
         ws.give(db);
     }
@@ -226,9 +259,7 @@ pub(crate) fn backbone_bwd(
             // tanh is ~10 flops per element
             par_chunks_mut(10 * t * dff, &mut du, ELEM_CHUNK, |ci, chunk| {
                 let o = ci * ELEM_CHUNK;
-                for (i, dv) in chunk.iter_mut().enumerate() {
-                    *dv *= gelu_grad(u[o + i]);
-                }
+                simd::gelu_grad_mul(st, &u[o..o + chunk.len()], chunk);
             });
         }
         matmul_at_b_acc(
@@ -253,14 +284,8 @@ pub(crate) fn backbone_bwd(
             let mut db = ws.take(d);
             layernorm_bwd(&dx2, &lc.xhat2, &lc.rstd2, ln2_w, t, d, &mut dh_mid, &mut dw,
                           &mut db, ws);
-            let gw = &mut grad[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
-            for j in 0..d {
-                gw[j] += dw[j];
-            }
-            let gb = &mut grad[off.ln2_b + l * d..off.ln2_b + (l + 1) * d];
-            for j in 0..d {
-                gb[j] += db[j];
-            }
+            simd::add_assign(st, &mut grad[off.ln2_w + l * d..off.ln2_w + (l + 1) * d], &dw);
+            simd::add_assign(st, &mut grad[off.ln2_b + l * d..off.ln2_b + (l + 1) * d], &db);
             ws.give(dw);
             ws.give(db);
         }
@@ -307,9 +332,7 @@ pub(crate) fn backbone_bwd(
             let w = &theta[w_off + l * d * d..w_off + (l + 1) * d * d];
             let mut dxp = ws.take(t * d);
             matmul_a_bt(&mut dxp, dgrad, w, t, d, d);
-            for i in 0..t * d {
-                dx1[i] += dxp[i];
-            }
+            simd::add_assign(st, &mut dx1, &dxp);
             ws.give(dxp);
         }
         ws.give(dq);
@@ -324,14 +347,8 @@ pub(crate) fn backbone_bwd(
             let mut db = ws.take(d);
             layernorm_bwd(&dx1, &lc.xhat1, &lc.rstd1, ln1_w, t, d, &mut dh_in, &mut dw,
                           &mut db, ws);
-            let gw = &mut grad[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
-            for j in 0..d {
-                gw[j] += dw[j];
-            }
-            let gb = &mut grad[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
-            for j in 0..d {
-                gb[j] += db[j];
-            }
+            simd::add_assign(st, &mut grad[off.ln1_w + l * d..off.ln1_w + (l + 1) * d], &dw);
+            simd::add_assign(st, &mut grad[off.ln1_b + l * d..off.ln1_b + (l + 1) * d], &db);
             ws.give(dw);
             ws.give(db);
         }
@@ -339,4 +356,40 @@ pub(crate) fn backbone_bwd(
         dh = dh_in;
     }
     dh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::params::init_theta;
+    use crate::util::rng::Rng;
+
+    /// The inference forward (fused attention, no probability cache) must
+    /// be bit-identical to the training forward on both attention masks.
+    #[test]
+    fn infer_forward_matches_train_forward_bitwise() {
+        for name in ["gpt_nano", "bert_nano"] {
+            let cfg = Manifest::builtin().cfg(name).unwrap().clone();
+            let theta = init_theta(&cfg, 21);
+            let off = Offsets::resolve(&cfg).unwrap();
+            let dm = Dims::of(&cfg);
+            let t = dm.rows();
+            let mut rng = Rng::new(33);
+            let x0: Vec<f32> = (0..t * dm.d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let mut ws = Workspace::new();
+            let train = backbone_fwd(&theta, &off, &dm, x0.clone(), &mut ws);
+            let infer = backbone_fwd_infer(&theta, &off, &dm, x0, &mut ws);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&train.xf), bits(&infer.xf), "{name}: xf diverged");
+            for l in 0..dm.l {
+                let (tl, il) = (&train.layers[l], &infer.layers[l]);
+                assert_eq!(bits(&tl.k), bits(&il.k), "{name}: k cache of layer {l}");
+                assert_eq!(bits(&tl.v), bits(&il.v), "{name}: v cache of layer {l}");
+                assert!(il.probs.is_empty(), "{name}: layer {l} materialized probs");
+            }
+            infer.recycle(&mut ws);
+            train.recycle(&mut ws);
+        }
+    }
 }

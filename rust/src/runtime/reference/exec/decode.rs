@@ -20,8 +20,8 @@
 //! continuous-batching serve loop (`coordinator::serve`) is built on.
 //!
 //! * [`prefill_into`] runs one causal forward over `max(lens)` positions
-//!   (reusing [`backbone_fwd`], whose per-layer caches are precisely the
-//!   K/V rows) and extracts each request's own prefix: logits at row
+//!   (reusing [`backbone_fwd_infer`], whose per-layer caches are precisely
+//!   the K/V rows) and extracts each request's own prefix: logits at row
 //!   `lens[bi] - 1`, cache rows `0..lens[bi]`.
 //! * [`decode_step_into`] advances every request by **one token**: it
 //!   computes Q/K/V for request `bi`'s position `lens[bi]` only, appends
@@ -43,11 +43,12 @@
 
 use anyhow::{bail, Result};
 
-use super::backbone::backbone_fwd;
-use super::kernels::{add_bias, gelu, layernorm_fwd, matmul, matmul_acc};
+use super::backbone::backbone_fwd_infer;
+use super::kernels::{add_bias, layernorm_fwd, matmul, matmul_acc};
 use super::layout::{Dims, Offsets};
 use super::workspace::Workspace;
 use crate::runtime::manifest::{Family, ModelCfg};
+use crate::runtime::reference::simd;
 use crate::util::threadpool::{parallel_for_min, SendPtr};
 
 /// Offset of layer `l`'s K (`kv = 0`) or V (`kv = 1`) row for position `p`
@@ -117,6 +118,7 @@ fn decode_attention(
     let scored: usize = lens.iter().map(|&l| l as usize + 1).sum();
     let patt = SendPtr(att.as_mut_ptr());
     let pscr = SendPtr(scores.as_mut_ptr());
+    let st = simd::tier();
     parallel_for_min(2 * nh * scored * hd, tasks, |task| {
         let bi = task / nh;
         let h = task % nh;
@@ -131,11 +133,7 @@ fn decode_attention(
         let mut max = f32::NEG_INFINITY;
         for (t, stv) in sc.iter_mut().enumerate() {
             let krow = &rec_buf[k0 + t * d + c0..k0 + t * d + c0 + hd];
-            let mut acc = 0.0f32;
-            for j in 0..hd {
-                acc += qrow[j] * krow[j];
-            }
-            *stv = acc * scale;
+            *stv = simd::dot(st, qrow, krow) * scale;
             if *stv > max {
                 max = *stv;
             }
@@ -150,9 +148,7 @@ fn decode_attention(
         for (t, &stv) in sc.iter().enumerate() {
             let p = stv / denom;
             let vrow = &rec_buf[v0 + t * d + c0..v0 + t * d + c0 + hd];
-            for j in 0..hd {
-                orow[j] += p * vrow[j];
-            }
+            simd::axpy(st, p, vrow, orow);
         }
     });
 }
@@ -211,7 +207,7 @@ pub fn prefill_into(
             }
         }
     }
-    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let cache = backbone_fwd_infer(theta, &off, &dm, x0, ws);
 
     // logits of each request's own last position (row lens[bi] - 1)
     let mut xl = ws.take(b * d);
@@ -326,6 +322,7 @@ pub fn decode_step_into(
     let mut u = ws.take(b * dff);
     let mut g = ws.take(b * dff);
     let mut scores = ws.take(b * nh * s);
+    let st = simd::tier();
     for l in 0..cfg.n_layer {
         let ln1_w = &theta[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
         let ln1_b = &theta[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
@@ -360,9 +357,7 @@ pub fn decode_step_into(
         matmul(&mut u, &x1, &theta[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff], b,
                d, dff);
         add_bias(&mut u, &theta[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], b, dff);
-        for i in 0..b * dff {
-            g[i] = gelu(u[i]);
-        }
+        simd::gelu_map(st, &u, &mut g);
         matmul_acc(&mut h, &g, &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d],
                    b, dff, d);
         add_bias(&mut h, &theta[off.fc2_b + l * d..off.fc2_b + (l + 1) * d], b, d);

@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use super::backbone::{backbone_bwd, backbone_fwd};
+use super::backbone::{backbone_bwd, backbone_fwd, backbone_fwd_infer};
 use super::embed::{embed_batch, embed_batch_bwd};
 use super::heads::head_logits;
 use super::kernels::{col_sums_acc, matmul_a_bt, matmul_at_b_acc, softmax_rows, softmax_xent};
@@ -77,7 +77,7 @@ pub(crate) fn distill_loss_grad(
     let off_t = Offsets::resolve(teacher)?;
     let dm_t = Dims::with_batch(teacher, b);
     let xt0 = embed_batch(theta_t, &off_t, teacher, &dm_t, batch, ws)?;
-    let cache_t = backbone_fwd(theta_t, &off_t, &dm_t, xt0, ws);
+    let cache_t = backbone_fwd_infer(theta_t, &off_t, &dm_t, xt0, ws);
     let t_logits = head_logits(theta_t, &off_t, &dm_t, &cache_t.xf, ws);
     cache_t.recycle(ws);
     let mut p_t = ws.take(t * vv);

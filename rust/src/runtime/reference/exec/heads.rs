@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use super::backbone::backbone_fwd;
+use super::backbone::{backbone_fwd, backbone_fwd_infer};
 use super::embed::{embed_batch, embed_lang, embed_vit};
 use super::kernels::{add_bias, count_targets_xent, matmul};
 use super::layout::{batch_rows, targets_into, BatchRef, Dims, Offsets};
@@ -50,7 +50,7 @@ pub fn eval_loss_ws(
     let off = Offsets::resolve(cfg)?;
     let dm = Dims::with_batch(cfg, b);
     let x0 = embed_batch(theta, &off, cfg, &dm, batch, ws)?;
-    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let cache = backbone_fwd_infer(theta, &off, &dm, x0, ws);
     let logits = head_logits(theta, &off, &dm, &cache.xf, ws);
     let mut targets = ws.take_targets();
     targets_into(&dm, batch, &mut targets);
@@ -88,7 +88,7 @@ pub fn eval_acc_ws(
     let dm = Dims::with_batch(cfg, b);
     let (d, v) = (dm.d, dm.v);
     let x0 = embed_vit(theta, &off, cfg, &dm, images, ws);
-    let cache = backbone_fwd(theta, &off, &dm, x0, ws);
+    let cache = backbone_fwd_infer(theta, &off, &dm, x0, ws);
     let head_w = &theta[off.head_w..off.head_w + d * v];
     let head_b = &theta[off.head_b..off.head_b + v];
     let mut correct = 0usize;

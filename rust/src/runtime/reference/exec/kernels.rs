@@ -11,6 +11,7 @@
 use super::layout::Dims;
 use super::workspace::Workspace;
 use crate::runtime::reference::gemm::gemm;
+use crate::runtime::reference::simd;
 use crate::util::threadpool::{parallel_for_min, SendPtr, ROW_CHUNK};
 
 pub(crate) const LN_EPS: f32 = 1e-5;
@@ -42,35 +43,18 @@ pub(crate) fn matmul_a_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: us
 
 /// Broadcast-add a row bias: `x[t, :] += bias` for every row.
 pub(crate) fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    let st = simd::tier();
     for t in 0..rows {
-        let row = &mut x[t * cols..(t + 1) * cols];
-        for j in 0..cols {
-            row[j] += bias[j];
-        }
+        simd::add_assign(st, &mut x[t * cols..(t + 1) * cols], bias);
     }
 }
 
 /// Column sums: `out[j] += Σ_t x[t, j]`.
 pub(crate) fn col_sums_acc(out: &mut [f32], x: &[f32], rows: usize, cols: usize) {
+    let st = simd::tier();
     for t in 0..rows {
-        let row = &x[t * cols..(t + 1) * cols];
-        for j in 0..cols {
-            out[j] += row[j];
-        }
+        simd::add_assign(st, out, &x[t * cols..(t + 1) * cols]);
     }
-}
-
-pub(crate) fn gelu(u: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/π)
-    const A: f32 = 0.044715;
-    0.5 * u * (1.0 + (C * (u + A * u * u * u)).tanh())
-}
-
-pub(crate) fn gelu_grad(u: f32) -> f32 {
-    const C: f32 = 0.797_884_6;
-    const A: f32 = 0.044715;
-    let t = (C * (u + A * u * u * u)).tanh();
-    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * C * (1.0 + 3.0 * A * u * u)
 }
 
 // ---------------------------------------------------------------------------
@@ -98,6 +82,7 @@ pub(crate) fn layernorm_fwd(
     let pr = SendPtr(rstd.as_mut_ptr());
     let py = SendPtr(y.as_mut_ptr());
     let chunks = rows.div_ceil(ROW_CHUNK);
+    let st = simd::tier();
     parallel_for_min(rows * d, chunks, |c| {
         let t0 = c * ROW_CHUNK;
         let t1 = (t0 + ROW_CHUNK).min(rows);
@@ -107,24 +92,13 @@ pub(crate) fn layernorm_fwd(
         let y = unsafe { py.slice_mut(t0 * d, (t1 - t0) * d) };
         for t in t0..t1 {
             let xi = &x[t * d..(t + 1) * d];
-            let mut mu = 0.0f32;
-            for &v in xi {
-                mu += v;
-            }
-            mu /= d as f32;
-            let mut var = 0.0f32;
-            for &v in xi {
-                var += (v - mu) * (v - mu);
-            }
-            var /= d as f32;
+            let mu = simd::sum(st, xi) / d as f32;
+            let var = simd::sq_dev_sum(st, xi, mu) / d as f32;
             let rs = 1.0 / (var + LN_EPS).sqrt();
             rstd[t - t0] = rs;
             let xh = &mut xhat[(t - t0) * d..(t - t0 + 1) * d];
             let yo = &mut y[(t - t0) * d..(t - t0 + 1) * d];
-            for j in 0..d {
-                xh[j] = (xi[j] - mu) * rs;
-                yo[j] = xh[j] * w[j] + b[j];
-            }
+            simd::ln_fwd_row(st, xi, w, b, mu, rs, xh, yo);
         }
     });
 }
@@ -152,6 +126,7 @@ pub(crate) fn layernorm_bwd(
     let mut partials = ws.take(chunks * 2 * d);
     let pdx = SendPtr(dx.as_mut_ptr());
     let pp = SendPtr(partials.as_mut_ptr());
+    let st = simd::tier();
     parallel_for_min(rows * d, chunks, |c| {
         let t0 = c * ROW_CHUNK;
         let t1 = (t0 + ROW_CHUNK).min(rows);
@@ -163,31 +138,20 @@ pub(crate) fn layernorm_bwd(
         for t in t0..t1 {
             let dyi = &dy[t * d..(t + 1) * d];
             let xh = &xhat[t * d..(t + 1) * d];
-            let mut mean_dxhat = 0.0f32;
-            let mut mean_dxhat_xhat = 0.0f32;
-            for j in 0..d {
-                let dxh = dyi[j] * w[j];
-                mean_dxhat += dxh;
-                mean_dxhat_xhat += dxh * xh[j];
-                dwp[j] += dyi[j] * xh[j];
-                dbp[j] += dyi[j];
-            }
-            mean_dxhat /= d as f32;
-            mean_dxhat_xhat /= d as f32;
+            let mean_dxhat = simd::dot(st, dyi, w) / d as f32;
+            let mean_dxhat_xhat = simd::dot3(st, dyi, w, xh) / d as f32;
+            simd::mul_acc(st, dwp, dyi, xh);
+            simd::add_assign(st, dbp, dyi);
             let rs = rstd[t];
             let dxi = &mut dx[(t - t0) * d..(t - t0 + 1) * d];
-            for j in 0..d {
-                let dxh = dyi[j] * w[j];
-                dxi[j] += rs * (dxh - mean_dxhat - xh[j] * mean_dxhat_xhat);
-            }
+            simd::ln_bwd_dx(st, dyi, w, xh, rs, mean_dxhat, mean_dxhat_xhat, dxi);
         }
     });
     for c in 0..chunks {
         let part = &partials[c * 2 * d..(c + 1) * 2 * d];
-        for j in 0..d {
-            dw[j] += part[j];
-            db[j] += part[d + j];
-        }
+        let (dwp, dbp) = part.split_at(d);
+        simd::add_assign(st, dw, dwp);
+        simd::add_assign(st, db, dbp);
     }
     ws.give(partials);
 }
@@ -324,6 +288,7 @@ pub(crate) fn attention_fwd(
     let pprobs = SendPtr(probs.as_mut_ptr());
     let patt = SendPtr(att.as_mut_ptr());
     let pscr = SendPtr(scratch.as_mut_ptr());
+    let st = simd::tier();
     parallel_for_min(tasks * s * s * hd, tasks, |task| {
         let b = task / dm.nh;
         let h = task % dm.nh;
@@ -339,15 +304,14 @@ pub(crate) fn attention_fwd(
             let mut max = f32::NEG_INFINITY;
             for (ti, sc) in scores.iter_mut().enumerate().take(lim) {
                 let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                let mut acc = 0.0f32;
-                for j in 0..hd {
-                    acc += qrow[j] * krow[j];
-                }
-                *sc = acc * scale;
+                *sc = simd::dot(st, qrow, krow) * scale;
                 if *sc > max {
                     max = *sc;
                 }
             }
+            // exp and the probability division stay scalar on every tier:
+            // softmax numerics are tier-invariant, only the q·k reduction
+            // and the score×V accumulation are vectorized.
             let mut denom = 0.0f32;
             for sc in scores.iter_mut().take(lim) {
                 *sc = (*sc - max).exp();
@@ -362,9 +326,66 @@ pub(crate) fn attention_fwd(
             orow.fill(0.0);
             for (ti, &p) in prow.iter().enumerate().take(lim) {
                 let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
-                for j in 0..hd {
-                    orow[j] += p * vrow[j];
+                simd::axpy(st, p, vrow, orow);
+            }
+        }
+    });
+    ws.give(scratch);
+}
+
+/// [`attention_fwd`] with the softmax folded into the score×V pass: the
+/// `[B,nh,S,S]` probability block is never materialized. Forward-only
+/// callers (eval, prefill, the distillation teacher) use this; the
+/// arithmetic per output element — score, exp, divide, accumulate — is
+/// identical to the unfused path in the same order, so outputs are
+/// bit-identical to [`attention_fwd`] within any tier (pinned by a test).
+pub(crate) fn attention_fwd_fused(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dm: &Dims,
+    att: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (s, d, hd) = (dm.s, dm.d, dm.hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert_eq!(att.len(), dm.rows() * d);
+    let tasks = dm.b * dm.nh;
+    let _ctx = crate::obs::set_pool_ctx(crate::obs::SpanKind::Attention);
+    let mut scratch = ws.take(tasks * s);
+    let patt = SendPtr(att.as_mut_ptr());
+    let pscr = SendPtr(scratch.as_mut_ptr());
+    let st = simd::tier();
+    parallel_for_min(tasks * s * s * hd, tasks, |task| {
+        let b = task / dm.nh;
+        let h = task % dm.nh;
+        let c0 = h * hd;
+        // SAFETY: task (b, h) exclusively owns the att columns
+        // [c0, c0+hd) of rows b·s .. (b+1)·s and scratch slot `task`.
+        let scores = unsafe { pscr.slice_mut(task * s, s) };
+        for si in 0..s {
+            let qrow = &q[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
+            let lim = if dm.causal { si + 1 } else { s };
+            let mut max = f32::NEG_INFINITY;
+            for (ti, sc) in scores.iter_mut().enumerate().take(lim) {
+                let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                *sc = simd::dot(st, qrow, krow) * scale;
+                if *sc > max {
+                    max = *sc;
                 }
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(lim) {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            // SAFETY: within this task's att stripe (row b·s + si).
+            let orow = unsafe { patt.slice_mut((b * s + si) * d + c0, hd) };
+            orow.fill(0.0);
+            for (ti, &e) in scores.iter().enumerate().take(lim) {
+                let p = e / denom;
+                let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
+                simd::axpy(st, p, vrow, orow);
             }
         }
     });
@@ -400,6 +421,7 @@ pub(crate) fn attention_bwd(
     let pdk = SendPtr(dk.as_mut_ptr());
     let pdv = SendPtr(dv.as_mut_ptr());
     let pscr = SendPtr(scratch.as_mut_ptr());
+    let st = simd::tier();
     parallel_for_min(tasks * s * s * hd, tasks, |task| {
         let b = task / dm.nh;
         let h = task % dm.nh;
@@ -412,24 +434,17 @@ pub(crate) fn attention_bwd(
             let prow = &probs[(((b * dm.nh + h) * s) + si) * s..][..s];
             let darow = &datt[((b * s + si) * d + c0)..((b * s + si) * d + c0 + hd)];
             // dP[si,ti] = datt · v[ti];  dv[ti] += P[si,ti] · datt
+            // (independent accumulators, so the dot/axpy split is exact)
             for ti in 0..lim {
                 let vrow = &v[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
                 // SAFETY: task (b, h) exclusively owns columns [c0, c0+hd)
                 // of rows b·s .. (b+1)·s in dq/dk/dv.
                 let dvrow = unsafe { pdv.slice_mut((b * s + ti) * d + c0, hd) };
-                let mut acc = 0.0f32;
-                let p = prow[ti];
-                for j in 0..hd {
-                    acc += darow[j] * vrow[j];
-                    dvrow[j] += p * darow[j];
-                }
-                dp[ti] = acc;
+                dp[ti] = simd::dot(st, darow, vrow);
+                simd::axpy(st, prow[ti], darow, dvrow);
             }
             // softmax backward: ds = P ⊙ (dP − Σ dP⊙P)
-            let mut dot = 0.0f32;
-            for ti in 0..lim {
-                dot += dp[ti] * prow[ti];
-            }
+            let dot = simd::dot(st, &dp[..lim], &prow[..lim]);
             for ti in 0..lim {
                 ds[ti] = prow[ti] * (dp[ti] - dot) * scale;
             }
@@ -445,12 +460,57 @@ pub(crate) fn attention_bwd(
                 }
                 let krow = &k[((b * s + ti) * d + c0)..((b * s + ti) * d + c0 + hd)];
                 let dkrow = unsafe { pdk.slice_mut((b * s + ti) * d + c0, hd) };
-                for j in 0..hd {
-                    dqrow[j] += w * krow[j];
-                    dkrow[j] += w * qrow[j];
-                }
+                simd::axpy(st, w, krow, dqrow);
+                simd::axpy(st, w, qrow, dkrow);
             }
         }
     });
     ws.give(scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The fused score×V path must reproduce the unfused forward
+    /// bit-for-bit under the process tier, on both mask shapes (causal =
+    /// gpt_nano-like, bidirectional = bert_nano-like). The CI lane with
+    /// `PALLAS_REF_SIMD=off` re-pins this identity on the scalar tier.
+    #[test]
+    fn fused_attention_matches_unfused_bitwise() {
+        for causal in [true, false] {
+            let dm = Dims {
+                b: 2,
+                s: 7,
+                d: 12,
+                dff: 24,
+                l: 1,
+                nh: 3,
+                hd: 4,
+                v: 11,
+                causal,
+            };
+            let t = dm.rows() * dm.d;
+            let mut rng = Rng::new(if causal { 31 } else { 32 });
+            let q = fill(&mut rng, t);
+            let k = fill(&mut rng, t);
+            let v = fill(&mut rng, t);
+            let mut ws = Workspace::new();
+            let mut probs = vec![0.0f32; dm.b * dm.nh * dm.s * dm.s];
+            let mut att = vec![0.0f32; t];
+            attention_fwd(&q, &k, &v, &dm, &mut probs, &mut att, &mut ws);
+            let mut att_fused = vec![0.0f32; t];
+            attention_fwd_fused(&q, &k, &v, &dm, &mut att_fused, &mut ws);
+            assert_eq!(bits(&att), bits(&att_fused), "causal={causal}");
+        }
+    }
 }

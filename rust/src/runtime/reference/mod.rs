@@ -21,6 +21,7 @@
 pub mod exec;
 pub mod gemm;
 pub mod ops;
+pub mod simd;
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -177,8 +178,10 @@ impl Backend for ReferenceBackend {
 
     fn device_info(&self) -> String {
         format!(
-            "reference-cpu (threads={}, gemm {}x{} micro-tile, {}-row blocks)",
+            "reference-cpu (threads={}, simd={} [{}], gemm {}x{} micro-tile, {}-row blocks)",
             threadpool::threads(),
+            simd::tier().name(),
+            simd::isa(),
             gemm::MR,
             gemm::NR,
             gemm::MC,

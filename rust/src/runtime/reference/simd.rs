@@ -1,0 +1,1043 @@
+//! Runtime-dispatched SIMD kernel tier for the reference backend.
+//!
+//! Every hot inner loop of the execution core — the packed GEMM register
+//! tile, the dot/AXPY pairs inside attention, the LayerNorm row reductions,
+//! and the GELU map — funnels through the dispatch helpers in this module.
+//! A *tier* is selected once per process (lazily, on first use) and every
+//! helper takes it as an explicit first argument, so kernels fetch it once
+//! per call and the global is never consulted inside parallel loops:
+//!
+//! | tier     | ISA            | GEMM tile     | vectorized helpers          |
+//! |----------|----------------|---------------|-----------------------------|
+//! | `scalar` | any            | 8×8 scalar    | none (reference loops)      |
+//! | `avx2`   | x86-64 AVX2+FMA| 8×8, 8 lanes  | all (incl. GELU/LayerNorm)  |
+//! | `neon`   | aarch64 NEON   | 8×8, 2×4 lanes| tile/dot/axpy/add_assign    |
+//!
+//! Selection: `PALLAS_REF_SIMD={auto,off,avx2,neon}` with a strict parse
+//! (mirrors `PALLAS_REF_THREADS`); `auto` (or unset) picks the best tier
+//! the host supports via `is_x86_feature_detected!`. Forcing a tier the
+//! host cannot run is an error, never a silent fallback.
+//!
+//! # Determinism contract (extends the PR 2 note in `threadpool`)
+//!
+//! * **Within a tier** every result is bit-identical across thread and
+//!   replica counts: the helpers keep the fixed-chunk, ascending-k,
+//!   no-split-K structure of the scalar kernels, and the AVX2/NEON tile
+//!   computes each output element as a single FMA chain over ascending k —
+//!   independent of the tile's position and of threading.
+//! * **Elementwise** helpers (`axpy`, `add_assign`, `mul_acc`,
+//!   `ln_fwd_row`, `ln_bwd_dx`) use plain lanewise mul+add — no FMA, no
+//!   reassociation — so they are bit-identical to scalar on *every* tier.
+//! * **Reductions** (`tile_8x8`, `dot`, `dot3`, `sum`, `sq_dev_sum`) and
+//!   the vector GELU reassociate lanes / contract with FMA: across tiers
+//!   they agree with scalar only at tolerance. Property tests pin them
+//!   against the scalar oracle.
+//!
+//! # Unsafe boundary
+//!
+//! All `unsafe` lives in the private `x86`/`neon` submodules. Their
+//! functions carry `#[target_feature]` and are reachable only through the
+//! dispatch arms below, which are gated on the selected tier — and a tier
+//! is only selectable (`set_tier`, the env parse, auto-detection) after
+//! runtime feature detection confirms the host supports it. Callers pass
+//! slices; lengths are checked at the dispatch layer.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Scalar GELU constant `sqrt(2/π)` (shared with the vector path).
+pub(crate) const GELU_C: f32 = 0.797_884_6;
+/// Scalar GELU cubic coefficient (shared with the vector path).
+pub(crate) const GELU_A: f32 = 0.044715;
+
+/// A selectable kernel tier. `Scalar` is always available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Tier {
+    /// Stable lowercase name (the `PALLAS_REF_SIMD` spelling; `Scalar`
+    /// prints as `scalar` but parses from `off`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    fn from_u8(v: u8) -> Tier {
+        match v {
+            1 => Tier::Avx2,
+            2 => Tier::Neon,
+            _ => Tier::Scalar,
+        }
+    }
+}
+
+const TIER_UNSET: u8 = u8::MAX;
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+/// Whether this host can execute tier `t`.
+pub fn supported(t: Tier) -> bool {
+    match t {
+        Tier::Scalar => true,
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            let ok = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            #[cfg(not(target_arch = "x86_64"))]
+            let ok = false;
+            ok
+        }
+        // NEON is architecturally mandatory on aarch64.
+        Tier::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// The best tier the host supports (what `auto` resolves to).
+pub fn detected_best() -> Tier {
+    if supported(Tier::Avx2) {
+        return Tier::Avx2;
+    }
+    if supported(Tier::Neon) {
+        return Tier::Neon;
+    }
+    Tier::Scalar
+}
+
+/// Human-readable detected ISA, independent of the *selected* tier.
+pub fn isa() -> &'static str {
+    if supported(Tier::Avx2) {
+        return "x86-64 avx2+fma";
+    }
+    if cfg!(target_arch = "x86_64") {
+        return "x86-64";
+    }
+    if cfg!(target_arch = "aarch64") {
+        return "aarch64 neon";
+    }
+    "generic"
+}
+
+/// FMA lane count of a tier (used to scale the calibrated roofline).
+pub fn width(t: Tier) -> usize {
+    match t {
+        Tier::Scalar => 1,
+        Tier::Avx2 => 8,
+        Tier::Neon => 4,
+    }
+}
+
+/// Strict parse of a `PALLAS_REF_SIMD` value. `Ok(None)` means `auto`
+/// (defer to detection); a forced tier the host cannot run is an error.
+pub fn parse_simd(raw: &str) -> Result<Option<Tier>, String> {
+    let t = match raw.trim().to_ascii_lowercase().as_str() {
+        "auto" => return Ok(None),
+        "off" => Tier::Scalar,
+        "avx2" => Tier::Avx2,
+        "neon" => Tier::Neon,
+        _ => {
+            return Err(format!(
+                "PALLAS_REF_SIMD must be one of auto|off|avx2|neon, got '{raw}'"
+            ))
+        }
+    };
+    if !supported(t) {
+        return Err(format!(
+            "PALLAS_REF_SIMD={} is not supported on this host (detected: {})",
+            t.name(),
+            isa()
+        ));
+    }
+    Ok(Some(t))
+}
+
+/// The tier requested via `PALLAS_REF_SIMD`, if any. CLI entry points call
+/// this early so a bad value is a clean usage error.
+pub fn env_tier() -> Result<Option<Tier>, String> {
+    match std::env::var("PALLAS_REF_SIMD") {
+        Ok(v) => parse_simd(&v),
+        Err(_) => Ok(None),
+    }
+}
+
+fn default_tier() -> Tier {
+    match env_tier() {
+        Ok(Some(t)) => t,
+        Ok(None) => detected_best(),
+        // library-path init: an unparsable or unsupported override must
+        // not be silently replaced (mirrors `threadpool::default_threads`)
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// The selected kernel tier (lazily initialized from the environment or
+/// feature detection on first use).
+pub fn tier() -> Tier {
+    let v = TIER.load(Ordering::Relaxed);
+    if v != TIER_UNSET {
+        return Tier::from_u8(v);
+    }
+    let t = default_tier();
+    TIER.store(t as u8, Ordering::Relaxed);
+    t
+}
+
+/// Force the kernel tier for this process. Fails (without changing the
+/// selection) if the host cannot execute `t`. Tests that flip the global
+/// tier must serialize on their suite mutex, like `set_threads`.
+pub fn set_tier(t: Tier) -> Result<(), String> {
+    if !supported(t) {
+        return Err(format!(
+            "kernel tier {} is not supported on this host (detected: {})",
+            t.name(),
+            isa()
+        ));
+    }
+    TIER.store(t as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch helpers. Each takes the tier explicitly (callers hoist `tier()`
+// out of their loops) and falls back to the scalar reference loop, which
+// replicates the original kernel bodies exactly — accumulation order
+// included — so the scalar tier is bitwise-frozen.
+// ---------------------------------------------------------------------------
+
+/// 8×8 register tile over packed panels: `out[ii][jj] += Σ_k pa[k·8+ii] ·
+/// pb[k·8+jj]`. Callers pass `out` zero-initialized (the vector tiers
+/// overwrite it with the sum; the scalar tier accumulates onto the zeros —
+/// equivalent). k ascends with no split, so each output element is one FMA
+/// chain: position- and thread-count-independent within a tier.
+pub(crate) fn tile_8x8(t: Tier, pa: &[f32], pb: &[f32], k: usize, out: &mut [[f32; 8]; 8]) {
+    assert!(pa.len() >= 8 * k && pb.len() >= 8 * k);
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate); panel
+        // pointers cover 8·k elements (asserted above).
+        unsafe { x86::tile_8x8(pa.as_ptr(), pb.as_ptr(), k, out) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if t == Tier::Neon {
+        // SAFETY: NEON is mandatory on aarch64; bounds asserted above.
+        unsafe { neon::tile_8x8(pa.as_ptr(), pb.as_ptr(), k, out) };
+        return;
+    }
+    let _ = t;
+    for kk in 0..k {
+        let arow = &pa[kk * 8..(kk + 1) * 8];
+        let brow = &pb[kk * 8..(kk + 1) * 8];
+        for ii in 0..8 {
+            let av = arow[ii];
+            let trow = &mut out[ii];
+            for (jj, &bv) in brow.iter().enumerate() {
+                trow[jj] += av * bv;
+            }
+        }
+    }
+}
+
+/// `Σ a[i]·b[i]` — a reduction: vector tiers agree with scalar only at
+/// tolerance (never bitwise), but are deterministic within a tier.
+pub(crate) fn dot(t: Tier, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        return unsafe { x86::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if t == Tier::Neon {
+        // SAFETY: NEON is mandatory on aarch64.
+        return unsafe { neon::dot(a, b) };
+    }
+    let _ = t;
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `Σ (a[i]·b[i])·c[i]` — the LayerNorm-backward `Σ (dy·w)·x̂` reduction.
+pub(crate) fn dot3(t: Tier, a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    assert!(a.len() == b.len() && a.len() == c.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        return unsafe { x86::dot3(a, b, c) };
+    }
+    let _ = t;
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += (a[i] * b[i]) * c[i];
+    }
+    acc
+}
+
+/// `Σ x[i]` (LayerNorm mean numerator) — a reduction.
+pub(crate) fn sum(t: Tier, x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        return unsafe { x86::sum(x) };
+    }
+    let _ = t;
+    let mut acc = 0.0f32;
+    for &v in x {
+        acc += v;
+    }
+    acc
+}
+
+/// `Σ (x[i]−mu)²` (LayerNorm variance numerator) — a reduction.
+pub(crate) fn sq_dev_sum(t: Tier, x: &[f32], mu: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        return unsafe { x86::sq_dev_sum(x, mu) };
+    }
+    let _ = t;
+    let mut acc = 0.0f32;
+    for &v in x {
+        acc += (v - mu) * (v - mu);
+    }
+    acc
+}
+
+/// `y[i] += a·x[i]` — elementwise (lanewise mul+add, bitwise on all tiers).
+pub(crate) fn axpy(t: Tier, a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::axpy(a, x, y) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if t == Tier::Neon {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { neon::axpy(a, x, y) };
+        return;
+    }
+    let _ = t;
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// `dst[i] += src[i]` — elementwise (bitwise on all tiers).
+pub(crate) fn add_assign(t: Tier, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::add_assign(dst, src) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if t == Tier::Neon {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { neon::add_assign(dst, src) };
+        return;
+    }
+    let _ = t;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// `dst[i] += a[i]·b[i]` — elementwise (bitwise on all tiers).
+pub(crate) fn mul_acc(t: Tier, dst: &mut [f32], a: &[f32], b: &[f32]) {
+    assert!(dst.len() == a.len() && dst.len() == b.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::mul_acc(dst, a, b) };
+        return;
+    }
+    let _ = t;
+    for i in 0..dst.len() {
+        dst[i] += a[i] * b[i];
+    }
+}
+
+/// LayerNorm forward row: `xh[j] = (xi[j]−mu)·rs; yo[j] = xh[j]·w[j]+b[j]`
+/// — elementwise (bitwise on all tiers).
+pub(crate) fn ln_fwd_row(
+    t: Tier,
+    xi: &[f32],
+    w: &[f32],
+    b: &[f32],
+    mu: f32,
+    rs: f32,
+    xh: &mut [f32],
+    yo: &mut [f32],
+) {
+    let d = xi.len();
+    assert!(w.len() == d && b.len() == d && xh.len() == d && yo.len() == d);
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::ln_fwd_row(xi, w, b, mu, rs, xh, yo) };
+        return;
+    }
+    let _ = t;
+    for j in 0..d {
+        xh[j] = (xi[j] - mu) * rs;
+        yo[j] = xh[j] * w[j] + b[j];
+    }
+}
+
+/// LayerNorm backward row:
+/// `dxi[j] += rs·((dyi[j]·w[j] − m1) − xh[j]·m2)` — elementwise (bitwise).
+pub(crate) fn ln_bwd_dx(
+    t: Tier,
+    dyi: &[f32],
+    w: &[f32],
+    xh: &[f32],
+    rs: f32,
+    m1: f32,
+    m2: f32,
+    dxi: &mut [f32],
+) {
+    let d = dyi.len();
+    assert!(w.len() == d && xh.len() == d && dxi.len() == d);
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::ln_bwd_dx(dyi, w, xh, rs, m1, m2, dxi) };
+        return;
+    }
+    let _ = t;
+    for j in 0..d {
+        let dxh = dyi[j] * w[j];
+        dxi[j] += rs * (dxh - m1 - xh[j] * m2);
+    }
+}
+
+/// Scalar tanh-approximation GELU (the frozen reference definition).
+pub(crate) fn gelu(u: f32) -> f32 {
+    0.5 * u * (1.0 + (GELU_C * (u + GELU_A * u * u * u)).tanh())
+}
+
+/// Scalar GELU derivative (the frozen reference definition).
+pub(crate) fn gelu_grad(u: f32) -> f32 {
+    let t = (GELU_C * (u + GELU_A * u * u * u)).tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+/// `out[i] = gelu(u[i])`. The AVX2 path evaluates tanh via a vector
+/// Cephes-style `exp` — per-tier deterministic, tolerance-only vs scalar
+/// (`libm` tanh); NEON and scalar tiers use the scalar definition.
+pub(crate) fn gelu_map(t: Tier, u: &[f32], out: &mut [f32]) {
+    assert_eq!(u.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::gelu_map(u, out) };
+        return;
+    }
+    let _ = t;
+    for (o, &x) in out.iter_mut().zip(u) {
+        *o = gelu(x);
+    }
+}
+
+/// `dv[i] *= gelu'(u[i])` (same tiering as [`gelu_map`]).
+pub(crate) fn gelu_grad_mul(t: Tier, u: &[f32], dv: &mut [f32]) {
+    assert_eq!(u.len(), dv.len());
+    #[cfg(target_arch = "x86_64")]
+    if t == Tier::Avx2 {
+        // SAFETY: avx2+fma passed runtime detection (tier gate).
+        unsafe { x86::gelu_grad_mul(u, dv) };
+        return;
+    }
+    let _ = t;
+    for (d, &x) in dv.iter_mut().zip(u) {
+        *d *= gelu_grad(x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA microkernels. Everything here is `unsafe fn` with
+// `#[target_feature(enable = "avx2,fma")]` and is reached only through the
+// detection-gated dispatch arms above. Raw-pointer indexing is bounded by
+// the length checks at the dispatch layer; tails shorter than a vector run
+// the exact scalar loop.
+// ---------------------------------------------------------------------------
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum in a fixed pairwise order (deterministic, and cheap
+    /// enough off the hot path — reductions call it once per row).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut t = [0.0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7]))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn tile_8x8(
+        pa: *const f32,
+        pb: *const f32,
+        k: usize,
+        out: &mut [[f32; 8]; 8],
+    ) {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for kk in 0..k {
+            let b = _mm256_loadu_ps(pb.add(kk * 8));
+            let a = pa.add(kk * 8);
+            for (ii, c) in acc.iter_mut().enumerate() {
+                *c = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(ii)), b, *c);
+            }
+        }
+        for (ii, c) in acc.iter().enumerate() {
+            _mm256_storeu_ps(out[ii].as_mut_ptr(), *c);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(_mm256_mul_ps(av, bv), cv, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += (a[i] * b[i]) * c[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += x[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sq_dev_sum(x: &[f32], mu: f32) -> f32 {
+        let n = x.len();
+        let vmu = _mm256_set1_ps(mu);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(x.as_ptr().add(i)), vmu);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += (x[i] - mu) * (x[i] - mu);
+            i += 1;
+        }
+        s
+    }
+
+    // Elementwise kernels below deliberately use mul+add (never FMA) so
+    // each lane computes exactly what the scalar loop computes.
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(va, _mm256_loadu_ps(x.as_ptr().add(i)));
+            let yv = _mm256_add_ps(_mm256_loadu_ps(y.as_ptr().add(i)), prod);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let dv = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let sv = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(dv, sv));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn mul_acc(dst: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let dv = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let v = _mm256_add_ps(dv, _mm256_mul_ps(av, bv));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            dst[i] += a[i] * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn ln_fwd_row(
+        xi: &[f32],
+        w: &[f32],
+        b: &[f32],
+        mu: f32,
+        rs: f32,
+        xh: &mut [f32],
+        yo: &mut [f32],
+    ) {
+        let d = xi.len();
+        let vmu = _mm256_set1_ps(mu);
+        let vrs = _mm256_set1_ps(rs);
+        let mut j = 0usize;
+        while j + 8 <= d {
+            let xv = _mm256_loadu_ps(xi.as_ptr().add(j));
+            let h = _mm256_mul_ps(_mm256_sub_ps(xv, vmu), vrs);
+            _mm256_storeu_ps(xh.as_mut_ptr().add(j), h);
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            let y = _mm256_add_ps(_mm256_mul_ps(h, wv), bv);
+            _mm256_storeu_ps(yo.as_mut_ptr().add(j), y);
+            j += 8;
+        }
+        while j < d {
+            xh[j] = (xi[j] - mu) * rs;
+            yo[j] = xh[j] * w[j] + b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn ln_bwd_dx(
+        dyi: &[f32],
+        w: &[f32],
+        xh: &[f32],
+        rs: f32,
+        m1: f32,
+        m2: f32,
+        dxi: &mut [f32],
+    ) {
+        let d = dyi.len();
+        let vrs = _mm256_set1_ps(rs);
+        let vm1 = _mm256_set1_ps(m1);
+        let vm2 = _mm256_set1_ps(m2);
+        let mut j = 0usize;
+        while j + 8 <= d {
+            let dyv = _mm256_loadu_ps(dyi.as_ptr().add(j));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let xhv = _mm256_loadu_ps(xh.as_ptr().add(j));
+            let dxh = _mm256_mul_ps(dyv, wv);
+            let inner = _mm256_sub_ps(_mm256_sub_ps(dxh, vm1), _mm256_mul_ps(xhv, vm2));
+            let dxv = _mm256_loadu_ps(dxi.as_ptr().add(j));
+            let v = _mm256_add_ps(dxv, _mm256_mul_ps(vrs, inner));
+            _mm256_storeu_ps(dxi.as_mut_ptr().add(j), v);
+            j += 8;
+        }
+        while j < d {
+            let dxh = dyi[j] * w[j];
+            dxi[j] += rs * (dxh - m1 - xh[j] * m2);
+            j += 1;
+        }
+    }
+
+    /// Vector `expf` (Cephes-style): range reduction `x = n·ln2 + r` with
+    /// round-to-nearest via `cvtps`, degree-5 polynomial on `r`, scale by
+    /// `2^n` through the exponent field. Input clamped to the finite-result
+    /// range. Max observed error ~2 ulp; only feeds the GELU tanh.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp8(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(88.376_26));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-87.336_55));
+        let n_i = _mm256_cvtps_epi32(_mm256_mul_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E)));
+        let n = _mm256_cvtepi32_ps(n_i);
+        // two-step Cody–Waite reduction keeps r accurate near the ends
+        let x = _mm256_fnmadd_ps(n, _mm256_set1_ps(0.693_359_4), x);
+        let x = _mm256_fnmadd_ps(n, _mm256_set1_ps(-2.121_944_4e-4), x);
+        let mut y = _mm256_set1_ps(1.987_569_1e-4);
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.398_199_9e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.333_452e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.166_579_6e-2));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.666_666_5e-1));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(0.5));
+        let z = _mm256_mul_ps(x, x);
+        let y = _mm256_fmadd_ps(y, z, _mm256_add_ps(x, _mm256_set1_ps(1.0)));
+        let biased = _mm256_add_epi32(n_i, _mm256_set1_epi32(127));
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(biased));
+        _mm256_mul_ps(y, pow2)
+    }
+
+    /// `tanh(x) = 1 − 2/(e^{2x}+1)`; saturates correctly at the `exp8`
+    /// clamp bounds.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tanh8(x: __m256) -> __m256 {
+        let one = _mm256_set1_ps(1.0);
+        let two = _mm256_set1_ps(2.0);
+        let e2x = exp8(_mm256_mul_ps(x, two));
+        _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e2x, one)))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gelu8(u: __m256) -> __m256 {
+        let u3 = _mm256_mul_ps(_mm256_mul_ps(u, u), u);
+        let au3 = _mm256_mul_ps(_mm256_set1_ps(super::GELU_A), u3);
+        let inner = _mm256_mul_ps(_mm256_set1_ps(super::GELU_C), _mm256_add_ps(u, au3));
+        let t = tanh8(inner);
+        let half_u = _mm256_mul_ps(_mm256_set1_ps(0.5), u);
+        _mm256_mul_ps(half_u, _mm256_add_ps(_mm256_set1_ps(1.0), t))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gelu_grad8(u: __m256) -> __m256 {
+        let one = _mm256_set1_ps(1.0);
+        let half = _mm256_set1_ps(0.5);
+        let u2 = _mm256_mul_ps(u, u);
+        let au3 = _mm256_mul_ps(_mm256_set1_ps(super::GELU_A), _mm256_mul_ps(u2, u));
+        let inner = _mm256_mul_ps(_mm256_set1_ps(super::GELU_C), _mm256_add_ps(u, au3));
+        let t = tanh8(inner);
+        let term1 = _mm256_mul_ps(half, _mm256_add_ps(one, t));
+        let sech2 = _mm256_sub_ps(one, _mm256_mul_ps(t, t));
+        let poly = _mm256_add_ps(one, _mm256_mul_ps(_mm256_set1_ps(3.0 * super::GELU_A), u2));
+        let cpoly = _mm256_mul_ps(_mm256_set1_ps(super::GELU_C), poly);
+        let term2 = _mm256_mul_ps(_mm256_mul_ps(_mm256_mul_ps(half, u), sech2), cpoly);
+        _mm256_add_ps(term1, term2)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn gelu_map(u: &[f32], out: &mut [f32]) {
+        let n = u.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = gelu8(_mm256_loadu_ps(u.as_ptr().add(i)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            out[i] = super::gelu(u[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn gelu_grad_mul(u: &[f32], dv: &mut [f32]) {
+        let n = u.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let g = gelu_grad8(_mm256_loadu_ps(u.as_ptr().add(i)));
+            let v = _mm256_mul_ps(_mm256_loadu_ps(dv.as_ptr().add(i)), g);
+            _mm256_storeu_ps(dv.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            dv[i] *= super::gelu_grad(u[i]);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON microkernels (aarch64). The tier vectorizes the GEMM tile and the
+// linear helpers; transcendental maps and the remaining LayerNorm rows use
+// the scalar fallback (see the dispatch arms).
+// ---------------------------------------------------------------------------
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile_8x8(
+        pa: *const f32,
+        pb: *const f32,
+        k: usize,
+        out: &mut [[f32; 8]; 8],
+    ) {
+        let mut lo = [vdupq_n_f32(0.0); 8];
+        let mut hi = [vdupq_n_f32(0.0); 8];
+        for kk in 0..k {
+            let b0 = vld1q_f32(pb.add(kk * 8));
+            let b1 = vld1q_f32(pb.add(kk * 8 + 4));
+            for ii in 0..8 {
+                let a = *pa.add(kk * 8 + ii);
+                lo[ii] = vfmaq_n_f32(lo[ii], b0, a);
+                hi[ii] = vfmaq_n_f32(hi[ii], b1, a);
+            }
+        }
+        for ii in 0..8 {
+            vst1q_f32(out[ii].as_mut_ptr(), lo[ii]);
+            vst1q_f32(out[ii].as_mut_ptr().add(4), hi[ii]);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vfmaq_f32(acc, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    // Elementwise kernels use mul+add (never FMA) so each lane matches the
+    // scalar loop bitwise.
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let prod = vmulq_f32(va, vld1q_f32(x.as_ptr().add(i)));
+            let yv = vaddq_f32(vld1q_f32(y.as_ptr().add(i)), prod);
+            vst1q_f32(y.as_mut_ptr().add(i), yv);
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = vaddq_f32(vld1q_f32(dst.as_ptr().add(i)), vld1q_f32(src.as_ptr().add(i)));
+            vst1q_f32(dst.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        while i < n {
+            dst[i] += src[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    // These tests never touch the process-global tier: helpers take the
+    // tier explicitly, so the suite stays race-free under parallel tests.
+
+    #[test]
+    fn parse_is_strict() {
+        assert_eq!(parse_simd("auto").unwrap(), None);
+        assert_eq!(parse_simd(" AUTO ").unwrap(), None);
+        assert_eq!(parse_simd("off").unwrap(), Some(Tier::Scalar));
+        let err = parse_simd("fast").unwrap_err();
+        assert!(err.contains("PALLAS_REF_SIMD"), "{err}");
+        assert!(parse_simd("").is_err());
+        for (name, t) in [("avx2", Tier::Avx2), ("neon", Tier::Neon)] {
+            match parse_simd(name) {
+                Ok(Some(got)) => {
+                    assert_eq!(got, t);
+                    assert!(supported(t));
+                }
+                Err(e) => {
+                    assert!(!supported(t));
+                    assert!(e.contains("not supported"), "{e}");
+                }
+                Ok(None) => panic!("forced tier parsed as auto"),
+            }
+        }
+    }
+
+    #[test]
+    fn selected_tier_is_supported() {
+        let t = tier();
+        assert!(supported(t));
+        assert!(!isa().is_empty());
+        assert!(width(t) >= 1);
+        assert_eq!(width(Tier::Scalar), 1);
+        assert!(!detected_best().name().is_empty());
+    }
+
+    #[test]
+    fn elementwise_helpers_are_bitwise_equal_to_scalar() {
+        let best = detected_best();
+        let mut rng = Rng::new(41);
+        for n in [1usize, 3, 8, 17, 37, 64, 129] {
+            let a = fill(&mut rng, n);
+            let b = fill(&mut rng, n);
+            let c = fill(&mut rng, n);
+            let coef = rng.f32() * 2.0 - 1.0;
+
+            let mut y0 = c.clone();
+            let mut y1 = c.clone();
+            axpy(Tier::Scalar, coef, &a, &mut y0);
+            axpy(best, coef, &a, &mut y1);
+            assert_eq!(bits(&y0), bits(&y1), "axpy n={n}");
+
+            let mut d0 = c.clone();
+            let mut d1 = c.clone();
+            add_assign(Tier::Scalar, &mut d0, &a);
+            add_assign(best, &mut d1, &a);
+            assert_eq!(bits(&d0), bits(&d1), "add_assign n={n}");
+
+            let mut m0 = c.clone();
+            let mut m1 = c.clone();
+            mul_acc(Tier::Scalar, &mut m0, &a, &b);
+            mul_acc(best, &mut m1, &a, &b);
+            assert_eq!(bits(&m0), bits(&m1), "mul_acc n={n}");
+
+            let (mu, rs) = (0.125f32, 1.75f32);
+            let (mut xh0, mut yo0) = (vec![0.0; n], vec![0.0; n]);
+            let (mut xh1, mut yo1) = (vec![0.0; n], vec![0.0; n]);
+            ln_fwd_row(Tier::Scalar, &a, &b, &c, mu, rs, &mut xh0, &mut yo0);
+            ln_fwd_row(best, &a, &b, &c, mu, rs, &mut xh1, &mut yo1);
+            assert_eq!(bits(&xh0), bits(&xh1), "ln_fwd xh n={n}");
+            assert_eq!(bits(&yo0), bits(&yo1), "ln_fwd y n={n}");
+
+            let mut dx0 = c.clone();
+            let mut dx1 = c.clone();
+            ln_bwd_dx(Tier::Scalar, &a, &b, &xh0, rs, 0.25, -0.5, &mut dx0);
+            ln_bwd_dx(best, &a, &b, &xh1, rs, 0.25, -0.5, &mut dx1);
+            assert_eq!(bits(&dx0), bits(&dx1), "ln_bwd n={n}");
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_at_tolerance() {
+        let best = detected_best();
+        let mut rng = Rng::new(42);
+        for n in [1usize, 7, 8, 65, 501] {
+            let a = fill(&mut rng, n);
+            let b = fill(&mut rng, n);
+            let c = fill(&mut rng, n);
+            let tol = 1e-5 * (n as f32 + 8.0);
+            assert!((dot(Tier::Scalar, &a, &b) - dot(best, &a, &b)).abs() <= tol);
+            assert!((dot3(Tier::Scalar, &a, &b, &c) - dot3(best, &a, &b, &c)).abs() <= tol);
+            assert!((sum(Tier::Scalar, &a) - sum(best, &a)).abs() <= tol);
+            assert!((sq_dev_sum(Tier::Scalar, &a, 0.1) - sq_dev_sum(best, &a, 0.1)).abs() <= tol);
+        }
+    }
+
+    #[test]
+    fn tile_matches_scalar_at_tolerance_for_all_depths() {
+        let best = detected_best();
+        let mut rng = Rng::new(43);
+        for k in [0usize, 1, 7, 8, 32, 33] {
+            let pa = fill(&mut rng, 8 * k);
+            let pb = fill(&mut rng, 8 * k);
+            let mut t0 = [[0.0f32; 8]; 8];
+            let mut t1 = [[0.0f32; 8]; 8];
+            tile_8x8(Tier::Scalar, &pa, &pb, k, &mut t0);
+            tile_8x8(best, &pa, &pb, k, &mut t1);
+            let tol = 1e-5 * (k as f32 + 8.0);
+            for ii in 0..8 {
+                for jj in 0..8 {
+                    assert!(
+                        (t0[ii][jj] - t1[ii][jj]).abs() <= tol,
+                        "tile k={k} [{ii}][{jj}]: {} vs {}",
+                        t0[ii][jj],
+                        t1[ii][jj]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vector_gelu_matches_scalar_at_tolerance() {
+        let best = detected_best();
+        let n = 273;
+        let u: Vec<f32> = (0..n).map(|i| (i as f32 / 16.0) - 8.0).collect();
+        let mut out = vec![0.0f32; n];
+        gelu_map(best, &u, &mut out);
+        let mut dv = vec![1.0f32; n];
+        gelu_grad_mul(best, &u, &mut dv);
+        for i in 0..n {
+            let want = gelu(u[i]);
+            let tol = 1e-5 * (1.0 + want.abs());
+            assert!(
+                (out[i] - want).abs() <= tol,
+                "gelu({}) = {} want {}",
+                u[i],
+                out[i],
+                want
+            );
+            let wantg = gelu_grad(u[i]);
+            let tolg = 1e-4 * (1.0 + wantg.abs());
+            assert!(
+                (dv[i] - wantg).abs() <= tolg,
+                "gelu'({}) = {} want {}",
+                u[i],
+                dv[i],
+                wantg
+            );
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

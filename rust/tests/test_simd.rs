@@ -1,0 +1,142 @@
+//! Kernel-tier contracts across the whole model: the fused attention
+//! (inference) forward must be bit-identical to the training forward on
+//! every tier, tier selection must round-trip through `device_info`, an
+//! unsupported tier must fail closed, and scalar-vs-vector outputs agree
+//! at tolerance.
+//!
+//! Tests serialize on a local mutex because the selected tier is
+//! process-global and the harness runs tests concurrently.
+
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::runtime::reference::exec::{eval_loss, loss_and_grad, BatchRef};
+use multilevel::runtime::reference::simd;
+use multilevel::runtime::{init_theta, Manifest, ModelCfg, Runtime};
+use multilevel::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg(name: &str) -> ModelCfg {
+    Manifest::builtin().cfg(name).unwrap().clone()
+}
+
+fn toks(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+    let c = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..cfg.batch {
+        out.extend(c.sequence(cfg.seq_len, &mut rng));
+    }
+    out
+}
+
+/// MLM-style labels for the BERT batch: every third position is a loss
+/// target, the rest are ignored (-1).
+fn labels(tokens: &[i32]) -> Vec<i32> {
+    tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i % 3 == 0 { t } else { -1 })
+        .collect()
+}
+
+/// The tiers to exercise on this host: scalar always, plus the detected
+/// best vector tier when there is one.
+fn tiers() -> Vec<simd::Tier> {
+    let mut ts = vec![simd::Tier::Scalar];
+    if simd::detected_best() != simd::Tier::Scalar {
+        ts.push(simd::detected_best());
+    }
+    ts
+}
+
+#[test]
+fn set_tier_round_trips_through_device_info() {
+    let _g = lock();
+    let before = simd::tier();
+    for t in tiers() {
+        simd::set_tier(t).unwrap();
+        assert_eq!(simd::tier(), t);
+        let info = Runtime::reference().device_info();
+        assert!(info.contains(&format!("simd={}", t.name())), "{info}");
+    }
+    simd::set_tier(before).unwrap();
+}
+
+#[test]
+fn unsupported_tier_fails_closed() {
+    let _g = lock();
+    let before = simd::tier();
+    // AVX2 and NEON can never both be supported on one host.
+    let bad = [simd::Tier::Avx2, simd::Tier::Neon]
+        .into_iter()
+        .find(|&t| !simd::supported(t))
+        .expect("one vector tier is always foreign to the host");
+    let err = simd::set_tier(bad).unwrap_err();
+    assert!(err.contains("not supported"), "{err}");
+    assert_eq!(simd::tier(), before, "a rejected set_tier must not change the tier");
+}
+
+/// The full-model fused/unfused parity check: `eval_loss` runs the fused
+/// attention forward (no `[S,S]` probability tensor), `loss_and_grad` runs
+/// the training forward that materializes it — the loss must agree bitwise
+/// on every tier, for both attention masks.
+#[test]
+fn fused_eval_loss_matches_training_forward_bitwise() {
+    let _g = lock();
+    let before = simd::tier();
+    for t in tiers() {
+        simd::set_tier(t).unwrap();
+        for name in ["gpt_nano", "bert_nano"] {
+            let c = cfg(name);
+            let theta = init_theta(&c, 23);
+            let tokens = toks(&c, 29);
+            let lab = labels(&tokens);
+            let batch = if name.starts_with("gpt") {
+                BatchRef::Gpt { tokens: &tokens }
+            } else {
+                BatchRef::Bert { tokens: &tokens, labels: &lab }
+            };
+            let fused = eval_loss(&c, &theta, &batch).unwrap();
+            let (unfused, _) = loss_and_grad(&c, &theta, &batch).unwrap();
+            assert_eq!(
+                fused.to_bits(),
+                unfused.to_bits(),
+                "{name} on {}: fused {fused} vs unfused {unfused}",
+                t.name()
+            );
+        }
+    }
+    simd::set_tier(before).unwrap();
+}
+
+/// Cross-tier outputs only need tolerance equality (the FMA reductions
+/// reassociate) — pin the scalar and best-tier losses close together.
+#[test]
+fn scalar_and_vector_tier_losses_agree_at_tolerance() {
+    let _g = lock();
+    let best = simd::detected_best();
+    if best == simd::Tier::Scalar {
+        return; // nothing to compare on a scalar-only host
+    }
+    let before = simd::tier();
+    let c = cfg("gpt_nano");
+    let theta = init_theta(&c, 31);
+    let tokens = toks(&c, 37);
+    let batch = BatchRef::Gpt { tokens: &tokens };
+    simd::set_tier(simd::Tier::Scalar).unwrap();
+    let scalar = eval_loss(&c, &theta, &batch).unwrap();
+    simd::set_tier(best).unwrap();
+    let vector = eval_loss(&c, &theta, &batch).unwrap();
+    simd::set_tier(before).unwrap();
+    let tol = 1e-3 * (1.0 + scalar.abs());
+    assert!(
+        (scalar - vector).abs() < tol,
+        "scalar {scalar} vs {} {vector} differ beyond {tol}",
+        best.name()
+    );
+}

@@ -8,7 +8,10 @@
 use std::sync::{Mutex, MutexGuard};
 
 use multilevel::coordinator::{operators, Trainer};
-use multilevel::runtime::{init_state, Runtime};
+use multilevel::runtime::reference::exec::{decode_step, prefill};
+use multilevel::runtime::reference::simd;
+use multilevel::runtime::{init_state, init_theta, Manifest, Runtime};
+use multilevel::util::rng::Rng;
 use multilevel::util::threadpool;
 
 static LOCK: Mutex<()> = Mutex::new(());
@@ -91,4 +94,51 @@ fn device_info_reports_thread_count_and_block_size() {
     assert!(info.starts_with("reference-cpu"), "{info}");
     assert!(info.contains("threads=3"), "{info}");
     assert!(info.contains("gemm"), "{info}");
+    assert!(info.contains("simd="), "{info}");
+}
+
+/// Decode replay must be bitwise stable per kernel tier: for a fixed
+/// `PALLAS_REF_SIMD` selection, prefill + decode records are bit-identical
+/// across repeats and across thread counts — on the scalar tier and on the
+/// detected best tier.
+#[test]
+fn decode_replay_bit_identical_per_tier_across_threads() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    let before_tier = simd::tier();
+    let m = Manifest::builtin();
+    let cfg = m.cfg("gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 5);
+    let corpus = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(19);
+    let mut tokens = Vec::new();
+    for _ in 0..cfg.batch {
+        tokens.extend(corpus.sequence(cfg.seq_len, &mut rng));
+    }
+    let plen = (cfg.seq_len / 2).max(1);
+    let lens = vec![plen as i32; cfg.batch];
+    let next: Vec<i32> =
+        (0..cfg.batch).map(|bi| tokens[bi * cfg.seq_len + plen - 1]).collect();
+    let run = |threads: usize| {
+        threadpool::set_threads(threads);
+        let recs = prefill(&cfg, &theta, &tokens, &lens).unwrap();
+        let stepped = decode_step(&cfg, &theta, &recs, &next, &lens).unwrap();
+        (recs, stepped)
+    };
+    let mut tiers = vec![simd::Tier::Scalar];
+    if simd::detected_best() != simd::Tier::Scalar {
+        tiers.push(simd::detected_best());
+    }
+    for tier in tiers {
+        simd::set_tier(tier).unwrap();
+        let (r1, s1) = run(1);
+        let (r1b, s1b) = run(1);
+        let (r8, s8) = run(8);
+        assert_eq!(bits(&r1), bits(&r1b), "{}: prefill replay diverged", tier.name());
+        assert_eq!(bits(&s1), bits(&s1b), "{}: decode replay diverged", tier.name());
+        assert_eq!(bits(&r1), bits(&r8), "{}: prefill 1 vs 8 threads diverged", tier.name());
+        assert_eq!(bits(&s1), bits(&s8), "{}: decode 1 vs 8 threads diverged", tier.name());
+    }
+    simd::set_tier(before_tier).unwrap();
+    threadpool::set_threads(before_threads);
 }
