@@ -38,6 +38,12 @@ from .configs import (BASE_CONFIGS, LORA_RANK, TAB5_COALESCED_SIZES,
 # number of classes for the GLUE-substitute fine-tuning probes
 FT_CLASSES = 4
 
+# candidate-token slots of the speculative-decode verify_step__* artifacts
+# (mirrors registry::SPEC_K in rust/src/runtime/registry.rs): every verify
+# call carries exactly this many candidate tokens per request and returns
+# logits at all SPEC_K + 1 positions
+SPEC_K = 4
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -208,13 +214,15 @@ def distill_artifacts(student: ModelConfig, teacher: ModelConfig) -> List[Artifa
 
 
 def decode_artifacts(cfg: ModelConfig) -> List[Artifact]:
-    """Incremental-decode serving pair of a causal config: ``prefill__*``
-    (padded prompts in, per-request decode records out) and
-    ``decode_step__*`` (one token + records in, updated records out).
-    Both carry a per-request length vector ``lens`` (``[B]``, int32) so
-    mixed-length requests batch together; its leading batch extent makes
-    it shard with the other batch inputs. Mirrors ``decode_artifacts`` in
-    rust/src/runtime/registry.rs."""
+    """Incremental-decode serving triple of a causal config: ``prefill__*``
+    (padded prompts in, per-request decode records out), ``decode_step__*``
+    (one token + records in, updated records out) and ``verify_step__*``
+    (records + ``SPEC_K`` candidate tokens per request in, logits at all
+    ``SPEC_K + 1`` positions plus the advanced cache out — the speculative
+    decoding verifier). All carry a per-request length vector ``lens``
+    (``[B]``, int32) so mixed-length requests batch together; its leading
+    batch extent makes it shard with the other batch inputs. Mirrors
+    ``decode_artifacts`` in rust/src/runtime/registry.rs."""
     assert cfg.family == "gpt"
     rec = M.decode_rec_len(cfg)
     theta = ("theta", _spec((M.n_params(cfg),)))
@@ -229,6 +237,11 @@ def decode_artifacts(cfg: ModelConfig) -> List[Artifact]:
                  M.make_decode_step(cfg),
                  [theta, ("cache", _spec((cfg.batch, rec))),
                   ("token", _spec((cfg.batch,), jnp.int32)), lens],
+                 {"config": cfg.name}, meta={"shard": "batch"}),
+        Artifact(f"verify_step__{cfg.name}", "verify_step",
+                 M.make_verify_step(cfg),
+                 [theta, ("cache", _spec((cfg.batch, rec))),
+                  ("cand", _spec((cfg.batch, SPEC_K), jnp.int32)), lens],
                  {"config": cfg.name}, meta={"shard": "batch"}),
     ]
 

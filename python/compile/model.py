@@ -532,6 +532,71 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_verify_step(cfg: ModelConfig):
+    """(theta[N], cache[B, rec], cand[B, K], lens[B]) -> [B, (K+1)*V + kv].
+
+    Speculative-decode verifier: consumes every request's K candidate
+    tokens at positions ``lens[b] .. lens[b]+K-1`` in one call and returns
+    the logits observed at all K+1 positions — block 0 is the incoming
+    record's own logits (the distribution that scores candidate 0), block
+    i the logits after the first i candidates — followed by the advanced
+    K/V cache. Exactly equivalent to K sequential ``decode_step`` calls:
+    the acceptance rule (keep the longest prefix where candidate i is the
+    argmax of block i) makes greedy speculative decoding emit the same
+    tokens as plain greedy decoding. K is the candidate matrix's static
+    width (``SPEC_K`` in aot.py / ``registry::SPEC_K`` in Rust).
+    """
+    assert cfg.family == "gpt", "verify_step is causal-only"
+    unravel = unravel_fn(cfg)
+    L, S, d, V = cfg.n_layer, cfg.seq_len, cfg.d_model, cfg.vocab
+    nh, hd = cfg.n_head, cfg.head_dim
+    ln = ref.layernorm
+
+    def verify_step(theta, cache, cand, lens):
+        b = cache.shape[0]
+        k_cand = cand.shape[1]
+        params = unravel(theta)
+        blks = {k[len("blk."):]: v for k, v in params.items()
+                if k.startswith("blk.")}
+        kv = cache[:, V:].reshape(b, L, 2, S, d)
+        blocks = [cache[:, :V]]
+        p0 = lens.astype(jnp.int32)  # [B]
+        # static unroll over the K candidate positions: each iteration is
+        # one decode_step body at depth lens+ki, reusing the kv carried
+        # from the previous iteration
+        for ki in range(k_cand):
+            p = p0 + ki
+            h = params["emb"][cand[:, ki]] + jnp.take(params["pos"], p, axis=0)
+            write = (jnp.arange(S)[None, :] == p[:, None])[:, :, None]
+            for l in range(L):
+                blk = {k: v[l] for k, v in blks.items()}
+                x1 = ln(h, blk["ln1_w"], blk["ln1_b"])
+                q = x1 @ blk["wq"] + blk["bq"]
+                kn = x1 @ blk["wk"] + blk["bk"]
+                vn = x1 @ blk["wv"] + blk["bv"]
+                kl = jnp.where(write, kn[:, None, :], kv[:, l, 0])
+                vl = jnp.where(write, vn[:, None, :], kv[:, l, 1])
+                kv = kv.at[:, l, 0].set(kl).at[:, l, 1].set(vl)
+                kl = kl.reshape(b, S, nh, hd)
+                vl = vl.reshape(b, S, nh, hd)
+                qh = q.reshape(b, nh, hd)
+                scores = jnp.einsum("bhd,bshd->bhs", qh, kl)
+                scores = scores / jnp.sqrt(jnp.float32(hd))
+                mask = (jnp.arange(S)[None, None, :] <= p[:, None, None])
+                scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+                probs = jax.nn.softmax(scores, axis=-1)
+                att = jnp.einsum("bhs,bshd->bhd", probs, vl).reshape(b, d)
+                h = h + att @ blk["wo"] + blk["bo"]
+                x2 = ln(h, blk["ln2_w"], blk["ln2_b"])
+                h = h + jax.nn.gelu(x2 @ blk["fc1_w"] + blk["fc1_b"]) \
+                    @ blk["fc2_w"] + blk["fc2_b"]
+            hf = ln(h, params["lnf_w"], params["lnf_b"])
+            blocks.append(hf @ params["head_w"] + params["head_b"])
+        return jnp.concatenate(blocks + [kv.reshape(b, -1)], axis=1)
+
+    return verify_step
+
+
 # ---------------------------------------------------------------------------
 # Fine-tuning probe (GLUE substitute): backbone + classification head
 # ---------------------------------------------------------------------------

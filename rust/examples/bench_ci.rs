@@ -13,9 +13,13 @@
 use std::time::Duration;
 
 use anyhow::{Context, Result};
-use multilevel::coordinator::{synthetic_trace, ServeEngine, ServeOpts, Trainer, TrafficSpec};
+use multilevel::coordinator::{
+    synthetic_trace, GenerateRequest, Generator, ServeEngine, ServeOpts, SpecDecoder, Trainer,
+    TrafficSpec,
+};
 use multilevel::obs;
 use multilevel::runtime::reference::simd;
+use multilevel::runtime::registry::SPEC_K;
 use multilevel::runtime::{init_state, init_theta, Arg, Checkpoint, Runtime};
 use multilevel::util::bench;
 use multilevel::util::cli::Args;
@@ -126,6 +130,58 @@ fn serve_bench_row(
         trace.len(),
         warm.generated_tokens,
         warm.steps
+    );
+    rows.push((label, stats, None));
+    Ok(())
+}
+
+/// Speculative decoding vs plain greedy decoding on the same prompts in
+/// the same run, so the printed speedup and acceptance rate are measured,
+/// never assumed. Only the speculative row is gated; its ceiling must
+/// hold even at zero acceptance (an untrained theta drafts poorly, and a
+/// rejected round still commits one token per verify call).
+fn spec_bench_row(
+    rt: &Runtime,
+    name: &str,
+    suffix: &str,
+    budget: Duration,
+    rows: &mut Vec<Row>,
+) -> Result<()> {
+    let cfg = rt.cfg(name)?.clone();
+    let theta = init_theta(&cfg, 1);
+    let (b, seq) = (cfg.batch, cfg.seq_len);
+    let plen = (seq / 4).max(1);
+    let gen = (seq / 4).max(2);
+    let corpus = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(7);
+    let mut prompts = Vec::with_capacity(b * plen);
+    for _ in 0..b {
+        prompts.extend(corpus.sequence(plen, &mut rng));
+    }
+    let dec = SpecDecoder::new(rt, name, 2, SPEC_K)?;
+    let plain = Generator::new(rt, name)?;
+    let req = || GenerateRequest::new(&prompts, plen).max_new_tokens(gen);
+    let warm = dec.generate(rt, &theta, req())?; // prepare + warm
+    let label = format!("spec_decode__{name}{suffix}");
+    let stats = bench::run(&label, budget, || {
+        bench::black_box(dec.generate(rt, &theta, req()).unwrap());
+    });
+    bench::black_box(plain.generate(rt, &theta, req())?); // warm
+    let pstats = bench::run(&format!("plain_decode__{name}{suffix}"), budget, || {
+        bench::black_box(plain.generate(rt, &theta, req()).unwrap());
+    });
+    let toks = (b * gen) as f64;
+    let (spec_s, plain_s) = (stats.mean.as_secs_f64(), pstats.mean.as_secs_f64());
+    println!(
+        "    -> {:.0} tokens/s speculative vs {:.0} plain ({:.2}x speedup); \
+         {} of {} drafts accepted ({:.0}% acceptance, k={})",
+        toks / spec_s.max(1e-9),
+        toks / plain_s.max(1e-9),
+        plain_s / spec_s.max(1e-9),
+        warm.stats.accepted,
+        warm.stats.drafted,
+        warm.stats.acceptance_rate() * 100.0,
+        dec.k()
     );
     rows.push((label, stats, None));
     Ok(())
@@ -280,6 +336,7 @@ fn main() -> Result<()> {
     for name in &decode_configs {
         decode_bench_rows(&rt, name, "", budget, &mut rows)?;
         serve_bench_row(&rt, name, "", budget, &mut rows)?;
+        spec_bench_row(&rt, name, "", budget, &mut rows)?;
     }
 
     // sharded train step: the data-parallel grad → all-reduce → AdamW path
@@ -329,6 +386,7 @@ fn main() -> Result<()> {
         for name in &decode_configs {
             decode_bench_rows(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
             serve_bench_row(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
+            spec_bench_row(&srt, name, &format!("@r{replicas}"), budget, &mut rows)?;
         }
     }
 

@@ -1,6 +1,19 @@
-//! Serving-path generation: drives the `prefill__*` / `decode_step__*`
-//! artifacts through a [`Runtime`] to produce tokens for a batch of
-//! requests — the first genuinely serve-shaped workload of the system.
+//! Serving-path generation: drives the `prefill__*` / `decode_step__*` /
+//! `verify_step__*` artifacts through a [`Runtime`] to produce tokens for
+//! a batch of requests — the first genuinely serve-shaped workload of the
+//! system.
+//!
+//! Two drivers share the machinery. [`Generator`] is plain incremental
+//! decoding: one `decode_step` per emitted token. [`SpecDecoder`] is
+//! coalesced-draft speculative decoding: the Coalescing operator applied
+//! one level down yields a *free* draft model (no separately trained
+//! weights — `coalesce__*` maps the full model's own theta), the draft
+//! proposes `k` tokens per round with cheap small-model steps, and one
+//! batched `verify_step` call scores all proposals with the full model.
+//! Greedy acceptance keeps the longest proposal prefix that matches the
+//! full model's own argmax chain, so the emitted tokens are **bitwise
+//! identical** to plain greedy decoding — speculation changes walltime,
+//! never output.
 //!
 //! One [`Generator::generate`] call takes a [`GenerateRequest`] (prompt
 //! tokens, length, token budget, sampler — built builder-style so
@@ -24,8 +37,22 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::registry::SPEC_K;
 use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime};
 use crate::util::rng::Rng;
+
+/// First maximal logit (ties break toward the lowest token id) — the
+/// greedy rule shared by [`Sampler::Greedy`] and the speculative
+/// acceptance check, so both argmax chains are bit-for-bit the same.
+pub(super) fn greedy_pick(logits: &[f32]) -> usize {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best.1 {
+            best = (i, x);
+        }
+    }
+    best.0
+}
 
 /// Token-selection rule applied to each request's next-token logits.
 pub enum Sampler {
@@ -53,15 +80,7 @@ impl Sampler {
     /// Pick a token id from one request's logits.
     fn pick(&mut self, logits: &[f32]) -> usize {
         match self {
-            Sampler::Greedy => {
-                let mut best = (0usize, f32::NEG_INFINITY);
-                for (i, &x) in logits.iter().enumerate() {
-                    if x > best.1 {
-                        best = (i, x);
-                    }
-                }
-                best.0
-            }
+            Sampler::Greedy => greedy_pick(logits),
             Sampler::Temperature { temperature, rng } => {
                 // stable softmax at T, then an inverse-CDF draw. Two
                 // streaming passes (normalizer, then draw) recompute the
@@ -272,6 +291,492 @@ impl Generator {
             prefill_secs,
             decode_secs: t1.elapsed().as_secs_f64(),
             decode_steps,
+        })
+    }
+}
+
+/// Speculation counters of one [`SpecDecoder::generate`] run (also
+/// accumulated into the obs metrics registry by the serve engine).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecStats {
+    /// Draft tokens proposed by the small model (`k - 1` per request per
+    /// round; the round's first candidate is the full model's own argmax
+    /// and is never counted as drafted).
+    pub drafted: u64,
+    /// Drafted tokens accepted by the verifier.
+    pub accepted: u64,
+    /// Speculative rounds executed (one `verify_step` call each).
+    pub verify_calls: u64,
+    /// Small-model `decode_step` calls (sync + draft feeds).
+    pub draft_steps: u64,
+    /// Plain full-model `decode_step` calls (context-bound tail).
+    pub plain_steps: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verifier accepted (0 when nothing
+    /// was drafted, e.g. `k = 1`).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Result of one batched speculative generation run.
+pub struct SpecGeneration {
+    /// Generated token ids, `max_new_tokens` per request — bitwise
+    /// identical to what [`Generator::generate`] emits under greedy.
+    pub tokens: Vec<Vec<i32>>,
+    /// Requests decoded together.
+    pub batch: usize,
+    /// Wall time of the two prefill calls plus draft-theta derivation.
+    pub prefill_secs: f64,
+    /// Wall time of the speculative rounds and the plain tail (seconds).
+    pub decode_secs: f64,
+    /// Speculation counters.
+    pub stats: SpecStats,
+}
+
+impl SpecGeneration {
+    /// Decode throughput in committed tokens per second across the batch.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total: usize = self.tokens.iter().map(Vec::len).sum();
+        if total == 0 || self.decode_secs <= 0.0 {
+            return 0.0;
+        }
+        total as f64 / self.decode_secs
+    }
+}
+
+/// Coalesced-draft speculative decoder for one causal config.
+///
+/// # Algorithm (per round, all requests batched)
+///
+/// The full-model record sits at committed length `P` with logits
+/// predicting position `P`. The round:
+///
+/// 1. `c_0` = argmax of the full model's logits (free — no extra call);
+/// 2. the small model re-feeds the last committed token (a sync step
+///    that is a bitwise no-op unless the previous round accepted every
+///    draft, in which case it catches the draft cache up one row), then
+///    drafts `c_1 .. c_{k-1}` greedily, one cheap `decode_step` each;
+/// 3. one `verify_step` call scores all candidates with the full model,
+///    returning its logits at every position `P .. P+k`;
+/// 4. accept the longest prefix where `c_j` equals the argmax of the
+///    verifier's block `j` (`c_0` always matches by construction), commit
+///    those `m + 1` tokens, and adopt block `m+1` plus the verifier's
+///    K/V cache as the new record — positions past the acceptance point
+///    hold rejected-candidate rows, but the causal mask (`<= lens`) means
+///    they are always rewritten before they are read.
+///
+/// Every committed token equals the full model's own argmax at its
+/// position, so the output is **bitwise identical** to plain greedy
+/// decoding; per-round progress is 1..=k tokens. Requests whose remaining
+/// context cannot fit a `SPEC_K`-wide verify call finish on plain
+/// `decode_step`s (bitwise-identical tail).
+///
+/// The draft model is *derived*, not trained: `coalesce__*` artifacts map
+/// the full model's theta down `draft_level - 1` levels (Algorithm 2
+/// applied to serving), so speculation needs no second checkpoint.
+pub struct SpecDecoder {
+    big: ModelCfg,
+    small: ModelCfg,
+    prefill_big: Rc<Exe>,
+    decode_big: Rc<Exe>,
+    verify: Rc<Exe>,
+    prefill_small: Rc<Exe>,
+    decode_small: Rc<Exe>,
+    /// Coalesce hops `level 1 -> 2 -> .. -> draft_level`, with each hop's
+    /// input parameter count (the wrap-as-state size).
+    chain: Vec<(Rc<Exe>, usize)>,
+    k: usize,
+}
+
+impl SpecDecoder {
+    /// Prepare speculative decoding for `config` with the level-
+    /// `draft_level` coalesced geometry as the draft model, proposing `k`
+    /// tokens per round (`1..=SPEC_K`).
+    pub fn new(rt: &Runtime, config: &str, draft_level: usize, k: usize) -> Result<SpecDecoder> {
+        let big = rt.cfg(config)?.clone();
+        if big.family != Family::Gpt {
+            bail!(
+                "speculative decoding requires a causal (gpt) config; '{}' is {:?}",
+                big.name,
+                big.family
+            );
+        }
+        if k == 0 || k > SPEC_K {
+            bail!("--spec-k must be in 1..={SPEC_K}, got {k}");
+        }
+        if draft_level < 2 {
+            bail!("--spec-draft must be >= 2 (level 1 is the full model itself)");
+        }
+        let mut chain = Vec::with_capacity(draft_level - 1);
+        let mut prev = config.to_string();
+        for lv in 2..=draft_level {
+            let next = format!("{config}_lv{lv}");
+            let n_in = rt.cfg(&prev)?.n_params;
+            let exe = rt.exe(&format!("coalesce__{prev}__{next}")).with_context(|| {
+                format!("config '{config}' has no coalesced level-{lv} draft geometry")
+            })?;
+            chain.push((exe, n_in));
+            prev = next;
+        }
+        let small = rt.cfg(&prev)?.clone();
+        if small.batch != big.batch || small.seq_len != big.seq_len || small.vocab != big.vocab
+        {
+            bail!(
+                "draft config '{}' does not share '{}'s batch/seq_len/vocab",
+                small.name,
+                big.name
+            );
+        }
+        Ok(SpecDecoder {
+            prefill_big: rt.exe(&format!("prefill__{config}"))?,
+            decode_big: rt.exe(&format!("decode_step__{config}"))?,
+            verify: rt.exe(&format!("verify_step__{config}"))?,
+            prefill_small: rt.exe(&format!("prefill__{prev}"))?,
+            decode_small: rt.exe(&format!("decode_step__{prev}"))?,
+            big,
+            small,
+            chain,
+            k,
+        })
+    }
+
+    /// The driven (full-model) config.
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.big
+    }
+
+    /// The derived draft config.
+    pub fn draft_cfg(&self) -> &ModelCfg {
+        &self.small
+    }
+
+    /// Tokens proposed per round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The prepared `verify_step__*` artifact (serve-engine sweeps drive
+    /// the round themselves over ragged slot batches).
+    pub(super) fn verify_exe(&self) -> &Rc<Exe> {
+        &self.verify
+    }
+
+    /// The draft geometry's `prefill__*` artifact.
+    pub(super) fn prefill_small_exe(&self) -> &Rc<Exe> {
+        &self.prefill_small
+    }
+
+    /// The draft geometry's `decode_step__*` artifact.
+    pub(super) fn decode_small_exe(&self) -> &Rc<Exe> {
+        &self.decode_small
+    }
+
+    /// Map the full model's theta down the coalesce chain to the draft
+    /// geometry's theta (wraps theta as an optimizer state `[0, theta,
+    /// 0, 0]`, runs the `coalesce__*` artifacts, unwraps).
+    pub fn draft_theta(&self, rt: &Runtime, theta: &[f32]) -> Result<Vec<f32>> {
+        if theta.len() != self.big.n_params {
+            bail!(
+                "theta has {} elements, config {} needs {}",
+                theta.len(),
+                self.big.name,
+                self.big.n_params
+            );
+        }
+        let mut state = vec![0.0f32; 3 * theta.len() + 1];
+        state[1..1 + theta.len()].copy_from_slice(theta);
+        for (exe, n_in) in &self.chain {
+            if state.len() != 3 * n_in + 1 {
+                bail!("coalesce chain state mismatch: {} vs 3*{n_in}+1", state.len());
+            }
+            let out = rt.call(exe, &[Arg::F32(&state, vec![state.len()])])?;
+            state = rt.read_f32(&out)?;
+        }
+        let n_small = self.small.n_params;
+        if state.len() != 3 * n_small + 1 {
+            bail!("coalesce chain produced {} elements, want {}", state.len(), 3 * n_small + 1);
+        }
+        Ok(state[1..1 + n_small].to_vec())
+    }
+
+    /// One batched `decode_step` call over a host record buffer, writing
+    /// back only the rows where `write` is set (inactive requests keep
+    /// their records untouched regardless of what the padded call slots
+    /// computed).
+    #[allow(clippy::too_many_arguments)]
+    fn masked_step(
+        &self,
+        rt: &Runtime,
+        exe: &Rc<Exe>,
+        theta: &[f32],
+        rec: &mut [f32],
+        rec_len: usize,
+        tok: &[i32],
+        lens: &[i32],
+        write: &[bool],
+    ) -> Result<()> {
+        let b = write.len();
+        let out = rt.call(
+            exe,
+            &[
+                Arg::F32(theta, vec![theta.len()]),
+                Arg::F32(rec, vec![b, rec_len]),
+                Arg::I32(tok, vec![b]),
+                Arg::I32(lens, vec![b]),
+            ],
+        )?;
+        let host = out.as_host_f32().context("speculative decoding needs a host backend")?;
+        for bi in 0..b {
+            if write[bi] {
+                rec[bi * rec_len..(bi + 1) * rec_len]
+                    .copy_from_slice(&host[bi * rec_len..(bi + 1) * rec_len]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one batched speculative generation request. Greedy-only (the
+    /// determinism contract is greedy-equivalence; temperature sampling
+    /// fails closed), and the prompt must leave room for at least one
+    /// `SPEC_K`-wide verify window: `prompt_len + SPEC_K <= seq_len`.
+    pub fn generate(
+        &self,
+        rt: &Runtime,
+        theta: &[f32],
+        req: GenerateRequest<'_>,
+    ) -> Result<SpecGeneration> {
+        let GenerateRequest { prompts, prompt_len, max_new_tokens: gen, sampler } = req;
+        if !matches!(sampler, Sampler::Greedy) {
+            bail!(
+                "speculative decoding requires greedy sampling (its contract is \
+                 bitwise equivalence with the plain greedy chain)"
+            );
+        }
+        let (b, s, v) = (self.big.batch, self.big.seq_len, self.big.vocab);
+        let rec_b = self.big.decode_rec_len();
+        let rec_s = self.small.decode_rec_len();
+        let vrec = (SPEC_K + 1) * v + self.big.kv_cache_len();
+        if theta.len() != self.big.n_params {
+            bail!("theta has {} elements, config {} needs {}", theta.len(), self.big.name,
+                  self.big.n_params);
+        }
+        if prompt_len == 0 || prompt_len > s {
+            bail!("prompt length {prompt_len} outside 1..={s}");
+        }
+        if prompt_len + SPEC_K > s {
+            bail!(
+                "speculative decoding needs prompt_len + {SPEC_K} <= seq_len for one \
+                 verify window; a length-{prompt_len} prompt leaves {} of {s} positions \
+                 — use plain generation",
+                s - prompt_len
+            );
+        }
+        if prompts.len() != b * prompt_len {
+            bail!("prompts carry {} tokens, want {b} x {prompt_len}", prompts.len());
+        }
+        if gen == 0 {
+            bail!("nothing to generate (max_new_tokens = 0)");
+        }
+        let max_gen = s - prompt_len + 1;
+        if gen > max_gen {
+            bail!(
+                "can generate at most {max_gen} tokens from a length-{prompt_len} prompt \
+                 ({s} learned positions); asked for {gen}"
+            );
+        }
+
+        let t0 = Instant::now();
+        let theta_small = self.draft_theta(rt, theta)?;
+        let mut padded = vec![0i32; b * s];
+        for bi in 0..b {
+            padded[bi * s..bi * s + prompt_len]
+                .copy_from_slice(&prompts[bi * prompt_len..(bi + 1) * prompt_len]);
+        }
+        let plens = vec![prompt_len as i32; b];
+        let big_buf = rt.call(
+            &self.prefill_big,
+            &[
+                Arg::F32(theta, vec![theta.len()]),
+                Arg::I32(&padded, vec![b, s]),
+                Arg::I32(&plens, vec![b]),
+            ],
+        )?;
+        let mut big_rec = rt.read_f32(&big_buf)?;
+        let small_buf = rt.call(
+            &self.prefill_small,
+            &[
+                Arg::F32(&theta_small, vec![theta_small.len()]),
+                Arg::I32(&padded, vec![b, s]),
+                Arg::I32(&plens, vec![b]),
+            ],
+        )?;
+        let mut small_rec = rt.read_f32(&small_buf)?;
+        let prefill_secs = t0.elapsed().as_secs_f64();
+
+        // per-request committed token stream (prompt + emitted)
+        let mut stream: Vec<Vec<i32>> = (0..b)
+            .map(|bi| prompts[bi * prompt_len..(bi + 1) * prompt_len].to_vec())
+            .collect();
+        let k = self.k;
+        let mut stats = SpecStats::default();
+        let mut cand = vec![0i32; b * SPEC_K];
+        let mut tok = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        let mut active = vec![false; b];
+        let done = |st: &Vec<i32>| st.len() - prompt_len >= gen;
+
+        let t1 = Instant::now();
+        loop {
+            // a request can run a spec round while it wants tokens and a
+            // full SPEC_K-wide verify window fits its remaining context
+            for bi in 0..b {
+                active[bi] = !done(&stream[bi]) && stream[bi].len() + SPEC_K <= s;
+            }
+            if !active.iter().any(|&a| a) {
+                break;
+            }
+
+            // candidate 0: the full model's own argmax (free)
+            for bi in 0..b {
+                cand[bi * SPEC_K] = if active[bi] {
+                    greedy_pick(&big_rec[bi * rec_b..bi * rec_b + v]) as i32
+                } else {
+                    0
+                };
+            }
+            // small-model sync: re-feed the last committed token. A
+            // bitwise no-op row rewrite except after a fully-accepted
+            // round, where it writes the one row the draft cache missed.
+            for bi in 0..b {
+                let p = stream[bi].len();
+                (tok[bi], lens[bi]) =
+                    if active[bi] { (stream[bi][p - 1], (p - 1) as i32) } else { (0, 0) };
+            }
+            self.masked_step(
+                rt, &self.decode_small, &theta_small, &mut small_rec, rec_s, &tok, &lens,
+                &active,
+            )?;
+            stats.draft_steps += 1;
+            // draft c_1 .. c_{k-1} greedily with the small model
+            for j in 1..k {
+                for bi in 0..b {
+                    let p = stream[bi].len();
+                    (tok[bi], lens[bi]) = if active[bi] {
+                        (cand[bi * SPEC_K + j - 1], (p + j - 1) as i32)
+                    } else {
+                        (0, 0)
+                    };
+                }
+                self.masked_step(
+                    rt, &self.decode_small, &theta_small, &mut small_rec, rec_s, &tok,
+                    &lens, &active,
+                )?;
+                stats.draft_steps += 1;
+                for bi in 0..b {
+                    cand[bi * SPEC_K + j] = if active[bi] {
+                        greedy_pick(&small_rec[bi * rec_s..bi * rec_s + v]) as i32
+                    } else {
+                        0
+                    };
+                }
+            }
+            // pad unused candidate slots (the artifact consumes all
+            // SPEC_K; padded blocks are computed but never accepted)
+            for bi in 0..b {
+                for j in k..SPEC_K {
+                    cand[bi * SPEC_K + j] = cand[bi * SPEC_K + k - 1];
+                }
+            }
+
+            // one full-model pass verifies every candidate
+            for bi in 0..b {
+                lens[bi] = if active[bi] { stream[bi].len() as i32 } else { 0 };
+            }
+            let vout = rt.call(
+                &self.verify,
+                &[
+                    Arg::F32(theta, vec![theta.len()]),
+                    Arg::F32(&big_rec, vec![b, rec_b]),
+                    Arg::I32(&cand, vec![b, SPEC_K]),
+                    Arg::I32(&lens, vec![b]),
+                ],
+            )?;
+            let vhost =
+                vout.as_host_f32().context("speculative decoding needs a host backend")?;
+            stats.verify_calls += 1;
+
+            for bi in 0..b {
+                if !active[bi] {
+                    continue;
+                }
+                let row = &vhost[bi * vrec..(bi + 1) * vrec];
+                // longest candidate prefix matching the verifier's own
+                // argmax chain; c_0 matches by construction
+                let mut m = 0usize;
+                while m + 1 < k {
+                    let block = &row[(m + 1) * v..(m + 2) * v];
+                    if cand[bi * SPEC_K + m + 1] != greedy_pick(block) as i32 {
+                        break;
+                    }
+                    m += 1;
+                }
+                stats.drafted += (k - 1) as u64;
+                stats.accepted += m as u64;
+                for j in 0..=m {
+                    if done(&stream[bi]) {
+                        break;
+                    }
+                    stream[bi].push(cand[bi * SPEC_K + j]);
+                }
+                // adopt the verifier's logits at the acceptance point and
+                // its advanced cache as the new full-model record
+                big_rec[bi * rec_b..bi * rec_b + v]
+                    .copy_from_slice(&row[(m + 1) * v..(m + 2) * v]);
+                big_rec[bi * rec_b + v..(bi + 1) * rec_b]
+                    .copy_from_slice(&row[(SPEC_K + 1) * v..]);
+            }
+        }
+
+        // plain greedy tail: requests whose remaining context cannot fit
+        // a verify window finish one token at a time, bitwise identical
+        // to Generator's loop
+        while (0..b).any(|bi| !done(&stream[bi])) {
+            for bi in 0..b {
+                if !done(&stream[bi]) {
+                    let t = greedy_pick(&big_rec[bi * rec_b..bi * rec_b + v]) as i32;
+                    stream[bi].push(t);
+                }
+            }
+            for bi in 0..b {
+                active[bi] = !done(&stream[bi]);
+                let p = stream[bi].len();
+                (tok[bi], lens[bi]) =
+                    if active[bi] { (stream[bi][p - 1], (p - 1) as i32) } else { (0, 0) };
+            }
+            if !active.iter().any(|&a| a) {
+                break;
+            }
+            self.masked_step(
+                rt, &self.decode_big, theta, &mut big_rec, rec_b, &tok, &lens, &active,
+            )?;
+            stats.plain_steps += 1;
+        }
+
+        let tokens: Vec<Vec<i32>> =
+            stream.into_iter().map(|st| st[prompt_len..].to_vec()).collect();
+        Ok(SpecGeneration {
+            tokens,
+            batch: b,
+            prefill_secs,
+            decode_secs: t1.elapsed().as_secs_f64(),
+            stats,
         })
     }
 }

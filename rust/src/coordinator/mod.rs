@@ -18,7 +18,8 @@ pub mod trainer;
 pub use checkpoint::{finetune_resumable, run_vcycle_resumable, train_resumable,
                      CheckpointManager};
 pub use experiment::{Harness, Method, Run, RunOpts};
-pub use generate::{GenerateRequest, Generation, Generator, Sampler};
+pub use generate::{GenerateRequest, Generation, Generator, Sampler, SpecDecoder,
+                   SpecGeneration, SpecStats};
 pub use serve::{synthetic_trace, ServeEngine, ServeOpts, ServeReport, TrafficSpec};
 pub use metrics::{savings_vs_scratch, Curve, Point, Savings};
 pub use schedule::LrSchedule;

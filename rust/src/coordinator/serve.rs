@@ -32,6 +32,19 @@
 //! outright (fail closed) and reported in
 //! [`ServeReport::rejected`] — it is never admitted late, so a replay
 //! sees the same rejections.
+//!
+//! # Speculative serving
+//!
+//! With [`ServeOpts::spec_draft`] set, every slot also carries a
+//! coalesced-draft record (see [`SpecDecoder`]) and the sweep splits in
+//! two: slots whose remaining context fits a `SPEC_K`-wide verify
+//! window run a speculative round (draft `k` candidates with the small
+//! model, score them all in one `verify_step` call, commit the accepted
+//! prefix — 1..=k tokens per engine step), the rest fall back to the
+//! plain one-token `decode_step` sweep. Greedy acceptance keeps each
+//! request's *tokens* bitwise identical to non-speculative serving;
+//! only finish steps and wall-clock change. Speculation requires greedy
+//! sampling and fails closed when a temperature is set.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -41,10 +54,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::Corpus;
 use crate::obs;
+use crate::runtime::registry::SPEC_K;
 use crate::runtime::{Arg, Exe, Family, ModelCfg, Runtime};
 use crate::util::rng::Rng;
 
-use super::generate::Sampler;
+use super::generate::{greedy_pick, Sampler, SpecDecoder};
 
 /// Parameters of the synthetic-traffic driver: seeded Poisson arrivals
 /// (exponential inter-arrival gaps in engine steps) with uniformly drawn
@@ -147,11 +161,24 @@ pub struct ServeOpts {
     pub temperature: f32,
     /// Base sampler seed; request `id` draws from `seed ^ id`.
     pub seed: u64,
+    /// Coalesced-draft level for speculative decoding (`None` = plain
+    /// serving; requires greedy sampling).
+    pub spec_draft: Option<usize>,
+    /// Candidate tokens per speculative round (`1..=SPEC_K`; ignored
+    /// when `spec_draft` is `None`).
+    pub spec_k: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_batch: usize::MAX, max_queue: 16, temperature: 0.0, seed: 1 }
+        ServeOpts {
+            max_batch: usize::MAX,
+            max_queue: 16,
+            temperature: 0.0,
+            seed: 1,
+            spec_draft: None,
+            spec_k: SPEC_K,
+        }
     }
 }
 
@@ -179,6 +206,14 @@ pub struct ServeReport {
     pub steps: usize,
     pub prefill_calls: usize,
     pub decode_calls: usize,
+    /// `verify_step` calls (0 when serving without speculation).
+    pub verify_calls: usize,
+    /// Draft-model `decode_step` calls (sync + draft feeds).
+    pub draft_calls: usize,
+    /// Draft tokens proposed by the small model.
+    pub drafted_tokens: usize,
+    /// Drafted tokens the verifier accepted.
+    pub accepted_tokens: usize,
     /// Total tokens sampled across all served requests.
     pub generated_tokens: usize,
     /// Wall time of the whole run.
@@ -215,6 +250,15 @@ impl ServeReport {
         }
         self.generated_tokens as f64 / self.wall_secs
     }
+
+    /// Fraction of drafted tokens the verifier accepted (0 when nothing
+    /// was drafted — plain serving or `spec_k = 1`).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.drafted_tokens as f64
+    }
 }
 
 /// A request waiting in the FIFO queue.
@@ -242,6 +286,12 @@ struct Slot {
     /// The slot's decode record (`[logits | kv]`), scattered back after
     /// every batched call.
     rec: Vec<f32>,
+    /// The coalesced-draft record (empty when serving without
+    /// speculation).
+    draft: Vec<f32>,
+    /// The token occupying cache position `len - 1` — the speculative
+    /// round's draft-cache sync feed.
+    prev: i32,
 }
 
 /// Prepared continuous-batching engine for one causal config.
@@ -249,13 +299,17 @@ pub struct ServeEngine {
     cfg: ModelCfg,
     prefill: Rc<Exe>,
     decode: Rc<Exe>,
+    /// Speculative-decoding machinery (`ServeOpts::spec_draft`).
+    spec: Option<SpecDecoder>,
     opts: ServeOpts,
 }
 
 impl ServeEngine {
     /// Prepare the decode artifacts of `config` with the given limits.
     /// `max_batch` is clamped to the artifact batch; both limits must be
-    /// nonzero. Errors clearly for non-causal configs.
+    /// nonzero. Errors clearly for non-causal configs, and for
+    /// speculative serving with a nonzero temperature (the greedy
+    /// contract fails closed).
     pub fn new(rt: &Runtime, config: &str, opts: ServeOpts) -> Result<ServeEngine> {
         let cfg = rt.cfg(config)?.clone();
         if cfg.family != Family::Gpt {
@@ -268,11 +322,21 @@ impl ServeEngine {
         if opts.temperature < 0.0 || !opts.temperature.is_finite() {
             bail!("sampling temperature must be finite and >= 0, got {}", opts.temperature);
         }
+        let spec = match opts.spec_draft {
+            Some(level) => {
+                if opts.temperature > 0.0 {
+                    bail!("speculative serving requires greedy sampling (its contract is \
+                           bitwise greedy-equivalence); got temperature {}", opts.temperature);
+                }
+                Some(SpecDecoder::new(rt, config, level, opts.spec_k)?)
+            }
+            None => None,
+        };
         let mut opts = opts;
         opts.max_batch = opts.max_batch.min(cfg.batch);
         let prefill = rt.exe(&format!("prefill__{config}"))?;
         let decode = rt.exe(&format!("decode_step__{config}"))?;
-        Ok(ServeEngine { cfg, prefill, decode, opts })
+        Ok(ServeEngine { cfg, prefill, decode, spec, opts })
     }
 
     /// The driven config.
@@ -300,6 +364,32 @@ impl ServeEngine {
         slot.next = tok;
         slot.remaining -= 1;
         slot.remaining == 0
+    }
+
+    /// One batched draft-model `decode_step` over a gathered host record
+    /// buffer, rewritten in place (every gathered row is active).
+    fn draft_step(
+        rt: &Runtime,
+        exe: &Rc<Exe>,
+        theta: &[f32],
+        rec: &mut [f32],
+        rec_len: usize,
+        toks: &[i32],
+        lens: &[i32],
+    ) -> Result<()> {
+        let n = toks.len();
+        let out = rt.call(
+            exe,
+            &[
+                Arg::F32(theta, vec![theta.len()]),
+                Arg::F32(rec, vec![n, rec_len]),
+                Arg::I32(toks, vec![n]),
+                Arg::I32(lens, vec![n]),
+            ],
+        )?;
+        let host = out.as_host_f32().context("serving needs a host-resident backend")?;
+        rec.copy_from_slice(host);
+        Ok(())
     }
 
     /// Serve one arrival trace to completion. Each engine step runs, in
@@ -330,6 +420,13 @@ impl ServeEngine {
                        ({s} positions)", r.id, plen, r.max_new);
             }
         }
+
+        // speculative serving: derive the draft theta once per run
+        let spec = match &self.spec {
+            Some(dec) => Some((dec, dec.draft_theta(rt, theta)?)),
+            None => None,
+        };
+        let rec_s = spec.as_ref().map_or(0, |(dec, _)| dec.draft_cfg().decode_rec_len());
 
         let mut report = ServeReport::default();
         let mut queue: VecDeque<Pending> = VecDeque::new();
@@ -369,15 +466,26 @@ impl ServeEngine {
                 });
             }
 
-            // (b) one ragged decode sweep over every occupied slot
-            let active: Vec<usize> = (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
-            if !active.is_empty() {
+            // (b) one ragged sweep over every occupied slot. Under
+            // speculation, slots whose remaining context fits a verify
+            // window (and that still want 2+ tokens) take the
+            // speculative path; the rest take the plain one-token path.
+            let occupied: Vec<usize> = (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
+            let (spec_idx, plain): (Vec<usize>, Vec<usize>) = if spec.is_some() {
+                occupied.into_iter().partition(|&si| {
+                    let sl = slots[si].as_ref().unwrap();
+                    sl.remaining >= 2 && sl.len + SPEC_K <= s
+                })
+            } else {
+                (Vec::new(), occupied)
+            };
+            if !plain.is_empty() {
                 let _sweep = obs::span(obs::SpanKind::ServeSweep);
-                let n = active.len();
+                let n = plain.len();
                 let mut cache = Vec::with_capacity(n * rec);
                 let mut toks = Vec::with_capacity(n);
                 let mut lens = Vec::with_capacity(n);
-                for &si in &active {
+                for &si in &plain {
                     let sl = slots[si].as_ref().unwrap();
                     cache.extend_from_slice(&sl.rec);
                     toks.push(sl.next);
@@ -394,9 +502,10 @@ impl ServeEngine {
                 )?;
                 report.decode_calls += 1;
                 let host = out.as_host_f32().context("serving needs a host-resident backend")?;
-                for (row, &si) in active.iter().enumerate() {
+                for (row, &si) in plain.iter().enumerate() {
                     let sl = slots[si].as_mut().unwrap();
                     sl.rec.copy_from_slice(&host[row * rec..(row + 1) * rec]);
+                    sl.prev = sl.next;
                     sl.len += 1;
                     report.generated_tokens += 1;
                     if Self::sample(sl, &host[row * rec..row * rec + v]) {
@@ -409,6 +518,130 @@ impl ServeEngine {
                             tokens: sl.tokens,
                         });
                     }
+                }
+            }
+            if !spec_idx.is_empty() {
+                let (dec, theta_small) = spec.as_ref().unwrap();
+                let _sweep = obs::span(obs::SpanKind::ServeSweep);
+                let k = dec.k();
+                let vrec = (SPEC_K + 1) * v + self.cfg.kv_cache_len();
+                let n = spec_idx.len();
+                // gather both records; candidate 0 is the full model's
+                // own already-sampled next token
+                let mut big = Vec::with_capacity(n * rec);
+                let mut small = Vec::with_capacity(n * rec_s);
+                let mut cand = vec![0i32; n * SPEC_K];
+                let mut toks = Vec::with_capacity(n);
+                let mut lens = Vec::with_capacity(n);
+                for (row, &si) in spec_idx.iter().enumerate() {
+                    let sl = slots[si].as_ref().unwrap();
+                    big.extend_from_slice(&sl.rec);
+                    small.extend_from_slice(&sl.draft);
+                    cand[row * SPEC_K] = sl.next;
+                    // draft-cache sync: re-feed the token at `len - 1`
+                    toks.push(sl.prev);
+                    lens.push(sl.len as i32 - 1);
+                }
+                Self::draft_step(rt, dec.decode_small_exe(), theta_small, &mut small, rec_s,
+                                 &toks, &lens)?;
+                report.draft_calls += 1;
+                // draft c_1 .. c_{k-1} greedily with the small model
+                for j in 1..k {
+                    for (row, &si) in spec_idx.iter().enumerate() {
+                        let sl = slots[si].as_ref().unwrap();
+                        toks[row] = cand[row * SPEC_K + j - 1];
+                        lens[row] = (sl.len + j - 1) as i32;
+                    }
+                    Self::draft_step(rt, dec.decode_small_exe(), theta_small, &mut small,
+                                     rec_s, &toks, &lens)?;
+                    report.draft_calls += 1;
+                    for row in 0..n {
+                        cand[row * SPEC_K + j] =
+                            greedy_pick(&small[row * rec_s..row * rec_s + v]) as i32;
+                    }
+                }
+                // pad unused candidate slots (the artifact consumes all
+                // SPEC_K; padded blocks are computed but never accepted)
+                for row in 0..n {
+                    for j in k..SPEC_K {
+                        cand[row * SPEC_K + j] = cand[row * SPEC_K + k - 1];
+                    }
+                }
+                // one full-model pass verifies every candidate
+                for (row, &si) in spec_idx.iter().enumerate() {
+                    lens[row] = slots[si].as_ref().unwrap().len as i32;
+                }
+                let out = rt.call(
+                    dec.verify_exe(),
+                    &[
+                        Arg::F32(theta, vec![theta.len()]),
+                        Arg::F32(&big, vec![n, rec]),
+                        Arg::I32(&cand, vec![n, SPEC_K]),
+                        Arg::I32(&lens, vec![n]),
+                    ],
+                )?;
+                report.verify_calls += 1;
+                let host = out.as_host_f32().context("serving needs a host-resident backend")?;
+                let mut round_accepted = 0usize;
+                for (row, &si) in spec_idx.iter().enumerate() {
+                    let sl = slots[si].as_mut().unwrap();
+                    sl.draft.copy_from_slice(&small[row * rec_s..(row + 1) * rec_s]);
+                    let vr = &host[row * vrec..(row + 1) * vrec];
+                    // longest candidate prefix matching the verifier's
+                    // own argmax chain (c_0 matches by construction)
+                    let mut m = 0usize;
+                    while m + 1 < k {
+                        let block = &vr[(m + 1) * v..(m + 2) * v];
+                        if cand[row * SPEC_K + m + 1] != greedy_pick(block) as i32 {
+                            break;
+                        }
+                        m += 1;
+                    }
+                    report.drafted_tokens += k - 1;
+                    report.accepted_tokens += m;
+                    round_accepted += m;
+                    // commit the accepted drafts, then sample the next
+                    // token from the verifier's logits at the acceptance
+                    // point — every pushed token is the full model's own
+                    // argmax at its position
+                    let mut finished = false;
+                    for j in 1..=m {
+                        sl.tokens.push(cand[row * SPEC_K + j]);
+                        sl.remaining -= 1;
+                        report.generated_tokens += 1;
+                        if sl.remaining == 0 {
+                            finished = true;
+                            break;
+                        }
+                    }
+                    if !finished {
+                        let tok = greedy_pick(&vr[(m + 1) * v..(m + 2) * v]) as i32;
+                        sl.tokens.push(tok);
+                        sl.next = tok;
+                        sl.remaining -= 1;
+                        report.generated_tokens += 1;
+                        finished = sl.remaining == 0;
+                    }
+                    // adopt the verifier's logits and advanced cache;
+                    // rows past the acceptance point hold rejected
+                    // candidates but are always rewritten before read
+                    sl.rec[..v].copy_from_slice(&vr[(m + 1) * v..(m + 2) * v]);
+                    sl.rec[v..].copy_from_slice(&vr[(SPEC_K + 1) * v..]);
+                    sl.prev = cand[row * SPEC_K + m];
+                    sl.len += m + 1;
+                    if finished {
+                        let sl = slots[si].take().unwrap();
+                        report.served.push(Served {
+                            id: sl.id,
+                            arrival_step: sl.arrival_step,
+                            finish_step: step,
+                            latency_secs: sl.enqueued.elapsed().as_secs_f64(),
+                            tokens: sl.tokens,
+                        });
+                    }
+                }
+                if obs::active() {
+                    obs::metrics::spec_tokens(((k - 1) * n) as u64, round_accepted as u64);
                 }
             }
 
@@ -434,6 +667,8 @@ impl ServeEngine {
                         tokens: Vec::with_capacity(p.max_new),
                         sampler: self.sampler_for(p.id)?,
                         rec: vec![0.0; rec],
+                        draft: vec![0.0; rec_s],
+                        prev: p.prompt[plen - 1],
                     });
                     // the prompt rides along only until the prefill below
                     admitted.push((si, p.prompt));
@@ -471,6 +706,28 @@ impl ServeEngine {
                             latency_secs: sl.enqueued.elapsed().as_secs_f64(),
                             tokens: sl.tokens,
                         });
+                    }
+                }
+                // speculative serving: prefill the draft records over the
+                // same admitted rows (slots that already finished on
+                // their first sample just skip the scatter)
+                if let Some((dec, theta_small)) = &spec {
+                    let sout = rt.call(
+                        dec.prefill_small_exe(),
+                        &[
+                            Arg::F32(theta_small, vec![theta_small.len()]),
+                            Arg::I32(&tokens, vec![n, s]),
+                            Arg::I32(&lens, vec![n]),
+                        ],
+                    )?;
+                    report.prefill_calls += 1;
+                    let shost =
+                        sout.as_host_f32().context("serving needs a host-resident backend")?;
+                    for (row, &(si, _)) in admitted.iter().enumerate() {
+                        if let Some(sl) = slots[si].as_mut() {
+                            sl.draft
+                                .copy_from_slice(&shost[row * rec_s..(row + 1) * rec_s]);
+                        }
                     }
                 }
             }
@@ -523,6 +780,8 @@ fn emit_serve_tick(
         p99_ms: report.p99_ms(),
         tokens_per_sec: if wall > 0.0 { report.generated_tokens as f64 / wall } else { 0.0 },
         lat_hist,
+        spec_drafted: report.drafted_tokens as u64,
+        spec_accepted: report.accepted_tokens as u64,
     });
 }
 
@@ -613,6 +872,72 @@ mod tests {
         let ids: Vec<usize> = rep.served.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1], "FIFO completion under a single slot");
         assert_eq!(ids.len() + rep.rejected.len(), trace.len());
+    }
+
+    #[test]
+    fn speculative_serving_is_bitwise_greedy_identical() {
+        let rt = Runtime::reference();
+        let cfg = rt.cfg("gpt_nano").unwrap().clone();
+        let theta = init_theta(&cfg, 5);
+        // short prompts with room for several spec rounds per request
+        let trace: Vec<TraceRequest> = (0..6)
+            .map(|id| TraceRequest {
+                id,
+                arrival_step: id / 2,
+                prompt: (0..2 + id % 3).map(|t| ((id * 7 + t) % cfg.vocab) as i32).collect(),
+                max_new: 8,
+            })
+            .collect();
+        let opts = || ServeOpts { max_queue: 8, ..ServeOpts::default() };
+        let plain = ServeEngine::new(&rt, "gpt_nano", opts())
+            .unwrap()
+            .run(&rt, &theta, &trace)
+            .unwrap();
+        let eng = ServeEngine::new(
+            &rt,
+            "gpt_nano",
+            ServeOpts { spec_draft: Some(2), spec_k: 3, ..opts() },
+        )
+        .unwrap();
+        let rep = eng.run(&rt, &theta, &trace).unwrap();
+        assert!(rep.verify_calls > 0, "no speculative round ran");
+        assert!(rep.draft_calls > 0 && rep.drafted_tokens > 0);
+        assert!(rep.accepted_tokens <= rep.drafted_tokens);
+        let rate = rep.acceptance_rate();
+        assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate}");
+        // per-request tokens are a pure function of the greedy chain:
+        // bitwise identical to plain serving, whatever the scheduling
+        let key = |r: &ServeReport| {
+            let mut v: Vec<(usize, Vec<i32>)> =
+                r.served.iter().map(|x| (x.id, x.tokens.clone())).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(key(&plain), key(&rep), "speculation must not change greedy tokens");
+        assert_eq!(rep.generated_tokens, plain.generated_tokens);
+        assert!(rep.rejected.is_empty() && plain.rejected.is_empty());
+    }
+
+    #[test]
+    fn speculative_serving_fails_closed_on_temperature() {
+        let rt = Runtime::reference();
+        let err = ServeEngine::new(
+            &rt,
+            "gpt_nano",
+            ServeOpts { spec_draft: Some(2), temperature: 0.7, ..ServeOpts::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("greedy"), "{err}");
+        // bad spec parameters surface the SpecDecoder's own errors
+        let err = ServeEngine::new(
+            &rt,
+            "gpt_nano",
+            ServeOpts { spec_draft: Some(2), spec_k: 9, ..ServeOpts::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--spec-k"), "{err}");
     }
 
     #[test]

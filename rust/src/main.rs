@@ -19,7 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use multilevel::coordinator::{finetune_resumable, run_vcycle_resumable, synthetic_trace,
                               train_resumable, CheckpointManager, GenerateRequest, Generator,
                               Harness, Method, RunOpts, Sampler, ServeEngine, ServeOpts,
-                              Trainer, TrafficSpec};
+                              SpecDecoder, Trainer, TrafficSpec};
 use multilevel::experiments;
 use multilevel::info;
 use multilevel::obs;
@@ -44,10 +44,15 @@ dump-plan|list> [options]
   exp    <id|all> [--steps <n>] [--seeds <n>] [--out <dir>]
   generate --config <name> [--prompt-len <p>] [--gen <n>] [--temperature <t>]
            [--seed <n>] [--ckpt <path>]   (t = 0 -> greedy)
+           [--spec-draft <level>] [--spec-k <k>]   (coalesced-draft
+           speculative decoding: draft with the level-<level> coalesced
+           geometry, verify k tokens per round; greedy only, tokens
+           bitwise identical to plain greedy decode)
   serve  --config <name> [--requests <n>] [--interarrival <steps>]
          [--max-batch <b>] [--max-queue <q>] [--temperature <t>]
          [--seed <n>] [--ckpt <path>]   (continuous batching under a
          seeded synthetic trace; replays are bit-identical)
+         [--spec-draft <level>] [--spec-k <k>]   (speculative sweeps)
   bench-step --config <name> [--steps <n>]
   report <metrics.jsonl>        summarize a --metrics journal (top spans,
                                 MFU per phase, straggler skew, serve latency)
@@ -345,20 +350,58 @@ fn cmd_generate(args: &Args, common: &CommonArgs) -> Result<()> {
     } else {
         Sampler::greedy()
     };
-    let g = Generator::new(&rt, &config)?;
+    // strict parse: a bad --spec-draft / --spec-k is a CLI error, never a
+    // silent fallback to plain decoding
+    let spec_draft = args.usize_res("spec-draft").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    let spec_k = args.usize_res("spec-k").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    if spec_k.is_some() && spec_draft.is_none() {
+        bail!("--spec-k requires --spec-draft <level>\n{USAGE}");
+    }
     println!("device: {}", rt.device_info());
+    let print_tokens = |tokens: &[Vec<i32>]| {
+        for (bi, toks) in tokens.iter().enumerate() {
+            let p: Vec<String> = prompts[bi * prompt_len..(bi + 1) * prompt_len]
+                .iter()
+                .map(i32::to_string)
+                .collect();
+            let t: Vec<String> = toks.iter().map(i32::to_string).collect();
+            println!("req {bi}: {} | {}", p.join(" "), t.join(" "));
+        }
+    };
+    if let Some(level) = spec_draft {
+        let dec = SpecDecoder::new(
+            &rt,
+            &config,
+            level,
+            spec_k.unwrap_or(multilevel::runtime::registry::SPEC_K),
+        )?;
+        let req = GenerateRequest::new(&prompts, prompt_len)
+            .max_new_tokens(gen)
+            .sampler(sampler);
+        let out = dec.generate(&rt, &theta, req)?;
+        print_tokens(&out.tokens);
+        println!(
+            "spec decode (draft {}, k={}): {} verify + {} draft + {} plain calls in \
+             {:.2} ms ({:.0} tokens/s); {} of {} drafts accepted ({:.0}% acceptance)",
+            dec.draft_cfg().name,
+            dec.k(),
+            out.stats.verify_calls,
+            out.stats.draft_steps,
+            out.stats.plain_steps,
+            out.decode_secs * 1e3,
+            out.tokens_per_sec(),
+            out.stats.accepted,
+            out.stats.drafted,
+            out.stats.acceptance_rate() * 100.0,
+        );
+        return Ok(());
+    }
+    let g = Generator::new(&rt, &config)?;
     let req = GenerateRequest::new(&prompts, prompt_len)
         .max_new_tokens(gen)
         .sampler(sampler);
     let out = g.generate(&rt, &theta, req)?;
-    for (bi, toks) in out.tokens.iter().enumerate() {
-        let p: Vec<String> = prompts[bi * prompt_len..(bi + 1) * prompt_len]
-            .iter()
-            .map(i32::to_string)
-            .collect();
-        let t: Vec<String> = toks.iter().map(i32::to_string).collect();
-        println!("req {bi}: {} | {}", p.join(" "), t.join(" "));
-    }
+    print_tokens(&out.tokens);
     println!(
         "prefill {}x{prompt_len} tokens in {:.2} ms; {} decode steps in {:.2} ms \
          ({:.0} tokens/s steady-state)",
@@ -385,11 +428,18 @@ fn cmd_serve(args: &Args, common: &CommonArgs) -> Result<()> {
         ..TrafficSpec::quick(seed, args.usize_or("requests", 32))
     };
     let trace = synthetic_trace(&cfg, &spec)?;
+    let spec_draft = args.usize_res("spec-draft").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    let spec_k = args.usize_res("spec-k").map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+    if spec_k.is_some() && spec_draft.is_none() {
+        bail!("--spec-k requires --spec-draft <level>\n{USAGE}");
+    }
     let opts = ServeOpts {
         max_batch: args.usize_or("max-batch", cfg.batch),
         max_queue: args.usize_or("max-queue", 2 * cfg.batch),
         temperature: args.f64_or("temperature", 0.0) as f32,
         seed,
+        spec_draft,
+        spec_k: spec_k.unwrap_or(multilevel::runtime::registry::SPEC_K),
     };
     let eng = ServeEngine::new(&rt, &config, opts)?;
     println!("device: {}", rt.device_info());
@@ -419,6 +469,17 @@ fn cmd_serve(args: &Args, common: &CommonArgs) -> Result<()> {
         rep.p50_ms(),
         rep.p99_ms(),
     );
+    if spec_draft.is_some() {
+        println!(
+            "speculation: {} verify + {} draft calls; {} of {} drafts accepted \
+             ({:.0}% acceptance)",
+            rep.verify_calls,
+            rep.draft_calls,
+            rep.accepted_tokens,
+            rep.drafted_tokens,
+            rep.acceptance_rate() * 100.0,
+        );
+    }
     Ok(())
 }
 

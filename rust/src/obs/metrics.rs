@@ -77,6 +77,22 @@ pub fn serve_reject() {
     SERVE_REJECTS.fetch_add(1, Ordering::Relaxed);
 }
 
+// Speculative-decoding counters (serve engine + SpecDecoder callers).
+static SPEC_DRAFTED: AtomicU64 = AtomicU64::new(0);
+static SPEC_ACCEPTED: AtomicU64 = AtomicU64::new(0);
+
+/// Account one speculative round's tokens: `drafted` proposed by the
+/// draft model, `accepted` of them kept by the verifier.
+pub fn spec_tokens(drafted: u64, accepted: u64) {
+    SPEC_DRAFTED.fetch_add(drafted, Ordering::Relaxed);
+    SPEC_ACCEPTED.fetch_add(accepted, Ordering::Relaxed);
+}
+
+/// Cumulative (drafted, accepted) speculative token counts.
+pub fn spec_counts() -> (u64, u64) {
+    (SPEC_DRAFTED.load(Ordering::Relaxed), SPEC_ACCEPTED.load(Ordering::Relaxed))
+}
+
 // Cumulative analytic FLOPs journaled so far (integral, so a u64 suffices).
 static FLOPS_CUM: AtomicU64 = AtomicU64::new(0);
 
@@ -95,6 +111,8 @@ pub fn reset_metrics() {
         &SERVE_QUEUE_DEPTH,
         &SERVE_SLOTS_BUSY,
         &SERVE_REJECTS,
+        &SPEC_DRAFTED,
+        &SPEC_ACCEPTED,
         &FLOPS_CUM,
     ] {
         g.store(0, Ordering::SeqCst);
@@ -317,6 +335,10 @@ pub struct ServeTickObs {
     pub tokens_per_sec: f64,
     /// log2-ms completed-request latency histogram (see `lat_bucket`).
     pub lat_hist: [u64; LAT_BUCKETS],
+    /// Draft tokens proposed so far (0 when serving without speculation).
+    pub spec_drafted: u64,
+    /// Draft tokens the verifier accepted so far.
+    pub spec_accepted: u64,
 }
 
 /// Build one `row:"serve"` journal row.
@@ -332,6 +354,16 @@ pub fn serve_row(o: &ServeTickObs) -> Json {
         ("p50_ms", json::num(o.p50_ms)),
         ("p99_ms", json::num(o.p99_ms)),
         ("tokens_per_sec", json::num(o.tokens_per_sec)),
+        ("spec_drafted", json::num(o.spec_drafted as f64)),
+        ("spec_accepted", json::num(o.spec_accepted as f64)),
+        (
+            "spec_acceptance",
+            json::num(if o.spec_drafted == 0 {
+                0.0
+            } else {
+                o.spec_accepted as f64 / o.spec_drafted as f64
+            }),
+        ),
         (
             "lat_hist_log2ms",
             json::arr(o.lat_hist.iter().map(|&c| json::num(c as f64)).collect()),

@@ -339,7 +339,7 @@ impl Manifest {
             // a bidirectional (BERT) or non-sequence (ViT) config has no
             // valid KV-cache mask, so reject it here instead of producing
             // silently wrong attention downstream
-            if matches!(art.kind.as_str(), "prefill" | "decode_step") {
+            if matches!(art.kind.as_str(), "prefill" | "decode_step" | "verify_step") {
                 let fam = self.configs.get(&art.config).map(|c| c.family);
                 if fam != Some(Family::Gpt) {
                     bail!(

@@ -146,6 +146,16 @@ mod tests {
         assert!(p.ends_with("lens:int32[4]"), "prefill lens not canonical: {p}");
         let d = arts.iter().find(|l| l.contains("decode_step__gpt_nano ")).unwrap();
         assert!(d.ends_with("lens:int32[4]"), "decode_step lens not canonical: {d}");
+        // the speculative verifier adds the [batch, SPEC_K] candidate matrix
+        let v = arts.iter().find(|l| l.contains("verify_step__gpt_nano ")).unwrap();
+        assert!(
+            v.contains("cand:int32[4x4]") && v.ends_with("lens:int32[4]"),
+            "verify_step inputs not canonical: {v}"
+        );
+        assert!(
+            v.contains("kind=verify_step config=gpt_nano config_small=- meta=shard=batch"),
+            "verify_step line not canonical: {v}"
+        );
         let ft = arts.iter().find(|l| l.contains("ft_grad__bert_nano")).unwrap();
         assert!(ft.contains("meta=n_classes=4;n_ft="), "meta not canonical: {ft}");
     }

@@ -28,6 +28,15 @@
 //!   K/V to that request's cache and scores attention against its cached
 //!   positions `0..=lens[bi]` — O(len) work in the sequence length, never
 //!   a full-sequence recompute.
+//! * [`verify_step_into`] is the speculative-decode verifier: `k`
+//!   candidate tokens per request in, next-token logits at **all** `k + 1`
+//!   positions out, in one batched forward. All `b·k` candidate positions
+//!   go through every layer's GEMMs together (a mini-prefill over the new
+//!   positions with the pre-existing cache), so the model weights stream
+//!   through memory once per layer instead of once per candidate — the
+//!   source of the speculative speedup. Because every per-row kernel is
+//!   bitwise row-independent, the emitted logits and cache rows are
+//!   bit-identical to `k` sequential [`decode_step_into`] calls.
 //!
 //! # Determinism and allocation
 //!
@@ -402,6 +411,272 @@ pub fn decode_step(
     Ok(out)
 }
 
+/// Offset of layer `l`'s K (`kv = 0`) or V (`kv = 1`) row for position `p`
+/// inside one request's *verify* record, whose cache block follows `k + 1`
+/// logits blocks: `[(k+1)·vocab logits | kv (n_layer · 2 · seq_len · d)]`.
+#[inline]
+fn verify_kv_off(cfg: &ModelCfg, k: usize, l: usize, kv: usize, p: usize) -> usize {
+    (k + 1) * cfg.vocab + ((l * 2 + kv) * cfg.seq_len + p) * cfg.d_model
+}
+
+/// [`decode_attention`] generalized to the verify layout: `q` holds `b·k`
+/// query rows (candidate `ki` of request `bi` at row `bi·k + ki`), and row
+/// `(bi, ki)` scores its own request's cached positions
+/// `0..=lens[bi] + ki` inside `rec_buf`'s verify records. Per-task math is
+/// identical to the decode path, so each row's output is bit-identical to
+/// a sequential decode step at that position.
+#[allow(clippy::too_many_arguments)]
+fn verify_attention(
+    q: &[f32],
+    rec_buf: &[f32],
+    cfg: &ModelCfg,
+    l: usize,
+    k: usize,
+    lens: &[i32],
+    b: usize,
+    scores: &mut [f32],
+    att: &mut [f32],
+) {
+    let (d, s) = (cfg.d_model, cfg.seq_len);
+    let (nh, hd) = (cfg.n_head, cfg.head_dim);
+    let vrec = (k + 1) * cfg.vocab + cfg.kv_cache_len();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let tasks = b * k * nh;
+    debug_assert!(scores.len() >= tasks * s);
+    let scored: usize =
+        lens.iter().map(|&l| k * (l as usize) + k * (k + 1) / 2).sum();
+    let patt = SendPtr(att.as_mut_ptr());
+    let pscr = SendPtr(scores.as_mut_ptr());
+    let st = simd::tier();
+    parallel_for_min(2 * nh * scored * hd, tasks, |task| {
+        let row = task / nh;
+        let h = task % nh;
+        let (bi, ki) = (row / k, row % k);
+        let len = lens[bi] as usize + ki;
+        let c0 = h * hd;
+        let qrow = &q[row * d + c0..row * d + c0 + hd];
+        let k0 = bi * vrec + verify_kv_off(cfg, k, l, 0, 0);
+        let v0 = bi * vrec + verify_kv_off(cfg, k, l, 1, 0);
+        // SAFETY: task (row, h) exclusively owns score slot `task` and the
+        // att columns [c0, c0+hd) of row `row`.
+        let sc = unsafe { pscr.slice_mut(task * s, len + 1) };
+        let mut max = f32::NEG_INFINITY;
+        for (t, stv) in sc.iter_mut().enumerate() {
+            let krow = &rec_buf[k0 + t * d + c0..k0 + t * d + c0 + hd];
+            *stv = simd::dot(st, qrow, krow) * scale;
+            if *stv > max {
+                max = *stv;
+            }
+        }
+        let mut denom = 0.0f32;
+        for stv in sc.iter_mut() {
+            *stv = (*stv - max).exp();
+            denom += *stv;
+        }
+        let orow = unsafe { patt.slice_mut(row * d + c0, hd) };
+        orow.fill(0.0);
+        for (t, &stv) in sc.iter().enumerate() {
+            let p = stv / denom;
+            let vrow = &rec_buf[v0 + t * d + c0..v0 + t * d + c0 + hd];
+            simd::axpy(st, p, vrow, orow);
+        }
+    });
+}
+
+/// The `verify_step__*` artifact: the speculative-decode verifier. Takes
+/// the current decode records, `k` candidate tokens per request (`cand`,
+/// `[b, k]`, candidate `ki` occupying position `lens[bi] + ki`) and the
+/// per-request cache lengths; produces one *verify record* per request:
+///
+/// ```text
+///   [ logits_0 (vocab) | logits_1 | … | logits_k | kv cache ]
+/// ```
+///
+/// `logits_0` is a copy of the incoming record's next-token logits (the
+/// distribution that proposed candidate 0); `logits_i` (`1 <= i <= k`) is
+/// the full model's next-token distribution after consuming candidates
+/// `0..i`; the cache block holds the input cache advanced by all `k`
+/// candidate rows. A speculative decoder accepts the longest prefix where
+/// `argmax(logits_i)` confirms the next candidate, then rolls the cache
+/// back to the accepted position by shrinking `lens` — stale rows beyond a
+/// request's length are never read.
+///
+/// All `b·k` candidate positions advance through the backbone **together**
+/// (per-layer GEMMs over `b·k` rows), so theta streams through memory once
+/// per layer rather than once per candidate; every per-row kernel is
+/// bitwise row-independent, making the output bit-identical to `k`
+/// sequential [`decode_step_into`] calls.
+pub fn verify_step_into(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    cache_in: &[f32],
+    cand: &[i32],
+    lens: &[i32],
+    ws: &mut Workspace,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    require_causal(cfg, "verify_step")?;
+    if theta.len() != cfg.n_params {
+        bail!("verify_step theta has {} elements, config {} needs {}", theta.len(), cfg.name,
+              cfg.n_params);
+    }
+    let rec = cfg.decode_rec_len();
+    if rec == 0 || cache_in.len() % rec != 0 {
+        bail!("verify_step cache of {} elements is not a multiple of the {rec}-element \
+               record", cache_in.len());
+    }
+    let b = cache_in.len() / rec;
+    if b == 0 || cand.len() < b || cand.len() % b != 0 {
+        bail!("verify_step has {b} records but {} candidate tokens", cand.len());
+    }
+    let k = cand.len() / b;
+    let s = cfg.seq_len;
+    if lens.len() != b {
+        bail!("verify_step has {b} records but {} lengths", lens.len());
+    }
+    if let Some((bi, &l)) =
+        lens.iter().enumerate().find(|&(_, &l)| l < 0 || l as usize + k > s)
+    {
+        bail!("verify_step candidate positions {l}..{} for request {bi} exceed the \
+               learned context ({s} positions)", l as i64 + k as i64 - 1);
+    }
+    check_tokens(cfg, cand)?;
+
+    let off = Offsets::resolve(cfg)?;
+    let (d, dff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let nh = cfg.n_head;
+    let vrec = (k + 1) * v + cfg.kv_cache_len();
+    let bk = b * k;
+
+    // assemble the output records: logits block 0 copies the incoming
+    // next-token logits, blocks 1..=k stay zero until the final scatter,
+    // and the cache block starts as a copy of the input cache
+    out.clear();
+    out.resize(b * vrec, 0.0);
+    for bi in 0..b {
+        let r0 = bi * vrec;
+        out[r0..r0 + v].copy_from_slice(&cache_in[bi * rec..bi * rec + v]);
+        let kv0 = r0 + (k + 1) * v;
+        out[kv0..kv0 + cfg.kv_cache_len()]
+            .copy_from_slice(&cache_in[bi * rec + v..(bi + 1) * rec]);
+    }
+
+    // embed candidate ki of request bi at its own position lens[bi] + ki
+    let mut h = ws.take(bk * d);
+    for bi in 0..b {
+        for ki in 0..k {
+            let tok = cand[bi * k + ki] as usize;
+            let pos = lens[bi] as usize + ki;
+            let row = bi * k + ki;
+            let hrow = &mut h[row * d..(row + 1) * d];
+            let erow = &theta[off.emb + tok * d..off.emb + (tok + 1) * d];
+            let prow = &theta[off.pos + pos * d..off.pos + (pos + 1) * d];
+            for j in 0..d {
+                hrow[j] = erow[j] + prow[j];
+            }
+        }
+    }
+
+    // same kernel sequence as decode_step_into, over b·k rows at once
+    let mut xhat = ws.take(bk * d);
+    let mut rstd = ws.take(bk);
+    let mut x1 = ws.take(bk * d);
+    let mut q = ws.take(bk * d);
+    let mut kk = ws.take(bk * d);
+    let mut vv = ws.take(bk * d);
+    let mut att = ws.take(bk * d);
+    let mut u = ws.take(bk * dff);
+    let mut g = ws.take(bk * dff);
+    let mut scores = ws.take(bk * nh * s);
+    let st = simd::tier();
+    for l in 0..cfg.n_layer {
+        let ln1_w = &theta[off.ln1_w + l * d..off.ln1_w + (l + 1) * d];
+        let ln1_b = &theta[off.ln1_b + l * d..off.ln1_b + (l + 1) * d];
+        layernorm_fwd(&h, ln1_w, ln1_b, bk, d, &mut xhat, &mut rstd, &mut x1);
+
+        matmul(&mut q, &x1, &theta[off.wq + l * d * d..off.wq + (l + 1) * d * d], bk, d, d);
+        matmul(&mut kk, &x1, &theta[off.wk + l * d * d..off.wk + (l + 1) * d * d], bk, d, d);
+        matmul(&mut vv, &x1, &theta[off.wv + l * d * d..off.wv + (l + 1) * d * d], bk, d, d);
+        add_bias(&mut q, &theta[off.bq + l * d..off.bq + (l + 1) * d], bk, d);
+        add_bias(&mut kk, &theta[off.bk + l * d..off.bk + (l + 1) * d], bk, d);
+        add_bias(&mut vv, &theta[off.bv + l * d..off.bv + (l + 1) * d], bk, d);
+
+        // append every candidate's K/V rows at its own position — written
+        // before attention runs, so row (bi, ki) reads its own request's
+        // earlier candidates exactly like sequential decode steps would
+        for bi in 0..b {
+            let r0 = bi * vrec;
+            for ki in 0..k {
+                let row = bi * k + ki;
+                let pos = lens[bi] as usize + ki;
+                let kd = r0 + verify_kv_off(cfg, k, l, 0, pos);
+                out[kd..kd + d].copy_from_slice(&kk[row * d..(row + 1) * d]);
+                let vd = r0 + verify_kv_off(cfg, k, l, 1, pos);
+                out[vd..vd + d].copy_from_slice(&vv[row * d..(row + 1) * d]);
+            }
+        }
+
+        verify_attention(&q, out, cfg, l, k, lens, b, &mut scores, &mut att);
+
+        matmul_acc(&mut h, &att, &theta[off.wo + l * d * d..off.wo + (l + 1) * d * d], bk, d, d);
+        add_bias(&mut h, &theta[off.bo + l * d..off.bo + (l + 1) * d], bk, d);
+
+        let ln2_w = &theta[off.ln2_w + l * d..off.ln2_w + (l + 1) * d];
+        let ln2_b = &theta[off.ln2_b + l * d..off.ln2_b + (l + 1) * d];
+        layernorm_fwd(&h, ln2_w, ln2_b, bk, d, &mut xhat, &mut rstd, &mut x1);
+        matmul(&mut u, &x1, &theta[off.fc1_w + l * d * dff..off.fc1_w + (l + 1) * d * dff], bk,
+               d, dff);
+        add_bias(&mut u, &theta[off.fc1_b + l * dff..off.fc1_b + (l + 1) * dff], bk, dff);
+        simd::gelu_map(st, &u, &mut g);
+        matmul_acc(&mut h, &g, &theta[off.fc2_w + l * dff * d..off.fc2_w + (l + 1) * dff * d],
+                   bk, dff, d);
+        add_bias(&mut h, &theta[off.fc2_b + l * d..off.fc2_b + (l + 1) * d], bk, d);
+    }
+
+    // final LN + head over all candidate rows, scattered into each
+    // request's logits blocks 1..=k
+    let lnf_w = &theta[off.lnf_w..off.lnf_w + d];
+    let lnf_b = &theta[off.lnf_b..off.lnf_b + d];
+    layernorm_fwd(&h, lnf_w, lnf_b, bk, d, &mut xhat, &mut rstd, &mut x1);
+    let mut logits = ws.take(bk * v);
+    matmul(&mut logits, &x1, &theta[off.head_w..off.head_w + d * v], bk, d, v);
+    add_bias(&mut logits, &theta[off.head_b..off.head_b + v], bk, v);
+    for bi in 0..b {
+        for ki in 0..k {
+            let row = bi * k + ki;
+            let dst = bi * vrec + (ki + 1) * v;
+            out[dst..dst + v].copy_from_slice(&logits[row * v..(row + 1) * v]);
+        }
+    }
+
+    ws.give(logits);
+    ws.give(scores);
+    ws.give(g);
+    ws.give(u);
+    ws.give(att);
+    ws.give(vv);
+    ws.give(kk);
+    ws.give(q);
+    ws.give(x1);
+    ws.give(rstd);
+    ws.give(xhat);
+    ws.give(h);
+    Ok(())
+}
+
+/// [`verify_step_into`] with a private scratch arena (test/utility entry).
+pub fn verify_step(
+    cfg: &ModelCfg,
+    theta: &[f32],
+    cache_in: &[f32],
+    cand: &[i32],
+    lens: &[i32],
+) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    verify_step_into(cfg, theta, cache_in, cand, lens, &mut Workspace::new(), &mut out)?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -554,5 +829,89 @@ mod tests {
         assert!(err.contains("causal"), "{err}");
         let err = decode_step(&bert, &theta, &[0.0], &[0], &[0]).unwrap_err().to_string();
         assert!(err.contains("causal"), "{err}");
+        let err = verify_step(&bert, &theta, &[0.0], &[0], &[0]).unwrap_err().to_string();
+        assert!(err.contains("causal"), "{err}");
+    }
+
+    #[test]
+    fn verify_step_matches_sequential_decode_steps_bitwise() {
+        // one batched verify over k candidates must reproduce k sequential
+        // decode steps bit for bit: logits block i == the i-th step's
+        // logits, and the final cache block == the k-th step's cache
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 6);
+        let tokens = toks(&cfg, 19);
+        let (b, s, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+        let rec = cfg.decode_rec_len();
+        let plen = s / 2;
+        let lens: Vec<i32> = (0..b).map(|bi| (1 + bi % plen) as i32).collect();
+        let recs = prefill(&cfg, &theta, &tokens, &lens).unwrap();
+        for k in [1usize, 2, 4] {
+            let cand: Vec<i32> = (0..b)
+                .flat_map(|bi| {
+                    (0..k).map(move |ki| ((bi * 5 + ki * 3) % 7) as i32)
+                })
+                .collect();
+            let ver = verify_step(&cfg, &theta, &recs, &cand, &lens).unwrap();
+            let vrec = (k + 1) * v + cfg.kv_cache_len();
+            assert_eq!(ver.len(), b * vrec);
+            let mut cache = recs.clone();
+            let mut step_lens = lens.clone();
+            for ki in 0..k {
+                // block 0 is the incoming logits; block ki+1 must equal the
+                // (ki+1)-th sequential step's logits
+                for bi in 0..b {
+                    let blk = &ver[bi * vrec + ki * v..bi * vrec + (ki + 1) * v];
+                    let want = &cache[bi * rec..bi * rec + v];
+                    let got: Vec<u32> = blk.iter().map(|x| x.to_bits()).collect();
+                    let wantb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, wantb, "k={k} block {ki} request {bi} logits diverged");
+                }
+                let tok: Vec<i32> = (0..b).map(|bi| cand[bi * k + ki]).collect();
+                cache = decode_step(&cfg, &theta, &cache, &tok, &step_lens).unwrap();
+                for l in step_lens.iter_mut() {
+                    *l += 1;
+                }
+            }
+            for bi in 0..b {
+                // final logits block and the advanced cache
+                let got: Vec<u32> = ver[bi * vrec + k * v..bi * vrec + (k + 1) * v]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let want: Vec<u32> =
+                    cache[bi * rec..bi * rec + v].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "k={k} final logits of request {bi} diverged");
+                let gkv: Vec<u32> = ver
+                    [bi * vrec + (k + 1) * v..(bi + 1) * vrec]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let wkv: Vec<u32> = cache[bi * rec + v..(bi + 1) * rec]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                assert_eq!(gkv, wkv, "k={k} cache of request {bi} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn verify_step_rejects_out_of_context_candidates() {
+        let cfg = cfg("gpt_nano");
+        let theta = init_theta(&cfg, 1);
+        let tokens = toks(&cfg, 2);
+        let s = cfg.seq_len;
+        let recs = prefill(&cfg, &theta, &tokens, &uni(cfg.batch, s - 1)).unwrap();
+        // k = 2 candidates would write positions s-1 and s: fail closed
+        let cand = vec![0i32; cfg.batch * 2];
+        let err =
+            verify_step(&cfg, &theta, &recs, &cand, &uni(cfg.batch, s - 1)).unwrap_err();
+        assert!(err.to_string().contains("learned context"), "{err}");
+        // k = 1 at position s-1 still fits
+        verify_step(&cfg, &theta, &recs, &cand[..cfg.batch], &uni(cfg.batch, s - 1)).unwrap();
+        let bad = vec![cfg.vocab as i32; cfg.batch];
+        let err = verify_step(&cfg, &theta, &recs, &bad, &uni(cfg.batch, 1)).unwrap_err();
+        assert!(err.to_string().contains("vocab"), "{err}");
     }
 }

@@ -13,7 +13,7 @@
 //! | [`backbone`]  | pre-LN transformer blocks with caches (fwd/bwd)         |
 //! | [`heads`]     | logits, `eval_loss`/`eval_acc`, `attn_maps` probes      |
 //! | [`steps`]     | AdamW, `train_step`, grad-only `train_grad`             |
-//! | [`decode`]    | KV-cache serving path (`prefill`/`decode_step`)         |
+//! | [`decode`]    | KV-cache serving path (`prefill`/`decode_step`/`verify_step`) |
 //! | [`ft`]        | fine-tune probe (`ft_step`/`ft_grad`/`ft_acc`)          |
 //! | [`distill`]   | distillation (`distill_step`/`distill_grad`)            |
 //! | [`lora`]      | LoRA adapters (`lora_step`/`lora_eval`)                 |
@@ -48,7 +48,8 @@ pub mod lora;
 pub mod steps;
 pub mod workspace;
 
-pub use decode::{decode_step, decode_step_into, prefill, prefill_into};
+pub use decode::{decode_step, decode_step_into, prefill, prefill_into, verify_step,
+                 verify_step_into};
 pub use distill::{distill_grad_into, distill_step, distill_step_into};
 pub use ft::{ft_acc, ft_acc_ws, ft_grad_into, ft_step, ft_step_into};
 pub use heads::{attn_maps, attn_maps_ws, eval_acc_ws, eval_loss, eval_loss_ws};

@@ -76,7 +76,7 @@ impl<'a> View<'a> {
 }
 
 /// Artifact kinds the reference backend interprets.
-const KINDS: [&str; 17] = [
+const KINDS: [&str; 18] = [
     "train_step",
     "train_grad",
     "eval_loss",
@@ -94,6 +94,7 @@ const KINDS: [&str; 17] = [
     "lora_eval",
     "prefill",
     "decode_step",
+    "verify_step",
 ];
 
 impl ReferenceBackend {
@@ -194,7 +195,7 @@ impl Backend for ReferenceBackend {
         }
         let cfg = self.cfg_of(spec)?;
         // the KV-cache decode path is only well-defined under a causal mask
-        if matches!(spec.kind.as_str(), "prefill" | "decode_step")
+        if matches!(spec.kind.as_str(), "prefill" | "decode_step" | "verify_step")
             && cfg.family != Family::Gpt
         {
             bail!(
@@ -455,6 +456,21 @@ impl Backend for ReferenceBackend {
                 let mut out = Vec::new();
                 exec::decode_step_into(cfg, theta, cache, token, lens, ws, &mut out)?;
                 Ok(Buffer::host_f32(out, vec![token.len(), cfg.decode_rec_len()]))
+            }
+            "verify_step" => {
+                // speculative-decode verifier: records + k candidate
+                // tokens per request in, logits at all k+1 positions plus
+                // the advanced cache out — one batched full-model pass
+                let cfg = self.cfg_of(spec)?;
+                let theta = views[0].f32s()?;
+                let cache = views[1].f32s()?;
+                let cand = views[2].i32s()?;
+                let lens = views[3].i32s()?;
+                let mut out = Vec::new();
+                exec::verify_step_into(cfg, theta, cache, cand, lens, ws, &mut out)?;
+                let b = lens.len().max(1);
+                let row = out.len() / b;
+                Ok(Buffer::host_f32(out, vec![b, row]))
             }
             "lora_eval" => {
                 let cfg = self.cfg_of(spec)?;

@@ -25,6 +25,12 @@ pub const FT_CLASSES: usize = 4;
 /// LoRA adapter rank of the Fig. 8 baseline (`LORA_RANK` in `configs.py`).
 pub const LORA_RANK: usize = 4;
 
+/// Candidate-token slots of the speculative-decode `verify_step__*`
+/// artifacts (`SPEC_K` in `aot.py`): every verify call carries exactly
+/// this many candidate tokens per request (callers pad unused slots) and
+/// returns logits at all `SPEC_K + 1` positions.
+pub const SPEC_K: usize = 4;
+
 /// FFN width multiple (`ModelConfig.ffn_mult`; constant across the registry).
 const FFN_MULT: usize = 4;
 
@@ -566,13 +572,17 @@ fn distill_artifacts(student: &ModelCfg, teacher: &ModelCfg) -> Vec<ArtifactSpec
 }
 
 /// Incremental-decode artifacts of a causal (GPT) config: `prefill__*`
-/// (padded prompts in, per-request decode records out) and `decode_step__*`
-/// (one token + records in, updated records out). Both carry a per-request
-/// length vector `lens` (`[B]`, int32) instead of one shared scalar, so
-/// requests of different lengths coexist in a batch — `lens` has a leading
-/// batch extent and therefore shards across replicas with the other batch
-/// inputs. The per-request record is `[logits (vocab), kv (L·2·S·d)]` —
-/// see `ModelCfg::decode_rec_len` — so a decode step costs O(len) in
+/// (padded prompts in, per-request decode records out), `decode_step__*`
+/// (one token + records in, updated records out) and `verify_step__*`
+/// (records + [`SPEC_K`] candidate tokens per request in; logits at all
+/// `SPEC_K + 1` positions plus the advanced K/V cache out — the
+/// speculative-decode verifier, one batched full-model pass over the
+/// candidate positions). All carry a per-request length vector `lens`
+/// (`[B]`, int32) instead of one shared scalar, so requests of different
+/// lengths coexist in a batch — `lens` has a leading batch extent and
+/// therefore shards across replicas with the other batch inputs. The
+/// per-request record is `[logits (vocab), kv (L·2·S·d)]` — see
+/// `ModelCfg::decode_rec_len` — so a decode step costs O(len) in
 /// sequence length, not a full-sequence forward.
 fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
     assert_eq!(cfg.family, Family::Gpt, "decode artifacts are causal-only");
@@ -607,16 +617,38 @@ fn decode_artifacts(cfg: &ModelCfg) -> Vec<ArtifactSpec> {
             &cfg.name,
             None,
             vec![
-                theta,
+                theta.clone(),
                 InputSpec {
                     name: "cache".into(),
                     dtype: "float32".into(),
                     shape: vec![cfg.batch, rec],
                 },
                 InputSpec { name: "token".into(), dtype: "int32".into(), shape: vec![cfg.batch] },
-                lens,
+                lens.clone(),
             ],
             vec![cfg.batch, rec],
+            shard_meta(),
+        ),
+        spec(
+            format!("verify_step__{}", cfg.name),
+            "verify_step",
+            &cfg.name,
+            None,
+            vec![
+                theta,
+                InputSpec {
+                    name: "cache".into(),
+                    dtype: "float32".into(),
+                    shape: vec![cfg.batch, rec],
+                },
+                InputSpec {
+                    name: "cand".into(),
+                    dtype: "int32".into(),
+                    shape: vec![cfg.batch, SPEC_K],
+                },
+                lens,
+            ],
+            vec![cfg.batch, (SPEC_K + 1) * cfg.vocab + cfg.kv_cache_len()],
             shard_meta(),
         ),
     ]
@@ -920,6 +952,7 @@ mod tests {
         for cfg in m.configs.values() {
             let p = m.artifact(&format!("prefill__{}", cfg.name));
             let d = m.artifact(&format!("decode_step__{}", cfg.name));
+            let v = m.artifact(&format!("verify_step__{}", cfg.name));
             if cfg.family == Family::Gpt {
                 gpt_configs += 1;
                 let rec = cfg.decode_rec_len();
@@ -940,9 +973,23 @@ mod tests {
                 assert_eq!(d.batch_input_indices(cfg.batch), vec![1, 2, 3]);
                 assert_eq!(d.inputs[3].name, "lens");
                 assert_eq!(d.inputs[3].shape, vec![cfg.batch]);
+                // the speculative verifier: SPEC_K candidate slots per
+                // request, logits at all SPEC_K+1 positions plus the cache
+                let v = v.unwrap();
+                assert!(v.shard_batch());
+                assert_eq!(
+                    v.output_shape,
+                    vec![cfg.batch, (SPEC_K + 1) * cfg.vocab + cfg.kv_cache_len()]
+                );
+                assert_eq!(v.batch_input_indices(cfg.batch), vec![1, 2, 3]);
+                assert_eq!(v.inputs[2].name, "cand");
+                assert_eq!(v.inputs[2].dtype, "int32");
+                assert_eq!(v.inputs[2].shape, vec![cfg.batch, SPEC_K]);
+                assert_eq!(v.inputs[3].name, "lens");
             } else {
                 assert!(p.is_err(), "{} must not have a prefill artifact", cfg.name);
                 assert!(d.is_err(), "{} must not have a decode artifact", cfg.name);
+                assert!(v.is_err(), "{} must not have a verify artifact", cfg.name);
             }
         }
         assert!(gpt_configs >= 5, "only {gpt_configs} causal configs found");

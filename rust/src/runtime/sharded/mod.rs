@@ -41,13 +41,14 @@
 //! sharded backend executes it on replica 0 over just the first shard,
 //! bit-identical to the full-batch probe at a fraction of the compute.
 //!
-//! **Incremental decode** (`prefill__*` / `decode_step__*`) treats the
-//! batch axis as a batch of serving requests: requests split across
-//! replicas exactly like `eval_loss` shards, every replica emits the
-//! decode records of its requests concurrently, and the records
-//! concatenate back in replica order. Per-request decode math never reads
-//! another request's rows, so the stitched result is **bit-identical** to
-//! decoding the full batch on a single replica.
+//! **Incremental decode** (`prefill__*` / `decode_step__*` /
+//! `verify_step__*`) treats the batch axis as a batch of serving
+//! requests: requests split across replicas exactly like `eval_loss`
+//! shards, every replica emits the decode (or verify) records of its
+//! requests concurrently, and the records concatenate back in replica
+//! order. Per-request decode math never reads another request's rows, so
+//! the stitched result is **bit-identical** to decoding the full batch on
+//! a single replica.
 //!
 //! Reducing gradients *before* the optimizer keeps AdamW semantics exact
 //! rather than approximate: the sharded step is tolerance-equal to the
@@ -514,15 +515,17 @@ impl ShardedBackend {
         Ok(Some(Buffer::host_f32(vec![loss], vec![])))
     }
 
-    /// Sharded incremental decode (`prefill__*` / `decode_step__*`): the
-    /// batch of requests splits across replicas like `eval_loss` — the
-    /// per-request `lens` vector shards with the other batch inputs, so
-    /// each replica sees its own requests' lengths — every replica
-    /// produces the decode records of its request shard, and the shard
-    /// records concatenate back in replica order. Per-request kernel math
-    /// never reads other requests' rows, so the stitched output is
-    /// **bit-identical** to decoding the whole (possibly mixed-length)
-    /// batch on one replica. `None` → fall back to replica 0.
+    /// Sharded incremental decode (`prefill__*` / `decode_step__*` /
+    /// `verify_step__*`): the batch of requests splits across replicas
+    /// like `eval_loss` — the per-request `lens` vector (and, for verify,
+    /// the `[batch, k]` candidate-token matrix) shards with the other
+    /// batch inputs, so each replica sees its own requests' rows — every
+    /// replica produces the decode/verify records of its request shard,
+    /// and the shard records concatenate back in replica order.
+    /// Per-request kernel math never reads other requests' rows, so the
+    /// stitched output is **bit-identical** to decoding the whole
+    /// (possibly mixed-length) batch on one replica. `None` → fall back
+    /// to replica 0.
     fn try_decode(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<Option<Buffer>> {
         let Some(cfg) = self.configs.get(&spec.config) else {
             return Ok(None);
@@ -540,7 +543,13 @@ impl ShardedBackend {
             return Ok(None);
         }
         let theta = pc.passthrough[0];
-        let rec = cfg.decode_rec_len();
+        // per-request output row: decode record for prefill/decode_step,
+        // (k+1) logits blocks + cache for verify_step — the declared
+        // output shape carries both
+        let rec: usize = spec.output_shape[1..].iter().product();
+        if rec == 0 {
+            return Ok(None);
+        }
         let bounds = Self::bounds(cfg.batch, r_eff);
         let backends = &self.replicas;
         let shard_outs: Vec<Result<Vec<f32>>> = threadpool::partitioned(r_eff, |r| {
@@ -634,7 +643,7 @@ impl Backend for ShardedBackend {
             }
             if matches!(
                 spec.kind.as_str(),
-                "eval_loss" | "attn_maps" | "prefill" | "decode_step"
+                "eval_loss" | "attn_maps" | "prefill" | "decode_step" | "verify_step"
             ) {
                 for r in &self.replicas {
                     r.prepare(spec)?;
@@ -650,7 +659,7 @@ impl Backend for ShardedBackend {
                 "train_step" | "ft_step" | "distill_step" => self.try_opt_step(spec, args)?,
                 "eval_loss" => self.try_eval(spec, args)?,
                 "attn_maps" => self.try_attn(spec, args)?,
-                "prefill" | "decode_step" => self.try_decode(spec, args)?,
+                "prefill" | "decode_step" | "verify_step" => self.try_decode(spec, args)?,
                 _ => None,
             };
             if let Some(out) = sharded {

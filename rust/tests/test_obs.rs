@@ -139,7 +139,13 @@ fn traced_serve_replay_is_bit_identical_to_untraced() {
     let cfg = rt0.cfg("gpt_nano").unwrap().clone();
     let theta = init_theta(&cfg, 5);
     let trace = synthetic_trace(&cfg, &TrafficSpec::quick(21, 10)).unwrap();
-    let opts = ServeOpts { max_batch: 2, max_queue: 10, temperature: 0.7, seed: 9 };
+    let opts = ServeOpts {
+        max_batch: 2,
+        max_queue: 10,
+        temperature: 0.7,
+        seed: 9,
+        ..ServeOpts::default()
+    };
     assert_parity("serve", &dir, |rt| {
         let eng = ServeEngine::new(rt, "gpt_nano", opts.clone()).unwrap();
         let rep = eng.run(rt, &theta, &trace).unwrap();

@@ -51,6 +51,7 @@ fn replayed_trace_is_bit_identical_across_threads_and_replicas() {
         max_queue: 10,
         temperature: 0.7, // per-request seeded streams, not just argmax
         seed: 9,
+        ..ServeOpts::default()
     };
     let mut want = None;
     for threads in [1usize, 2, 4] {

@@ -1,0 +1,456 @@
+//! Coalesced-draft speculative decoding contracts (`coordinator/generate.rs`
+//! and the `verify_step__*` artifacts).
+//!
+//! Pinned here:
+//! * **Greedy equivalence** — speculative decoding emits tokens bitwise
+//!   identical to plain greedy decoding for every `k`, on every tested
+//!   config, across `PALLAS_REF_THREADS` ∈ {1, 2, 4}, `PALLAS_REPLICAS`
+//!   ∈ {1, 2}, and every kernel tier the host can run. Speculation
+//!   changes walltime, never output.
+//! * **Verifier semantics** — one `verify_step` call scores exactly what
+//!   `k + 1` sequential `decode_step`s would: logits block `i` matches
+//!   the sequential chain after consuming candidates `0..i`, and the
+//!   returned K/V cache matches the sequential cache.
+//! * **Rollback** — after a partial acceptance, the adopted record
+//!   (verifier logits at the acceptance point + its advanced cache, with
+//!   stale rejected-candidate rows beyond it) continues the plain greedy
+//!   chain exactly.
+//! * **Fail closed** — non-causal configs, out-of-range `k`, missing
+//!   draft geometries, non-greedy samplers, and prompts too long for a
+//!   verify window are all errors, never silent fallbacks.
+//!
+//! Tests share the process-global thread pool and kernel tier, so they
+//! serialize on a local mutex.
+
+use std::sync::{Mutex, MutexGuard};
+
+use multilevel::coordinator::{GenerateRequest, Generator, Sampler, SpecDecoder};
+use multilevel::runtime::reference::simd;
+use multilevel::runtime::registry::SPEC_K;
+use multilevel::runtime::{init_theta, Arg, ModelCfg, Runtime};
+use multilevel::util::rng::Rng;
+use multilevel::util::threadpool;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn prompts(cfg: &ModelCfg, plen: usize, seed: u64) -> Vec<i32> {
+    let c = multilevel::data::Corpus::new(cfg.vocab, 0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..cfg.batch {
+        out.extend(c.sequence(plen, &mut rng));
+    }
+    out
+}
+
+fn plain_greedy(
+    rt: &Runtime,
+    config: &str,
+    theta: &[f32],
+    p: &[i32],
+    plen: usize,
+    gen: usize,
+) -> Vec<Vec<i32>> {
+    let g = Generator::new(rt, config).unwrap();
+    g.generate(rt, theta, GenerateRequest::new(p, plen).max_new_tokens(gen))
+        .unwrap()
+        .tokens
+}
+
+fn spec_greedy(
+    rt: &Runtime,
+    config: &str,
+    level: usize,
+    k: usize,
+    theta: &[f32],
+    p: &[i32],
+    plen: usize,
+    gen: usize,
+) -> Vec<Vec<i32>> {
+    let dec = SpecDecoder::new(rt, config, level, k).unwrap();
+    dec.generate(rt, theta, GenerateRequest::new(p, plen).max_new_tokens(gen))
+        .unwrap()
+        .tokens
+}
+
+#[test]
+fn spec_is_bitwise_identical_to_plain_greedy_for_every_k() {
+    let _g = lock();
+    let rt = Runtime::reference();
+    for config in ["gpt_nano", "gpt_base_sim"] {
+        let cfg = rt.cfg(config).unwrap().clone();
+        let theta = init_theta(&cfg, 11);
+        let plen = (cfg.seq_len / 4).max(1);
+        // run through the spec window AND into the plain tail
+        let gen = cfg.seq_len - plen + 1;
+        let p = prompts(&cfg, plen, 3);
+        let want = plain_greedy(&rt, config, &theta, &p, plen, gen);
+        for k in [1usize, 2, 4] {
+            let got = spec_greedy(&rt, config, 2, k, &theta, &p, plen, gen);
+            assert_eq!(
+                got, want,
+                "speculative decode (k={k}) diverged from plain greedy on {config}"
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_stats_account_every_round() {
+    let _g = lock();
+    let rt = Runtime::reference();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 11);
+    let (plen, gen) = (4usize, 10usize);
+    let p = prompts(&cfg, plen, 3);
+    let dec = SpecDecoder::new(&rt, "gpt_nano", 2, 4).unwrap();
+    assert_eq!(dec.k(), 4);
+    assert_eq!(dec.draft_cfg().name, "gpt_nano_lv2");
+    let out = dec
+        .generate(&rt, &theta, GenerateRequest::new(&p, plen).max_new_tokens(gen))
+        .unwrap();
+    let s = out.stats;
+    assert!(s.verify_calls > 0, "no speculative round ran");
+    assert!(s.drafted > 0, "k = 4 must draft");
+    assert!(
+        s.drafted <= s.verify_calls * (dec.k() as u64 - 1) * cfg.batch as u64,
+        "drafted {} exceeds rounds {} x (k-1) x batch",
+        s.drafted,
+        s.verify_calls
+    );
+    assert!(s.accepted <= s.drafted, "accepted {} > drafted {}", s.accepted, s.drafted);
+    let rate = s.acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate}");
+    // every emitted token is committed exactly once
+    let total: usize = out.tokens.iter().map(Vec::len).sum();
+    assert_eq!(total, gen * cfg.batch);
+}
+
+#[test]
+fn spec_matches_plain_across_threads_replicas_and_tiers() {
+    let _g = lock();
+    let before_threads = threadpool::threads();
+    let before_tier = simd::tier();
+    let rt0 = Runtime::reference();
+    let cfg = rt0.cfg("gpt_nano").unwrap().clone();
+    let theta = init_theta(&cfg, 7);
+    let (plen, gen) = (3usize, 9usize);
+    let p = prompts(&cfg, plen, 5);
+    let mut tiers = vec![simd::Tier::Scalar];
+    if simd::detected_best() != simd::Tier::Scalar {
+        tiers.push(simd::detected_best());
+    }
+    for tier in tiers {
+        simd::set_tier(tier).unwrap();
+        // tokens may differ between tiers (different fp paths); within a
+        // tier they must be identical across threads and replicas, and
+        // spec must match plain everywhere
+        let mut want: Option<Vec<Vec<i32>>> = None;
+        for threads in [1usize, 2, 4] {
+            threadpool::set_threads(threads);
+            for replicas in [1usize, 2] {
+                let rt = if replicas == 1 {
+                    Runtime::reference()
+                } else {
+                    Runtime::sharded(replicas)
+                };
+                let plain = plain_greedy(&rt, "gpt_nano", &theta, &p, plen, gen);
+                let spec = spec_greedy(&rt, "gpt_nano", 2, 4, &theta, &p, plen, gen);
+                assert_eq!(
+                    spec, plain,
+                    "spec != plain at tier {:?}, {threads} threads, {replicas} replicas",
+                    tier
+                );
+                match &want {
+                    None => want = Some(plain),
+                    Some(w) => assert_eq!(
+                        &plain, w,
+                        "plain greedy diverged at tier {:?}, {threads} threads, \
+                         {replicas} replicas",
+                        tier
+                    ),
+                }
+            }
+        }
+    }
+    simd::set_tier(before_tier).unwrap();
+    threadpool::set_threads(before_threads);
+}
+
+/// Prefill `cfg.batch` prompts and return the decode record.
+fn prefill_recs(rt: &Runtime, config: &str, theta: &[f32], p: &[i32], plen: usize) -> Vec<f32> {
+    let cfg = rt.cfg(config).unwrap().clone();
+    let (b, s) = (cfg.batch, cfg.seq_len);
+    let mut padded = vec![0i32; b * s];
+    for bi in 0..b {
+        padded[bi * s..bi * s + plen].copy_from_slice(&p[bi * plen..(bi + 1) * plen]);
+    }
+    let lens = vec![plen as i32; b];
+    let exe = rt.exe(&format!("prefill__{config}")).unwrap();
+    let out = rt
+        .call(
+            &exe,
+            &[
+                Arg::F32(theta, vec![theta.len()]),
+                Arg::I32(&padded, vec![b, s]),
+                Arg::I32(&lens, vec![b]),
+            ],
+        )
+        .unwrap();
+    rt.read_f32(&out).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn verify_step_matches_sequential_decode_steps() {
+    let _g = lock();
+    let rt = Runtime::reference();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let (b, v) = (cfg.batch, cfg.vocab);
+    let rec = cfg.decode_rec_len();
+    let theta = init_theta(&cfg, 13);
+    let plen = 4usize;
+    let p = prompts(&cfg, plen, 9);
+    let recs = prefill_recs(&rt, "gpt_nano", &theta, &p, plen);
+
+    // arbitrary candidates — the verifier's contract holds whatever the
+    // draft proposed
+    let cand: Vec<i32> = (0..b * SPEC_K).map(|i| ((i * 13 + 5) % v) as i32).collect();
+    let lens = vec![plen as i32; b];
+    let verify = rt.exe("verify_step__gpt_nano").unwrap();
+    let vout = rt
+        .call(
+            &verify,
+            &[
+                Arg::F32(&theta, vec![theta.len()]),
+                Arg::F32(&recs, vec![b, rec]),
+                Arg::I32(&cand, vec![b, SPEC_K]),
+                Arg::I32(&lens, vec![b]),
+            ],
+        )
+        .unwrap();
+    let vhost = rt.read_f32(&vout).unwrap();
+    let vrec = (SPEC_K + 1) * v + cfg.kv_cache_len();
+    assert_eq!(vhost.len(), b * vrec);
+
+    // block 0 is a copy of the input logits
+    for bi in 0..b {
+        assert_eq!(
+            &vhost[bi * vrec..bi * vrec + v],
+            &recs[bi * rec..bi * rec + v],
+            "request {bi}: block 0 must copy the input logits"
+        );
+    }
+    // block i matches i sequential decode_steps consuming cand[0..i]
+    let decode = rt.exe("decode_step__gpt_nano").unwrap();
+    let mut seq = recs.clone();
+    for i in 1..=SPEC_K {
+        let toks: Vec<i32> = (0..b).map(|bi| cand[bi * SPEC_K + i - 1]).collect();
+        let slens = vec![(plen + i - 1) as i32; b];
+        let out = rt
+            .call(
+                &decode,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::F32(&seq, vec![b, rec]),
+                    Arg::I32(&toks, vec![b]),
+                    Arg::I32(&slens, vec![b]),
+                ],
+            )
+            .unwrap();
+        seq = rt.read_f32(&out).unwrap();
+        for bi in 0..b {
+            let d = max_abs_diff(
+                &vhost[bi * vrec + i * v..bi * vrec + (i + 1) * v],
+                &seq[bi * rec..bi * rec + v],
+            );
+            assert!(d <= 1e-5, "request {bi}: verify block {i} differs from the \
+                     sequential chain by {d}");
+        }
+    }
+    // the verifier's cache matches the sequential cache after all SPEC_K
+    for bi in 0..b {
+        let d = max_abs_diff(
+            &vhost[bi * vrec + (SPEC_K + 1) * v..(bi + 1) * vrec],
+            &seq[bi * rec + v..(bi + 1) * rec],
+        );
+        assert!(d <= 1e-5, "request {bi}: verify cache differs by {d}");
+    }
+}
+
+#[test]
+fn adopted_record_after_partial_acceptance_continues_the_chain() {
+    let _g = lock();
+    let rt = Runtime::reference();
+    let cfg = rt.cfg("gpt_nano").unwrap().clone();
+    let (b, v) = (cfg.batch, cfg.vocab);
+    let rec = cfg.decode_rec_len();
+    let theta = init_theta(&cfg, 17);
+    let plen = 4usize;
+    let p = prompts(&cfg, plen, 21);
+    let recs = prefill_recs(&rt, "gpt_nano", &theta, &p, plen);
+
+    // the true greedy chain c_0 .. c_5 via sequential decode
+    let decode = rt.exe("decode_step__gpt_nano").unwrap();
+    let argmax = |logits: &[f32]| {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0 as i32
+    };
+    let mut chain: Vec<Vec<i32>> = vec![Vec::new(); b]; // per request
+    let mut seq = recs.clone();
+    for i in 0..6 {
+        let toks: Vec<i32> = (0..b)
+            .map(|bi| {
+                let c = argmax(&seq[bi * rec..bi * rec + v]);
+                chain[bi].push(c);
+                c
+            })
+            .collect();
+        let lens = vec![(plen + i) as i32; b];
+        let out = rt
+            .call(
+                &decode,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::F32(&seq, vec![b, rec]),
+                    Arg::I32(&toks, vec![b]),
+                    Arg::I32(&lens, vec![b]),
+                ],
+            )
+            .unwrap();
+        seq = rt.read_f32(&out).unwrap();
+    }
+
+    // candidates: the true chain except a deliberately wrong last slot
+    // -> the acceptance rule stops at m = SPEC_K - 2
+    let mut cand = vec![0i32; b * SPEC_K];
+    for bi in 0..b {
+        for j in 0..SPEC_K {
+            cand[bi * SPEC_K + j] = chain[bi][j];
+        }
+        let last = bi * SPEC_K + SPEC_K - 1;
+        cand[last] = (cand[last] + 1).rem_euclid(v as i32);
+    }
+    let verify = rt.exe("verify_step__gpt_nano").unwrap();
+    let lens = vec![plen as i32; b];
+    let vout = rt
+        .call(
+            &verify,
+            &[
+                Arg::F32(&theta, vec![theta.len()]),
+                Arg::F32(&recs, vec![b, rec]),
+                Arg::I32(&cand, vec![b, SPEC_K]),
+                Arg::I32(&lens, vec![b]),
+            ],
+        )
+        .unwrap();
+    let vhost = rt.read_f32(&vout).unwrap();
+    let vrec = (SPEC_K + 1) * v + cfg.kv_cache_len();
+
+    // acceptance: blocks 1..SPEC_K-1 match the chain, the last does not
+    let m = SPEC_K - 2;
+    let mut adopted = vec![0.0f32; b * rec];
+    for bi in 0..b {
+        let vr = &vhost[bi * vrec..(bi + 1) * vrec];
+        for j in 1..=m {
+            assert_eq!(
+                argmax(&vr[j * v..(j + 1) * v]),
+                chain[bi][j],
+                "request {bi}: block {j} must accept its candidate"
+            );
+        }
+        assert_ne!(
+            argmax(&vr[(m + 1) * v..(m + 2) * v]),
+            cand[bi * SPEC_K + m + 1],
+            "request {bi}: the corrupted candidate must be rejected"
+        );
+        // roll back to the acceptance point: logits block m+1, cache as
+        // returned (rows past the acceptance hold the rejected token)
+        adopted[bi * rec..bi * rec + v].copy_from_slice(&vr[(m + 1) * v..(m + 2) * v]);
+        adopted[bi * rec + v..(bi + 1) * rec].copy_from_slice(&vr[(SPEC_K + 1) * v..]);
+        assert_eq!(argmax(&adopted[bi * rec..bi * rec + v]), chain[bi][m + 1],
+                   "request {bi}: adopted logits must continue the chain");
+    }
+    // continue decoding from the adopted record: the stale row is
+    // rewritten before it is read, so the chain stays exact
+    let mut cur = adopted;
+    for i in (m + 1)..5 {
+        let toks: Vec<i32> = (0..b).map(|bi| chain[bi][i]).collect();
+        let lens = vec![(plen + i) as i32; b];
+        let out = rt
+            .call(
+                &decode,
+                &[
+                    Arg::F32(&theta, vec![theta.len()]),
+                    Arg::F32(&cur, vec![b, rec]),
+                    Arg::I32(&toks, vec![b]),
+                    Arg::I32(&lens, vec![b]),
+                ],
+            )
+            .unwrap();
+        cur = rt.read_f32(&out).unwrap();
+        for bi in 0..b {
+            assert_eq!(
+                argmax(&cur[bi * rec..bi * rec + v]),
+                chain[bi][i + 1],
+                "request {bi}: chain diverged at position {} after rollback",
+                plen + i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_fails_closed() {
+    let _g = lock();
+    let rt = Runtime::reference();
+    // non-causal configs have no decode path at all
+    let err = SpecDecoder::new(&rt, "bert_nano", 2, 2).unwrap_err().to_string();
+    assert!(err.contains("causal"), "{err}");
+    // k outside 1..=SPEC_K
+    let err = SpecDecoder::new(&rt, "gpt_nano", 2, 0).unwrap_err().to_string();
+    assert!(err.contains("--spec-k"), "{err}");
+    let err = SpecDecoder::new(&rt, "gpt_nano", 2, SPEC_K + 1).unwrap_err().to_string();
+    assert!(err.contains("--spec-k"), "{err}");
+    // level 1 is the full model; level 3 has no coalesced geometry
+    let err = SpecDecoder::new(&rt, "gpt_nano", 1, 2).unwrap_err().to_string();
+    assert!(err.contains("--spec-draft"), "{err}");
+    let err = SpecDecoder::new(&rt, "gpt_nano", 3, 2).unwrap_err().to_string();
+    assert!(err.contains("level-3"), "{err}");
+
+    let dec = SpecDecoder::new(&rt, "gpt_nano", 2, 4).unwrap();
+    let cfg = dec.cfg().clone();
+    let theta = init_theta(&cfg, 3);
+    // non-greedy sampling breaks the equivalence contract
+    let p = prompts(&cfg, 4, 1);
+    let err = dec
+        .generate(
+            &rt,
+            &theta,
+            GenerateRequest::new(&p, 4)
+                .max_new_tokens(2)
+                .sampler(Sampler::temperature(0.8, 7).unwrap()),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("greedy"), "{err}");
+    // a prompt too long for even one verify window
+    let plen = cfg.seq_len - SPEC_K + 1;
+    let p = prompts(&cfg, plen, 1);
+    let err = dec
+        .generate(&rt, &theta, GenerateRequest::new(&p, plen).max_new_tokens(2))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("verify window"), "{err}");
+}
